@@ -1,0 +1,57 @@
+//! Quickstart: generate a small FEM-like mesh, color it sequentially with
+//! the three paper orderings, run one distributed job with the paper's
+//! "quality" preset, and validate everything.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dgcolor::color::{greedy_color, Ordering, Selection};
+use dgcolor::coordinator::{run_job, ColoringConfig};
+use dgcolor::graph::synth;
+use dgcolor::util::table::{fmt_secs, Table};
+use dgcolor::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a workload: FEM-style mesh, ~8k vertices
+    let g = synth::fem_like(8000, 14.0, 40, 0.005, 42, "quickstart-mesh");
+    println!(
+        "graph: |V|={} |E|={} Δ={}\n",
+        g.num_vertices(),
+        g.num_edges(),
+        g.max_degree()
+    );
+
+    // 2. sequential baselines (paper Table 1 style)
+    let mut t = Table::new("sequential greedy", &["ordering", "colors", "time"]);
+    for ord in [Ordering::Natural, Ordering::LargestFirst, Ordering::SmallestLast] {
+        let timer = Timer::start();
+        let c = greedy_color(&g, ord, Selection::FirstFit, 1);
+        c.validate(&g).expect("valid coloring");
+        t.row(&[
+            ord.short_name().to_string(),
+            c.num_colors().to_string(),
+            fmt_secs(timer.secs()),
+        ]);
+    }
+    t.print();
+
+    // 3. distributed runs: "speed" vs "quality" presets on 8 processes
+    let mut t = Table::new(
+        "distributed (8 procs)",
+        &["preset", "colors", "virtual time", "messages"],
+    );
+    for (name, cfg) in [
+        ("speed  (FIxxND0)", ColoringConfig::speed(8)),
+        ("quality(R5IxxND1)", ColoringConfig::quality(8)),
+    ] {
+        let r = run_job(&g, &cfg)?;
+        t.row(&[
+            name.to_string(),
+            r.num_colors.to_string(),
+            fmt_secs(r.metrics.makespan),
+            r.metrics.total_msgs.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nall colorings validated ✓");
+    Ok(())
+}

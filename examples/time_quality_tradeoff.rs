@@ -1,0 +1,89 @@
+//! The paper's Fig-10 story as a runnable example: sweep initial-coloring
+//! strategies × recoloring iterations on the Table-1 stand-in graphs and
+//! print the time-quality frontier, highlighting the paper's two
+//! recommended presets ("speed" = FIxxND0, "quality" = R(5-10)IxxND1).
+//!
+//! Run: `cargo run --release --example time_quality_tradeoff`
+
+use dgcolor::color::recolor::{Permutation, RecolorSchedule};
+use dgcolor::color::{Ordering, Selection};
+use dgcolor::coordinator::sweep::{pareto, run_sweep, SweepPoint};
+use dgcolor::coordinator::{ColoringConfig, RecolorMode};
+use dgcolor::dist::recolor::{CommScheme, RecolorConfig};
+use dgcolor::graph::synth;
+use dgcolor::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    // two representative real-world stand-ins at example scale
+    let graphs = vec![
+        synth::paper_graph(&synth::TABLE1_SPECS[0], 0.03, 1), // auto
+        synth::paper_graph(&synth::TABLE1_SPECS[2], 0.05, 2), // hood
+    ];
+    let procs = 32; // the paper presents Fig 8-10 at 32 processes
+
+    let mut configs = Vec::new();
+    for sel in [
+        Selection::FirstFit,
+        Selection::RandomX(5),
+        Selection::RandomX(10),
+        Selection::RandomX(50),
+    ] {
+        for iters in [0u32, 1, 2] {
+            let recolor = if iters == 0 {
+                RecolorMode::None
+            } else {
+                RecolorMode::Sync(RecolorConfig {
+                    schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
+                    iterations: iters,
+                    scheme: CommScheme::Piggyback,
+                    seed: 42,
+                })
+            };
+            configs.push(ColoringConfig {
+                selection: sel,
+                ordering: Ordering::InternalFirst,
+                recolor,
+                ..Default::default()
+            });
+        }
+    }
+    let baseline = ColoringConfig {
+        ordering: Ordering::InternalFirst,
+        ..Default::default()
+    };
+    let points = run_sweep(&graphs, configs, &baseline, procs)?;
+
+    let fmt = |p: &SweepPoint| {
+        vec![
+            p.label.clone(),
+            format!("{:.3}", p.norm_colors),
+            format!("{:.3}", p.norm_time),
+            p.recolor_iters.to_string(),
+        ]
+    };
+    let mut t = Table::new(
+        "time-quality sweep (normalized to FF/IF/no-recolor)",
+        &["config", "norm colors", "norm time", "RC iters"],
+    );
+    for p in &points {
+        t.row(&fmt(p));
+    }
+    t.print();
+    t.save_csv("tradeoff_sweep")?;
+
+    let front = pareto(&points);
+    let mut t = Table::new(
+        "pareto frontier (the paper's Fig-10 view)",
+        &["config", "norm colors", "norm time", "RC iters"],
+    );
+    for p in &front {
+        t.row(&fmt(p));
+    }
+    t.print();
+
+    println!(
+        "\npaper's recommendations — speed: FIxxND0 (FF, no recoloring);\n\
+         quality: R(5-10)IxxND1 (Random-5/10 + one ND recoloring iteration)"
+    );
+    Ok(())
+}

@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracle for the Pallas kernels (no pallas imports).
+
+Deliberately written in the most obvious way possible — these functions
+define the semantics the kernels (and transitively the rust runtime) are
+tested against.
+"""
+
+import jax.numpy as jnp
+
+from . import coloring as K
+
+
+def forbid_mask(neigh_colors):
+    """[B, D] i32 → [B, W] i32 forbidden bitset."""
+    b, _ = neigh_colors.shape
+    colors = jnp.arange(K.NCOLORS, dtype=jnp.int32)            # [C]
+    # forbidden[b, c] = any(neigh == c)
+    forbidden = (neigh_colors[:, :, None] == colors[None, None, :]).any(axis=1)
+    bits = forbidden.reshape(b, K.WORDS, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    words = (bits.astype(jnp.uint32) * weights[None, None, :]).sum(
+        axis=2, dtype=jnp.uint32
+    )
+    return words.astype(jnp.int32)
+
+
+def _forbidden_bits(mask):
+    m = mask.astype(jnp.uint32)
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+    bits = (m[:, :, None] >> lanes[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(mask.shape[0], K.NCOLORS).astype(bool)
+
+
+def first_fit(mask):
+    """[B, W] i32 → smallest color whose bit is clear, per row."""
+    return jnp.argmax(~_forbidden_bits(mask), axis=1).astype(jnp.int32)
+
+
+def random_x_fit(mask, u, x):
+    """Uniform pick among the first x permissible colors (k = floor(u*x))."""
+    permissible = ~_forbidden_bits(mask)
+    rank = jnp.cumsum(permissible.astype(jnp.int32), axis=1)
+    xi = x[0]
+    k = jnp.clip((u * xi.astype(jnp.float32)).astype(jnp.int32), 0, xi - 1) + 1
+    hit = permissible & (rank == k[:, None])
+    return jnp.argmax(hit, axis=1).astype(jnp.int32)
+
+
+def conflict_detect(cu, cv, pu, pv, gu, gv):
+    """Per-edge loser flags; mirrors dist::framework::loses in rust."""
+    conflict = (cu == cv) & (cu >= 0)
+    pu, pv = pu.astype(jnp.uint32), pv.astype(jnp.uint32)
+    gu, gv = gu.astype(jnp.uint32), gv.astype(jnp.uint32)
+    u_smaller = (pu < pv) | ((pu == pv) & (gu < gv))
+    return (
+        (conflict & u_smaller).astype(jnp.int32),
+        (conflict & ~u_smaller).astype(jnp.int32),
+    )

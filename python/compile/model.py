@@ -1,0 +1,64 @@
+"""Layer-2 JAX compute graph: the batched tentative-coloring step.
+
+Composes the Layer-1 Pallas kernels into the three entry points the rust
+coordinator calls per superstep. Lowered once by ``aot.py``; never imported
+at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import coloring as K
+
+
+def tentative_first_fit(neigh_colors):
+    """One first-fit superstep batch: neighbor colors → chosen colors.
+
+    neigh_colors: i32[B, D], -1 padded. Returns i32[B].
+    """
+    mask = K.forbid_mask(neigh_colors)
+    return K.first_fit(mask)
+
+
+def tentative_random_x(neigh_colors, u, x):
+    """One Random-X-Fit superstep batch.
+
+    neigh_colors: i32[B, D]; u: f32[B] uniforms; x: i32[1]. Returns i32[B].
+    """
+    mask = K.forbid_mask(neigh_colors)
+    return K.random_x_fit(mask, u, x)
+
+
+def detect_conflicts(cu, cv, pu, pv, gu, gv):
+    """Batched boundary-edge conflict detection. All i32[E]; returns two
+    i32[E] 0/1 loser flags (u-side, v-side)."""
+    return K.conflict_detect(cu, cv, pu, pv, gu, gv)
+
+
+def forbid_mask_only(neigh_colors):
+    """The bare forbidden-bitset kernel (exported for tests/diagnostics)."""
+    return K.forbid_mask(neigh_colors)
+
+
+def example_args():
+    """Example shapes used for AOT lowering (the kernel contract)."""
+    b, d, e = K.BATCH, K.DMAX, K.EDGE_BATCH
+    i32 = jnp.int32
+    return {
+        "first_fit": (jax.ShapeDtypeStruct((b, d), i32),),
+        "random_x": (
+            jax.ShapeDtypeStruct((b, d), i32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), i32),
+        ),
+        "conflict": tuple(jax.ShapeDtypeStruct((e,), i32) for _ in range(6)),
+        "forbid_mask": (jax.ShapeDtypeStruct((b, d), i32),),
+    }
+
+
+ENTRIES = {
+    "first_fit": tentative_first_fit,
+    "random_x": tentative_random_x,
+    "conflict": detect_conflicts,
+    "forbid_mask": forbid_mask_only,
+}

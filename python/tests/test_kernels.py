@@ -1,0 +1,217 @@
+"""Kernel vs oracle: the core L1 correctness signal.
+
+Hypothesis sweeps shapes/values; fixed cases pin the contract edges."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import coloring as K
+from compile.kernels import ref
+
+
+def np_colors(rows):
+    """list of neighbor-color lists → padded [B, D] i32 array."""
+    out = np.full((len(rows), K.DMAX), -1, dtype=np.int32)
+    for i, r in enumerate(rows):
+        out[i, : len(r)] = r
+    return jnp.asarray(out)
+
+
+# ---- forbid_mask ------------------------------------------------------------
+
+def test_forbid_mask_simple():
+    nc = np_colors([[0, 2, 33], []])
+    got = np.asarray(K.forbid_mask(nc)).astype(np.uint32)
+    want = np.asarray(ref.forbid_mask(nc)).astype(np.uint32)
+    np.testing.assert_array_equal(got, want)
+    assert got[0, 0] == (1 | (1 << 2))
+    assert got[0, 1] == (1 << 1)  # color 33 = word 1, bit 1
+    assert got[1].sum() == 0
+
+
+def test_forbid_mask_all_slots_used():
+    nc = jnp.tile(jnp.arange(K.DMAX, dtype=jnp.int32)[None, :], (K.BATCH, 1))
+    got = np.asarray(K.forbid_mask(nc)).astype(np.uint32)
+    # colors 0..63 forbidden → words 0,1 full, rest empty
+    assert (got[:, 0] == 0xFFFFFFFF).all()
+    assert (got[:, 1] == 0xFFFFFFFF).all()
+    assert (got[:, 2:] == 0).all()
+
+
+def test_forbid_mask_max_color():
+    nc = np_colors([[K.NCOLORS - 1]])
+    got = np.asarray(K.forbid_mask(nc)).astype(np.uint32)
+    assert got[0, K.WORDS - 1] == np.uint32(1) << 31
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_forbid_mask_matches_ref(data):
+    b = data.draw(st.integers(1, 32))
+    d = data.draw(st.integers(1, K.DMAX))
+    arr = data.draw(
+        st.lists(
+            st.lists(st.integers(-1, K.NCOLORS - 1), min_size=d, max_size=d),
+            min_size=b,
+            max_size=b,
+        )
+    )
+    nc = jnp.asarray(np.array(arr, dtype=np.int32))
+    got = np.asarray(K.forbid_mask(nc))
+    want = np.asarray(ref.forbid_mask(nc))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---- first_fit --------------------------------------------------------------
+
+def ff(rows):
+    return np.asarray(K.first_fit(K.forbid_mask(np_colors(rows))))
+
+
+def test_first_fit_basics():
+    got = ff([[0, 1, 3], [], [1, 2, 3], [5]])
+    np.testing.assert_array_equal(got, [2, 0, 0, 0])
+
+
+def test_first_fit_dense_prefix():
+    # all of 0..DMAX-1 forbidden → color DMAX
+    rows = [list(range(K.DMAX))]
+    np.testing.assert_array_equal(ff(rows), [K.DMAX])
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_first_fit_matches_ref_and_is_permissible(data):
+    b = data.draw(st.integers(1, 16))
+    rows = data.draw(
+        st.lists(
+            st.lists(st.integers(0, 100), max_size=K.DMAX),
+            min_size=b,
+            max_size=b,
+        )
+    )
+    nc = np_colors(rows)
+    mask = K.forbid_mask(nc)
+    got = np.asarray(K.first_fit(mask))
+    want = np.asarray(ref.first_fit(mask))
+    np.testing.assert_array_equal(got, want)
+    for i, r in enumerate(rows):
+        assert got[i] not in r
+        assert all(c in r for c in range(got[i]))  # truly smallest
+
+
+# ---- random_x_fit -----------------------------------------------------------
+
+def test_random_x_within_first_x_permissible():
+    rows = [[0, 2]] * 8
+    nc = np_colors(rows)
+    mask = K.forbid_mask(nc)
+    x = jnp.asarray([5], dtype=jnp.int32)
+    rngs = np.linspace(0.0, 0.999, 8).astype(np.float32)
+    got = np.asarray(K.random_x_fit(mask, jnp.asarray(rngs), x))
+    # first 5 permissible colors: 1, 3, 4, 5, 6
+    assert set(got).issubset({1, 3, 4, 5, 6})
+    # u=0 → first permissible; u→1 → 5th permissible
+    assert got[0] == 1
+    assert got[-1] == 6
+
+
+def test_random_x_1_equals_first_fit():
+    rows = [[0, 1], [3], []]
+    nc = np_colors(rows)
+    mask = K.forbid_mask(nc)
+    u = jnp.asarray(np.random.default_rng(0).random(3), dtype=jnp.float32)
+    x1 = jnp.asarray([1], dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(K.random_x_fit(mask, u, x1)),
+        np.asarray(K.first_fit(mask)),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_random_x_matches_ref(data):
+    b = data.draw(st.integers(1, 16))
+    x = data.draw(st.integers(1, 50))
+    rows = data.draw(
+        st.lists(
+            st.lists(st.integers(0, 120), max_size=K.DMAX),
+            min_size=b,
+            max_size=b,
+        )
+    )
+    u = data.draw(
+        st.lists(
+            st.floats(0, 0.998046875, width=32),  # exactly representable
+            min_size=b,
+            max_size=b,
+        )
+    )
+    nc = np_colors(rows)
+    mask = K.forbid_mask(nc)
+    uj = jnp.asarray(np.array(u, dtype=np.float32))
+    xj = jnp.asarray([x], dtype=jnp.int32)
+    got = np.asarray(K.random_x_fit(mask, uj, xj))
+    want = np.asarray(ref.random_x_fit(mask, uj, xj))
+    np.testing.assert_array_equal(got, want)
+    for i, r in enumerate(rows):
+        assert got[i] not in r, "picked a forbidden color"
+
+
+# ---- conflict_detect --------------------------------------------------------
+
+def test_conflict_basics():
+    cu = jnp.asarray([1, 2, 3, -1], dtype=jnp.int32)
+    cv = jnp.asarray([1, 5, 3, -1], dtype=jnp.int32)
+    pu = jnp.asarray([10, 0, 9, 0], dtype=jnp.int32)
+    pv = jnp.asarray([20, 0, 4, 0], dtype=jnp.int32)
+    gu = jnp.asarray([0, 1, 2, 3], dtype=jnp.int32)
+    gv = jnp.asarray([4, 5, 6, 7], dtype=jnp.int32)
+    lu, lv = K.conflict_detect(cu, cv, pu, pv, gu, gv)
+    np.testing.assert_array_equal(np.asarray(lu), [1, 0, 0, 0])  # pu<pv
+    np.testing.assert_array_equal(np.asarray(lv), [0, 0, 1, 0])  # pv<pu
+    # uncolored (-1) never conflicts
+
+
+def test_conflict_tie_breaks_on_gid():
+    cu = jnp.asarray([7], dtype=jnp.int32)
+    cv = jnp.asarray([7], dtype=jnp.int32)
+    p = jnp.asarray([42], dtype=jnp.int32)
+    gu = jnp.asarray([3], dtype=jnp.int32)
+    gv = jnp.asarray([9], dtype=jnp.int32)
+    lu, lv = K.conflict_detect(cu, cv, p, p, gu, gv)
+    assert int(lu[0]) == 1 and int(lv[0]) == 0
+
+
+def test_conflict_priority_is_unsigned():
+    # negative i32 priorities must compare as u32 (matches rust mix64 output)
+    cu = jnp.asarray([1], dtype=jnp.int32)
+    cv = jnp.asarray([1], dtype=jnp.int32)
+    pu = jnp.asarray([-1], dtype=jnp.int32)   # u32::MAX
+    pv = jnp.asarray([5], dtype=jnp.int32)
+    gu = jnp.asarray([0], dtype=jnp.int32)
+    gv = jnp.asarray([1], dtype=jnp.int32)
+    lu, lv = K.conflict_detect(cu, cv, pu, pv, gu, gv)
+    assert int(lv[0]) == 1, "u32::MAX priority must win"
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_conflict_matches_ref_exactly_one_loser(data):
+    e = data.draw(st.integers(1, 64))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    cu = jnp.asarray(rng.integers(-1, 5, e), dtype=jnp.int32)
+    cv = jnp.asarray(rng.integers(-1, 5, e), dtype=jnp.int32)
+    pu = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, e), dtype=jnp.int32)
+    pv = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, e), dtype=jnp.int32)
+    gu = jnp.asarray(np.arange(e), dtype=jnp.int32)
+    gv = jnp.asarray(np.arange(e) + e, dtype=jnp.int32)
+    got = K.conflict_detect(cu, cv, pu, pv, gu, gv)
+    want = ref.conflict_detect(cu, cv, pu, pv, gu, gv)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    conflict = np.asarray((cu == cv) & (cu >= 0))
+    both = np.asarray(got[0]) + np.asarray(got[1])
+    np.testing.assert_array_equal(both, conflict.astype(np.int32))

@@ -1,0 +1,79 @@
+//! Shared workloads + helpers for the paper-reproduction benches.
+//!
+//! Default scales are sized for a 1-core CI box; `REPRO_FULL=1` raises
+//! every workload to the paper's sizes (2^24 RMAT, full |V| stand-ins).
+
+#![allow(dead_code)]
+
+use dgcolor::coordinator::ColoringConfig;
+use dgcolor::dist::cost::CostModel;
+use dgcolor::graph::rmat::{self, RmatParams};
+use dgcolor::graph::synth::{self, PaperGraphSpec, TABLE1_SPECS};
+use dgcolor::graph::CsrGraph;
+use dgcolor::util::bench::full_scale;
+use dgcolor::util::stats;
+
+/// The six Table-1 stand-ins at bench scale. `DGCOLOR_SCALE` overrides the
+/// fraction of paper |V| (default 0.02; REPRO_FULL=1 → 1.0).
+pub fn real_world_graphs() -> Vec<(&'static PaperGraphSpec, CsrGraph)> {
+    let scale = std::env::var("DGCOLOR_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(if full_scale() { 1.0 } else { 0.02 });
+    TABLE1_SPECS
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| (spec, synth::paper_graph(spec, scale, 1000 + i as u64)))
+        .collect()
+}
+
+/// RMAT scale: paper = 24; bench default = 16 (64k vertices, ~500k edges).
+pub fn rmat_scale() -> u32 {
+    if full_scale() {
+        24
+    } else {
+        16
+    }
+}
+
+pub fn rmat_graphs() -> Vec<CsrGraph> {
+    let s = rmat_scale();
+    vec![
+        rmat::generate(&RmatParams::er(s, 8), 11, "RMAT-ER"),
+        rmat::generate(&RmatParams::good(s, 8), 12, "RMAT-Good"),
+        rmat::generate(&RmatParams::bad(s, 8), 13, "RMAT-Bad"),
+    ]
+}
+
+/// Processor counts swept by the distributed benches (paper: 1..512).
+pub fn procs_list() -> Vec<usize> {
+    if full_scale() {
+        vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512]
+    } else {
+        vec![1, 2, 4, 8, 16, 32, 64]
+    }
+}
+
+/// Fixed-cost config so bench results are deterministic run to run; the
+/// perf bench measures real wallclock separately.
+pub fn base_cfg(procs: usize) -> ColoringConfig {
+    ColoringConfig {
+        num_procs: procs,
+        fixed_cost: Some(CostModel::fixed()),
+        ..Default::default()
+    }
+}
+
+/// Normalize per-graph values to per-graph baselines, geometric mean — the
+/// paper's aggregation.
+pub fn norm_geo(values: &[f64], baselines: &[f64]) -> f64 {
+    stats::normalized_geomean(values, baselines)
+}
+
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "scale: {} (REPRO_FULL=1 for paper scale)",
+        if full_scale() { "FULL (paper)" } else { "bench" }
+    );
+}

@@ -1,0 +1,87 @@
+//! Fig 10: the combined time-quality trade-off — union of the Fig-8/9
+//! sweeps (0, 1, 2 ND recoloring iterations) with the Pareto frontier and
+//! the paper's two recommended presets highlighted.
+
+#[path = "common.rs"]
+mod common;
+
+use dgcolor::coordinator::sweep::{paper_grid, pareto, run_sweep, SweepPoint};
+use dgcolor::coordinator::ColoringConfig;
+use dgcolor::dist::cost::CostModel;
+use dgcolor::util::table::Table;
+
+fn main() {
+    common::print_header("Fig 10 — combined time-quality trade-off (P=32)");
+    let graphs: Vec<_> = common::real_world_graphs()
+        .into_iter()
+        .map(|(_, g)| g)
+        .collect();
+    let baseline = ColoringConfig {
+        fixed_cost: Some(CostModel::fixed()),
+        ..Default::default()
+    };
+    let mut all: Vec<SweepPoint> = Vec::new();
+    for iters in [0u32, 1, 2] {
+        let mut configs = paper_grid(iters, 42);
+        for c in configs.iter_mut() {
+            c.fixed_cost = Some(CostModel::fixed());
+        }
+        all.extend(run_sweep(&graphs, configs, &baseline, 32).unwrap());
+    }
+    let mut t = Table::new(
+        "all points (0/1/2 ND iterations)",
+        &["config", "norm colors", "norm time", "RC iters"],
+    );
+    for p in &all {
+        t.row(&[
+            p.label.clone(),
+            format!("{:.3}", p.norm_colors),
+            format!("{:.3}", p.norm_time),
+            p.recolor_iters.to_string(),
+        ]);
+    }
+    t.save_csv("fig10_all").unwrap();
+
+    let front = pareto(&all);
+    let mut t = Table::new(
+        "Pareto frontier",
+        &["config", "norm colors", "norm time", "RC iters"],
+    );
+    for p in &front {
+        t.row(&[
+            p.label.clone(),
+            format!("{:.3}", p.norm_colors),
+            format!("{:.3}", p.norm_time),
+            p.recolor_iters.to_string(),
+        ]);
+    }
+    t.print();
+    t.save_csv("fig10_pareto").unwrap();
+
+    // the paper's comparison: R(5|10)IxxND1 dominates FIxxND2 and FSxxND2
+    let best = |pred: &dyn Fn(&SweepPoint) -> bool| -> Option<&SweepPoint> {
+        all.iter()
+            .filter(|p| pred(p))
+            .min_by(|a, b| a.norm_colors.partial_cmp(&b.norm_colors).unwrap())
+    };
+    let r_nd1 = best(&|p| {
+        (p.label.starts_with("R5I") || p.label.starts_with("R10I")) && p.recolor_iters == 1
+    });
+    let f_nd2 = best(&|p| p.label.starts_with("FI") && p.recolor_iters == 2);
+    let fs_nd2 = best(&|p| p.label.starts_with("FS") && p.recolor_iters == 2);
+    if let (Some(r), Some(f), Some(fs)) = (r_nd1, f_nd2, fs_nd2) {
+        println!(
+            "\npaper check — R(5|10)IxxND1 vs FIxxND2 vs FSxxND2:\n\
+             {:<18} colors {:.3} time {:.3}\n\
+             {:<18} colors {:.3} time {:.3}\n\
+             {:<18} colors {:.3} time {:.3}",
+            r.label, r.norm_colors, r.norm_time, f.label, f.norm_colors, f.norm_time, fs.label,
+            fs.norm_colors, fs.norm_time
+        );
+        println!(
+            "dominates: {}",
+            r.norm_colors <= f.norm_colors.min(fs.norm_colors)
+        );
+    }
+    println!("recommendations — speed: FIxxND0; quality: R(5-10)IxxND1");
+}

@@ -1,0 +1,64 @@
+//! Fig 9: the Fig-8 sweep with one (a) and two (b) Non-Decreasing
+//! synchronous recoloring iterations at P=32.
+
+#[path = "common.rs"]
+mod common;
+
+use dgcolor::coordinator::sweep::{paper_grid, run_sweep};
+use dgcolor::coordinator::ColoringConfig;
+use dgcolor::dist::cost::CostModel;
+use dgcolor::util::table::Table;
+
+fn main() {
+    common::print_header("Fig 9 — parameter sweep with ND recoloring (P=32)");
+    let graphs: Vec<_> = common::real_world_graphs()
+        .into_iter()
+        .map(|(_, g)| g)
+        .collect();
+    let baseline = ColoringConfig {
+        fixed_cost: Some(CostModel::fixed()),
+        ..Default::default()
+    };
+    for iters in [1u32, 2] {
+        let mut configs = paper_grid(iters, 42);
+        for c in configs.iter_mut() {
+            c.fixed_cost = Some(CostModel::fixed());
+        }
+        let points = run_sweep(&graphs, configs, &baseline, 32).unwrap();
+        let mut t = Table::new(
+            &format!("ND{iters} sweep points"),
+            &["config", "norm colors", "norm time"],
+        );
+        let mut best_random: Option<(String, f64, f64)> = None;
+        let mut best_ff: Option<(String, f64, f64)> = None;
+        for p in &points {
+            t.row(&[
+                p.label.clone(),
+                format!("{:.3}", p.norm_colors),
+                format!("{:.3}", p.norm_time),
+            ]);
+            let entry = (p.label.clone(), p.norm_colors, p.norm_time);
+            if p.label.starts_with('R') {
+                if best_random.as_ref().is_none_or(|b| p.norm_colors < b.1) {
+                    best_random = Some(entry);
+                }
+            } else if p.label.starts_with('F') {
+                if best_ff.as_ref().is_none_or(|b| p.norm_colors < b.1) {
+                    best_ff = Some(entry);
+                }
+            }
+        }
+        t.save_csv(&format!("fig9_nd{iters}")).unwrap();
+        let br = best_random.unwrap();
+        let bf = best_ff.unwrap();
+        println!(
+            "ND{iters}: best Random-X point {} colors={:.3} time={:.3} | best FF point {} colors={:.3} time={:.3}",
+            br.0, br.1, br.2, bf.0, bf.1, bf.2
+        );
+    }
+    println!(
+        "shape check (paper): with ≥1 recoloring iteration every Random-X\n\
+         strategy beats First-Fit on colors; recoloring time correlates with\n\
+         the initial color count, so Random-X pays a runtime premium"
+    );
+}

@@ -1,0 +1,115 @@
+//! §Perf microbenchmarks: real-wallclock throughput of every hot path —
+//! sequential greedy (edges/s), recoloring iteration, orderings, the
+//! message transport, the partitioners, and (when artifacts exist) the
+//! PJRT kernel batch latency. Results feed EXPERIMENTS.md §Perf.
+
+#[path = "common.rs"]
+mod common;
+
+use dgcolor::color::recolor::{recolor_once, Permutation};
+use dgcolor::color::{greedy_color, Ordering, Selection};
+use dgcolor::dist::comm::{network, MsgKind};
+use dgcolor::dist::NetworkModel;
+use dgcolor::graph::rmat::{self, RmatParams};
+use dgcolor::graph::synth;
+use dgcolor::partition::{self, Partitioner};
+use dgcolor::util::bench::{bench, BenchConfig};
+use dgcolor::util::Rng;
+
+fn main() {
+    common::print_header("§Perf — hot-path microbenchmarks (real wallclock)");
+    let cfg = BenchConfig::default();
+
+    // L3.1: sequential greedy throughput on a large ER-ish graph
+    let g = rmat::generate(&RmatParams::er(18, 8), 3, "er18");
+    let edges = 2.0 * g.num_edges() as f64;
+    let r = bench("greedy FF natural (er18, 2M edges)", &cfg, |i| {
+        greedy_color(&g, Ordering::Natural, Selection::FirstFit, i as u64)
+    });
+    println!(
+        "    → {:.1}M edge-scans/s",
+        edges / r.min() / 1e6
+    );
+
+    // L3.2: greedy on mesh (branchier degree distribution)
+    let mesh = synth::fem_like(100_000, 25.0, 76, 0.004, 5, "mesh100k");
+    let mesh_edges = 2.0 * mesh.num_edges() as f64;
+    let r = bench("greedy FF natural (mesh 1.25M edges)", &cfg, |i| {
+        greedy_color(&mesh, Ordering::Natural, Selection::FirstFit, i as u64)
+    });
+    println!("    → {:.1}M edge-scans/s", mesh_edges / r.min() / 1e6);
+
+    // L3.3: selection strategies overhead vs FF
+    for sel in [Selection::StaggeredFirstFit, Selection::LeastUsed, Selection::RandomX(10)] {
+        bench(&format!("greedy {} (mesh)", sel.short_name()), &cfg, |i| {
+            greedy_color(&mesh, Ordering::Natural, sel, i as u64)
+        });
+    }
+
+    // L3.4: orderings
+    for ord in [Ordering::LargestFirst, Ordering::SmallestLast] {
+        bench(&format!("greedy FF {} (mesh)", ord.short_name()), &cfg, |i| {
+            greedy_color(&mesh, ord, Selection::FirstFit, i as u64)
+        });
+    }
+
+    // L3.5: one recoloring iteration (target ≤ 1.3× greedy)
+    let c0 = greedy_color(&mesh, Ordering::Natural, Selection::FirstFit, 1);
+    let mut rng = Rng::new(9);
+    let rr = bench("recolor_once ND (mesh)", &cfg, |_| {
+        recolor_once(&mesh, &c0, Permutation::NonDecreasing, &mut rng)
+    });
+    println!("    → {:.1}M edge-scans/s", mesh_edges / rr.min() / 1e6);
+
+    // L3.6: partitioners
+    bench("block partition (mesh, 64 parts)", &cfg, |_| {
+        partition::partition(&mesh, Partitioner::Block, 64, 1)
+    });
+    bench("bfs-grow partition (mesh, 64 parts)", &cfg, |_| {
+        partition::partition(&mesh, Partitioner::BfsGrow, 64, 1)
+    });
+
+    // L3.7: transport round-trip cost (real thread channel overhead)
+    let r = bench("transport 10k msgs ping-pong", &cfg, |_| {
+        let mut eps = network(2, NetworkModel::ideal());
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            for i in 0..10_000u32 {
+                e1.send(0, MsgKind::Colors, 0, i, vec![0u8; 8]);
+            }
+            e1
+        });
+        for i in 0..10_000u32 {
+            let _ = e0.recv_from(1, MsgKind::Colors, 0, i);
+        }
+        t.join().unwrap()
+    });
+    println!("    → {:.2}µs per message (real)", r.min() / 10_000.0 * 1e6);
+
+    // L1/L2: PJRT kernel batch latency (when artifacts are built)
+    if dgcolor::runtime::KernelRuntime::artifacts_present() {
+        let rt =
+            dgcolor::runtime::KernelRuntime::load(&dgcolor::runtime::KernelRuntime::artifacts_dir())
+                .expect("artifacts load");
+        let matrix = vec![-1i32; 256 * 64];
+        let r = bench("PJRT first_fit batch (256×64)", &cfg, |_| {
+            rt.first_fit_batch(&matrix).unwrap()
+        });
+        println!(
+            "    → {:.1}µs per batch, {:.2}µs per vertex",
+            r.min() * 1e6,
+            r.min() * 1e6 / 256.0
+        );
+        let u = vec![0.5f32; 256];
+        bench("PJRT random_x batch (256×64)", &cfg, |_| {
+            rt.random_x_batch(&matrix, &u, 5).unwrap()
+        });
+        let e = vec![0i32; 4096];
+        bench("PJRT conflict batch (4096 edges)", &cfg, |_| {
+            rt.conflict_batch(&e, &e, &e, &e, &e, &e).unwrap()
+        });
+    } else {
+        println!("(PJRT kernel benches skipped: run `make artifacts`)");
+    }
+}

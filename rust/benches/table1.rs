@@ -1,0 +1,39 @@
+//! Table 1: the six real-world graphs — V, E, Δ, sequential colors under
+//! NAT/LF/SL, and sequential Natural coloring time. Paper values printed
+//! alongside ours (stand-in graphs; see DESIGN.md §1 substitutions).
+
+#[path = "common.rs"]
+mod common;
+
+use dgcolor::color::{greedy_color, Ordering, Selection};
+use dgcolor::util::table::{fmt_secs, Table};
+use dgcolor::util::timer::Timer;
+
+fn main() {
+    common::print_header("Table 1 — real-world graph properties & sequential coloring");
+    let mut t = Table::new(
+        "ours vs paper (paper numbers in parentheses)",
+        &["graph", "|V|", "|E|", "Δ", "NAT", "LF", "SL", "seq time"],
+    );
+    for (spec, g) in common::real_world_graphs() {
+        let timer = Timer::start();
+        let nat = greedy_color(&g, Ordering::Natural, Selection::FirstFit, 1);
+        let t_nat = timer.secs();
+        nat.validate(&g).expect("valid");
+        let lf = greedy_color(&g, Ordering::LargestFirst, Selection::FirstFit, 1);
+        let sl = greedy_color(&g, Ordering::SmallestLast, Selection::FirstFit, 1);
+        t.row(&[
+            spec.name.to_string(),
+            format!("{} ({})", g.num_vertices(), spec.v),
+            format!("{} ({})", g.num_edges(), spec.e),
+            format!("{} ({})", g.max_degree(), spec.max_deg),
+            format!("{} ({})", nat.num_colors(), spec.seq_colors_nat),
+            format!("{} ({})", lf.num_colors(), spec.seq_colors_lf),
+            format!("{} ({})", sl.num_colors(), spec.seq_colors_sl),
+            fmt_secs(t_nat),
+        ]);
+    }
+    t.print();
+    t.save_csv("table1").unwrap();
+    println!("shape check: SL ≤ LF ≤ NAT per row, Δ matched to paper targets");
+}

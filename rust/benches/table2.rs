@@ -1,0 +1,45 @@
+//! Table 2: the three RMAT graphs — V, E, Δ and sequential NAT/LF/SL
+//! colors. Paper runs scale 24; bench default scale 16 (REPRO_FULL=1 for
+//! paper size). The class structure (ER vs skewed) is scale-invariant.
+
+#[path = "common.rs"]
+mod common;
+
+use dgcolor::color::{greedy_color, Ordering, Selection};
+use dgcolor::util::table::{fmt_secs, Table};
+use dgcolor::util::timer::Timer;
+
+/// Paper's Table 2 reference rows (scale 24).
+const PAPER: [(&str, usize, usize, usize, usize, usize, usize); 3] = [
+    ("RMAT-ER", 16_777_216, 134_217_624, 42, 12, 10, 10),
+    ("RMAT-Good", 16_777_216, 134_181_065, 1_278, 28, 15, 14),
+    ("RMAT-Bad", 16_777_216, 133_658_199, 38_143, 146, 89, 88),
+];
+
+fn main() {
+    common::print_header("Table 2 — synthetic (RMAT) graph properties & sequential coloring");
+    let mut t = Table::new(
+        "ours vs paper-at-scale-24 (parentheses)",
+        &["graph", "|V|", "|E|", "Δ", "NAT", "LF", "SL", "NAT time"],
+    );
+    for (g, p) in common::rmat_graphs().iter().zip(PAPER.iter()) {
+        let timer = Timer::start();
+        let nat = greedy_color(g, Ordering::Natural, Selection::FirstFit, 1);
+        let t_nat = timer.secs();
+        let lf = greedy_color(g, Ordering::LargestFirst, Selection::FirstFit, 1);
+        let sl = greedy_color(g, Ordering::SmallestLast, Selection::FirstFit, 1);
+        t.row(&[
+            g.name.clone(),
+            format!("{} ({})", g.num_vertices(), p.1),
+            format!("{} ({})", g.num_edges(), p.2),
+            format!("{} ({})", g.max_degree(), p.3),
+            format!("{} ({})", nat.num_colors(), p.4),
+            format!("{} ({})", lf.num_colors(), p.5),
+            format!("{} ({})", sl.num_colors(), p.6),
+            fmt_secs(t_nat),
+        ]);
+    }
+    t.print();
+    t.save_csv("table2").unwrap();
+    println!("shape check: ER ≪ Good ≪ Bad in Δ and colors; SL ≈ LF < NAT");
+}

@@ -1,0 +1,199 @@
+//! Coloring storage, validation and quality metrics.
+
+use crate::graph::{CsrGraph, VertexId};
+
+/// Colors are 0-based `u32`s; the paper reports `num_colors = max + 1`.
+pub type Color = u32;
+
+/// Sentinel for "not yet colored".
+pub const UNCOLORED: Color = u32::MAX;
+
+/// A (possibly partial) vertex coloring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Coloring {
+    pub colors: Vec<Color>,
+}
+
+impl Coloring {
+    pub fn uncolored(n: usize) -> Self {
+        Coloring {
+            colors: vec![UNCOLORED; n],
+        }
+    }
+
+    pub fn from_vec(colors: Vec<Color>) -> Self {
+        Coloring { colors }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.colors.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.colors.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, v: VertexId) -> Color {
+        self.colors[v as usize]
+    }
+
+    #[inline]
+    pub fn set(&mut self, v: VertexId, c: Color) {
+        self.colors[v as usize] = c;
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.colors.iter().all(|&c| c != UNCOLORED)
+    }
+
+    /// Number of colors used (max color + 1 over colored vertices).
+    pub fn num_colors(&self) -> usize {
+        self.colors
+            .iter()
+            .filter(|&&c| c != UNCOLORED)
+            .map(|&c| c as usize + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Vertices per color class; length = `num_colors()`.
+    pub fn class_sizes(&self) -> Vec<usize> {
+        let k = self.num_colors();
+        let mut sizes = vec![0usize; k];
+        for &c in &self.colors {
+            if c != UNCOLORED {
+                sizes[c as usize] += 1;
+            }
+        }
+        sizes
+    }
+
+    /// Color classes as vertex lists, ordered by color.
+    pub fn classes(&self) -> Vec<Vec<VertexId>> {
+        let k = self.num_colors();
+        let mut cls = vec![Vec::new(); k];
+        for (v, &c) in self.colors.iter().enumerate() {
+            if c != UNCOLORED {
+                cls[c as usize].push(v as VertexId);
+            }
+        }
+        cls
+    }
+
+    /// Check distance-1 validity: complete, and no edge is monochromatic.
+    /// Returns the offending edge on failure.
+    pub fn validate(&self, g: &CsrGraph) -> Result<(), ColoringError> {
+        if self.colors.len() != g.num_vertices() {
+            return Err(ColoringError::WrongSize {
+                expected: g.num_vertices(),
+                actual: self.colors.len(),
+            });
+        }
+        for v in 0..g.num_vertices() as VertexId {
+            if self.get(v) == UNCOLORED {
+                return Err(ColoringError::Uncolored { vertex: v });
+            }
+        }
+        for u in 0..g.num_vertices() as VertexId {
+            let cu = self.get(u);
+            for &v in g.neighbors(u) {
+                if u < v && self.get(v) == cu {
+                    return Err(ColoringError::Conflict { u, v, color: cu });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Count conflicting edges (diagnostics for speculative phases).
+    pub fn count_conflicts(&self, g: &CsrGraph) -> usize {
+        g.edges()
+            .filter(|&(u, v)| {
+                let cu = self.get(u);
+                cu != UNCOLORED && cu == self.get(v)
+            })
+            .count()
+    }
+
+    /// Balance of the color distribution: max class size / avg class size.
+    /// Random-X-Fit's selling point is a value near 1.
+    pub fn balance(&self) -> f64 {
+        let sizes = self.class_sizes();
+        if sizes.is_empty() {
+            return 1.0;
+        }
+        let max = *sizes.iter().max().unwrap() as f64;
+        let avg = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+        if avg > 0.0 {
+            max / avg
+        } else {
+            1.0
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ColoringError {
+    #[error("coloring covers {actual} vertices, graph has {expected}")]
+    WrongSize { expected: usize, actual: usize },
+    #[error("vertex {vertex} is uncolored")]
+    Uncolored { vertex: VertexId },
+    #[error("edge ({u},{v}) monochromatic with color {color}")]
+    Conflict { u: VertexId, v: VertexId, color: Color },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+
+    #[test]
+    fn validate_accepts_proper() {
+        let g = synth::path(4);
+        let c = Coloring::from_vec(vec![0, 1, 0, 1]);
+        c.validate(&g).unwrap();
+        assert_eq!(c.num_colors(), 2);
+    }
+
+    #[test]
+    fn validate_rejects_conflict() {
+        let g = synth::path(3);
+        let c = Coloring::from_vec(vec![0, 0, 1]);
+        assert_eq!(
+            c.validate(&g),
+            Err(ColoringError::Conflict { u: 0, v: 1, color: 0 })
+        );
+        assert_eq!(c.count_conflicts(&g), 1);
+    }
+
+    #[test]
+    fn validate_rejects_partial() {
+        let g = synth::path(3);
+        let c = Coloring::from_vec(vec![0, UNCOLORED, 1]);
+        assert!(matches!(
+            c.validate(&g),
+            Err(ColoringError::Uncolored { vertex: 1 })
+        ));
+    }
+
+    #[test]
+    fn class_accounting() {
+        let c = Coloring::from_vec(vec![0, 1, 0, 2, 0]);
+        assert_eq!(c.class_sizes(), vec![3, 1, 1]);
+        assert_eq!(c.classes()[0], vec![0, 2, 4]);
+        assert!((c.balance() - 3.0 / (5.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_uncolored() {
+        let c = Coloring::uncolored(3);
+        assert!(!c.is_complete());
+        assert_eq!(c.num_colors(), 0);
+        let e = Coloring::from_vec(vec![]);
+        assert!(e.is_complete());
+        assert_eq!(e.num_colors(), 0);
+    }
+}

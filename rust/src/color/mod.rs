@@ -1,0 +1,17 @@
+//! Sequential coloring core: the `Coloring` type, vertex-visit orderings,
+//! color-selection strategies, greedy coloring (Algorithm 1 of the paper)
+//! and Culberson iterated-greedy recoloring with the paper's color-class
+//! permutation schedules.
+
+pub mod coloring;
+pub mod distance2;
+pub mod greedy;
+pub mod order;
+pub mod recolor;
+pub mod select;
+
+pub use coloring::{Color, Coloring, UNCOLORED};
+pub use greedy::greedy_color;
+pub use order::Ordering;
+pub use recolor::{Permutation, RecolorSchedule};
+pub use select::Selection;

@@ -1,0 +1,328 @@
+//! Vertex-visit orderings (paper §2.1, §2.2.1).
+//!
+//! * **Natural** — storage order (the paper's "unordered").
+//! * **LargestFirst** — Welsh-Powell: non-increasing degree, O(|V|) via
+//!   counting sort by degree.
+//! * **SmallestLast** — Matula-Beck: repeatedly remove a minimum-*residual*-
+//!   degree vertex, order backwards; O(|E|) with a bucket structure.
+//! * **IncidenceDegree** — dynamic: next vertex = most already-ordered
+//!   neighbors (a static-ordering approximation of the dynamic heuristic,
+//!   computed the same bucketed way).
+//! * **InternalFirst / BoundaryFirst** — the distributed framework's
+//!   partition-aware orders: interior vertices before boundary vertices or
+//!   vice versa (ties in natural order).
+//! * **Random** — uniform shuffle (used by tests and as a baseline).
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ordering {
+    Natural,
+    LargestFirst,
+    SmallestLast,
+    IncidenceDegree,
+    InternalFirst,
+    BoundaryFirst,
+    Random,
+}
+
+impl std::str::FromStr for Ordering {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "natural" | "nat" | "n" => Ok(Ordering::Natural),
+            "largestfirst" | "lf" => Ok(Ordering::LargestFirst),
+            "smallestlast" | "sl" => Ok(Ordering::SmallestLast),
+            "incidencedegree" | "id" => Ok(Ordering::IncidenceDegree),
+            "internalfirst" | "if" | "internal" => Ok(Ordering::InternalFirst),
+            "boundaryfirst" | "bf" | "boundary" => Ok(Ordering::BoundaryFirst),
+            "random" | "rand" => Ok(Ordering::Random),
+            other => Err(format!(
+                "unknown ordering {other:?} (nat|lf|sl|id|if|bf|random)"
+            )),
+        }
+    }
+}
+
+impl Ordering {
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            Ordering::Natural => "NAT",
+            Ordering::LargestFirst => "LF",
+            Ordering::SmallestLast => "SL",
+            Ordering::IncidenceDegree => "ID",
+            Ordering::InternalFirst => "I",
+            Ordering::BoundaryFirst => "B",
+            Ordering::Random => "RND",
+        }
+    }
+}
+
+/// Compute a visit order over `verts` (a subset of the graph's vertices —
+/// in the distributed setting each processor orders only the vertices it
+/// owns, using only locally-known structure, exactly as in the paper).
+///
+/// `is_boundary(v)` is consulted only by Internal/Boundary-first.
+pub fn compute_order(
+    g: &CsrGraph,
+    verts: &[VertexId],
+    ordering: Ordering,
+    is_boundary: impl Fn(VertexId) -> bool,
+    rng: &mut Rng,
+) -> Vec<VertexId> {
+    match ordering {
+        Ordering::Natural => verts.to_vec(),
+        Ordering::Random => {
+            let mut v = verts.to_vec();
+            rng.shuffle(&mut v);
+            v
+        }
+        Ordering::LargestFirst => largest_first(g, verts),
+        Ordering::SmallestLast => smallest_last(g, verts),
+        Ordering::IncidenceDegree => incidence_degree(g, verts),
+        Ordering::InternalFirst => {
+            let (mut int, bnd): (Vec<_>, Vec<_>) =
+                verts.iter().partition(|&&v| !is_boundary(v));
+            int.extend(bnd);
+            int
+        }
+        Ordering::BoundaryFirst => {
+            let (mut bnd, int): (Vec<_>, Vec<_>) =
+                verts.iter().partition(|&&v| is_boundary(v));
+            bnd.extend(int);
+            bnd
+        }
+    }
+}
+
+/// Welsh-Powell largest-first via counting sort on degree — O(|verts| + Δ).
+/// Stable within equal degrees (natural order preserved).
+fn largest_first(g: &CsrGraph, verts: &[VertexId]) -> Vec<VertexId> {
+    let max_d = verts.iter().map(|&v| g.degree(v)).max().unwrap_or(0);
+    let mut buckets: Vec<Vec<VertexId>> = vec![Vec::new(); max_d + 1];
+    for &v in verts {
+        buckets[g.degree(v)].push(v);
+    }
+    let mut out = Vec::with_capacity(verts.len());
+    for d in (0..=max_d).rev() {
+        out.extend_from_slice(&buckets[d]);
+    }
+    out
+}
+
+/// Matula-Beck smallest-last with a bucketed min-residual-degree structure —
+/// O(|E_local| + |verts|). Residual degrees count only edges inside `verts`.
+fn smallest_last(g: &CsrGraph, verts: &[VertexId]) -> Vec<VertexId> {
+    bucket_elimination(g, verts, /*smallest_last=*/ true)
+}
+
+/// Incidence-degree ordering: greedily pick the vertex with the most
+/// already-ordered neighbors (ties: smaller residual degree first). Shares
+/// the elimination machinery with SL (picking from the other end).
+fn incidence_degree(g: &CsrGraph, verts: &[VertexId]) -> Vec<VertexId> {
+    bucket_elimination(g, verts, /*smallest_last=*/ false)
+}
+
+/// Shared bucketed elimination. For `smallest_last`, repeatedly removes a
+/// minimum-residual-degree vertex and prepends it (SL). Otherwise removes a
+/// maximum-saturation vertex (# ordered neighbors) and appends it (ID).
+fn bucket_elimination(g: &CsrGraph, verts: &[VertexId], smallest_last: bool) -> Vec<VertexId> {
+    let nv = verts.len();
+    if nv == 0 {
+        return Vec::new();
+    }
+    // dense index over the subset
+    let n = g.num_vertices();
+    const ABSENT: u32 = u32::MAX;
+    let mut idx = vec![ABSENT; n];
+    for (i, &v) in verts.iter().enumerate() {
+        idx[v as usize] = i as u32;
+    }
+    // key per subset-vertex: residual degree (SL) or saturation (ID)
+    let mut key: Vec<u32> = verts
+        .iter()
+        .map(|&v| {
+            if smallest_last {
+                g.neighbors(v).iter().filter(|&&u| idx[u as usize] != ABSENT).count() as u32
+            } else {
+                0
+            }
+        })
+        .collect();
+    let max_key = if smallest_last {
+        key.iter().copied().max().unwrap_or(0) as usize
+    } else {
+        verts
+            .iter()
+            .map(|&v| g.neighbors(v).iter().filter(|&&u| idx[u as usize] != ABSENT).count())
+            .max()
+            .unwrap_or(0)
+    };
+    // buckets by key, with lazy deletion via a "processed" flag
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); max_key + 1];
+    for (i, &k) in key.iter().enumerate() {
+        buckets[k as usize].push(i as u32);
+    }
+    let mut processed = vec![false; nv];
+    let mut out: Vec<VertexId> = Vec::with_capacity(nv);
+    let mut cursor: i64 = if smallest_last { 0 } else { max_key as i64 };
+
+    for _ in 0..nv {
+        // find the next unprocessed vertex at the current extreme key
+        let i = loop {
+            let b = cursor as usize;
+            if let Some(&cand) = buckets[b].last() {
+                if processed[cand as usize] || key[cand as usize] != b as u32 {
+                    buckets[b].pop(); // stale entry
+                    continue;
+                }
+                buckets[b].pop();
+                break cand;
+            }
+            if smallest_last {
+                cursor += 1;
+            } else {
+                cursor -= 1;
+                if cursor < 0 {
+                    cursor = 0;
+                }
+            }
+        };
+        processed[i as usize] = true;
+        let v = verts[i as usize];
+        out.push(v);
+        // update neighbor keys
+        for &u in g.neighbors(v) {
+            let j = idx[u as usize];
+            if j == ABSENT || processed[j as usize] {
+                continue;
+            }
+            let newk = if smallest_last {
+                key[j as usize].saturating_sub(1)
+            } else {
+                (key[j as usize] + 1).min(max_key as u32)
+            };
+            if newk != key[j as usize] {
+                key[j as usize] = newk;
+                buckets[newk as usize].push(j);
+                if smallest_last {
+                    cursor = cursor.min(newk as i64);
+                } else {
+                    cursor = cursor.max(newk as i64);
+                }
+            }
+        }
+    }
+    if smallest_last {
+        out.reverse(); // removal order is reversed to get smallest-LAST
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+
+    fn no_boundary(_v: VertexId) -> bool {
+        false
+    }
+
+    fn all_verts(g: &CsrGraph) -> Vec<VertexId> {
+        (0..g.num_vertices() as VertexId).collect()
+    }
+
+    #[test]
+    fn natural_is_identity() {
+        let g = synth::path(5);
+        let mut rng = Rng::new(1);
+        let o = compute_order(&g, &all_verts(&g), Ordering::Natural, no_boundary, &mut rng);
+        assert_eq!(o, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn lf_sorts_by_degree_desc() {
+        let g = synth::star(5); // center 0 has degree 4
+        let mut rng = Rng::new(1);
+        let o = compute_order(&g, &all_verts(&g), Ordering::LargestFirst, no_boundary, &mut rng);
+        assert_eq!(o[0], 0);
+        let degs: Vec<usize> = o.iter().map(|&v| g.degree(v)).collect();
+        assert!(degs.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn sl_on_star_puts_center_first() {
+        // SL removes min-degree (leaves) first, so the center ends up FIRST
+        // in the final order.
+        let g = synth::star(6);
+        let mut rng = Rng::new(1);
+        let o = compute_order(&g, &all_verts(&g), Ordering::SmallestLast, no_boundary, &mut rng);
+        assert_eq!(o.len(), 6);
+        // Leaves (min residual degree) are removed first, so the center is
+        // ordered at/near the front (tie handling may interleave one leaf).
+        let pos = o.iter().position(|&v| v == 0).unwrap();
+        assert!(pos <= 1, "center should be ordered first-ish, got {o:?}");
+        // and the very last ordered vertex is a leaf
+        assert_ne!(*o.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn sl_is_permutation_on_random_graph() {
+        let g = synth::erdos_renyi(300, 1500, 7);
+        let mut rng = Rng::new(1);
+        for ord in [
+            Ordering::SmallestLast,
+            Ordering::LargestFirst,
+            Ordering::IncidenceDegree,
+            Ordering::Random,
+        ] {
+            let mut o = compute_order(&g, &all_verts(&g), ord, no_boundary, &mut rng);
+            o.sort_unstable();
+            assert_eq!(o, all_verts(&g), "{ord:?} not a permutation");
+        }
+    }
+
+    #[test]
+    fn sl_degeneracy_on_grid() {
+        // grid2d has degeneracy 2: SL greedy coloring should use ≤3 colors
+        let g = synth::grid2d(12, 12);
+        let mut rng = Rng::new(2);
+        let order = compute_order(&g, &all_verts(&g), Ordering::SmallestLast, no_boundary, &mut rng);
+        let coloring = crate::color::greedy::greedy_color_ordered(
+            &g,
+            &order,
+            &mut crate::color::select::SelectState::new(crate::color::Selection::FirstFit, 64, 1),
+        );
+        assert!(coloring.num_colors() <= 3, "SL used {}", coloring.num_colors());
+    }
+
+    #[test]
+    fn internal_boundary_split() {
+        let g = synth::path(6);
+        let mut rng = Rng::new(1);
+        let is_b = |v: VertexId| v == 2 || v == 3;
+        let o = compute_order(&g, &all_verts(&g), Ordering::InternalFirst, is_b, &mut rng);
+        assert_eq!(o, vec![0, 1, 4, 5, 2, 3]);
+        let o = compute_order(&g, &all_verts(&g), Ordering::BoundaryFirst, is_b, &mut rng);
+        assert_eq!(o, vec![2, 3, 0, 1, 4, 5]);
+    }
+
+    #[test]
+    fn subset_ordering_only_uses_subset() {
+        let g = synth::star(8);
+        let mut rng = Rng::new(1);
+        // exclude the hub: SL over leaves only
+        let verts: Vec<VertexId> = (1..8).collect();
+        let o = compute_order(&g, &verts, Ordering::SmallestLast, no_boundary, &mut rng);
+        assert_eq!(o.len(), 7);
+        assert!(!o.contains(&0));
+    }
+
+    #[test]
+    fn parses() {
+        assert_eq!("sl".parse::<Ordering>().unwrap(), Ordering::SmallestLast);
+        assert_eq!("LF".parse::<Ordering>().unwrap(), Ordering::LargestFirst);
+        assert!("bogus".parse::<Ordering>().is_err());
+    }
+}

@@ -1,0 +1,335 @@
+//! Sequential iterated-greedy recoloring (Culberson) with the paper's
+//! color-class permutations and hybrid randomness schedules (§2.1, §4.2.1).
+//!
+//! One recoloring iteration: take the previous coloring's color classes,
+//! order the classes by a permutation strategy, visit all vertices of each
+//! class consecutively, and greedily first-fit recolor. Culberson's theorem:
+//! with first-fit and class-consecutive visiting, the number of colors never
+//! increases.
+
+use crate::color::select::{SelectState, Selection};
+use crate::color::{greedy, Coloring};
+use crate::graph::{CsrGraph, VertexId};
+use crate::util::Rng;
+
+/// Color-class permutation strategies (paper §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Permutation {
+    /// Reverse color order.
+    Reverse,
+    /// Non-increasing class size (largest classes first).
+    NonIncreasing,
+    /// Non-decreasing class size (smallest classes first) — the paper's best
+    /// fixed permutation: small classes go early so large classes can absorb
+    /// them.
+    NonDecreasing,
+    /// Uniform random permutation (Knuth shuffle).
+    Random,
+}
+
+impl std::str::FromStr for Permutation {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "rv" | "reverse" => Ok(Permutation::Reverse),
+            "ni" | "nonincreasing" => Ok(Permutation::NonIncreasing),
+            "nd" | "nondecreasing" => Ok(Permutation::NonDecreasing),
+            "rand" | "random" => Ok(Permutation::Random),
+            other => Err(format!("unknown permutation {other:?} (rv|ni|nd|rand)")),
+        }
+    }
+}
+
+impl Permutation {
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            Permutation::Reverse => "RV",
+            Permutation::NonIncreasing => "NI",
+            Permutation::NonDecreasing => "ND",
+            Permutation::Random => "RAND",
+        }
+    }
+
+    /// Order the color classes `0..k` given their sizes. Ties and the base
+    /// order are stable on color index, matching a deterministic
+    /// implementation of the paper.
+    pub fn permute_classes(&self, class_sizes: &[usize], rng: &mut Rng) -> Vec<u32> {
+        let k = class_sizes.len();
+        let mut order: Vec<u32> = (0..k as u32).collect();
+        match self {
+            Permutation::Reverse => order.reverse(),
+            Permutation::NonIncreasing => {
+                order.sort_by_key(|&c| std::cmp::Reverse(class_sizes[c as usize]))
+            }
+            Permutation::NonDecreasing => order.sort_by_key(|&c| class_sizes[c as usize]),
+            Permutation::Random => rng.shuffle(&mut order),
+        }
+        order
+    }
+}
+
+/// Which permutation to use at each recoloring iteration (paper Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecolorSchedule {
+    /// The same permutation every iteration.
+    Fixed(Permutation),
+    /// ND, but RAND every `x`-th iteration (`ND-RAND%x`).
+    NdRandEvery(u32),
+    /// ND, but RAND at iterations 2, 4, 8, 16, ... (`ND-RAND%2^i`).
+    NdRandPow2,
+}
+
+impl RecolorSchedule {
+    /// Permutation for 1-based iteration `i`.
+    pub fn permutation_at(&self, i: u32) -> Permutation {
+        match self {
+            RecolorSchedule::Fixed(p) => *p,
+            RecolorSchedule::NdRandEvery(x) => {
+                if *x > 0 && i % x == 0 {
+                    Permutation::Random
+                } else {
+                    Permutation::NonDecreasing
+                }
+            }
+            RecolorSchedule::NdRandPow2 => {
+                if i >= 2 && i.is_power_of_two() {
+                    Permutation::Random
+                } else {
+                    Permutation::NonDecreasing
+                }
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            RecolorSchedule::Fixed(p) => p.short_name().to_string(),
+            RecolorSchedule::NdRandEvery(x) => format!("ND-RAND%{x}"),
+            RecolorSchedule::NdRandPow2 => "ND-RAND%2^i".to_string(),
+        }
+    }
+}
+
+impl std::str::FromStr for RecolorSchedule {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let l = s.to_ascii_lowercase();
+        if let Some(x) = l.strip_prefix("nd-rand%") {
+            if x == "2^i" || x == "pow2" {
+                return Ok(RecolorSchedule::NdRandPow2);
+            }
+            return x
+                .parse()
+                .map(RecolorSchedule::NdRandEvery)
+                .map_err(|e| e.to_string());
+        }
+        l.parse::<Permutation>().map(RecolorSchedule::Fixed)
+    }
+}
+
+/// Build the recoloring vertex-visit order: classes in permuted order,
+/// vertices of a class consecutive (ascending id within a class).
+///
+/// Counting-sort construction: one pass for class sizes, one scatter pass
+/// into a single buffer — no per-class vectors. (§Perf: this took
+/// `recolor_once` from 2.8× to ~1.4× the cost of a plain greedy pass.)
+pub fn recolor_order(coloring: &Coloring, perm: Permutation, rng: &mut Rng) -> Vec<VertexId> {
+    let sizes = coloring.class_sizes();
+    let class_order = perm.permute_classes(&sizes, rng);
+    // starting offset of each class in the permuted concatenation
+    let mut offset = vec![0usize; sizes.len()];
+    let mut acc = 0usize;
+    for &c in &class_order {
+        offset[c as usize] = acc;
+        acc += sizes[c as usize];
+    }
+    let mut order = vec![0 as VertexId; acc];
+    for (v, &c) in coloring.colors.iter().enumerate() {
+        if c != crate::color::UNCOLORED {
+            let slot = &mut offset[c as usize];
+            order[*slot] = v as VertexId;
+            *slot += 1;
+        }
+    }
+    order
+}
+
+/// One sequential recoloring iteration (first-fit; Culberson's theorem needs
+/// first-fit for monotonicity).
+pub fn recolor_once(
+    g: &CsrGraph,
+    coloring: &Coloring,
+    perm: Permutation,
+    rng: &mut Rng,
+) -> Coloring {
+    let order = recolor_order(coloring, perm, rng);
+    let mut st = SelectState::new(Selection::FirstFit, coloring.num_colors() as u32, rng.next_u64());
+    greedy::greedy_color_ordered(g, &order, &mut st)
+}
+
+/// Run `iterations` recoloring passes under `schedule`, recording the color
+/// count after every iteration (index 0 = the input coloring).
+pub fn recolor_iterate(
+    g: &CsrGraph,
+    initial: &Coloring,
+    schedule: RecolorSchedule,
+    iterations: u32,
+    rng: &mut Rng,
+) -> (Coloring, Vec<usize>) {
+    let mut current = initial.clone();
+    let mut trace = Vec::with_capacity(iterations as usize + 1);
+    trace.push(current.num_colors());
+    for i in 1..=iterations {
+        let perm = schedule.permutation_at(i);
+        current = recolor_once(g, &current, perm, rng);
+        trace.push(current.num_colors());
+    }
+    (current, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::{greedy_color, Ordering};
+    use crate::graph::synth;
+
+    fn initial(g: &CsrGraph) -> Coloring {
+        greedy_color(g, Ordering::Natural, Selection::FirstFit, 42)
+    }
+
+    #[test]
+    fn monotone_noninc_colors_all_perms() {
+        let g = synth::erdos_renyi(600, 4000, 11);
+        let c0 = initial(&g);
+        let mut rng = Rng::new(1);
+        for perm in [
+            Permutation::Reverse,
+            Permutation::NonIncreasing,
+            Permutation::NonDecreasing,
+            Permutation::Random,
+        ] {
+            let mut c = c0.clone();
+            for _ in 0..5 {
+                let next = recolor_once(&g, &c, perm, &mut rng);
+                next.validate(&g).unwrap();
+                assert!(
+                    next.num_colors() <= c.num_colors(),
+                    "{perm:?} increased colors {} -> {}",
+                    c.num_colors(),
+                    next.num_colors()
+                );
+                c = next;
+            }
+        }
+    }
+
+    #[test]
+    fn recolor_improves_bad_initial() {
+        // Random-50 produces a deliberately bad initial coloring; a few ND
+        // iterations should improve it substantially (paper §4.3).
+        let g = synth::fem_like(4000, 12.0, 30, 0.0, 5, "fem");
+        let bad = greedy_color(&g, Ordering::Natural, Selection::RandomX(50), 3);
+        let mut rng = Rng::new(2);
+        let (out, trace) = recolor_iterate(
+            &g,
+            &bad,
+            RecolorSchedule::Fixed(Permutation::NonDecreasing),
+            5,
+            &mut rng,
+        );
+        out.validate(&g).unwrap();
+        assert!(
+            out.num_colors() * 2 <= bad.num_colors(),
+            "trace {trace:?}"
+        );
+    }
+
+    #[test]
+    fn class_consecutive_order() {
+        let g = synth::cycle(6);
+        let c = initial(&g);
+        let mut rng = Rng::new(3);
+        let order = recolor_order(&c, Permutation::Reverse, &mut rng);
+        // vertices of equal previous color must be consecutive
+        let mut seen_colors = Vec::new();
+        for v in &order {
+            let col = c.get(*v);
+            if seen_colors.last() != Some(&col) {
+                assert!(
+                    !seen_colors.contains(&col),
+                    "class {col} split in order {order:?}"
+                );
+                seen_colors.push(col);
+            }
+        }
+        assert_eq!(order.len(), 6);
+    }
+
+    #[test]
+    fn schedule_selection() {
+        let s = RecolorSchedule::NdRandEvery(5);
+        assert_eq!(s.permutation_at(1), Permutation::NonDecreasing);
+        assert_eq!(s.permutation_at(5), Permutation::Random);
+        assert_eq!(s.permutation_at(10), Permutation::Random);
+        let p = RecolorSchedule::NdRandPow2;
+        assert_eq!(p.permutation_at(1), Permutation::NonDecreasing);
+        assert_eq!(p.permutation_at(2), Permutation::Random);
+        assert_eq!(p.permutation_at(4), Permutation::Random);
+        assert_eq!(p.permutation_at(6), Permutation::NonDecreasing);
+        assert_eq!(p.permutation_at(8), Permutation::Random);
+    }
+
+    #[test]
+    fn schedule_parsing() {
+        assert_eq!(
+            "nd".parse::<RecolorSchedule>().unwrap(),
+            RecolorSchedule::Fixed(Permutation::NonDecreasing)
+        );
+        assert_eq!(
+            "ND-RAND%5".parse::<RecolorSchedule>().unwrap(),
+            RecolorSchedule::NdRandEvery(5)
+        );
+        assert_eq!(
+            "nd-rand%2^i".parse::<RecolorSchedule>().unwrap(),
+            RecolorSchedule::NdRandPow2
+        );
+    }
+
+    #[test]
+    fn permute_classes_shapes() {
+        let sizes = vec![5, 1, 3];
+        let mut rng = Rng::new(4);
+        assert_eq!(
+            Permutation::Reverse.permute_classes(&sizes, &mut rng),
+            vec![2, 1, 0]
+        );
+        assert_eq!(
+            Permutation::NonIncreasing.permute_classes(&sizes, &mut rng),
+            vec![0, 2, 1]
+        );
+        assert_eq!(
+            Permutation::NonDecreasing.permute_classes(&sizes, &mut rng),
+            vec![1, 2, 0]
+        );
+        let mut r = Permutation::Random.permute_classes(&sizes, &mut rng);
+        r.sort_unstable();
+        assert_eq!(r, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn trace_starts_with_initial() {
+        let g = synth::grid2d(10, 10);
+        let c0 = initial(&g);
+        let mut rng = Rng::new(9);
+        let (_, trace) = recolor_iterate(
+            &g,
+            &c0,
+            RecolorSchedule::Fixed(Permutation::NonDecreasing),
+            3,
+            &mut rng,
+        );
+        assert_eq!(trace.len(), 4);
+        assert_eq!(trace[0], c0.num_colors());
+        assert!(trace.windows(2).all(|w| w[1] <= w[0]));
+    }
+}

@@ -1,0 +1,247 @@
+//! Color-selection strategies (paper §2.1, §3.2).
+//!
+//! Given the forbidden set of a vertex (colors of already-colored
+//! neighbors), pick a permissible color:
+//!
+//! * **FirstFit** — smallest permissible color (Algorithm 1).
+//! * **StaggeredFirstFit** — first fit starting from a per-processor offset
+//!   inside an initial estimate `K` of the color count, wrapping around and
+//!   overflowing past `K` only when the window is saturated (Bozdağ et al.).
+//! * **LeastUsed** — the (locally) least-used permissible color among those
+//!   seen so far, to balance class sizes.
+//! * **RandomX(X)** — uniform among the first `X` permissible colors
+//!   (Gebremedhin et al.; the paper's §3.2 contribution pairs this with
+//!   recoloring).
+
+use crate::color::Color;
+use crate::util::{ColorMarker, Rng};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    FirstFit,
+    /// Estimate-based staggered first fit; the estimate is supplied via
+    /// `SelectState::new` (typically Δ+1 or the previous round's colors).
+    StaggeredFirstFit,
+    LeastUsed,
+    RandomX(u32),
+}
+
+impl std::str::FromStr for Selection {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let l = s.to_ascii_lowercase();
+        match l.as_str() {
+            "firstfit" | "ff" | "f" => Ok(Selection::FirstFit),
+            "staggered" | "sff" => Ok(Selection::StaggeredFirstFit),
+            "leastused" | "lu" => Ok(Selection::LeastUsed),
+            _ => {
+                if let Some(x) = l.strip_prefix("randomx") {
+                    x.parse().map(Selection::RandomX).map_err(|e| e.to_string())
+                } else if let Some(x) = l.strip_prefix("random-") {
+                    x.parse().map(Selection::RandomX).map_err(|e| e.to_string())
+                } else if let Some(x) = l.strip_prefix('r') {
+                    x.parse().map(Selection::RandomX).map_err(|e| e.to_string())
+                } else {
+                    Err(format!("unknown selection {s:?} (ff|sff|lu|r<X>)"))
+                }
+            }
+        }
+    }
+}
+
+impl Selection {
+    pub fn short_name(&self) -> String {
+        match self {
+            Selection::FirstFit => "F".into(),
+            Selection::StaggeredFirstFit => "SF".into(),
+            Selection::LeastUsed => "LU".into(),
+            Selection::RandomX(x) => format!("R{x}"),
+        }
+    }
+}
+
+/// Mutable per-processor state a selection strategy needs across a coloring
+/// sweep: the forbidden-marker, local color-usage counts (LeastUsed), the
+/// stagger offset (SFF) and the RNG (RandomX).
+pub struct SelectState {
+    pub strategy: Selection,
+    pub marker: ColorMarker,
+    usage: Vec<u64>,
+    /// SFF initial-estimate window and this processor's starting offset.
+    estimate: u32,
+    offset: u32,
+    rng: Rng,
+}
+
+impl SelectState {
+    /// `estimate` seeds StaggeredFirstFit's window (ignored by others);
+    /// `seed` feeds RandomX and the per-processor stagger offset.
+    pub fn new(strategy: Selection, estimate: u32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5E1EC7);
+        let estimate = estimate.max(1);
+        let offset = (rng.below(estimate as u64)) as u32;
+        SelectState {
+            strategy,
+            marker: ColorMarker::new(64),
+            usage: Vec::new(),
+            estimate,
+            offset,
+            rng,
+        }
+    }
+
+    /// Forbid `c` for the current vertex. Call `begin_vertex` first.
+    #[inline]
+    pub fn forbid(&mut self, c: Color) {
+        self.marker.mark(c);
+    }
+
+    #[inline]
+    pub fn begin_vertex(&mut self) {
+        self.marker.next_epoch();
+    }
+
+    /// Pick a color given the marks made since `begin_vertex`.
+    pub fn pick(&mut self) -> Color {
+        let c = match self.strategy {
+            Selection::FirstFit => self.marker.first_unmarked(),
+            Selection::StaggeredFirstFit => self.pick_staggered(),
+            Selection::LeastUsed => self.pick_least_used(),
+            Selection::RandomX(x) => {
+                let k = self.rng.below(x.max(1) as u64) as u32;
+                self.marker.kth_unmarked(k)
+            }
+        };
+        // track usage for LeastUsed
+        if matches!(self.strategy, Selection::LeastUsed) {
+            let ci = c as usize;
+            if ci >= self.usage.len() {
+                self.usage.resize(ci + 1, 0);
+            }
+            self.usage[ci] += 1;
+        }
+        c
+    }
+
+    fn pick_staggered(&mut self) -> Color {
+        // scan offset..estimate then 0..offset, else overflow past estimate
+        for c in (self.offset..self.estimate).chain(0..self.offset) {
+            if !self.marker.is_marked(c) {
+                return c;
+            }
+        }
+        let mut c = self.estimate;
+        while self.marker.is_marked(c) {
+            c += 1;
+        }
+        c
+    }
+
+    fn pick_least_used(&mut self) -> Color {
+        // Among the colors used locally so far (the palette), pick the
+        // permissible one with the lowest usage; only open a new color when
+        // no existing color is permissible. Ties break toward lower colors.
+        let palette = self.usage.len() as u32;
+        let mut best: Option<(u64, Color)> = None;
+        for c in 0..palette {
+            if !self.marker.is_marked(c) {
+                let u = self.usage[c as usize];
+                if best.is_none_or(|(bu, _)| u < bu) {
+                    best = Some((u, c));
+                }
+            }
+        }
+        match best {
+            Some((_, c)) => c,
+            None => self.marker.first_unmarked(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn forbid_all(st: &mut SelectState, cs: &[Color]) {
+        st.begin_vertex();
+        for &c in cs {
+            st.forbid(c);
+        }
+    }
+
+    #[test]
+    fn first_fit_smallest() {
+        let mut st = SelectState::new(Selection::FirstFit, 8, 1);
+        forbid_all(&mut st, &[0, 1, 3]);
+        assert_eq!(st.pick(), 2);
+        forbid_all(&mut st, &[]);
+        assert_eq!(st.pick(), 0);
+    }
+
+    #[test]
+    fn random_x_in_first_x_permissible() {
+        let mut st = SelectState::new(Selection::RandomX(5), 8, 2);
+        for _ in 0..200 {
+            forbid_all(&mut st, &[0, 2]);
+            let c = st.pick();
+            // first 5 permissible: 1,3,4,5,6
+            assert!([1, 3, 4, 5, 6].contains(&c), "picked {c}");
+        }
+    }
+
+    #[test]
+    fn random_x_covers_choices() {
+        let mut st = SelectState::new(Selection::RandomX(3), 8, 3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            forbid_all(&mut st, &[1]);
+            seen.insert(st.pick());
+        }
+        // first 3 permissible: 0,2,3
+        assert_eq!(seen, [0, 2, 3].into_iter().collect());
+    }
+
+    #[test]
+    fn random_1_is_first_fit() {
+        let mut st = SelectState::new(Selection::RandomX(1), 8, 4);
+        forbid_all(&mut st, &[0, 1]);
+        assert_eq!(st.pick(), 2);
+    }
+
+    #[test]
+    fn staggered_wraps_and_overflows() {
+        let mut st = SelectState::new(Selection::StaggeredFirstFit, 4, 5);
+        st.offset = 2; // deterministic for the test
+        forbid_all(&mut st, &[2, 3]);
+        assert_eq!(st.pick(), 0, "wraps to low colors");
+        forbid_all(&mut st, &[0, 1, 2, 3]);
+        assert_eq!(st.pick(), 4, "overflows past estimate");
+    }
+
+    #[test]
+    fn least_used_prefers_rare_colors() {
+        let mut st = SelectState::new(Selection::LeastUsed, 8, 6);
+        forbid_all(&mut st, &[]);
+        assert_eq!(st.pick(), 0, "empty palette opens color 0");
+        forbid_all(&mut st, &[0]);
+        assert_eq!(st.pick(), 1, "0 forbidden, palette exhausted, opens 1");
+        forbid_all(&mut st, &[]);
+        // usage now {0:1, 1:1}; tie breaks to lower color
+        assert_eq!(st.pick(), 0);
+        forbid_all(&mut st, &[0]);
+        // usage {0:2, 1:1}; 0 forbidden anyway → picks 1
+        assert_eq!(st.pick(), 1);
+        forbid_all(&mut st, &[]);
+        // usage {0:2, 1:2}; tie → 0... then LU keeps classes balanced
+        assert_eq!(st.pick(), 0);
+    }
+
+    #[test]
+    fn parses() {
+        assert_eq!("ff".parse::<Selection>().unwrap(), Selection::FirstFit);
+        assert_eq!("r5".parse::<Selection>().unwrap(), Selection::RandomX(5));
+        assert_eq!("randomx10".parse::<Selection>().unwrap(), Selection::RandomX(10));
+        assert_eq!("lu".parse::<Selection>().unwrap(), Selection::LeastUsed);
+        assert!("x".parse::<Selection>().is_err());
+    }
+}

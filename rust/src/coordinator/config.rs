@@ -1,0 +1,234 @@
+//! The configuration system: one struct capturing every knob of the paper's
+//! parameter space, parseable from CLI arguments.
+
+use crate::color::recolor::{Permutation, RecolorSchedule};
+use crate::color::{Ordering, Selection};
+use crate::dist::cost::CostModel;
+use crate::dist::recolor::{CommScheme, RecolorConfig};
+use crate::dist::NetworkModel;
+use crate::partition::Partitioner;
+use crate::util::args::Args;
+use anyhow::Result;
+
+/// What recoloring (if any) follows the initial distributed coloring.
+#[derive(Debug, Clone, Copy)]
+pub enum RecolorMode {
+    None,
+    /// Synchronous recoloring (RC) — conflict-free, step per color class.
+    Sync(RecolorConfig),
+    /// Asynchronous recoloring (aRC) — speculative rerun with a
+    /// class-derived order.
+    Async { perm: Permutation, iterations: u32 },
+}
+
+impl RecolorMode {
+    pub fn iterations(&self) -> u32 {
+        match self {
+            RecolorMode::None => 0,
+            RecolorMode::Sync(c) => c.iterations,
+            RecolorMode::Async { iterations, .. } => *iterations,
+        }
+    }
+}
+
+/// Full job description for a distributed coloring run.
+#[derive(Debug, Clone, Copy)]
+pub struct ColoringConfig {
+    pub num_procs: usize,
+    pub partitioner: Partitioner,
+    pub ordering: Ordering,
+    pub selection: Selection,
+    pub superstep_size: usize,
+    /// Synchronous superstep communication in the *initial* coloring.
+    pub sync: bool,
+    pub recolor: RecolorMode,
+    pub seed: u64,
+    pub network: NetworkModel,
+    /// `None` → calibrate on this host; `Some` → fixed rates (tests).
+    pub fixed_cost: Option<CostModel>,
+}
+
+impl Default for ColoringConfig {
+    fn default() -> Self {
+        ColoringConfig {
+            num_procs: 4,
+            partitioner: Partitioner::BfsGrow,
+            ordering: Ordering::InternalFirst,
+            selection: Selection::FirstFit,
+            superstep_size: 1000,
+            sync: true,
+            recolor: RecolorMode::None,
+            seed: 42,
+            network: NetworkModel::default(),
+            fixed_cost: None,
+        }
+    }
+}
+
+impl ColoringConfig {
+    /// The paper's "speed" setting: FIxxND0 — First Fit, Internal-First,
+    /// no recoloring.
+    pub fn speed(num_procs: usize) -> Self {
+        ColoringConfig {
+            num_procs,
+            ordering: Ordering::InternalFirst,
+            selection: Selection::FirstFit,
+            recolor: RecolorMode::None,
+            ..Default::default()
+        }
+    }
+
+    /// The paper's "quality" setting: R(5-10)IxxND1 — Random-5 Fit,
+    /// Internal-First, one ND synchronous recoloring iteration.
+    pub fn quality(num_procs: usize) -> Self {
+        ColoringConfig {
+            num_procs,
+            ordering: Ordering::InternalFirst,
+            selection: Selection::RandomX(5),
+            recolor: RecolorMode::Sync(RecolorConfig {
+                schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
+                iterations: 1,
+                scheme: CommScheme::Piggyback,
+                seed: 42,
+            }),
+            ..Default::default()
+        }
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        self.fixed_cost.unwrap_or_else(CostModel::calibrated)
+    }
+
+    /// Parse from CLI arguments (`--procs`, `--ordering`, `--selection`,
+    /// `--superstep`, `--async`, `--recolor <n>`, `--arc`, `--schedule`,
+    /// `--scheme`, `--partitioner`, `--seed`, `--ideal-net`).
+    pub fn from_args(a: &Args) -> Result<Self> {
+        let mut cfg = ColoringConfig {
+            num_procs: a.get_or("procs", 4usize)?,
+            seed: a.get_or("seed", 42u64)?,
+            superstep_size: a.get_or("superstep", 1000usize)?,
+            sync: !a.has_flag("async"),
+            ..Default::default()
+        };
+        if let Some(s) = a.get_str("ordering") {
+            cfg.ordering = s.parse().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(s) = a.get_str("selection") {
+            cfg.selection = s.parse().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(s) = a.get_str("partitioner") {
+            cfg.partitioner = s.parse().map_err(anyhow::Error::msg)?;
+        }
+        if a.has_flag("ideal-net") {
+            cfg.network = NetworkModel::ideal();
+        }
+        let iters: u32 = a.get_or("recolor", 0u32)?;
+        if iters > 0 {
+            let schedule: RecolorSchedule = a
+                .str_or("schedule", "nd")
+                .parse()
+                .map_err(anyhow::Error::msg)?;
+            if a.has_flag("arc") {
+                let perm = match schedule {
+                    RecolorSchedule::Fixed(p) => p,
+                    _ => Permutation::NonDecreasing,
+                };
+                cfg.recolor = RecolorMode::Async {
+                    perm,
+                    iterations: iters,
+                };
+            } else {
+                let scheme: CommScheme = a
+                    .str_or("scheme", "piggyback")
+                    .parse()
+                    .map_err(anyhow::Error::msg)?;
+                cfg.recolor = RecolorMode::Sync(RecolorConfig {
+                    schedule,
+                    iterations: iters,
+                    scheme,
+                    seed: cfg.seed,
+                });
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Compact label in the paper's naming style, e.g. `FI1000s-ND1`.
+    pub fn label(&self) -> String {
+        let sel = self.selection.short_name();
+        let ord = match self.ordering {
+            Ordering::InternalFirst => "I",
+            Ordering::SmallestLast => "S",
+            Ordering::Natural => "N",
+            Ordering::LargestFirst => "L",
+            Ordering::BoundaryFirst => "B",
+            Ordering::IncidenceDegree => "D",
+            Ordering::Random => "R",
+        };
+        let comm = if self.sync { "s" } else { "a" };
+        let rc = match &self.recolor {
+            RecolorMode::None => "0".to_string(),
+            RecolorMode::Sync(c) => format!("{}{}", c.schedule.label(), c.iterations),
+            RecolorMode::Async { iterations, .. } => format!("aRC{iterations}"),
+        };
+        format!("{sel}{ord}{}{comm}-{rc}", self.superstep_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn default_roundtrip() {
+        let cfg = ColoringConfig::from_args(&parse("")).unwrap();
+        assert_eq!(cfg.num_procs, 4);
+        assert!(cfg.sync);
+        assert!(matches!(cfg.recolor, RecolorMode::None));
+    }
+
+    #[test]
+    fn full_parse() {
+        let cfg = ColoringConfig::from_args(&parse(
+            "--procs 8 --ordering sl --selection r5 --superstep 500 --async --recolor 2 --schedule nd --scheme base --seed 7",
+        ))
+        .unwrap();
+        assert_eq!(cfg.num_procs, 8);
+        assert_eq!(cfg.ordering, Ordering::SmallestLast);
+        assert_eq!(cfg.selection, Selection::RandomX(5));
+        assert!(!cfg.sync);
+        match cfg.recolor {
+            RecolorMode::Sync(rc) => {
+                assert_eq!(rc.iterations, 2);
+                assert_eq!(rc.scheme, CommScheme::Base);
+            }
+            _ => panic!("expected sync recolor"),
+        }
+    }
+
+    #[test]
+    fn arc_parse() {
+        let cfg = ColoringConfig::from_args(&parse("--recolor 1 --arc")).unwrap();
+        assert!(matches!(cfg.recolor, RecolorMode::Async { iterations: 1, .. }));
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(ColoringConfig::speed(32).label(), "FI1000s-0");
+        assert!(ColoringConfig::quality(32).label().starts_with("R5I1000s-ND1"));
+    }
+
+    #[test]
+    fn presets_match_paper() {
+        let s = ColoringConfig::speed(32);
+        assert!(matches!(s.recolor, RecolorMode::None));
+        assert_eq!(s.selection, Selection::FirstFit);
+        let q = ColoringConfig::quality(32);
+        assert!(matches!(q.selection, Selection::RandomX(5)));
+        assert_eq!(q.recolor.iterations(), 1);
+    }
+}

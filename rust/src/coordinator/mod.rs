@@ -1,0 +1,10 @@
+//! Coordinator: configuration, the end-to-end pipeline and experiment
+//! drivers. This is the layer the CLI, the examples and every bench target
+//! talk to.
+
+pub mod config;
+pub mod pipeline;
+pub mod sweep;
+
+pub use config::{ColoringConfig, RecolorMode};
+pub use pipeline::{run_job, RunResult};

@@ -1,0 +1,204 @@
+//! The end-to-end pipeline: partition → distributed initial coloring →
+//! (optional) recoloring → validation → metrics.
+
+use super::config::{ColoringConfig, RecolorMode};
+use crate::color::Coloring;
+use crate::dist::framework::{self, FrameworkConfig};
+use crate::dist::proc::ColorState;
+use crate::dist::recolor;
+use crate::dist::runner::{run_distributed, ProcResult};
+use crate::dist::DistMetrics;
+use crate::graph::CsrGraph;
+use crate::partition::{self, PartitionMetrics};
+use anyhow::{ensure, Result};
+
+/// Everything a run produces.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub coloring: Coloring,
+    pub num_colors: usize,
+    pub metrics: DistMetrics,
+    pub partition_metrics: PartitionMetrics,
+    /// Colors after the initial coloring (before any recoloring).
+    pub initial_colors: usize,
+    /// Global color count after each recoloring iteration.
+    pub recolor_trace: Vec<usize>,
+    pub config_label: String,
+}
+
+/// Run a full distributed coloring job and validate the result.
+pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
+    ensure!(cfg.num_procs >= 1, "need at least one process");
+    let part = partition::partition(g, cfg.partitioner, cfg.num_procs, cfg.seed);
+    let part_metrics = partition::metrics(g, &part);
+    let cost = cfg.cost_model();
+
+    let fw = FrameworkConfig {
+        ordering: cfg.ordering,
+        selection: cfg.selection,
+        superstep_size: cfg.superstep_size,
+        sync: cfg.sync,
+        seed: cfg.seed,
+        max_rounds: 200,
+    };
+
+    let recolor_mode = cfg.recolor;
+    let outcome = run_distributed(g, &part, cfg.network, |ep, lg| {
+        let mut state = ColorState::uncolored(lg);
+        let to_color: Vec<u32> = (0..lg.n_owned() as u32).collect();
+        let mut metrics = framework::color_process(ep, lg, &fw, &cost, &mut state, to_color, None);
+
+        // the initial color count is the first trace entry
+        let n_owned = lg.n_owned();
+        let local_kmax = (0..n_owned)
+            .map(|v| state.colors[v] as u64 + 1)
+            .max()
+            .unwrap_or(0);
+        let initial_k =
+            framework::comm_timed(ep, &mut metrics, |ep| ep.allreduce_max_u64(local_kmax));
+        metrics.recolor_trace.push(initial_k as usize);
+
+        match &recolor_mode {
+            RecolorMode::None => {}
+            RecolorMode::Sync(rc) => {
+                let mut trace = Vec::new();
+                let m =
+                    recolor::recolor_process_sync(ep, lg, &cost, rc, &mut state, &mut trace);
+                metrics.phases.merge(&m.phases);
+                metrics.conflicts += m.conflicts;
+                metrics.recolor_trace.extend(trace);
+            }
+            RecolorMode::Async { perm, iterations } => {
+                for iter in 1..=*iterations {
+                    let m = recolor::recolor_process_async(
+                        ep, lg, &cost, &fw, *perm, iter, cfg.seed, &mut state,
+                    );
+                    metrics.phases.merge(&m.phases);
+                    metrics.conflicts += m.conflicts;
+                    metrics.rounds += m.rounds;
+                    let local_kmax = (0..n_owned)
+                        .map(|v| state.colors[v] as u64 + 1)
+                        .max()
+                        .unwrap_or(0);
+                    let k = framework::comm_timed(ep, &mut metrics, |ep| {
+                        ep.allreduce_max_u64(local_kmax)
+                    });
+                    metrics.recolor_trace.push(k as usize);
+                }
+            }
+        }
+
+        // final accounting comes from the endpoint (cumulative)
+        metrics.vtime = ep.clock;
+        metrics.sent_msgs = ep.sent_msgs;
+        metrics.sent_bytes = ep.sent_bytes;
+        metrics.recv_msgs = ep.recv_msgs;
+        ProcResult {
+            colors: state.owned_pairs(lg),
+            metrics,
+        }
+    });
+
+    outcome
+        .coloring
+        .validate(g)
+        .map_err(|e| anyhow::anyhow!("invalid coloring from {}: {e}", cfg.label()))?;
+
+    let trace = outcome.per_proc[0].metrics_trace();
+    Ok(RunResult {
+        num_colors: outcome.coloring.num_colors(),
+        initial_colors: *trace.first().unwrap_or(&outcome.coloring.num_colors()),
+        recolor_trace: trace,
+        coloring: outcome.coloring,
+        metrics: outcome.metrics,
+        partition_metrics: part_metrics,
+        config_label: cfg.label(),
+    })
+}
+
+// small helper so RunResult construction reads cleanly
+trait TraceExt {
+    fn metrics_trace(&self) -> Vec<usize>;
+}
+impl TraceExt for crate::dist::ProcMetrics {
+    fn metrics_trace(&self) -> Vec<usize> {
+        self.recolor_trace.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::recolor::{Permutation, RecolorSchedule};
+    use crate::color::{Ordering, Selection};
+    use crate::dist::cost::CostModel;
+    use crate::dist::recolor::{CommScheme, RecolorConfig};
+    use crate::graph::synth;
+
+    fn base_cfg(procs: usize) -> ColoringConfig {
+        ColoringConfig {
+            num_procs: procs,
+            fixed_cost: Some(CostModel::fixed()),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn initial_coloring_valid() {
+        let g = synth::grid2d(20, 20);
+        let r = run_job(&g, &base_cfg(4)).unwrap();
+        assert!(r.num_colors >= 2 && r.num_colors <= g.max_degree() + 1);
+        assert_eq!(r.recolor_trace.len(), 1);
+        assert!(r.metrics.makespan > 0.0);
+    }
+
+    #[test]
+    fn sync_recolor_reduces_or_holds() {
+        let g = synth::fem_like(3000, 12.0, 30, 0.0, 7, "fem");
+        let mut cfg = base_cfg(4);
+        cfg.selection = Selection::RandomX(10);
+        cfg.recolor = RecolorMode::Sync(RecolorConfig {
+            schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
+            iterations: 3,
+            scheme: CommScheme::Piggyback,
+            seed: 42,
+        });
+        let r = run_job(&g, &cfg).unwrap();
+        assert_eq!(r.recolor_trace.len(), 4);
+        assert!(r.recolor_trace.windows(2).all(|w| w[1] <= w[0]),
+            "trace {:?}", r.recolor_trace);
+        assert!(r.num_colors < r.initial_colors);
+    }
+
+    #[test]
+    fn async_recolor_valid() {
+        let g = synth::grid2d(30, 30);
+        let mut cfg = base_cfg(4);
+        cfg.recolor = RecolorMode::Async {
+            perm: Permutation::NonDecreasing,
+            iterations: 1,
+        };
+        let r = run_job(&g, &cfg).unwrap();
+        assert_eq!(r.recolor_trace.len(), 2);
+        assert!(r.num_colors >= 2);
+    }
+
+    #[test]
+    fn async_comm_initial_coloring() {
+        let g = synth::erdos_renyi(1500, 9000, 13);
+        let mut cfg = base_cfg(6);
+        cfg.sync = false;
+        cfg.ordering = Ordering::SmallestLast;
+        let r = run_job(&g, &cfg).unwrap();
+        assert!(r.num_colors <= g.max_degree() + 1);
+    }
+
+    #[test]
+    fn single_proc_matches_sequential_shape() {
+        let g = synth::grid2d(15, 15);
+        let r = run_job(&g, &base_cfg(1)).unwrap();
+        // one processor, no boundary, no conflicts
+        assert_eq!(r.metrics.total_conflicts, 0);
+        assert!(r.num_colors <= 4);
+    }
+}

@@ -1,0 +1,161 @@
+//! Parameter sweeps for Figs 8-10: run a grid of configurations on a set of
+//! graphs and report normalized (colors, runtime) per configuration.
+
+use super::config::{ColoringConfig, RecolorMode};
+use super::pipeline::run_job;
+use crate::color::recolor::{Permutation, RecolorSchedule};
+use crate::color::{Ordering, Selection};
+use crate::dist::recolor::{CommScheme, RecolorConfig};
+use crate::graph::CsrGraph;
+use crate::util::stats;
+use anyhow::Result;
+
+/// One sweep point, aggregated over the graph set.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub label: String,
+    /// geometric mean of per-graph colors normalized to the baseline.
+    pub norm_colors: f64,
+    /// geometric mean of per-graph virtual runtime normalized to baseline.
+    pub norm_time: f64,
+    pub recolor_iters: u32,
+}
+
+/// The paper's Fig-8/9 grid. `recolor_iters` ∈ {0,1,2} selects the figure.
+pub fn paper_grid(recolor_iters: u32, seed: u64) -> Vec<ColoringConfig> {
+    let supersteps = [500usize, 1000, 5000, 10000];
+    let orderings = [Ordering::InternalFirst, Ordering::SmallestLast];
+    let syncs = [true, false];
+    let selections = [
+        Selection::FirstFit,
+        Selection::RandomX(5),
+        Selection::RandomX(10),
+        Selection::RandomX(50),
+    ];
+    let mut out = Vec::new();
+    for &ss in &supersteps {
+        for &ord in &orderings {
+            for &sync in &syncs {
+                for &sel in &selections {
+                    let recolor = if recolor_iters == 0 {
+                        RecolorMode::None
+                    } else {
+                        RecolorMode::Sync(RecolorConfig {
+                            schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
+                            iterations: recolor_iters,
+                            scheme: CommScheme::Piggyback,
+                            seed,
+                        })
+                    };
+                    out.push(ColoringConfig {
+                        superstep_size: ss,
+                        ordering: ord,
+                        sync,
+                        selection: sel,
+                        recolor,
+                        seed,
+                        ..Default::default()
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run every configuration over every graph; normalize each metric per
+/// graph against `baseline` and aggregate by geometric mean.
+pub fn run_sweep(
+    graphs: &[CsrGraph],
+    mut configs: Vec<ColoringConfig>,
+    baseline: &ColoringConfig,
+    num_procs: usize,
+) -> Result<Vec<SweepPoint>> {
+    let mut base_colors = Vec::new();
+    let mut base_time = Vec::new();
+    let mut bl = *baseline;
+    bl.num_procs = num_procs;
+    for g in graphs {
+        let r = run_job(g, &bl)?;
+        base_colors.push(r.num_colors as f64);
+        base_time.push(r.metrics.makespan.max(1e-12));
+    }
+    let mut points = Vec::new();
+    for cfg in configs.iter_mut() {
+        cfg.num_procs = num_procs;
+        let mut colors = Vec::new();
+        let mut time = Vec::new();
+        for g in graphs {
+            let r = run_job(g, cfg)?;
+            colors.push(r.num_colors as f64);
+            time.push(r.metrics.makespan.max(1e-12));
+        }
+        points.push(SweepPoint {
+            label: cfg.label(),
+            norm_colors: stats::normalized_geomean(&colors, &base_colors),
+            norm_time: stats::normalized_geomean(&time, &base_time),
+            recolor_iters: cfg.recolor.iterations(),
+        });
+    }
+    Ok(points)
+}
+
+/// Pareto frontier (min colors, min time) of a sweep — Fig 10's view.
+pub fn pareto(points: &[SweepPoint]) -> Vec<SweepPoint> {
+    let mut front: Vec<SweepPoint> = Vec::new();
+    for p in points {
+        let dominated = points.iter().any(|q| {
+            (q.norm_colors < p.norm_colors && q.norm_time <= p.norm_time)
+                || (q.norm_colors <= p.norm_colors && q.norm_time < p.norm_time)
+        });
+        if !dominated {
+            front.push(p.clone());
+        }
+    }
+    front.sort_by(|a, b| a.norm_time.partial_cmp(&b.norm_time).unwrap());
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::cost::CostModel;
+    use crate::graph::synth;
+
+    #[test]
+    fn grid_has_64_points() {
+        assert_eq!(paper_grid(0, 1).len(), 4 * 2 * 2 * 4);
+        assert!(paper_grid(1, 1)
+            .iter()
+            .all(|c| c.recolor.iterations() == 1));
+    }
+
+    #[test]
+    fn sweep_runs_and_normalizes() {
+        let graphs = vec![synth::grid2d(12, 12), synth::fem_like(600, 8.0, 20, 0.0, 2, "f")];
+        let mut cfgs = vec![ColoringConfig::default(), ColoringConfig::quality(4)];
+        for c in cfgs.iter_mut() {
+            c.fixed_cost = Some(CostModel::fixed());
+        }
+        let mut baseline = ColoringConfig::default();
+        baseline.fixed_cost = Some(CostModel::fixed());
+        let pts = run_sweep(&graphs, cfgs, &baseline, 4).unwrap();
+        assert_eq!(pts.len(), 2);
+        // the baseline config normalizes to exactly 1
+        assert!((pts[0].norm_colors - 1.0).abs() < 1e-9);
+        assert!((pts[0].norm_time - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pareto_removes_dominated() {
+        let mk = |c: f64, t: f64| SweepPoint {
+            label: String::new(),
+            norm_colors: c,
+            norm_time: t,
+            recolor_iters: 0,
+        };
+        let pts = vec![mk(1.0, 1.0), mk(0.8, 2.0), mk(1.2, 1.5), mk(0.9, 0.9)];
+        let front = pareto(&pts);
+        assert_eq!(front.len(), 2); // (0.9,0.9) and (0.8,2.0)
+    }
+}

@@ -1,0 +1,172 @@
+//! Compressed-sparse-row undirected graph.
+//!
+//! Symmetric storage: every undirected edge `{u,v}` appears as both `(u,v)`
+//! and `(v,u)`. `num_edges()` reports undirected edge count (|E|), matching
+//! the paper's tables.
+
+use super::VertexId;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CsrGraph {
+    /// Row offsets, length `n + 1`.
+    pub xadj: Vec<u64>,
+    /// Column indices (neighbor lists), length `2|E|`.
+    pub adjncy: Vec<VertexId>,
+    /// Optional human-readable name (used in experiment tables).
+    pub name: String,
+}
+
+impl CsrGraph {
+    pub fn new(xadj: Vec<u64>, adjncy: Vec<VertexId>, name: impl Into<String>) -> Self {
+        debug_assert!(!xadj.is_empty());
+        debug_assert_eq!(*xadj.last().unwrap() as usize, adjncy.len());
+        CsrGraph {
+            xadj,
+            adjncy,
+            name: name.into(),
+        }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.xadj.len() - 1
+    }
+
+    /// Number of *undirected* edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.adjncy.len() / 2
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.xadj[v as usize + 1] - self.xadj[v as usize]) as usize
+    }
+
+    /// Maximum degree Δ.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Neighbor slice of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.adjncy[self.xadj[v as usize] as usize..self.xadj[v as usize + 1] as usize]
+    }
+
+    /// Iterate all undirected edges `(u, v)` with `u < v`.
+    pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.num_vertices() as VertexId).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter(move |&v| u < v)
+                .map(move |v| (u, v))
+        })
+    }
+
+    /// Structural sanity: offsets monotone, neighbor ids in range, no
+    /// self-loops, symmetric adjacency. O(|E| log d) due to binary search.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_vertices();
+        for i in 0..n {
+            if self.xadj[i] > self.xadj[i + 1] {
+                return Err(format!("xadj not monotone at {i}"));
+            }
+        }
+        for u in 0..n as VertexId {
+            for &v in self.neighbors(u) {
+                if v as usize >= n {
+                    return Err(format!("neighbor {v} of {u} out of range"));
+                }
+                if v == u {
+                    return Err(format!("self-loop at {u}"));
+                }
+                if !self.neighbors(v).contains(&u) {
+                    return Err(format!("asymmetric edge ({u},{v})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether each adjacency list is sorted (builders guarantee this;
+    /// partition-local views rely on it for binary search).
+    pub fn is_sorted(&self) -> bool {
+        (0..self.num_vertices() as VertexId).all(|v| self.neighbors(v).windows(2).all(|w| w[0] < w[1]))
+    }
+
+    /// Estimated resident bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.xadj.len() * 8 + self.adjncy.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn triangle() -> CsrGraph {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(0, 2);
+        b.build("triangle")
+    }
+
+    #[test]
+    fn basic_counts() {
+        let g = triangle();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.max_degree(), 2);
+        assert_eq!(g.degree(1), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn neighbors_sorted_and_symmetric() {
+        let g = triangle();
+        assert!(g.is_sorted());
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn edges_iterator_unique() {
+        let g = triangle();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es, vec![(0, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(0).build("empty");
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.max_degree(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let mut b = GraphBuilder::new(5);
+        b.add_edge(0, 4);
+        let g = b.build("iso");
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.degree(2), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_asymmetry() {
+        let g = CsrGraph::new(vec![0, 1, 1], vec![1], "bad");
+        assert!(g.validate().is_err());
+    }
+}

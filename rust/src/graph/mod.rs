@@ -1,0 +1,17 @@
+//! Graph substrate: CSR storage, construction, Matrix-Market I/O, RMAT and
+//! structured synthetic generators, and degree statistics.
+
+pub mod builder;
+pub mod csr;
+pub mod mtx;
+pub mod rmat;
+pub mod stats;
+pub mod synth;
+
+pub use builder::GraphBuilder;
+pub use csr::CsrGraph;
+
+/// Vertex id type used across the library. u32 supports up to 4.29B vertices
+/// which covers the paper's largest graphs (2^24) with room to spare while
+/// halving memory traffic versus u64 — the greedy loop is bandwidth-bound.
+pub type VertexId = u32;

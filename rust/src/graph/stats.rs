@@ -1,0 +1,92 @@
+//! Degree statistics and the summary block printed by `dgcolor info` and the
+//! table benches.
+
+use super::CsrGraph;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphSummary {
+    pub name: String,
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub max_degree: usize,
+    pub avg_degree: f64,
+    pub min_degree: usize,
+    pub isolated: usize,
+}
+
+pub fn summarize(g: &CsrGraph) -> GraphSummary {
+    let n = g.num_vertices();
+    let mut max_d = 0usize;
+    let mut min_d = usize::MAX;
+    let mut isolated = 0usize;
+    for v in 0..n as u32 {
+        let d = g.degree(v);
+        max_d = max_d.max(d);
+        min_d = min_d.min(d);
+        if d == 0 {
+            isolated += 1;
+        }
+    }
+    if n == 0 {
+        min_d = 0;
+    }
+    GraphSummary {
+        name: g.name.clone(),
+        num_vertices: n,
+        num_edges: g.num_edges(),
+        max_degree: max_d,
+        avg_degree: if n == 0 { 0.0 } else { 2.0 * g.num_edges() as f64 / n as f64 },
+        min_degree: min_d,
+        isolated,
+    }
+}
+
+/// Degree histogram in log2 buckets: `hist[k]` counts vertices with degree
+/// in `[2^k, 2^(k+1))`; `hist[0]` additionally counts degree 0 and 1.
+pub fn degree_histogram_log2(g: &CsrGraph) -> Vec<usize> {
+    let mut hist = vec![0usize; 33];
+    for v in 0..g.num_vertices() as u32 {
+        let d = g.degree(v);
+        let bucket = if d <= 1 { 0 } else { (usize::BITS - d.leading_zeros()) as usize - 1 };
+        hist[bucket] += 1;
+    }
+    while hist.len() > 1 && *hist.last().unwrap() == 0 {
+        hist.pop();
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+
+    #[test]
+    fn summary_star() {
+        let g = synth::star(10);
+        let s = summarize(&g);
+        assert_eq!(s.num_vertices, 10);
+        assert_eq!(s.num_edges, 9);
+        assert_eq!(s.max_degree, 9);
+        assert_eq!(s.min_degree, 1);
+        assert_eq!(s.isolated, 0);
+        assert!((s.avg_degree - 1.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let g = synth::star(10); // center deg 9 → bucket 3; leaves deg 1 → bucket 0
+        let h = degree_histogram_log2(&g);
+        assert_eq!(h[0], 9);
+        assert_eq!(h[3], 1);
+        assert_eq!(h.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn empty_summary() {
+        let g = crate::graph::GraphBuilder::new(0).build("e");
+        let s = summarize(&g);
+        assert_eq!(s.num_vertices, 0);
+        assert_eq!(s.min_degree, 0);
+    }
+}

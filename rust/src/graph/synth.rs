@@ -1,0 +1,264 @@
+//! Structured synthetic generators.
+//!
+//! `fem_like` is the documented stand-in for the paper's six UF/Parasol
+//! matrices (DESIGN.md §1): a 3D-lattice mesh with shell-ordered local
+//! connectivity and a controlled degree tail, matched per graph to the
+//! |V|, |E| and Δ of Table 1. The essential properties for the paper's
+//! experiments — bounded degree, strong locality (small boundary after a
+//! decent partition), small chromatic number — are properties of this
+//! graph class, not of the specific matrices.
+
+use super::{CsrGraph, GraphBuilder, VertexId};
+use crate::util::Rng;
+
+/// 2D grid (4-neighborhood) — simple test workload.
+pub fn grid2d(rows: usize, cols: usize) -> CsrGraph {
+    let n = rows * cols;
+    let mut b = GraphBuilder::with_capacity(n, 2 * n);
+    let at = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                b.add_edge(at(r, c), at(r, c + 1));
+            }
+            if r + 1 < rows {
+                b.add_edge(at(r, c), at(r + 1, c));
+            }
+        }
+    }
+    b.build(format!("grid2d-{rows}x{cols}"))
+}
+
+/// Path, cycle, star, complete — tiny structured graphs for unit tests.
+pub fn path(n: usize) -> CsrGraph {
+    let mut b = GraphBuilder::new(n);
+    for i in 1..n {
+        b.add_edge((i - 1) as VertexId, i as VertexId);
+    }
+    b.build(format!("path-{n}"))
+}
+
+pub fn cycle(n: usize) -> CsrGraph {
+    assert!(n >= 3);
+    let mut b = GraphBuilder::new(n);
+    for i in 0..n {
+        b.add_edge(i as VertexId, ((i + 1) % n) as VertexId);
+    }
+    b.build(format!("cycle-{n}"))
+}
+
+pub fn star(n: usize) -> CsrGraph {
+    assert!(n >= 1);
+    let mut b = GraphBuilder::new(n);
+    for i in 1..n {
+        b.add_edge(0, i as VertexId);
+    }
+    b.build(format!("star-{n}"))
+}
+
+pub fn complete(n: usize) -> CsrGraph {
+    let mut b = GraphBuilder::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            b.add_edge(u as VertexId, v as VertexId);
+        }
+    }
+    b.build(format!("k{n}"))
+}
+
+/// Erdős-Rényi G(n, m): m distinct uniform edges.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(n, m);
+    // oversample slightly; builder dedups
+    let target = (m as f64 * 1.02) as usize + 8;
+    for _ in 0..target {
+        let u = rng.range(0, n) as VertexId;
+        let v = rng.range(0, n) as VertexId;
+        b.add_edge(u, v);
+    }
+    b.build(format!("er-{n}-{m}"))
+}
+
+/// FEM-like mesh: vertices on a 3D lattice; each vertex connects to lattice
+/// neighbors in shells of increasing distance until its per-vertex degree
+/// budget is met. A small fraction of vertices receive a larger budget to
+/// produce the degree tail (Δ) that FEM matrices with constraints exhibit.
+pub fn fem_like(
+    n: usize,
+    avg_degree: f64,
+    max_degree: usize,
+    tail_fraction: f64,
+    seed: u64,
+    name: &str,
+) -> CsrGraph {
+    assert!(n > 0);
+    let side = (n as f64).cbrt().ceil() as usize;
+    let side = side.max(2);
+    let mut rng = Rng::new(seed);
+
+    // Offsets sorted by squared distance, excluding origin. Shells out to
+    // radius 4 give up to ~700 candidates — enough for Δ up to ~335 (bmw3_2).
+    let radius: i64 = 4;
+    let mut offsets: Vec<(i64, i64, i64)> = Vec::new();
+    for dx in -radius..=radius {
+        for dy in -radius..=radius {
+            for dz in -radius..=radius {
+                if (dx, dy, dz) != (0, 0, 0) {
+                    offsets.push((dx, dy, dz));
+                }
+            }
+        }
+    }
+    offsets.sort_by_key(|&(x, y, z)| (x * x + y * y + z * z, x, y, z));
+
+    // Per-vertex target (full) degree. Edges are added only toward higher
+    // ids and tracked in a live degree array, so each undirected edge is
+    // created once and both endpoints' realized degrees are exact.
+    let base_target = avg_degree.max(1.0);
+    let tail_target = (max_degree as f64).max(base_target);
+
+    let mut deg = vec![0u32; n];
+    let mut b = GraphBuilder::with_capacity(n, (n as f64 * avg_degree / 2.0) as usize);
+    let at = |x: usize, y: usize, z: usize| -> usize { (x * side + y) * side + z };
+    for v in 0..n {
+        let z = v % side;
+        let y = (v / side) % side;
+        let x = v / (side * side);
+        let is_tail = rng.chance(tail_fraction);
+        let target_f = if is_tail { tail_target } else { base_target };
+        // dither fractional targets so the average is hit in expectation
+        let mut target = target_f as u32;
+        if rng.f64() < target_f.fract() {
+            target += 1;
+        }
+        for &(dx, dy, dz) in &offsets {
+            if deg[v] >= target {
+                break;
+            }
+            let (nx, ny, nz) = (x as i64 + dx, y as i64 + dy, z as i64 + dz);
+            if nx < 0 || ny < 0 || nz < 0 {
+                continue;
+            }
+            let (nx, ny, nz) = (nx as usize, ny as usize, nz as usize);
+            if nx >= side || ny >= side || nz >= side {
+                continue;
+            }
+            let u = at(nx, ny, nz);
+            // only add toward higher ids: lower ids already had their turn
+            if u < n && u > v {
+                b.add_edge(v as VertexId, u as VertexId);
+                deg[v] += 1;
+                deg[u] += 1;
+            }
+        }
+    }
+    b.build(name)
+}
+
+/// The six Table-1 stand-ins, scaled by `scale` (1.0 = paper size).
+/// Returns (graph, paper row) pairs; the paper row records the original
+/// V/E/Δ so benches can print paper-vs-ours side by side.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperGraphSpec {
+    pub name: &'static str,
+    pub v: usize,
+    pub e: usize,
+    pub max_deg: usize,
+    pub seq_colors_nat: usize,
+    pub seq_colors_lf: usize,
+    pub seq_colors_sl: usize,
+}
+
+pub const TABLE1_SPECS: [PaperGraphSpec; 6] = [
+    PaperGraphSpec { name: "auto",   v: 448_695, e: 3_314_611,  max_deg: 37,  seq_colors_nat: 13, seq_colors_lf: 12, seq_colors_sl: 10 },
+    PaperGraphSpec { name: "bmw3_2", v: 227_362, e: 5_530_634,  max_deg: 335, seq_colors_nat: 48, seq_colors_lf: 48, seq_colors_sl: 37 },
+    PaperGraphSpec { name: "hood",   v: 220_542, e: 4_837_440,  max_deg: 76,  seq_colors_nat: 40, seq_colors_lf: 39, seq_colors_sl: 34 },
+    PaperGraphSpec { name: "ldoor",  v: 952_203, e: 20_770_807, max_deg: 76,  seq_colors_nat: 42, seq_colors_lf: 42, seq_colors_sl: 34 },
+    PaperGraphSpec { name: "msdoor", v: 415_863, e: 9_378_650,  max_deg: 76,  seq_colors_nat: 42, seq_colors_lf: 42, seq_colors_sl: 35 },
+    PaperGraphSpec { name: "pwtk",   v: 217_918, e: 5_653_257,  max_deg: 179, seq_colors_nat: 48, seq_colors_lf: 42, seq_colors_sl: 33 },
+];
+
+/// Build the FEM-like stand-in for one Table-1 graph at the given scale
+/// (fraction of paper |V|; degree structure is preserved at any scale).
+pub fn paper_graph(spec: &PaperGraphSpec, scale: f64, seed: u64) -> CsrGraph {
+    let n = ((spec.v as f64 * scale) as usize).max(64);
+    let avg = 2.0 * spec.e as f64 / spec.v as f64;
+    fem_like(n, avg, spec.max_deg, 0.005, seed, spec.name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_counts() {
+        let g = grid2d(3, 4);
+        assert_eq!(g.num_vertices(), 12);
+        assert_eq!(g.num_edges(), 3 * 3 + 2 * 4); // 17
+        assert_eq!(g.max_degree(), 4);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn structured_shapes() {
+        assert_eq!(path(5).num_edges(), 4);
+        assert_eq!(cycle(5).num_edges(), 5);
+        assert_eq!(star(5).num_edges(), 4);
+        assert_eq!(star(5).max_degree(), 4);
+        let k5 = complete(5);
+        assert_eq!(k5.num_edges(), 10);
+        assert_eq!(k5.max_degree(), 4);
+    }
+
+    #[test]
+    fn er_edge_count_close() {
+        let g = erdos_renyi(1000, 5000, 3);
+        let e = g.num_edges();
+        assert!((4800..=5300).contains(&e), "e = {e}");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn fem_like_matches_targets() {
+        let g = fem_like(8000, 14.8, 40, 0.005, 11, "fem");
+        g.validate().unwrap();
+        let avg = 2.0 * g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(
+            (avg - 14.8).abs() / 14.8 < 0.25,
+            "avg degree {avg} vs target 14.8"
+        );
+        assert!(g.max_degree() <= 80, "Δ = {}", g.max_degree());
+        assert!(g.max_degree() >= 15, "Δ = {}", g.max_degree());
+    }
+
+    #[test]
+    fn fem_like_is_local() {
+        // most edges should connect nearby lattice ids — the property that
+        // makes partitions have small boundary
+        let g = fem_like(4096, 12.0, 30, 0.0, 5, "fem");
+        let side = (4096f64).cbrt().ceil() as i64;
+        let local = g
+            .edges()
+            .filter(|&(u, v)| ((u as i64) - (v as i64)).abs() <= 2 * side * side)
+            .count();
+        assert!(local as f64 > 0.9 * g.num_edges() as f64);
+    }
+
+    #[test]
+    fn paper_graph_small_scale() {
+        let g = paper_graph(&TABLE1_SPECS[0], 0.01, 1);
+        assert!(g.num_vertices() >= 4000);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn deterministic_generators() {
+        let a = fem_like(1000, 10.0, 20, 0.01, 9, "a");
+        let b = fem_like(1000, 10.0, 20, 0.01, 9, "b");
+        assert_eq!(a.adjncy, b.adjncy);
+        let a = erdos_renyi(500, 2000, 4);
+        let b = erdos_renyi(500, 2000, 4);
+        assert_eq!(a.adjncy, b.adjncy);
+    }
+}

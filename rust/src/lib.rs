@@ -1,0 +1,38 @@
+//! # dgcolor — Distributed Graph Coloring with Iterative Recoloring
+//!
+//! A production-grade reproduction of *"On Distributed Graph Coloring with
+//! Iterative Recoloring"* (Sarıyüce, Saule, Çatalyürek; CS.DC 2014) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — self-contained substrates this offline build cannot take from
+//!   crates.io: PRNG, bitsets, statistics, CLI parsing, a micro-benchmark
+//!   harness and a property-test driver.
+//! * [`graph`] — CSR graphs, Matrix-Market I/O, RMAT and FEM-like generators.
+//! * [`partition`] — block and BFS-grow partitioners (the ParMETIS stand-in).
+//! * [`color`] — the sequential coloring core: vertex-visit orderings, color
+//!   selection strategies, greedy coloring and Culberson iterated greedy
+//!   (sequential recoloring) with all permutation schedules from the paper.
+//! * [`dist`] — the distributed-memory runtime: message transport with exact
+//!   message/byte accounting, an α-β network model driving per-process
+//!   virtual clocks, the Bozdağ superstep framework (sync/async) with
+//!   conflict-resolution rounds, distributed synchronous recoloring with the
+//!   paper's piggybacked communication scheme, and asynchronous recoloring.
+//! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO artifacts
+//!   produced by `python/compile/aot.py` and exposes batched kernel-backed
+//!   color selection to the coordinator.
+//! * [`coordinator`] — the user-facing layer: configuration, the end-to-end
+//!   pipeline (partition → initial coloring → recoloring → validation →
+//!   report) and the experiment drivers behind every paper table and figure.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
+//! reproduction results.
+
+pub mod color;
+pub mod coordinator;
+pub mod dist;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,290 @@
+//! `dgcolor` — distributed graph coloring with iterative recoloring.
+//!
+//! Subcommands:
+//!   info       --graph <spec>                     graph summary
+//!   generate   --graph <spec> --out <file.mtx>    write a generated graph
+//!   partition  --graph <spec> --procs P           partition quality
+//!   seq        --graph <spec> [--ordering O] [--selection S] [--recolor N]
+//!   color      --graph <spec> --procs P [framework/recoloring options]
+//!   kernel     --graph <spec>                     kernel-backend coloring
+//!
+//! Graph specs: `path/to/file.mtx`, `grid:ROWSxCOLS`, `er:N:M`,
+//! `rmat-er:SCALE[:EF]`, `rmat-good:SCALE[:EF]`, `rmat-bad:SCALE[:EF]`,
+//! `fem:N:AVGDEG:MAXDEG`, or a Table-1 name (`auto`, `bmw3_2`, `hood`,
+//! `ldoor`, `msdoor`, `pwtk`) at `--scale` fraction of paper size.
+
+use anyhow::{bail, Context, Result};
+use dgcolor::color::recolor::{self, RecolorSchedule};
+use dgcolor::color::{greedy_color, Ordering, Selection};
+use dgcolor::coordinator::{run_job, ColoringConfig};
+use dgcolor::graph::rmat::{self, RmatParams};
+use dgcolor::graph::{mtx, stats, synth, CsrGraph};
+use dgcolor::partition::{self, Partitioner};
+use dgcolor::util::args::Args;
+use dgcolor::util::table::{fmt_secs, Table};
+use dgcolor::util::rng::Rng;
+use dgcolor::util::timer::Timer;
+use std::path::Path;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let (sub, args) = Args::from_env()?.subcommand();
+    match sub.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("seq") => cmd_seq(&args),
+        Some("color") => cmd_color(&args),
+        Some("kernel") => cmd_kernel(&args),
+        Some(other) => bail!("unknown subcommand {other:?} (try --help)"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "dgcolor — distributed graph coloring with iterative recoloring\n\
+         \n\
+         usage: dgcolor <info|generate|partition|seq|color|kernel> --graph <spec> [options]\n\
+         \n\
+         graph specs: file.mtx | grid:RxC | er:N:M | rmat-(er|good|bad):SCALE[:EF]\n\
+         \u{20}             | fem:N:AVG:MAX | auto|bmw3_2|hood|ldoor|msdoor|pwtk [--scale F]\n\
+         \n\
+         color options: --procs P --ordering nat|lf|sl|if|bf --selection ff|sff|lu|r<X>\n\
+         \u{20}              --superstep N --async --recolor N --schedule nd|ni|rv|rand|ND-RAND%x\n\
+         \u{20}              --scheme base|piggyback --arc --partitioner block|bfs --seed S"
+    );
+}
+
+/// Resolve a graph spec (see module docs).
+pub fn load_graph(args: &Args) -> Result<CsrGraph> {
+    let spec = args.get_str("graph").context("missing --graph <spec>")?;
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    if spec.ends_with(".mtx") {
+        return mtx::read_mtx(Path::new(spec));
+    }
+    let parts: Vec<&str> = spec.split(':').collect();
+    let g = match parts[0] {
+        "grid" => {
+            let dims: Vec<usize> = parts[1]
+                .split('x')
+                .map(|s| s.parse().context("grid dims"))
+                .collect::<Result<_>>()?;
+            synth::grid2d(dims[0], dims[1])
+        }
+        "er" => synth::erdos_renyi(parts[1].parse()?, parts[2].parse()?, seed),
+        "fem" => synth::fem_like(
+            parts[1].parse()?,
+            parts[2].parse()?,
+            parts[3].parse()?,
+            0.005,
+            seed,
+            spec,
+        ),
+        "rmat-er" | "rmat-good" | "rmat-bad" => {
+            let scale: u32 = parts[1].parse()?;
+            let ef: usize = if parts.len() > 2 { parts[2].parse()? } else { 8 };
+            let p = match parts[0] {
+                "rmat-er" => RmatParams::er(scale, ef),
+                "rmat-good" => RmatParams::good(scale, ef),
+                _ => RmatParams::bad(scale, ef),
+            };
+            rmat::generate(&p, seed, parts[0])
+        }
+        name => {
+            let spec = synth::TABLE1_SPECS
+                .iter()
+                .find(|s| s.name == name)
+                .with_context(|| format!("unknown graph spec {name:?}"))?;
+            let scale: f64 = args.get_or("scale", 0.1f64)?;
+            synth::paper_graph(spec, scale, seed)
+        }
+    };
+    Ok(g)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let s = stats::summarize(&g);
+    let mut t = Table::new(&format!("graph {}", s.name), &["metric", "value"]);
+    t.row(&["|V|", &s.num_vertices.to_string()]);
+    t.row(&["|E|", &s.num_edges.to_string()]);
+    t.row(&["Δ", &s.max_degree.to_string()]);
+    t.row(&["avg degree", &format!("{:.2}", s.avg_degree)]);
+    t.row(&["isolated", &s.isolated.to_string()]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let out = args.get_str("out").context("missing --out <file.mtx>")?;
+    mtx::write_mtx(&g, Path::new(out))?;
+    println!("wrote {} (|V|={} |E|={})", out, g.num_vertices(), g.num_edges());
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let procs: usize = args.get_or("procs", 4usize)?;
+    let method: Partitioner = args
+        .str_or("partitioner", "bfs")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let t = Timer::start();
+    let p = partition::partition(&g, method, procs, seed);
+    let m = partition::metrics(&g, &p);
+    let mut tab = Table::new(
+        &format!("{method:?} partition of {} into {procs}", g.name),
+        &["metric", "value"],
+    );
+    tab.row(&["edge cut", &m.edge_cut.to_string()]);
+    tab.row(&["boundary vertices", &m.boundary_vertices.to_string()]);
+    tab.row(&["imbalance", &format!("{:.3}", m.imbalance)]);
+    tab.row(&["partition time", &fmt_secs(t.secs())]);
+    tab.print();
+    Ok(())
+}
+
+fn cmd_seq(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let ordering: Ordering = args
+        .str_or("ordering", "nat")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let selection: Selection = args
+        .str_or("selection", "ff")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let iters: u32 = args.get_or("recolor", 0u32)?;
+    let schedule: RecolorSchedule = args
+        .str_or("schedule", "nd")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let distance: u32 = args.get_or("distance", 1u32)?;
+
+    let t = Timer::start();
+    let c0 = match distance {
+        1 => greedy_color(&g, ordering, selection, seed),
+        2 => dgcolor::color::distance2::greedy_color_d2(&g, ordering, selection, seed),
+        d => bail!("unsupported --distance {d} (1|2)"),
+    };
+    let t_color = t.secs();
+    if distance == 2 {
+        dgcolor::color::distance2::validate_d2(&g, &c0)
+            .map_err(|(u, v)| anyhow::anyhow!("distance-2 conflict ({u},{v})"))?;
+    } else {
+        c0.validate(&g).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+
+    let mut tab = Table::new(
+        &format!("sequential coloring of {}", g.name),
+        &["metric", "value"],
+    );
+    tab.row(&["ordering", ordering.short_name()]);
+    tab.row(&["selection", &selection.short_name()]);
+    tab.row(&["colors", &c0.num_colors().to_string()]);
+    tab.row(&["time", &fmt_secs(t_color)]);
+    if iters > 0 {
+        let mut rng = Rng::new(seed);
+        let t = Timer::start();
+        let (cr, trace) = if distance == 2 {
+            let mut c = c0.clone();
+            let mut trace = vec![c.num_colors()];
+            for i in 1..=iters {
+                c = dgcolor::color::distance2::recolor_once_d2(
+                    &g,
+                    &c,
+                    schedule.permutation_at(i),
+                    &mut rng,
+                );
+                trace.push(c.num_colors());
+            }
+            dgcolor::color::distance2::validate_d2(&g, &c)
+                .map_err(|(u, v)| anyhow::anyhow!("distance-2 conflict ({u},{v})"))?;
+            (c, trace)
+        } else {
+            recolor::recolor_iterate(&g, &c0, schedule, iters, &mut rng)
+        };
+        if distance == 1 {
+            cr.validate(&g).map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        tab.row(&["recolor schedule", &schedule.label()]);
+        tab.row(&["recolor iterations", &iters.to_string()]);
+        tab.row(&["colors after recoloring", &cr.num_colors().to_string()]);
+        tab.row(&["recolor time", &fmt_secs(t.secs())]);
+        tab.row(&["trace", &format!("{trace:?}")]);
+    }
+    tab.print();
+    Ok(())
+}
+
+fn cmd_color(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let cfg = ColoringConfig::from_args(args)?;
+    let r = run_job(&g, &cfg)?;
+    let mut tab = Table::new(
+        &format!("distributed coloring of {} [{}]", g.name, r.config_label),
+        &["metric", "value"],
+    );
+    tab.row(&["processes", &cfg.num_procs.to_string()]);
+    tab.row(&["colors", &r.num_colors.to_string()]);
+    tab.row(&["initial colors", &r.initial_colors.to_string()]);
+    tab.row(&["recolor trace", &format!("{:?}", r.recolor_trace)]);
+    tab.row(&["virtual makespan", &fmt_secs(r.metrics.makespan)]);
+    tab.row(&["messages", &r.metrics.total_msgs.to_string()]);
+    tab.row(&["bytes", &r.metrics.total_bytes.to_string()]);
+    tab.row(&["conflicts", &r.metrics.total_conflicts.to_string()]);
+    tab.row(&["rounds", &r.metrics.rounds.to_string()]);
+    tab.row(&["edge cut", &r.partition_metrics.edge_cut.to_string()]);
+    tab.row(&["sim wallclock", &fmt_secs(r.metrics.wall_secs)]);
+    tab.print();
+    Ok(())
+}
+
+fn cmd_kernel(args: &Args) -> Result<()> {
+    use dgcolor::color::Coloring;
+    use dgcolor::runtime::{BatchColorer, KernelRuntime};
+    if !KernelRuntime::artifacts_present() {
+        bail!("artifacts missing — run `make artifacts` first");
+    }
+    let g = load_graph(args)?;
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let x: Option<u32> = match args.get_str("selection") {
+        Some(s) => match s.parse::<Selection>().map_err(anyhow::Error::msg)? {
+            Selection::FirstFit => None,
+            Selection::RandomX(x) => Some(x),
+            other => bail!("kernel backend supports ff|r<X>, not {other:?}"),
+        },
+        None => None,
+    };
+    let rt = KernelRuntime::load(&KernelRuntime::artifacts_dir())?;
+    let mut bc = BatchColorer::new(rt, seed);
+    let order: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let mut c = Coloring::uncolored(g.num_vertices());
+    let t = Timer::start();
+    bc.color_sequence(&g, &order, x, &mut c)?;
+    let secs = t.secs();
+    c.validate(&g).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut tab = Table::new(
+        &format!("kernel-backend coloring of {}", g.name),
+        &["metric", "value"],
+    );
+    tab.row(&["colors", &c.num_colors().to_string()]);
+    tab.row(&["kernel calls", &bc.kernel_calls.to_string()]);
+    tab.row(&["native fallbacks", &bc.fallbacks.to_string()]);
+    tab.row(&["time", &fmt_secs(secs)]);
+    tab.print();
+    Ok(())
+}

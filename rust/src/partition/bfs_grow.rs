@@ -1,0 +1,232 @@
+//! BFS-grow partitioner with greedy boundary refinement — the ParMETIS
+//! stand-in for the real-world graphs (DESIGN.md §1).
+//!
+//! Phase 1 grows `k` regions breadth-first from spread-out seeds under a
+//! strict size cap, which yields connected, low-cut parts on mesh-like
+//! graphs. Phase 2 does a few passes of greedy boundary-vertex migration
+//! (move a vertex to the neighboring part that reduces cut, subject to the
+//! balance cap) — a light Kernighan-Lin-style refinement.
+
+use super::Partition;
+use crate::graph::{CsrGraph, VertexId};
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+const UNASSIGNED: u32 = u32::MAX;
+/// Allowed size slack over perfect balance.
+const BALANCE_SLACK: f64 = 1.03;
+const REFINE_PASSES: usize = 4;
+
+pub fn partition(g: &CsrGraph, num_parts: usize, seed: u64) -> Partition {
+    assert!(num_parts > 0);
+    let n = g.num_vertices();
+    if num_parts == 1 || n == 0 {
+        return Partition::new(vec![0; n], num_parts.max(1));
+    }
+    let cap = ((n as f64 / num_parts as f64) * BALANCE_SLACK).ceil() as usize;
+    let cap = cap.max(1);
+
+    let mut parts = vec![UNASSIGNED; n];
+    let mut sizes = vec![0usize; num_parts];
+    let mut rng = Rng::new(seed);
+
+    // Seeds: pseudo-random spread (one try list per part; collisions fall
+    // back to a linear scan for an unassigned vertex).
+    let mut queues: Vec<VecDeque<VertexId>> = (0..num_parts).map(|_| VecDeque::new()).collect();
+    let mut scan_cursor = 0usize;
+    let seed_part = |p: usize,
+                         parts: &mut Vec<u32>,
+                         sizes: &mut Vec<usize>,
+                         queues: &mut Vec<VecDeque<VertexId>>,
+                         rng: &mut Rng,
+                         scan_cursor: &mut usize|
+     -> bool {
+        for _ in 0..32 {
+            let s = rng.range(0, n);
+            if parts[s] == UNASSIGNED {
+                parts[s] = p as u32;
+                sizes[p] += 1;
+                queues[p].push_back(s as VertexId);
+                return true;
+            }
+        }
+        while *scan_cursor < n {
+            if parts[*scan_cursor] == UNASSIGNED {
+                parts[*scan_cursor] = p as u32;
+                sizes[p] += 1;
+                queues[p].push_back(*scan_cursor as VertexId);
+                return true;
+            }
+            *scan_cursor += 1;
+        }
+        false
+    };
+    for p in 0..num_parts.min(n) {
+        seed_part(p, &mut parts, &mut sizes, &mut queues, &mut rng, &mut scan_cursor);
+    }
+
+    // Smallest-part-first growth: repeatedly let the smallest growable part
+    // expand a chunk. This keeps parts balanced and never strands a region:
+    // when every queue is dry but unassigned vertices remain (disconnected
+    // components or capped fronts), the smallest part is reseeded there.
+    let mut assigned: usize = sizes.iter().sum();
+    const CHUNK: usize = 32;
+    while assigned < n {
+        // pick smallest part with a non-empty queue and room under the cap
+        let candidate = (0..num_parts)
+            .filter(|&p| !queues[p].is_empty() && sizes[p] < cap)
+            .min_by_key(|&p| sizes[p]);
+        match candidate {
+            Some(p) => {
+                let mut grabbed = 0usize;
+                while grabbed < CHUNK && sizes[p] < cap {
+                    let Some(u) = queues[p].pop_front() else { break };
+                    for &v in g.neighbors(u) {
+                        if parts[v as usize] == UNASSIGNED && sizes[p] < cap {
+                            parts[v as usize] = p as u32;
+                            sizes[p] += 1;
+                            assigned += 1;
+                            grabbed += 1;
+                            queues[p].push_back(v);
+                        }
+                    }
+                }
+            }
+            None => {
+                // all growable queues dry: reseed the globally smallest part
+                // (raising the cap if even that part is full — can only
+                // happen via rounding at tiny n).
+                let p = (0..num_parts).min_by_key(|&p| sizes[p]).unwrap();
+                if sizes[p] >= cap {
+                    // every part is at cap but vertices remain: relax
+                    // (bounded: each relax assigns at least one vertex)
+                    let p = (0..num_parts).min_by_key(|&p| sizes[p]).unwrap();
+                    if seed_part(p, &mut parts, &mut sizes, &mut queues, &mut rng, &mut scan_cursor)
+                    {
+                        assigned += 1;
+                    }
+                    continue;
+                }
+                if seed_part(p, &mut parts, &mut sizes, &mut queues, &mut rng, &mut scan_cursor) {
+                    assigned += 1;
+                }
+            }
+        }
+    }
+
+    // Greedy boundary refinement.
+    let mut gains_scratch = vec![0i64; num_parts];
+    for _ in 0..REFINE_PASSES {
+        let mut moved = 0usize;
+        for u in 0..n {
+            let pu = parts[u];
+            let neigh = g.neighbors(u as VertexId);
+            if neigh.is_empty() {
+                continue;
+            }
+            // count neighbors per part (sparse touch + undo)
+            let mut touched: Vec<u32> = Vec::with_capacity(4);
+            for &v in neigh {
+                let pv = parts[v as usize];
+                if gains_scratch[pv as usize] == 0 {
+                    touched.push(pv);
+                }
+                gains_scratch[pv as usize] += 1;
+            }
+            let own = gains_scratch[pu as usize];
+            let mut best_part = pu;
+            let mut best_gain = 0i64;
+            for &tp in &touched {
+                if tp != pu {
+                    let gain = gains_scratch[tp as usize] - own;
+                    if gain > best_gain && sizes[tp as usize] < cap {
+                        best_gain = gain;
+                        best_part = tp;
+                    }
+                }
+            }
+            for &tp in &touched {
+                gains_scratch[tp as usize] = 0;
+            }
+            if best_part != pu {
+                sizes[pu as usize] -= 1;
+                sizes[best_part as usize] += 1;
+                parts[u] = best_part;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+
+    Partition::new(parts, num_parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+    use crate::partition::{block, metrics};
+
+    #[test]
+    fn all_assigned_and_balanced() {
+        let g = synth::grid2d(40, 40);
+        let p = partition(&g, 8, 1);
+        assert!(p.parts.iter().all(|&x| x < 8));
+        let m = metrics(&g, &p);
+        assert!(m.imbalance <= 1.2, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn beats_block_on_mesh() {
+        // On a locality-heavy mesh with shuffled... actually grid ids are
+        // already ordered, so block is decent; compare on the FEM generator.
+        let g = synth::fem_like(8000, 12.0, 30, 0.0, 3, "fem");
+        let pb = block::partition(&g, 16);
+        let pg = partition(&g, 16, 3);
+        let mb = metrics(&g, &pb);
+        let mg = metrics(&g, &pg);
+        // BFS-grow should not be dramatically worse; on meshes it is usually
+        // better or comparable.
+        assert!(
+            (mg.edge_cut as f64) < 1.5 * mb.edge_cut as f64,
+            "bfs cut {} vs block cut {}",
+            mg.edge_cut,
+            mb.edge_cut
+        );
+    }
+
+    #[test]
+    fn single_part() {
+        let g = synth::path(10);
+        let p = partition(&g, 1, 0);
+        assert_eq!(metrics(&g, &p).edge_cut, 0);
+    }
+
+    #[test]
+    fn handles_disconnected() {
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new(100);
+        // two components + isolated vertices
+        for i in 0..40u32 {
+            b.add_edge(i, (i + 1) % 41);
+        }
+        for i in 50..90u32 {
+            b.add_edge(i, i + 1);
+        }
+        let g = b.build("disc");
+        let p = partition(&g, 4, 7);
+        assert!(p.parts.iter().all(|&x| x < 4));
+        let m = metrics(&g, &p);
+        assert!(m.imbalance < 1.6, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = synth::grid2d(20, 20);
+        let a = partition(&g, 4, 9);
+        let b = partition(&g, 4, 9);
+        assert_eq!(a.parts, b.parts);
+    }
+}

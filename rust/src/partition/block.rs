@@ -1,0 +1,66 @@
+//! Block partitioning: contiguous ranges of vertex ids, sizes differing by
+//! at most one. This is what the paper uses for the RMAT graphs.
+
+use super::Partition;
+use crate::graph::CsrGraph;
+
+pub fn partition(g: &CsrGraph, num_parts: usize) -> Partition {
+    assert!(num_parts > 0);
+    let n = g.num_vertices();
+    let base = n / num_parts;
+    let extra = n % num_parts; // first `extra` parts get one more vertex
+    let mut parts = vec![0u32; n];
+    let mut v = 0usize;
+    for p in 0..num_parts {
+        let sz = base + usize::from(p < extra);
+        for _ in 0..sz {
+            parts[v] = p as u32;
+            v += 1;
+        }
+    }
+    Partition::new(parts, num_parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+    use crate::partition::metrics;
+
+    #[test]
+    fn balanced_sizes() {
+        let g = synth::path(10);
+        let p = partition(&g, 3);
+        assert_eq!(p.sizes(), vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn contiguous_ranges() {
+        let g = synth::path(10);
+        let p = partition(&g, 3);
+        // contiguity: parts vector is non-decreasing
+        assert!(p.parts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn path_cut_equals_parts_minus_one() {
+        let g = synth::path(100);
+        let p = partition(&g, 8);
+        assert_eq!(metrics(&g, &p).edge_cut, 7);
+    }
+
+    #[test]
+    fn one_part_no_cut() {
+        let g = synth::grid2d(5, 5);
+        let p = partition(&g, 1);
+        assert_eq!(metrics(&g, &p).edge_cut, 0);
+        assert_eq!(metrics(&g, &p).boundary_vertices, 0);
+    }
+
+    #[test]
+    fn more_parts_than_vertices() {
+        let g = synth::path(3);
+        let p = partition(&g, 5);
+        assert_eq!(p.sizes(), vec![1, 1, 1, 0, 0]);
+    }
+}

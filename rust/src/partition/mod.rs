@@ -1,0 +1,145 @@
+//! Graph partitioning substrate (the ParMETIS stand-in).
+//!
+//! The distributed framework only consumes a `Partition` (vertex → part
+//! map); the paper partitions real-world graphs with ParMETIS (good cuts)
+//! and RMAT graphs with block partitioning. We provide both classes:
+//! [`block`] and the BFS-grow partitioner in [`bfs_grow`] with boundary
+//! refinement.
+
+pub mod bfs_grow;
+pub mod block;
+
+use crate::graph::{CsrGraph, VertexId};
+
+/// A vertex → part assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    pub parts: Vec<u32>,
+    pub num_parts: usize,
+}
+
+impl Partition {
+    pub fn new(parts: Vec<u32>, num_parts: usize) -> Self {
+        debug_assert!(parts.iter().all(|&p| (p as usize) < num_parts));
+        Partition { parts, num_parts }
+    }
+
+    #[inline]
+    pub fn part_of(&self, v: VertexId) -> u32 {
+        self.parts[v as usize]
+    }
+
+    /// Vertices owned by each part.
+    pub fn members(&self) -> Vec<Vec<VertexId>> {
+        let mut m = vec![Vec::new(); self.num_parts];
+        for (v, &p) in self.parts.iter().enumerate() {
+            m[p as usize].push(v as VertexId);
+        }
+        m
+    }
+
+    /// Part sizes.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.num_parts];
+        for &p in &self.parts {
+            s[p as usize] += 1;
+        }
+        s
+    }
+}
+
+/// Quality metrics of a partition, as used in the experiment logs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionMetrics {
+    /// Edges crossing parts.
+    pub edge_cut: usize,
+    /// Vertices with ≥1 neighbor in another part.
+    pub boundary_vertices: usize,
+    /// max part size / avg part size.
+    pub imbalance: f64,
+}
+
+pub fn metrics(g: &CsrGraph, p: &Partition) -> PartitionMetrics {
+    assert_eq!(g.num_vertices(), p.parts.len());
+    let mut cut = 0usize;
+    let mut boundary = 0usize;
+    for u in 0..g.num_vertices() as VertexId {
+        let pu = p.part_of(u);
+        let mut is_boundary = false;
+        for &v in g.neighbors(u) {
+            if p.part_of(v) != pu {
+                is_boundary = true;
+                if u < v {
+                    cut += 1;
+                }
+            }
+        }
+        if is_boundary {
+            boundary += 1;
+        }
+    }
+    let sizes = p.sizes();
+    let max = sizes.iter().copied().max().unwrap_or(0) as f64;
+    let avg = g.num_vertices() as f64 / p.num_parts as f64;
+    PartitionMetrics {
+        edge_cut: cut,
+        boundary_vertices: boundary,
+        imbalance: if avg > 0.0 { max / avg } else { 1.0 },
+    }
+}
+
+/// Partitioner selector used by the CLI / config layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioner {
+    Block,
+    BfsGrow,
+}
+
+impl std::str::FromStr for Partitioner {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "block" => Ok(Partitioner::Block),
+            "bfs" | "bfsgrow" | "bfs-grow" => Ok(Partitioner::BfsGrow),
+            other => Err(format!("unknown partitioner {other:?} (block|bfs)")),
+        }
+    }
+}
+
+pub fn partition(g: &CsrGraph, method: Partitioner, num_parts: usize, seed: u64) -> Partition {
+    match method {
+        Partitioner::Block => block::partition(g, num_parts),
+        Partitioner::BfsGrow => bfs_grow::partition(g, num_parts, seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+
+    #[test]
+    fn metrics_on_path() {
+        let g = synth::path(4);
+        let p = Partition::new(vec![0, 0, 1, 1], 2);
+        let m = metrics(&g, &p);
+        assert_eq!(m.edge_cut, 1);
+        assert_eq!(m.boundary_vertices, 2);
+        assert!((m.imbalance - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn members_and_sizes() {
+        let p = Partition::new(vec![1, 0, 1, 1], 2);
+        assert_eq!(p.sizes(), vec![1, 3]);
+        assert_eq!(p.members()[0], vec![1]);
+        assert_eq!(p.members()[1], vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn partitioner_from_str() {
+        assert_eq!("block".parse::<Partitioner>().unwrap(), Partitioner::Block);
+        assert_eq!("bfs".parse::<Partitioner>().unwrap(), Partitioner::BfsGrow);
+        assert!("zzz".parse::<Partitioner>().is_err());
+    }
+}

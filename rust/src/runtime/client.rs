@@ -1,0 +1,121 @@
+//! PJRT bridge: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
+//! execute them from the coordinator's hot path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids, which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Fixed kernel-contract shapes — must match `python/compile/kernels/
+/// coloring.py`.
+pub const BATCH: usize = 256;
+pub const DMAX: usize = 64;
+pub const WORDS: usize = 8;
+pub const NCOLORS: u32 = (WORDS as u32) * 32;
+pub const EDGE_BATCH: usize = 4096;
+
+/// The compiled kernel set.
+pub struct KernelRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    first_fit: xla::PjRtLoadedExecutable,
+    random_x: xla::PjRtLoadedExecutable,
+    conflict: xla::PjRtLoadedExecutable,
+    forbid_mask: xla::PjRtLoadedExecutable,
+}
+
+fn load_one(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing {path:?} — run `make artifacts` first"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {name}"))
+}
+
+impl KernelRuntime {
+    /// Load and compile all artifacts from `dir` (typically `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(KernelRuntime {
+            first_fit: load_one(&client, dir, "first_fit")?,
+            random_x: load_one(&client, dir, "random_x")?,
+            conflict: load_one(&client, dir, "conflict")?,
+            forbid_mask: load_one(&client, dir, "forbid_mask")?,
+            client,
+        })
+    }
+
+    /// Default artifact location: `$DGCOLOR_ARTIFACTS` or `artifacts/`.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var("DGCOLOR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Whether the artifacts exist (tests skip gracefully when absent).
+    pub fn artifacts_present() -> bool {
+        Self::artifacts_dir().join("first_fit.hlo.txt").exists()
+    }
+
+    /// First-fit colors for one batch. `neigh_colors` is row-major
+    /// [BATCH, DMAX] i32 with -1 padding.
+    pub fn first_fit_batch(&self, neigh_colors: &[i32]) -> Result<Vec<i32>> {
+        debug_assert_eq!(neigh_colors.len(), BATCH * DMAX);
+        let nc = xla::Literal::vec1(neigh_colors).reshape(&[BATCH as i64, DMAX as i64])?;
+        let out = self.first_fit.execute::<xla::Literal>(&[nc])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Random-X-Fit colors for one batch; `u` are uniforms in [0,1).
+    pub fn random_x_batch(&self, neigh_colors: &[i32], u: &[f32], x: u32) -> Result<Vec<i32>> {
+        debug_assert_eq!(neigh_colors.len(), BATCH * DMAX);
+        debug_assert_eq!(u.len(), BATCH);
+        let nc = xla::Literal::vec1(neigh_colors).reshape(&[BATCH as i64, DMAX as i64])?;
+        let uu = xla::Literal::vec1(u);
+        let xx = xla::Literal::vec1(&[x as i32]);
+        let out = self.random_x.execute::<xla::Literal>(&[nc, uu, xx])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Forbidden bitsets for one batch: [BATCH, WORDS] u32 words (as i32).
+    pub fn forbid_mask_batch(&self, neigh_colors: &[i32]) -> Result<Vec<i32>> {
+        debug_assert_eq!(neigh_colors.len(), BATCH * DMAX);
+        let nc = xla::Literal::vec1(neigh_colors).reshape(&[BATCH as i64, DMAX as i64])?;
+        let out = self.forbid_mask.execute::<xla::Literal>(&[nc])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Batched conflict detection over EDGE_BATCH edges. Inputs are i32
+    /// arrays (priorities are u32 bit-cast to i32). Returns (lose_u,
+    /// lose_v) 0/1 flags.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conflict_batch(
+        &self,
+        cu: &[i32],
+        cv: &[i32],
+        pu: &[i32],
+        pv: &[i32],
+        gu: &[i32],
+        gv: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        debug_assert_eq!(cu.len(), EDGE_BATCH);
+        let args = [cu, cv, pu, pv, gu, gv].map(xla::Literal::vec1);
+        let out = self.conflict.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // return_tuple=True with two results → 2-tuple
+        let (a, b) = out.to_tuple2()?;
+        Ok((a.to_vec::<i32>()?, b.to_vec::<i32>()?))
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the HLO-text artifacts AOT-compiled by
+//! `python/compile/aot.py` and exposes batched kernel-backed coloring to
+//! the coordinator. Python never runs at request time — after
+//! `make artifacts` the rust binary is self-contained.
+//!
+//! Note on threading: the `xla` crate's PJRT wrappers are not `Send`, so a
+//! [`client::KernelRuntime`] lives on the thread that created it. The
+//! kernel backend therefore drives whole-graph batch coloring from the
+//! leader thread (`batch::BatchColorer`); the multi-process distributed
+//! path uses the native implementation of the identical semantics (pinned
+//! to the kernels by `rust/tests/runtime_kernels.rs` and `python/tests`).
+
+pub mod batch;
+pub mod client;
+
+pub use batch::BatchColorer;
+pub use client::KernelRuntime;

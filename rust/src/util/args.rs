@@ -1,0 +1,166 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positionals and
+//! subcommands. Typed getters parse on access and report errors with the
+//! flag name.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw token list. A token `--k` followed by a token that does
+    /// not start with `--` is an option; otherwise it's a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    a.options.insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positionals.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// First positional = subcommand; returns it plus the remaining args.
+    pub fn subcommand(mut self) -> (Option<String>, Args) {
+        if self.positionals.is_empty() {
+            (None, self)
+        } else {
+            let sub = self.positionals.remove(0);
+            (Some(sub), self)
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get_str(name).unwrap_or(default)
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .with_context(|| format!("invalid value {v:?} for --{name}")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        let v = self
+            .options
+            .get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))?;
+        v.parse::<T>()
+            .with_context(|| format!("invalid value {v:?} for --{name}"))
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get_str(name)
+            .map(|s| {
+                s.split(',')
+                    .map(|x| x.trim().to_string())
+                    .filter(|x| !x.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse("color --graph g.mtx --procs 8 --verbose --ratio=0.5");
+        assert_eq!(a.positionals, vec!["color"]);
+        assert_eq!(a.get_str("graph"), Some("g.mtx"));
+        assert_eq!(a.get_or("procs", 1usize).unwrap(), 8);
+        assert_eq!(a.get_or("ratio", 0.0f64).unwrap(), 0.5);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn subcommand_split() {
+        let (sub, rest) = parse("bench fig4 --procs 4").subcommand();
+        assert_eq!(sub.as_deref(), Some("bench"));
+        assert_eq!(rest.positionals, vec!["fig4"]);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("--n 10");
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 10);
+        assert_eq!(a.get_or("m", 7usize).unwrap(), 7);
+        assert!(a.require::<usize>("missing").is_err());
+    }
+
+    #[test]
+    fn invalid_value_errors() {
+        let a = parse("--n abc");
+        assert!(a.get_or("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--procs 1,2,4,8");
+        assert_eq!(a.get_list("procs"), vec!["1", "2", "4", "8"]);
+        assert!(a.get_list("none").is_empty());
+    }
+
+    #[test]
+    fn flag_before_option_value_ambiguity() {
+        // `--a --b v`: a is a flag, b an option
+        let a = parse("--a --b v");
+        assert!(a.has_flag("a"));
+        assert_eq!(a.get_str("b"), Some("v"));
+    }
+}

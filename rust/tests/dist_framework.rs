@@ -1,0 +1,178 @@
+//! Integration tests for the distributed superstep framework.
+
+use dgcolor::color::{Ordering, Selection};
+use dgcolor::coordinator::{run_job, ColoringConfig};
+use dgcolor::dist::cost::CostModel;
+use dgcolor::graph::rmat::{self, RmatParams};
+use dgcolor::graph::synth;
+use dgcolor::partition::Partitioner;
+
+fn cfg(procs: usize) -> ColoringConfig {
+    ColoringConfig {
+        num_procs: procs,
+        fixed_cost: Some(CostModel::fixed()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn valid_across_proc_counts_and_graphs() {
+    let graphs = vec![
+        synth::grid2d(24, 24),
+        synth::erdos_renyi(1200, 7200, 5),
+        rmat::generate(&RmatParams::good(10, 6), 6, "rmat-good"),
+    ];
+    for g in &graphs {
+        for procs in [1, 2, 4, 8, 16] {
+            let r = run_job(g, &cfg(procs)).unwrap();
+            assert!(
+                r.num_colors <= g.max_degree() + 1,
+                "{} p={procs}: {} colors",
+                g.name,
+                r.num_colors
+            );
+        }
+    }
+}
+
+#[test]
+fn sync_mode_is_deterministic() {
+    let g = synth::erdos_renyi(1000, 8000, 17);
+    let a = run_job(&g, &cfg(8)).unwrap();
+    let b = run_job(&g, &cfg(8)).unwrap();
+    assert_eq!(a.coloring.colors, b.coloring.colors);
+    assert_eq!(a.metrics.total_msgs, b.metrics.total_msgs);
+    assert_eq!(a.metrics.makespan, b.metrics.makespan);
+}
+
+#[test]
+fn conflicts_grow_with_procs_on_er() {
+    // the framework's conflicts come from boundary edges colored in the
+    // same superstep; more processors → more boundary → more conflicts
+    let g = rmat::generate(&RmatParams::er(12, 8), 9, "rmat-er");
+    let few = run_job(&g, &cfg(2)).unwrap();
+    let many = run_job(&g, &cfg(32)).unwrap();
+    assert!(
+        many.metrics.total_conflicts >= few.metrics.total_conflicts,
+        "p=2 {} vs p=32 {}",
+        few.metrics.total_conflicts,
+        many.metrics.total_conflicts
+    );
+}
+
+#[test]
+fn smaller_supersteps_fewer_conflicts_more_messages() {
+    let g = rmat::generate(&RmatParams::er(11, 8), 10, "rmat-er");
+    let mut small = cfg(8);
+    small.superstep_size = 100;
+    let mut large = cfg(8);
+    large.superstep_size = 5000;
+    let rs = run_job(&g, &small).unwrap();
+    let rl = run_job(&g, &large).unwrap();
+    assert!(
+        rs.metrics.total_msgs > rl.metrics.total_msgs,
+        "small {} vs large {}",
+        rs.metrics.total_msgs,
+        rl.metrics.total_msgs
+    );
+    assert!(
+        rs.metrics.total_conflicts <= rl.metrics.total_conflicts,
+        "small {} vs large {}",
+        rs.metrics.total_conflicts,
+        rl.metrics.total_conflicts
+    );
+}
+
+#[test]
+fn async_valid_and_converges() {
+    let g = rmat::generate(&RmatParams::good(10, 8), 12, "rmat-good");
+    let mut c = cfg(8);
+    c.sync = false;
+    c.superstep_size = 200;
+    let r = run_job(&g, &c).unwrap();
+    assert!(r.num_colors <= g.max_degree() + 1);
+    assert!(r.metrics.rounds < 50, "rounds {}", r.metrics.rounds);
+}
+
+#[test]
+fn orderings_work_distributed() {
+    let g = synth::fem_like(2000, 12.0, 30, 0.0, 8, "fem");
+    for ord in [
+        Ordering::Natural,
+        Ordering::InternalFirst,
+        Ordering::BoundaryFirst,
+        Ordering::LargestFirst,
+        Ordering::SmallestLast,
+    ] {
+        let mut c = cfg(6);
+        c.ordering = ord;
+        let r = run_job(&g, &c).unwrap();
+        assert!(r.num_colors <= g.max_degree() + 1, "{ord:?}");
+    }
+}
+
+#[test]
+fn selections_work_distributed() {
+    let g = synth::erdos_renyi(1500, 9000, 21);
+    for sel in [
+        Selection::FirstFit,
+        Selection::StaggeredFirstFit,
+        Selection::LeastUsed,
+        Selection::RandomX(5),
+        Selection::RandomX(50),
+    ] {
+        let mut c = cfg(6);
+        c.selection = sel;
+        let r = run_job(&g, &c).unwrap();
+        assert!(
+            r.num_colors <= g.max_degree() + 50 + 1,
+            "{sel:?}: {}",
+            r.num_colors
+        );
+    }
+}
+
+#[test]
+fn random_x_reduces_conflicts() {
+    // §3.2: random selection decorrelates concurrent choices
+    let g = rmat::generate(&RmatParams::er(12, 8), 30, "rmat-er");
+    let mut ff = cfg(16);
+    ff.superstep_size = 5000;
+    let mut r5 = ff;
+    r5.selection = Selection::RandomX(5);
+    let cf = run_job(&g, &ff).unwrap();
+    let cr = run_job(&g, &r5).unwrap();
+    assert!(
+        cr.metrics.total_conflicts < cf.metrics.total_conflicts,
+        "R5 {} vs FF {}",
+        cr.metrics.total_conflicts,
+        cf.metrics.total_conflicts
+    );
+}
+
+#[test]
+fn block_vs_bfs_partition_boundary() {
+    let g = synth::fem_like(4000, 12.0, 30, 0.0, 9, "fem");
+    let mut blk = cfg(8);
+    blk.partitioner = Partitioner::Block;
+    let mut bfs = cfg(8);
+    bfs.partitioner = Partitioner::BfsGrow;
+    let rb = run_job(&g, &blk).unwrap();
+    let rg = run_job(&g, &bfs).unwrap();
+    // both valid; bfs-grow should not have wildly more cut than block
+    assert!(rb.num_colors <= g.max_degree() + 1);
+    assert!(rg.num_colors <= g.max_degree() + 1);
+}
+
+#[test]
+fn virtual_time_grows_with_messages_not_wallclock() {
+    let g = synth::erdos_renyi(800, 4000, 2);
+    let mut a = cfg(2);
+    a.network = dgcolor::dist::NetworkModel::ideal();
+    let mut b = cfg(2);
+    b.network = dgcolor::dist::NetworkModel::new(1e-3, 1e-9);
+    let ra = run_job(&g, &a).unwrap();
+    let rb = run_job(&g, &b).unwrap();
+    assert!(rb.metrics.makespan > ra.metrics.makespan + 1e-4);
+    assert_eq!(ra.coloring.colors, rb.coloring.colors, "net model must not change results");
+}

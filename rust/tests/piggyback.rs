@@ -1,0 +1,168 @@
+//! Tests for the piggybacked communication scheme (paper §3.1 / Fig 4):
+//! identical results, far fewer messages, no empty messages, bounded
+//! preparation overhead, and lower virtual runtime.
+
+use dgcolor::color::recolor::{Permutation, RecolorSchedule};
+use dgcolor::color::{greedy_color, Coloring, Ordering, Selection};
+use dgcolor::dist::comm::network;
+use dgcolor::dist::cost::CostModel;
+use dgcolor::dist::proc::{build_local_graphs, ColorState};
+use dgcolor::dist::recolor::{recolor_process_sync, CommScheme, RecolorConfig};
+use dgcolor::dist::{DistMetrics, NetworkModel, ProcMetrics};
+use dgcolor::graph::synth;
+use dgcolor::graph::CsrGraph;
+use dgcolor::partition::{self, Partitioner};
+
+fn run_scheme(
+    g: &CsrGraph,
+    initial: &Coloring,
+    procs: usize,
+    scheme: CommScheme,
+    iterations: u32,
+) -> (Coloring, DistMetrics) {
+    // ParMETIS-analogue partitioning, as the paper uses for real graphs
+    let part = partition::partition(g, Partitioner::BfsGrow, procs, 1);
+    let (_, locals) = build_local_graphs(g, &part);
+    let cost = CostModel::fixed();
+    let eps = network(procs, NetworkModel::default());
+    let cfg = RecolorConfig {
+        schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
+        iterations,
+        scheme,
+        seed: 11,
+    };
+    let mut outs: Vec<Option<(Vec<(u32, u32)>, ProcMetrics)>> = (0..procs).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (ep, lg) in eps.into_iter().zip(locals.iter()) {
+            handles.push(s.spawn(move || {
+                let mut ep = ep;
+                let mut state = ColorState::from_global(lg, initial);
+                let mut trace = Vec::new();
+                let m = recolor_process_sync(&mut ep, lg, &cost, &cfg, &mut state, &mut trace);
+                (state.owned_pairs(lg), m)
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            outs[i] = Some(h.join().unwrap());
+        }
+    });
+    let mut coloring = Coloring::uncolored(g.num_vertices());
+    let mut per_proc = Vec::new();
+    for (pairs, m) in outs.into_iter().map(|o| o.unwrap()) {
+        for (gid, c) in pairs {
+            coloring.set(gid, c);
+        }
+        per_proc.push(m);
+    }
+    (coloring, DistMetrics::aggregate(&per_proc, 0.0))
+}
+
+/// The Fig-4 setting: enough processes that per-pair boundaries are small —
+/// the regime in which the paper runs recoloring (64 procs, 8/node).
+fn workload() -> (CsrGraph, Coloring) {
+    let g = synth::fem_like(20_000, 25.0, 76, 0.004, 21, "fem");
+    // Fig 4 seeds recoloring from an FSS-style coloring (first fit + SL):
+    // steeply decaying class sizes → many near-empty color steps, the
+    // regime piggybacking exploits.
+    let init = greedy_color(&g, Ordering::SmallestLast, Selection::FirstFit, 5);
+    (g, init)
+}
+/// Fig 4's regime: enough processes that per-pair boundaries are small
+/// relative to the number of color classes. (The paper runs 8 procs/node on
+/// 64 nodes; the win grows with P — the fig4 bench sweeps this.)
+const PROCS: usize = 64;
+
+#[test]
+fn piggyback_same_result_far_fewer_messages() {
+    let (g, init) = workload();
+    let (cb, mb) = run_scheme(&g, &init, PROCS, CommScheme::Base, 1);
+    let (cp, mp) = run_scheme(&g, &init, PROCS, CommScheme::Piggyback, 1);
+    assert_eq!(cb.colors, cp.colors, "schemes must agree exactly");
+    // paper: ~80% fewer messages at 512 procs; at this test's scale (64
+    // procs, k≈15 vs the paper's k≈40) require at least 25% — the fig4
+    // bench sweeps P and reports the full reduction curve
+    assert!(
+        (mp.total_msgs as f64) < 0.75 * mb.total_msgs as f64,
+        "piggyback {} vs base {} messages",
+        mp.total_msgs,
+        mb.total_msgs
+    );
+}
+
+#[test]
+fn piggyback_faster_in_virtual_time() {
+    let (g, init) = workload();
+    let (_, mb) = run_scheme(&g, &init, PROCS, CommScheme::Base, 1);
+    let (_, mp) = run_scheme(&g, &init, PROCS, CommScheme::Piggyback, 1);
+    assert!(
+        mp.makespan < mb.makespan,
+        "piggyback {} vs base {} seconds",
+        mp.makespan,
+        mb.makespan
+    );
+}
+
+#[test]
+fn preparation_overhead_is_bounded() {
+    // paper Fig 4: preparation ≤ ~12% of the improved total time
+    let (g, init) = workload();
+    let (_, mp) = run_scheme(&g, &init, PROCS, CommScheme::Piggyback, 1);
+    let plan = mp.phase_max.get("plan");
+    let total = mp.makespan;
+    assert!(plan > 0.0, "plan phase must be accounted");
+    assert!(
+        plan / total < 0.25,
+        "plan {plan} vs total {total} (ratio {})",
+        plan / total
+    );
+}
+
+#[test]
+fn base_sends_empty_messages_piggyback_does_not() {
+    // base message count per pair per direction = k (number of classes);
+    // piggyback sends only deadline + flush + plan messages
+    let (g, init) = workload();
+    let k = init.num_colors() as u64;
+    let procs = 4;
+    let (_, mb) = run_scheme(&g, &init, procs, CommScheme::Base, 1);
+    // count ordered neighbor pairs from the partition
+    let part = partition::partition(&g, Partitioner::Block, procs, 1);
+    let (_, locals) = build_local_graphs(&g, &part);
+    let pairs: u64 = locals.iter().map(|l| l.neighbor_procs.len() as u64).sum();
+    // base recoloring traffic = k msgs per ordered pair (+ a few collectives)
+    assert!(
+        mb.total_msgs >= pairs * k,
+        "expected ≥ {} base msgs, got {}",
+        pairs * k,
+        mb.total_msgs
+    );
+}
+
+#[test]
+fn schemes_agree_over_multiple_iterations() {
+    let (g, init) = workload();
+    let (cb, _) = run_scheme(&g, &init, 6, CommScheme::Base, 3);
+    let (cp, _) = run_scheme(&g, &init, 6, CommScheme::Piggyback, 3);
+    cb.validate(&g).unwrap();
+    assert_eq!(cb.colors, cp.colors);
+}
+
+#[test]
+fn piggyback_message_reduction_grows_with_colors() {
+    // more color classes → more empty messages in base → bigger win
+    let g = synth::fem_like(3000, 16.0, 60, 0.01, 31, "fem");
+    let few_colors = greedy_color(&g, Ordering::SmallestLast, Selection::FirstFit, 1);
+    let many_colors = greedy_color(&g, Ordering::Natural, Selection::RandomX(50), 1);
+    let ratio = |init: &Coloring| {
+        let (_, mb) = run_scheme(&g, init, 6, CommScheme::Base, 1);
+        let (_, mp) = run_scheme(&g, init, 6, CommScheme::Piggyback, 1);
+        mp.total_msgs as f64 / mb.total_msgs as f64
+    };
+    let r_few = ratio(&few_colors);
+    let r_many = ratio(&many_colors);
+    assert!(
+        r_many < r_few,
+        "reduction should grow with classes: few {r_few:.3} many {r_many:.3}"
+    );
+}

@@ -1,0 +1,94 @@
+//! End-to-end pipeline tests: the paper's "speed" and "quality" presets,
+//! scaling behaviour, and metric sanity.
+
+use dgcolor::coordinator::{run_job, ColoringConfig};
+use dgcolor::dist::cost::CostModel;
+use dgcolor::graph::rmat::{self, RmatParams};
+use dgcolor::graph::synth;
+
+fn with_fixed_cost(mut c: ColoringConfig) -> ColoringConfig {
+    c.fixed_cost = Some(CostModel::fixed());
+    c
+}
+
+#[test]
+fn speed_and_quality_presets_run() {
+    // bmw3_2-like density: enough color headroom for recoloring to matter
+    let g = synth::fem_like(6000, 30.0, 90, 0.01, 77, "fem");
+    let speed = run_job(&g, &with_fixed_cost(ColoringConfig::speed(8))).unwrap();
+    let quality = run_job(&g, &with_fixed_cost(ColoringConfig::quality(8))).unwrap();
+    // the quality preset must produce fewer colors …
+    assert!(
+        quality.num_colors < speed.num_colors,
+        "quality {} vs speed {}",
+        quality.num_colors,
+        speed.num_colors
+    );
+    // … and its recoloring iteration must have improved its own initial
+    assert!(quality.num_colors < quality.initial_colors);
+    // … at a higher (but sane) runtime
+    assert!(quality.metrics.makespan > speed.metrics.makespan);
+    assert!(quality.metrics.makespan < 100.0 * speed.metrics.makespan);
+}
+
+#[test]
+fn recoloring_quality_stable_as_procs_grow() {
+    // paper's headline: RC keeps colors near-sequential as P grows, while
+    // the plain framework drifts upward on conflict-heavy graphs
+    let g = rmat::generate(&RmatParams::good(11, 8), 3, "rmat-good");
+    let colors_at = |p: usize| {
+        let r = run_job(&g, &with_fixed_cost(ColoringConfig::quality(p))).unwrap();
+        r.num_colors
+    };
+    let c4 = colors_at(4);
+    let c32 = colors_at(32);
+    assert!(
+        c32 as f64 <= c4 as f64 * 1.3 + 2.0,
+        "quality drifted: p=4 → {c4}, p=32 → {c32}"
+    );
+}
+
+#[test]
+fn makespan_improves_with_procs_on_large_graph() {
+    // virtual time must show parallel speedup from 1 to 8 procs on a
+    // compute-heavy workload
+    let g = rmat::generate(&RmatParams::er(14, 8), 4, "rmat-er");
+    let t1 = run_job(&g, &with_fixed_cost(ColoringConfig::speed(1)))
+        .unwrap()
+        .metrics
+        .makespan;
+    let t8 = run_job(&g, &with_fixed_cost(ColoringConfig::speed(8)))
+        .unwrap()
+        .metrics
+        .makespan;
+    assert!(
+        t8 < t1,
+        "no virtual speedup: t1={t1} t8={t8}"
+    );
+}
+
+#[test]
+fn metrics_are_consistent() {
+    let g = synth::grid2d(30, 30);
+    let r = run_job(&g, &with_fixed_cost(ColoringConfig::quality(6))).unwrap();
+    let m = &r.metrics;
+    assert_eq!(m.num_procs, 6);
+    assert!(m.total_bytes > 0);
+    assert!(m.total_msgs > 0);
+    assert!(m.makespan > 0.0);
+    assert!(m.wall_secs > 0.0);
+    assert!(m.phase_sums.get("color") > 0.0);
+    assert!(m.phase_sums.get("recolor") > 0.0);
+    assert!(m.phase_sums.get("plan") > 0.0, "piggyback plan phase missing");
+    // partition metrics present
+    assert!(r.partition_metrics.imbalance >= 1.0);
+}
+
+#[test]
+fn trace_records_initial_plus_iterations() {
+    let g = synth::grid2d(20, 20);
+    let r = run_job(&g, &with_fixed_cost(ColoringConfig::quality(4))).unwrap();
+    assert_eq!(r.recolor_trace.len(), 2); // initial + 1 ND iteration
+    assert_eq!(r.initial_colors, r.recolor_trace[0]);
+    assert_eq!(r.num_colors, *r.recolor_trace.last().unwrap());
+}

@@ -1,0 +1,255 @@
+//! Property-based tests over randomized graphs, partitions and configs,
+//! driven by the in-house prop harness (`util::prop`).
+
+use dgcolor::color::recolor::{recolor_once, Permutation};
+use dgcolor::color::{greedy_color, Ordering, Selection};
+use dgcolor::coordinator::{run_job, ColoringConfig, RecolorMode};
+use dgcolor::dist::cost::CostModel;
+use dgcolor::dist::framework::loses;
+use dgcolor::dist::proc::build_local_graphs;
+use dgcolor::graph::{synth, CsrGraph, GraphBuilder};
+use dgcolor::partition::{self, Partition, Partitioner};
+use dgcolor::util::prop::{check, PropConfig};
+use dgcolor::util::Rng;
+
+fn random_graph(rng: &mut Rng) -> CsrGraph {
+    let n = rng.range(2, 400);
+    let m = rng.range(1, 4 * n);
+    let mut b = GraphBuilder::new(n);
+    for _ in 0..m {
+        let u = rng.range(0, n) as u32;
+        let v = rng.range(0, n) as u32;
+        b.add_edge(u, v);
+    }
+    b.build(format!("prop-{n}-{m}"))
+}
+
+#[test]
+fn prop_greedy_always_valid_and_bounded() {
+    check(
+        "greedy valid",
+        PropConfig { cases: 60, seed: 101 },
+        |rng, _| {
+            let g = random_graph(rng);
+            let ord = *rng.choose(&[
+                Ordering::Natural,
+                Ordering::LargestFirst,
+                Ordering::SmallestLast,
+                Ordering::IncidenceDegree,
+                Ordering::Random,
+            ]);
+            let x = rng.range(1, 20) as u32;
+            let sel = *rng.choose(&[
+                Selection::FirstFit,
+                Selection::StaggeredFirstFit,
+                Selection::LeastUsed,
+                Selection::RandomX(x),
+            ]);
+            let c = greedy_color(&g, ord, sel, rng.next_u64());
+            if let Err(e) = c.validate(&g) {
+                return Err(format!("{ord:?} {sel:?} invalid: {e}"));
+            }
+            let bound = g.max_degree() + x as usize + 1;
+            if c.num_colors() > bound {
+                return Err(format!("{} colors > bound {bound}", c.num_colors()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_recolor_never_increases_colors() {
+    check(
+        "recolor monotone",
+        PropConfig { cases: 40, seed: 202 },
+        |rng, _| {
+            let g = random_graph(rng);
+            let mut c = greedy_color(&g, Ordering::Natural, Selection::RandomX(8), rng.next_u64());
+            for _ in 0..3 {
+                let perm = *rng.choose(&[
+                    Permutation::Reverse,
+                    Permutation::NonIncreasing,
+                    Permutation::NonDecreasing,
+                    Permutation::Random,
+                ]);
+                let next = recolor_once(&g, &c, perm, rng);
+                next.validate(&g).map_err(|e| e.to_string())?;
+                if next.num_colors() > c.num_colors() {
+                    return Err(format!(
+                        "{perm:?} increased {} -> {}",
+                        c.num_colors(),
+                        next.num_colors()
+                    ));
+                }
+                c = next;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_distributed_always_valid() {
+    check(
+        "distributed valid",
+        PropConfig { cases: 25, seed: 303 },
+        |rng, _| {
+            let g = random_graph(rng);
+            let procs = rng.range(1, 9);
+            let cfg = ColoringConfig {
+                num_procs: procs,
+                superstep_size: rng.range(1, 300),
+                sync: rng.chance(0.5),
+                partitioner: if rng.chance(0.5) {
+                    Partitioner::Block
+                } else {
+                    Partitioner::BfsGrow
+                },
+                recolor: if rng.chance(0.5) {
+                    RecolorMode::Sync(Default::default())
+                } else {
+                    RecolorMode::None
+                },
+                seed: rng.next_u64(),
+                fixed_cost: Some(CostModel::fixed()),
+                ..Default::default()
+            };
+            run_job(&g, &cfg).map_err(|e| e.to_string())?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_conflict_tiebreak_antisymmetric_and_total() {
+    check(
+        "loses() total order",
+        PropConfig { cases: 200, seed: 404 },
+        |rng, _| {
+            let a = rng.next_u32();
+            let b = rng.next_u32();
+            let seed = rng.next_u64();
+            if a == b {
+                return Ok(());
+            }
+            let ab = loses(a, b, seed);
+            let ba = loses(b, a, seed);
+            if ab == ba {
+                return Err(format!("not antisymmetric for ({a},{b})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_local_views_partition_edges() {
+    check(
+        "local views conserve edges",
+        PropConfig { cases: 30, seed: 505 },
+        |rng, _| {
+            let g = random_graph(rng);
+            let procs = rng.range(1, 7);
+            let part = partition::partition(
+                &g,
+                if rng.chance(0.5) {
+                    Partitioner::Block
+                } else {
+                    Partitioner::BfsGrow
+                },
+                procs,
+                rng.next_u64(),
+            );
+            let (_, locals) = build_local_graphs(&g, &part);
+            let owned_total: usize = locals.iter().map(|l| l.n_owned()).sum();
+            if owned_total != g.num_vertices() {
+                return Err(format!("owned {owned_total} != |V| {}", g.num_vertices()));
+            }
+            let deg_total: u64 = locals.iter().map(|l| l.csr.xadj[l.n_owned()]).sum();
+            if deg_total != 2 * g.num_edges() as u64 {
+                return Err(format!("degree sum {deg_total} != 2|E|"));
+            }
+            // boundary flags must match the partition
+            for l in &locals {
+                for (i, &gid) in l.global_ids.iter().enumerate() {
+                    let really = g
+                        .neighbors(gid)
+                        .iter()
+                        .any(|&u| part.part_of(u) != l.rank);
+                    if really != l.is_boundary[i] {
+                        return Err(format!("boundary flag wrong at {gid}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partitions_cover_and_balance() {
+    check(
+        "partitions well formed",
+        PropConfig { cases: 40, seed: 606 },
+        |rng, _| {
+            let g = random_graph(rng);
+            let k = rng.range(1, 12);
+            let p: Partition =
+                partition::partition(&g, Partitioner::BfsGrow, k, rng.next_u64());
+            if p.parts.len() != g.num_vertices() {
+                return Err("wrong length".into());
+            }
+            if p.parts.iter().any(|&x| x as usize >= k) {
+                return Err("part out of range".into());
+            }
+            let sizes = p.sizes();
+            let max = *sizes.iter().max().unwrap();
+            // cap from bfs_grow is avg*1.03 (+1 rounding, +reseeding slack)
+            let avg = g.num_vertices() as f64 / k as f64;
+            if (max as f64) > avg * 1.35 + 2.0 {
+                return Err(format!("imbalanced: max {max} avg {avg}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mtx_roundtrip() {
+    check(
+        "mtx roundtrip",
+        PropConfig { cases: 15, seed: 707 },
+        |rng, case| {
+            let g = random_graph(rng);
+            let dir = std::env::temp_dir().join("dgcolor_prop_mtx");
+            std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+            let p = dir.join(format!("g{case}.mtx"));
+            dgcolor::graph::mtx::write_mtx(&g, &p).map_err(|e| e.to_string())?;
+            let g2 = dgcolor::graph::mtx::read_mtx(&p).map_err(|e| e.to_string())?;
+            if g.xadj != g2.xadj || g.adjncy != g2.adjncy {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fem_generator_respects_structure() {
+    check(
+        "fem generator",
+        PropConfig { cases: 10, seed: 808 },
+        |rng, _| {
+            let n = rng.range(100, 2000);
+            let avg = 4.0 + rng.f64() * 12.0;
+            let g = synth::fem_like(n, avg, 40, 0.01, rng.next_u64(), "f");
+            g.validate().map_err(|e| e)?;
+            let got = 2.0 * g.num_edges() as f64 / g.num_vertices() as f64;
+            if (got - avg).abs() / avg > 0.4 {
+                return Err(format!("avg degree {got} vs target {avg}"));
+            }
+            Ok(())
+        },
+    );
+}

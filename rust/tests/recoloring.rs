@@ -1,0 +1,204 @@
+//! Integration tests for distributed recoloring (RC and aRC) — including
+//! the paper's central equivalence: distributed synchronous recoloring
+//! produces exactly the sequential iterated-greedy result.
+
+use dgcolor::color::recolor::{recolor_once, Permutation, RecolorSchedule};
+use dgcolor::color::{greedy_color, Coloring, Ordering, Selection};
+use dgcolor::coordinator::{run_job, ColoringConfig, RecolorMode};
+use dgcolor::dist::comm::network;
+use dgcolor::dist::cost::CostModel;
+use dgcolor::dist::proc::{build_local_graphs, ColorState};
+use dgcolor::dist::recolor::{recolor_process_sync, CommScheme, RecolorConfig};
+use dgcolor::dist::NetworkModel;
+use dgcolor::graph::rmat::{self, RmatParams};
+use dgcolor::graph::synth;
+use dgcolor::graph::CsrGraph;
+use dgcolor::partition::{self, Partitioner};
+use dgcolor::util::rng::mix64;
+use dgcolor::util::Rng;
+
+/// Run distributed sync recoloring directly over a given initial coloring
+/// and return the merged global result.
+fn dist_recolor(
+    g: &CsrGraph,
+    initial: &Coloring,
+    procs: usize,
+    perm: Permutation,
+    scheme: CommScheme,
+    seed: u64,
+) -> (Coloring, Vec<usize>, dgcolor::dist::DistMetrics) {
+    let part = partition::partition(g, Partitioner::Block, procs, 1);
+    let (_, locals) = build_local_graphs(g, &part);
+    let cost = CostModel::fixed();
+    let eps = network(procs, NetworkModel::default());
+    let cfg = RecolorConfig {
+        schedule: RecolorSchedule::Fixed(perm),
+        iterations: 1,
+        scheme,
+        seed,
+    };
+    let mut outs: Vec<Option<(Vec<(u32, u32)>, Vec<usize>, dgcolor::dist::ProcMetrics)>> =
+        (0..procs).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (ep, lg) in eps.into_iter().zip(locals.iter()) {
+            let cfgr = cfg;
+            handles.push(s.spawn(move || {
+                let mut ep = ep;
+                let mut state = ColorState::from_global(lg, initial);
+                let mut trace = Vec::new();
+                let m = recolor_process_sync(&mut ep, lg, &cost, &cfgr, &mut state, &mut trace);
+                (state.owned_pairs(lg), trace, m)
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            outs[i] = Some(h.join().unwrap());
+        }
+    });
+    let mut coloring = Coloring::uncolored(g.num_vertices());
+    let mut per_proc = Vec::new();
+    let mut trace = Vec::new();
+    for (pairs, t, m) in outs.into_iter().map(|o| o.unwrap()) {
+        for (gid, c) in pairs {
+            coloring.set(gid, c);
+        }
+        trace = t;
+        per_proc.push(m);
+    }
+    let metrics = dgcolor::dist::DistMetrics::aggregate(&per_proc, 0.0);
+    (coloring, trace, metrics)
+}
+
+/// THE equivalence theorem (paper §3): distributed sync recoloring with a
+/// given class permutation equals sequential iterated greedy with the same
+/// permutation — for any number of processors and both comm schemes.
+#[test]
+fn distributed_rc_equals_sequential_ig() {
+    let graphs = vec![
+        synth::grid2d(16, 16),
+        synth::fem_like(1500, 11.0, 28, 0.004, 2, "fem"),
+        rmat::generate(&RmatParams::good(9, 6), 3, "rmat-good"),
+    ];
+    for g in &graphs {
+        let initial = greedy_color(g, Ordering::Natural, Selection::FirstFit, 9);
+        for perm in [Permutation::NonDecreasing, Permutation::NonIncreasing, Permutation::Reverse]
+        {
+            // sequential reference
+            let mut rng = Rng::new(0); // unused by deterministic perms
+            let seq = recolor_once(g, &initial, perm, &mut rng);
+            for procs in [1, 3, 8] {
+                for scheme in [CommScheme::Base, CommScheme::Piggyback] {
+                    let (dist, trace, _) =
+                        dist_recolor(g, &initial, procs, perm, scheme, 77);
+                    dist.validate(g).unwrap();
+                    assert_eq!(
+                        dist.colors, seq.colors,
+                        "{} {perm:?} p={procs} {scheme:?} differs from sequential",
+                        g.name
+                    );
+                    assert_eq!(trace, vec![seq.num_colors()]);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rc_random_perm_identical_across_procs_given_seed() {
+    // RAND permutations must be generated identically on every process
+    let g = synth::fem_like(1200, 10.0, 24, 0.0, 5, "fem");
+    let initial = greedy_color(&g, Ordering::Natural, Selection::FirstFit, 4);
+    let (a, _, _) = dist_recolor(&g, &initial, 4, Permutation::Random, CommScheme::Piggyback, 5);
+    let (b, _, _) = dist_recolor(&g, &initial, 7, Permutation::Random, CommScheme::Piggyback, 5);
+    a.validate(&g).unwrap();
+    // same seed → same permutation → same result regardless of proc count
+    assert_eq!(a.colors, b.colors);
+}
+
+#[test]
+fn rc_is_conflict_free() {
+    let g = rmat::generate(&RmatParams::bad(10, 6), 8, "rmat-bad");
+    let initial = greedy_color(&g, Ordering::Natural, Selection::RandomX(10), 2);
+    let (out, _, m) = dist_recolor(
+        &g,
+        &initial,
+        8,
+        Permutation::NonDecreasing,
+        CommScheme::Piggyback,
+        3,
+    );
+    out.validate(&g).unwrap();
+    assert_eq!(m.total_conflicts, 0, "sync RC can never conflict");
+}
+
+#[test]
+fn multiple_iterations_monotone_and_improving() {
+    let g = synth::fem_like(3000, 13.0, 32, 0.004, 6, "fem");
+    let mut cfg = ColoringConfig {
+        num_procs: 8,
+        selection: Selection::RandomX(10),
+        fixed_cost: Some(CostModel::fixed()),
+        ..Default::default()
+    };
+    cfg.recolor = RecolorMode::Sync(RecolorConfig {
+        schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
+        iterations: 10,
+        scheme: CommScheme::Piggyback,
+        seed: 42,
+    });
+    let r = run_job(&g, &cfg).unwrap();
+    assert_eq!(r.recolor_trace.len(), 11);
+    assert!(
+        r.recolor_trace.windows(2).all(|w| w[1] <= w[0]),
+        "{:?}",
+        r.recolor_trace
+    );
+    assert!(r.num_colors < r.initial_colors);
+}
+
+#[test]
+fn arc_valid_and_usually_helps() {
+    let g = rmat::generate(&RmatParams::good(10, 8), 14, "rmat-good");
+    let base = ColoringConfig {
+        num_procs: 8,
+        ordering: Ordering::SmallestLast,
+        fixed_cost: Some(CostModel::fixed()),
+        ..Default::default()
+    };
+    let no_rc = run_job(&g, &base).unwrap();
+    let mut with_arc = base;
+    with_arc.recolor = RecolorMode::Async {
+        perm: Permutation::NonDecreasing,
+        iterations: 1,
+    };
+    let arc = run_job(&g, &with_arc).unwrap();
+    // paper §4.2.3: aRC's improvement over FSS is modest (<10% on RMAT) and
+    // can dip slightly below FSS on small instances — require "ballpark"
+    assert!(
+        (arc.num_colors as f64) <= 1.2 * no_rc.num_colors as f64 + 1.0,
+        "aRC {} vs FSS {}",
+        arc.num_colors,
+        no_rc.num_colors
+    );
+}
+
+#[test]
+fn rc_beats_arc_on_quality() {
+    // paper §4.2.3: sync RC yields fewer (or equal) colors than aRC
+    let g = rmat::generate(&RmatParams::bad(10, 6), 15, "rmat-bad");
+    let mk = |mode: RecolorMode| {
+        let cfg = ColoringConfig {
+            num_procs: 8,
+            recolor: mode,
+            fixed_cost: Some(CostModel::fixed()),
+            ..Default::default()
+        };
+        run_job(&g, &cfg).unwrap().num_colors
+    };
+    let rc = mk(RecolorMode::Sync(RecolorConfig::default()));
+    let arc = mk(RecolorMode::Async {
+        perm: Permutation::NonDecreasing,
+        iterations: 1,
+    });
+    assert!(rc <= arc + 1, "RC {rc} vs aRC {arc}");
+}

@@ -1,0 +1,124 @@
+//! Integration tests: sequential coloring core across graph families.
+
+use dgcolor::color::recolor::{self, Permutation, RecolorSchedule};
+use dgcolor::color::{greedy_color, Ordering, Selection};
+use dgcolor::graph::rmat::{self, RmatParams};
+use dgcolor::graph::synth;
+use dgcolor::util::Rng;
+
+#[test]
+fn all_orderings_all_selections_valid_on_all_families() {
+    let graphs = vec![
+        synth::grid2d(15, 15),
+        synth::erdos_renyi(800, 4800, 3),
+        synth::fem_like(1000, 10.0, 25, 0.005, 4, "fem"),
+        rmat::generate(&RmatParams::bad(9, 6), 5, "rmat-bad"),
+        synth::star(64),
+        synth::complete(12),
+    ];
+    for g in &graphs {
+        for ord in [
+            Ordering::Natural,
+            Ordering::LargestFirst,
+            Ordering::SmallestLast,
+            Ordering::IncidenceDegree,
+            Ordering::Random,
+        ] {
+            for sel in [
+                Selection::FirstFit,
+                Selection::StaggeredFirstFit,
+                Selection::LeastUsed,
+                Selection::RandomX(5),
+            ] {
+                let c = greedy_color(g, ord, sel, 7);
+                c.validate(g)
+                    .unwrap_or_else(|e| panic!("{} {ord:?} {sel:?}: {e}", g.name));
+                assert!(
+                    c.num_colors() <= g.max_degree() + 5 + 1,
+                    "{} {ord:?} {sel:?}: {} colors vs Δ+X+1",
+                    g.name,
+                    c.num_colors()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn paper_ordering_hierarchy_on_fem_meshes() {
+    // Table 1 trend: SL ≤ LF ≤ NAT (allow slack of 2 — heuristics).
+    let mut sl_wins = 0;
+    let mut cases = 0;
+    for seed in 0..4 {
+        let g = synth::fem_like(4000, 14.0, 40, 0.005, seed, "fem");
+        let nat = greedy_color(&g, Ordering::Natural, Selection::FirstFit, 1).num_colors();
+        let lf = greedy_color(&g, Ordering::LargestFirst, Selection::FirstFit, 1).num_colors();
+        let sl = greedy_color(&g, Ordering::SmallestLast, Selection::FirstFit, 1).num_colors();
+        assert!(lf <= nat + 2, "LF {lf} vs NAT {nat}");
+        assert!(sl <= lf + 2, "SL {sl} vs LF {lf}");
+        if sl < nat {
+            sl_wins += 1;
+        }
+        cases += 1;
+    }
+    assert!(
+        sl_wins * 2 >= cases,
+        "SL should usually beat NAT ({sl_wins}/{cases})"
+    );
+}
+
+#[test]
+fn iterated_greedy_converges_and_never_worsens() {
+    let g = rmat::generate(&RmatParams::good(10, 8), 11, "rmat-good");
+    let c0 = greedy_color(&g, Ordering::Natural, Selection::FirstFit, 2);
+    let mut rng = Rng::new(5);
+    let (best, trace) =
+        recolor::recolor_iterate(&g, &c0, RecolorSchedule::NdRandPow2, 20, &mut rng);
+    best.validate(&g).unwrap();
+    assert!(trace.windows(2).all(|w| w[1] <= w[0]), "trace {trace:?}");
+    assert!(best.num_colors() < c0.num_colors(), "no improvement: {trace:?}");
+}
+
+#[test]
+fn nd_beats_ni_usually() {
+    // Fig 2: ND the best fixed permutation, NI the weakest.
+    let mut nd_total = 0usize;
+    let mut ni_total = 0usize;
+    for seed in 0..3 {
+        let g = synth::fem_like(3000, 13.0, 35, 0.005, seed + 100, "fem");
+        let c0 = greedy_color(&g, Ordering::Natural, Selection::FirstFit, 3);
+        let mut rng = Rng::new(seed);
+        let (nd, _) = recolor::recolor_iterate(
+            &g,
+            &c0,
+            RecolorSchedule::Fixed(Permutation::NonDecreasing),
+            10,
+            &mut rng,
+        );
+        let (ni, _) = recolor::recolor_iterate(
+            &g,
+            &c0,
+            RecolorSchedule::Fixed(Permutation::NonIncreasing),
+            10,
+            &mut rng,
+        );
+        nd_total += nd.num_colors();
+        ni_total += ni.num_colors();
+    }
+    assert!(nd_total <= ni_total, "ND {nd_total} vs NI {ni_total}");
+}
+
+#[test]
+fn random_x_balance_property() {
+    // §3.2: Random-X balances class sizes better than first fit (FF
+    // front-loads low colors on mesh-like graphs; Random-X spreads).
+    let g = synth::fem_like(8000, 13.0, 32, 0.004, 9, "fem");
+    let ff = greedy_color(&g, Ordering::Natural, Selection::FirstFit, 1);
+    let r10 = greedy_color(&g, Ordering::Natural, Selection::RandomX(10), 1);
+    assert!(
+        r10.balance() < ff.balance(),
+        "R10 balance {} vs FF balance {}",
+        r10.balance(),
+        ff.balance()
+    );
+}
