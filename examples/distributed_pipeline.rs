@@ -16,7 +16,7 @@ use dgcolor::util::bench::full_scale;
 use dgcolor::util::table::{fmt_secs, Table};
 use dgcolor::util::timer::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dgcolor::util::error::Result<()> {
     let scale = if full_scale() { 24 } else { 18 };
     let gen_t = Timer::start();
     let g = rmat::generate(&RmatParams::good(scale, 8), 7, "rmat-good");

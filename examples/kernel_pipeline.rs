@@ -13,9 +13,11 @@ use dgcolor::runtime::{BatchColorer, KernelRuntime};
 use dgcolor::util::table::{fmt_secs, Table};
 use dgcolor::util::timer::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dgcolor::util::error::Result<()> {
     if !KernelRuntime::artifacts_present() {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
+        dgcolor::bail!(
+            "kernel runtime unavailable — run `make artifacts` and build with `--features xla`"
+        );
     }
     let rt = KernelRuntime::load(&KernelRuntime::artifacts_dir())?;
     let mut bc = BatchColorer::new(rt, 42);

@@ -10,7 +10,7 @@ use dgcolor::graph::synth;
 use dgcolor::util::table::{fmt_secs, Table};
 use dgcolor::util::timer::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dgcolor::util::error::Result<()> {
     // 1. a workload: FEM-style mesh, ~8k vertices
     let g = synth::fem_like(8000, 14.0, 40, 0.005, 42, "quickstart-mesh");
     println!(

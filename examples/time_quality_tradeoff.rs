@@ -13,7 +13,7 @@ use dgcolor::dist::recolor::{CommScheme, RecolorConfig};
 use dgcolor::graph::synth;
 use dgcolor::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dgcolor::util::error::Result<()> {
     // two representative real-world stand-ins at example scale
     let graphs = vec![
         synth::paper_graph(&synth::TABLE1_SPECS[0], 0.03, 1), // auto

@@ -135,15 +135,28 @@ impl Coloring {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ColoringError {
-    #[error("coloring covers {actual} vertices, graph has {expected}")]
     WrongSize { expected: usize, actual: usize },
-    #[error("vertex {vertex} is uncolored")]
     Uncolored { vertex: VertexId },
-    #[error("edge ({u},{v}) monochromatic with color {color}")]
     Conflict { u: VertexId, v: VertexId, color: Color },
 }
+
+impl std::fmt::Display for ColoringError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ColoringError::WrongSize { expected, actual } => {
+                write!(f, "coloring covers {actual} vertices, graph has {expected}")
+            }
+            ColoringError::Uncolored { vertex } => write!(f, "vertex {vertex} is uncolored"),
+            ColoringError::Conflict { u, v, color } => {
+                write!(f, "edge ({u},{v}) monochromatic with color {color}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ColoringError {}
 
 #[cfg(test)]
 mod tests {

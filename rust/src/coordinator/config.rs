@@ -8,7 +8,7 @@ use crate::dist::recolor::{CommScheme, RecolorConfig};
 use crate::dist::NetworkModel;
 use crate::partition::Partitioner;
 use crate::util::args::Args;
-use anyhow::Result;
+use crate::util::error::{Error, Result};
 
 /// What recoloring (if any) follows the initial distributed coloring.
 #[derive(Debug, Clone, Copy)]
@@ -111,13 +111,13 @@ impl ColoringConfig {
             ..Default::default()
         };
         if let Some(s) = a.get_str("ordering") {
-            cfg.ordering = s.parse().map_err(anyhow::Error::msg)?;
+            cfg.ordering = s.parse().map_err(Error::msg)?;
         }
         if let Some(s) = a.get_str("selection") {
-            cfg.selection = s.parse().map_err(anyhow::Error::msg)?;
+            cfg.selection = s.parse().map_err(Error::msg)?;
         }
         if let Some(s) = a.get_str("partitioner") {
-            cfg.partitioner = s.parse().map_err(anyhow::Error::msg)?;
+            cfg.partitioner = s.parse().map_err(Error::msg)?;
         }
         if a.has_flag("ideal-net") {
             cfg.network = NetworkModel::ideal();
@@ -127,7 +127,7 @@ impl ColoringConfig {
             let schedule: RecolorSchedule = a
                 .str_or("schedule", "nd")
                 .parse()
-                .map_err(anyhow::Error::msg)?;
+                .map_err(Error::msg)?;
             if a.has_flag("arc") {
                 let perm = match schedule {
                     RecolorSchedule::Fixed(p) => p,
@@ -141,7 +141,7 @@ impl ColoringConfig {
                 let scheme: CommScheme = a
                     .str_or("scheme", "piggyback")
                     .parse()
-                    .map_err(anyhow::Error::msg)?;
+                    .map_err(Error::msg)?;
                 cfg.recolor = RecolorMode::Sync(RecolorConfig {
                     schedule,
                     iterations: iters,

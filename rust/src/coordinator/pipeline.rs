@@ -10,7 +10,8 @@ use crate::dist::runner::{run_distributed, ProcResult};
 use crate::dist::DistMetrics;
 use crate::graph::CsrGraph;
 use crate::partition::{self, PartitionMetrics};
-use anyhow::{ensure, Result};
+use crate::util::error::Result;
+use crate::{ensure, err};
 
 /// Everything a run produces.
 #[derive(Debug, Clone)]
@@ -102,9 +103,9 @@ pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
     outcome
         .coloring
         .validate(g)
-        .map_err(|e| anyhow::anyhow!("invalid coloring from {}: {e}", cfg.label()))?;
+        .map_err(|e| err!("invalid coloring from {}: {e}", cfg.label()))?;
 
-    let trace = outcome.per_proc[0].metrics_trace();
+    let trace = outcome.per_proc[0].recolor_trace.clone();
     Ok(RunResult {
         num_colors: outcome.coloring.num_colors(),
         initial_colors: *trace.first().unwrap_or(&outcome.coloring.num_colors()),
@@ -114,16 +115,6 @@ pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
         partition_metrics: part_metrics,
         config_label: cfg.label(),
     })
-}
-
-// small helper so RunResult construction reads cleanly
-trait TraceExt {
-    fn metrics_trace(&self) -> Vec<usize>;
-}
-impl TraceExt for crate::dist::ProcMetrics {
-    fn metrics_trace(&self) -> Vec<usize> {
-        self.recolor_trace.clone()
-    }
 }
 
 #[cfg(test)]

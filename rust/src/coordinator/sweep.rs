@@ -7,8 +7,8 @@ use crate::color::recolor::{Permutation, RecolorSchedule};
 use crate::color::{Ordering, Selection};
 use crate::dist::recolor::{CommScheme, RecolorConfig};
 use crate::graph::CsrGraph;
+use crate::util::error::Result;
 use crate::util::stats;
-use anyhow::Result;
 
 /// One sweep point, aggregated over the graph set.
 #[derive(Debug, Clone)]

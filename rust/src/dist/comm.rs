@@ -1,0 +1,414 @@
+//! In-process message transport with exact per-endpoint accounting.
+//!
+//! `network(P, model)` builds `P` fully-connected [`Endpoint`]s over
+//! unbounded channels; one OS thread drives each endpoint (see
+//! [`runner`](crate::dist::runner)). Every send is counted (messages and
+//! bytes, including a fixed per-message header) and charged to the sender's
+//! virtual clock through the α-β [`NetworkModel`]; a synchronous receive
+//! advances the receiver's clock to the message's arrival time, which is
+//! how supersteps, collectives and the recoloring deadline protocol cost
+//! virtual time. Matching is exact on `(from, kind, round, seq)` with an
+//! out-of-order buffer, so processes may run arbitrarily far apart in real
+//! time while the virtual schedule stays deterministic.
+
+use crate::dist::cost::NetworkModel;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Fixed accounting overhead per message (envelope: kind/round/seq/len).
+pub const MSG_HEADER_BYTES: usize = 16;
+
+/// Message classes; part of the match key so phases can never steal each
+/// other's traffic even when processes drift apart in real time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MsgKind {
+    /// Boundary color updates of the superstep framework.
+    Colors,
+    /// Color-class updates of distributed recoloring.
+    Recolor,
+    /// Piggyback plan (per-pair nonempty-step schedule / deadlines).
+    Plan,
+    /// Internal collectives (allreduce / barrier).
+    Collective,
+}
+
+struct Message {
+    from: usize,
+    kind: MsgKind,
+    round: u32,
+    seq: u32,
+    payload: Vec<u8>,
+    /// Sender's virtual clock when the message finished injecting — the
+    /// earliest virtual time the receiver can observe it.
+    arrival: f64,
+}
+
+/// One simulated process's communication endpoint.
+pub struct Endpoint {
+    pub rank: usize,
+    pub nprocs: usize,
+    pub model: NetworkModel,
+    /// Virtual clock in seconds.
+    pub clock: f64,
+    pub sent_msgs: u64,
+    pub sent_bytes: u64,
+    pub recv_msgs: u64,
+    /// `true` (synchronous): a receive waits — the clock advances to the
+    /// arrival time. `false` (asynchronous): data is consumed without
+    /// advancing the clock, modeling fully overlapped communication.
+    pub wait_on_recv: bool,
+    txs: Vec<Sender<Message>>,
+    rx: Receiver<Message>,
+    pending: VecDeque<Message>,
+    coll_seq: u32,
+}
+
+/// Build a fully-connected network of `procs` endpoints.
+pub fn network(procs: usize, model: NetworkModel) -> Vec<Endpoint> {
+    let mut txs = Vec::with_capacity(procs);
+    let mut rxs = Vec::with_capacity(procs);
+    for _ in 0..procs {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| Endpoint {
+            rank,
+            nprocs: procs,
+            model,
+            clock: 0.0,
+            sent_msgs: 0,
+            sent_bytes: 0,
+            recv_msgs: 0,
+            wait_on_recv: true,
+            txs: txs.clone(),
+            rx,
+            pending: VecDeque::new(),
+            coll_seq: 0,
+        })
+        .collect()
+}
+
+impl Endpoint {
+    /// Send `payload` to `to`. Counted exactly; the sender's clock pays the
+    /// α-β injection cost, which is also the receiver-visible arrival time.
+    pub fn send(&mut self, to: usize, kind: MsgKind, round: u32, seq: u32, payload: Vec<u8>) {
+        let bytes = payload.len() + MSG_HEADER_BYTES;
+        self.sent_msgs += 1;
+        self.sent_bytes += bytes as u64;
+        self.clock += self.model.transfer_secs(bytes);
+        let msg = Message {
+            from: self.rank,
+            kind,
+            round,
+            seq,
+            payload,
+            arrival: self.clock,
+        };
+        if to == self.rank {
+            self.pending.push_back(msg);
+        } else {
+            // receiver may already have shut down (harmless at teardown)
+            let _ = self.txs[to].send(msg);
+        }
+    }
+
+    /// Blocking receive of the message matching `(from, kind, round, seq)`
+    /// exactly; non-matching messages are buffered for later receives.
+    pub fn recv_from(&mut self, from: usize, kind: MsgKind, round: u32, seq: u32) -> Vec<u8> {
+        if let Some(i) = self
+            .pending
+            .iter()
+            .position(|m| m.from == from && m.kind == kind && m.round == round && m.seq == seq)
+        {
+            let m = self.pending.remove(i).unwrap();
+            return self.consume(m);
+        }
+        loop {
+            let m = self
+                .rx
+                .recv()
+                .expect("transport channel closed with a receive outstanding");
+            if m.from == from && m.kind == kind && m.round == round && m.seq == seq {
+                return self.consume(m);
+            }
+            self.pending.push_back(m);
+        }
+    }
+
+    fn consume(&mut self, m: Message) -> Vec<u8> {
+        self.recv_msgs += 1;
+        if self.wait_on_recv && m.arrival > self.clock {
+            self.clock = m.arrival;
+        }
+        m.payload
+    }
+
+    fn next_coll(&mut self) -> u32 {
+        let s = self.coll_seq;
+        self.coll_seq += 1;
+        s
+    }
+
+    fn allreduce_u64(&mut self, v: u64, op: fn(u64, u64) -> u64) -> u64 {
+        let seq = self.next_coll();
+        if self.nprocs == 1 {
+            return v;
+        }
+        if self.rank == 0 {
+            let mut acc = v;
+            for p in 1..self.nprocs {
+                let data = self.recv_from(p, MsgKind::Collective, seq, 0);
+                acc = op(acc, decode_u64(&data));
+            }
+            for p in 1..self.nprocs {
+                self.send(p, MsgKind::Collective, seq, 1, encode_u64(acc));
+            }
+            acc
+        } else {
+            self.send(0, MsgKind::Collective, seq, 0, encode_u64(v));
+            decode_u64(&self.recv_from(0, MsgKind::Collective, seq, 1))
+        }
+    }
+
+    /// Global max. All processes must call every collective in the same
+    /// order; matching is sequenced by an internal collective counter.
+    pub fn allreduce_max_u64(&mut self, v: u64) -> u64 {
+        self.allreduce_u64(v, u64::max)
+    }
+
+    /// Global sum.
+    pub fn allreduce_sum_u64(&mut self, v: u64) -> u64 {
+        self.allreduce_u64(v, u64::wrapping_add)
+    }
+
+    /// Element-wise global sum of a vector; every process must pass the
+    /// same length.
+    pub fn allreduce_sum_vec_u64(&mut self, vals: &mut [u64]) {
+        let seq = self.next_coll();
+        if self.nprocs == 1 {
+            return;
+        }
+        if self.rank == 0 {
+            for p in 1..self.nprocs {
+                let data = self.recv_from(p, MsgKind::Collective, seq, 0);
+                let theirs = decode_u64s(&data);
+                assert_eq!(theirs.len(), vals.len(), "allreduce vec length mismatch");
+                for (a, b) in vals.iter_mut().zip(theirs) {
+                    *a = a.wrapping_add(b);
+                }
+            }
+            let payload = encode_u64s(vals);
+            for p in 1..self.nprocs {
+                self.send(p, MsgKind::Collective, seq, 1, payload.clone());
+            }
+        } else {
+            self.send(0, MsgKind::Collective, seq, 0, encode_u64s(vals));
+            let data = self.recv_from(0, MsgKind::Collective, seq, 1);
+            let theirs = decode_u64s(&data);
+            vals.copy_from_slice(&theirs);
+        }
+    }
+
+    /// Synchronize all processes (and, in synchronous mode, their clocks).
+    pub fn barrier(&mut self) {
+        self.allreduce_max_u64(0);
+    }
+}
+
+// --- wire encoding -------------------------------------------------------
+
+pub fn encode_u64(v: u64) -> Vec<u8> {
+    v.to_le_bytes().to_vec()
+}
+
+pub fn decode_u64(b: &[u8]) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[..8]);
+    u64::from_le_bytes(a)
+}
+
+pub fn encode_u64s(vs: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vs.len() * 8);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_u64s(b: &[u8]) -> Vec<u64> {
+    b.chunks_exact(8)
+        .map(|c| {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(c);
+            u64::from_le_bytes(a)
+        })
+        .collect()
+}
+
+pub fn encode_u32s(vs: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vs.len() * 4);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_u32s(b: &[u8]) -> Vec<u32> {
+    b.chunks_exact(4)
+        .map(|c| {
+            let mut a = [0u8; 4];
+            a.copy_from_slice(c);
+            u32::from_le_bytes(a)
+        })
+        .collect()
+}
+
+/// Encode `(id, color)` pairs — the boundary-update wire format.
+pub fn encode_pairs(ps: &[(u32, u32)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ps.len() * 8);
+    for &(a, b) in ps {
+        out.extend_from_slice(&a.to_le_bytes());
+        out.extend_from_slice(&b.to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_pairs(b: &[u8]) -> Vec<(u32, u32)> {
+    b.chunks_exact(8)
+        .map(|c| {
+            let mut x = [0u8; 4];
+            let mut y = [0u8; 4];
+            x.copy_from_slice(&c[..4]);
+            y.copy_from_slice(&c[4..]);
+            (u32::from_le_bytes(x), u32::from_le_bytes(y))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_encodings() {
+        assert_eq!(decode_u64(&encode_u64(0xDEAD_BEEF_0BAD_F00D)), 0xDEAD_BEEF_0BAD_F00D);
+        let vs = vec![0u64, 1, u64::MAX];
+        assert_eq!(decode_u64s(&encode_u64s(&vs)), vs);
+        let us = vec![7u32, 0, u32::MAX];
+        assert_eq!(decode_u32s(&encode_u32s(&us)), us);
+        let ps = vec![(1u32, 2u32), (u32::MAX, 0)];
+        assert_eq!(decode_pairs(&encode_pairs(&ps)), ps);
+    }
+
+    #[test]
+    fn exact_message_and_byte_accounting() {
+        let mut eps = network(2, NetworkModel::ideal());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, MsgKind::Colors, 0, 0, vec![0u8; 24]);
+        a.send(1, MsgKind::Colors, 0, 1, Vec::new());
+        assert_eq!(a.sent_msgs, 2);
+        assert_eq!(
+            a.sent_bytes,
+            (24 + MSG_HEADER_BYTES + MSG_HEADER_BYTES) as u64
+        );
+        let p0 = b.recv_from(0, MsgKind::Colors, 0, 0);
+        let p1 = b.recv_from(0, MsgKind::Colors, 0, 1);
+        assert_eq!(p0.len(), 24);
+        assert!(p1.is_empty());
+        assert_eq!(b.recv_msgs, 2);
+        assert_eq!(b.sent_msgs, 0);
+    }
+
+    #[test]
+    fn out_of_order_matching_buffers() {
+        let mut eps = network(2, NetworkModel::ideal());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, MsgKind::Colors, 1, 0, vec![1]);
+        a.send(1, MsgKind::Plan, 1, 0, vec![2]);
+        a.send(1, MsgKind::Colors, 2, 0, vec![3]);
+        // receive in a different order than sent
+        assert_eq!(b.recv_from(0, MsgKind::Colors, 2, 0), vec![3]);
+        assert_eq!(b.recv_from(0, MsgKind::Colors, 1, 0), vec![1]);
+        assert_eq!(b.recv_from(0, MsgKind::Plan, 1, 0), vec![2]);
+    }
+
+    #[test]
+    fn clock_advances_by_alpha_beta_and_recv_waits() {
+        let model = NetworkModel::new(1e-3, 1e-6);
+        let mut eps = network(2, model);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.clock = 5.0;
+        let payload = vec![0u8; 1000 - MSG_HEADER_BYTES];
+        a.send(1, MsgKind::Colors, 0, 0, payload);
+        let expect = 5.0 + 1e-3 + 1e-6 * 1000.0;
+        assert!((a.clock - expect).abs() < 1e-12);
+        // sync receiver waits until arrival
+        b.clock = 0.0;
+        b.recv_from(0, MsgKind::Colors, 0, 0);
+        assert!((b.clock - expect).abs() < 1e-12);
+        // a later local clock is not rolled back
+        a.send(1, MsgKind::Colors, 0, 1, Vec::new());
+        b.clock = 100.0;
+        b.recv_from(0, MsgKind::Colors, 0, 1);
+        assert!((b.clock - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn async_recv_does_not_wait() {
+        let mut eps = network(2, NetworkModel::new(1.0, 0.0));
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, MsgKind::Colors, 0, 0, vec![9]);
+        b.wait_on_recv = false;
+        assert_eq!(b.recv_from(0, MsgKind::Colors, 0, 0), vec![9]);
+        assert_eq!(b.clock, 0.0, "async receive must not advance the clock");
+    }
+
+    #[test]
+    fn ideal_network_sends_cost_zero_time() {
+        let mut eps = network(2, NetworkModel::ideal());
+        let mut a = eps.remove(0);
+        for i in 0..100 {
+            a.send(1, MsgKind::Colors, 0, i, vec![0u8; 64]);
+        }
+        assert_eq!(a.clock, 0.0);
+        assert_eq!(a.sent_msgs, 100);
+    }
+
+    #[test]
+    fn collectives_across_threads() {
+        for procs in [1usize, 2, 5] {
+            let eps = network(procs, NetworkModel::default());
+            let outs: Vec<(u64, u64, Vec<u64>)> = std::thread::scope(|s| {
+                let handles: Vec<_> = eps
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, ep)| {
+                        s.spawn(move || {
+                            let mut ep = ep;
+                            let mx = ep.allreduce_max_u64(10 + r as u64);
+                            let sm = ep.allreduce_sum_u64(r as u64 + 1);
+                            let mut v = vec![r as u64, 1];
+                            ep.allreduce_sum_vec_u64(&mut v);
+                            ep.barrier();
+                            (mx, sm, v)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let p = procs as u64;
+            for (mx, sm, v) in outs {
+                assert_eq!(mx, 10 + p - 1);
+                assert_eq!(sm, p * (p + 1) / 2);
+                assert_eq!(v, vec![p * (p - 1) / 2, p]);
+            }
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Cost models driving the per-process virtual clocks.
+//!
+//! The distributed runtime simulates P processes on one host; wallclock
+//! would measure the simulator, not the simulated machine. Instead every
+//! process advances a *virtual clock*: local work is charged through a
+//! [`CostModel`] (per-vertex selection overhead, per-neighbor scan, per-byte
+//! pack/unpack) and communication through an α-β [`NetworkModel`]
+//! (latency + inverse bandwidth, LogP-style with the sender paying the
+//! injection overhead). Fixed rates make experiments machine-independent
+//! and byte-for-byte reproducible; calibrated rates anchor the virtual
+//! times to the host.
+
+use std::time::Instant;
+
+/// Per-operation compute costs in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Per-vertex overhead of one selection (epoch bump + pick).
+    pub vertex_secs: f64,
+    /// Per-neighbor scan cost (read color, mark forbidden).
+    pub edge_secs: f64,
+    /// Per-byte message pack/unpack cost.
+    pub byte_secs: f64,
+}
+
+impl CostModel {
+    /// Fixed rates for deterministic tests and benches: roughly a 2010s-era
+    /// cluster node (the paper's testbed class), so virtual times land in a
+    /// realistic range.
+    pub fn fixed() -> Self {
+        CostModel {
+            vertex_secs: 60e-9,
+            edge_secs: 18e-9,
+            byte_secs: 0.25e-9,
+        }
+    }
+
+    /// Calibrate the per-edge rate on this host with a short timed greedy
+    /// pass, scaling the fixed profile; falls back to [`CostModel::fixed`]
+    /// when the measurement is degenerate.
+    pub fn calibrated() -> Self {
+        use crate::color::{greedy_color, Ordering, Selection};
+        use crate::graph::synth;
+        let g = synth::erdos_renyi(4000, 24_000, 7);
+        let scans = 2.0 * 2.0 * g.num_edges() as f64; // two timed passes
+        let t0 = Instant::now();
+        std::hint::black_box(greedy_color(&g, Ordering::Natural, Selection::FirstFit, 1));
+        std::hint::black_box(greedy_color(&g, Ordering::Natural, Selection::FirstFit, 2));
+        let secs = t0.elapsed().as_secs_f64();
+        let fixed = CostModel::fixed();
+        let measured_edge = secs / scans;
+        // clamp to a sane band around the fixed profile
+        let scale = (measured_edge / fixed.edge_secs).clamp(0.05, 50.0);
+        if !scale.is_finite() {
+            return fixed;
+        }
+        CostModel {
+            vertex_secs: fixed.vertex_secs * scale,
+            edge_secs: fixed.edge_secs * scale,
+            byte_secs: fixed.byte_secs * scale,
+        }
+    }
+
+    /// Virtual seconds for coloring `vertices` vertices scanning
+    /// `edge_scans` neighbor entries.
+    #[inline]
+    pub fn color_cost(&self, vertices: u64, edge_scans: u64) -> f64 {
+        vertices as f64 * self.vertex_secs + edge_scans as f64 * self.edge_secs
+    }
+
+    /// Virtual seconds for packing/unpacking `bytes` of message payload.
+    #[inline]
+    pub fn pack_cost(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.byte_secs
+    }
+}
+
+/// α-β point-to-point network model: a message of `b` bytes occupies the
+/// sender for `α + β·b` virtual seconds and becomes visible to the receiver
+/// at the sender's clock after that charge. A synchronous receive waits for
+/// the arrival; an asynchronous receive consumes the data without waiting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// Per-message latency/injection overhead in seconds.
+    pub alpha: f64,
+    /// Per-byte inverse bandwidth in seconds.
+    pub beta: f64,
+}
+
+impl NetworkModel {
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        NetworkModel { alpha, beta }
+    }
+
+    /// Zero-cost network: communication is free, only synchronization
+    /// (waiting for data that does not exist yet) costs virtual time.
+    pub fn ideal() -> Self {
+        NetworkModel {
+            alpha: 0.0,
+            beta: 0.0,
+        }
+    }
+
+    /// Virtual seconds to move `bytes` across one link.
+    #[inline]
+    pub fn transfer_secs(&self, bytes: usize) -> f64 {
+        self.alpha + self.beta * bytes as f64
+    }
+}
+
+impl Default for NetworkModel {
+    /// A commodity-cluster interconnect: 1.5 µs latency, 1 GB/s bandwidth.
+    fn default() -> Self {
+        NetworkModel {
+            alpha: 1.5e-6,
+            beta: 1.0e-9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_costs_positive_and_ordered() {
+        let c = CostModel::fixed();
+        assert!(c.vertex_secs > 0.0 && c.edge_secs > 0.0 && c.byte_secs > 0.0);
+        // a selection costs more than a single neighbor scan
+        assert!(c.vertex_secs > c.edge_secs);
+        assert_eq!(c.color_cost(0, 0), 0.0);
+        let one = c.color_cost(1, 10);
+        assert!((one - (c.vertex_secs + 10.0 * c.edge_secs)).abs() < 1e-18);
+        assert!((c.pack_cost(100) - 100.0 * c.byte_secs).abs() < 1e-18);
+    }
+
+    #[test]
+    fn ideal_network_is_free() {
+        let n = NetworkModel::ideal();
+        assert_eq!(n.transfer_secs(0), 0.0);
+        assert_eq!(n.transfer_secs(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn alpha_beta_math() {
+        let n = NetworkModel::new(1e-3, 1e-9);
+        assert!((n.transfer_secs(0) - 1e-3).abs() < 1e-15);
+        assert!((n.transfer_secs(1000) - (1e-3 + 1e-6)).abs() < 1e-15);
+        // latency-dominated for small messages, bandwidth-dominated at 1GB
+        assert!(n.transfer_secs(8) < 2.0 * n.alpha);
+        assert!(n.transfer_secs(1_000_000_000) > 0.5);
+    }
+
+    #[test]
+    fn default_network_reasonable() {
+        let n = NetworkModel::default();
+        assert!(n.alpha > 0.0 && n.beta > 0.0);
+        assert!(n.alpha < 1e-4, "default latency should be microseconds");
+    }
+
+    #[test]
+    fn calibrated_is_sane() {
+        let c = CostModel::calibrated();
+        assert!(c.edge_secs > 0.0 && c.edge_secs.is_finite());
+        assert!(c.vertex_secs > c.edge_secs);
+    }
+}

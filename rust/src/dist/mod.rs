@@ -1,0 +1,167 @@
+//! The distributed-memory runtime (paper §3).
+//!
+//! * [`comm`] — in-process message transport with exact per-endpoint
+//!   message/byte accounting and α-β virtual clocks.
+//! * [`cost`] — compute [`CostModel`](cost::CostModel) and the
+//!   [`NetworkModel`] driving those clocks.
+//! * [`proc`] — per-process local graphs with ghost vertices and exchange
+//!   lists.
+//! * [`framework`] — the Bozdağ superstep framework: speculative coloring,
+//!   boundary conflict detection and re-resolution rounds, sync/async.
+//! * [`recolor`] — distributed synchronous recoloring (RC, conflict-free,
+//!   one superstep per color class) with the paper's piggybacked
+//!   communication scheme, and asynchronous recoloring (aRC).
+//! * [`runner`] — one thread per virtual process; merges results and
+//!   aggregates [`ProcMetrics`] into [`DistMetrics`].
+
+pub mod comm;
+pub mod cost;
+pub mod framework;
+pub mod proc;
+pub mod recolor;
+pub mod runner;
+
+pub use comm::{network, Endpoint, MsgKind};
+pub use cost::{CostModel, NetworkModel};
+pub use runner::{run_distributed, DistOutcome, ProcResult};
+
+use crate::util::timer::PhaseTimes;
+
+/// What one simulated process reports after its part of a job.
+#[derive(Debug, Clone, Default)]
+pub struct ProcMetrics {
+    pub rank: usize,
+    /// Virtual seconds per phase ("color", "recolor", "plan", "comm").
+    pub phases: PhaseTimes,
+    /// Boundary conflicts this process lost (each conflicting cut edge is
+    /// counted exactly once globally, on its losing side).
+    pub conflicts: u64,
+    /// Conflict-resolution rounds executed.
+    pub rounds: u32,
+    /// Global color count after the initial coloring and after every
+    /// recoloring iteration (filled by the coordinator pipeline).
+    pub recolor_trace: Vec<usize>,
+    /// Final virtual clock.
+    pub vtime: f64,
+    pub sent_msgs: u64,
+    pub sent_bytes: u64,
+    pub recv_msgs: u64,
+}
+
+/// Job-level aggregation over all processes.
+#[derive(Debug, Clone, Default)]
+pub struct DistMetrics {
+    pub num_procs: usize,
+    /// Sum of messages sent by all processes (collectives included).
+    pub total_msgs: u64,
+    /// Sum of bytes sent (payload + per-message header).
+    pub total_bytes: u64,
+    /// Total conflicts (one per conflicting cut edge per round).
+    pub total_conflicts: u64,
+    /// Max conflict-resolution rounds over processes.
+    pub rounds: u32,
+    /// Virtual makespan: max final clock over processes.
+    pub makespan: f64,
+    /// Real wallclock of the simulation itself (diagnostics only).
+    pub wall_secs: f64,
+    /// Per-phase virtual time summed over processes.
+    pub phase_sums: PhaseTimes,
+    /// Per-phase virtual time maxed over processes (critical-path view).
+    pub phase_max: PhaseTimes,
+}
+
+impl DistMetrics {
+    /// Aggregate per-process metrics; `wall_secs` is the simulation's real
+    /// elapsed time (pass 0.0 when irrelevant).
+    pub fn aggregate(per: &[ProcMetrics], wall_secs: f64) -> DistMetrics {
+        let mut m = DistMetrics {
+            num_procs: per.len(),
+            wall_secs,
+            ..Default::default()
+        };
+        use std::collections::BTreeMap;
+        let mut sums: BTreeMap<&str, f64> = BTreeMap::new();
+        let mut maxes: BTreeMap<&str, f64> = BTreeMap::new();
+        for p in per {
+            m.total_msgs += p.sent_msgs;
+            m.total_bytes += p.sent_bytes;
+            m.total_conflicts += p.conflicts;
+            m.rounds = m.rounds.max(p.rounds);
+            if p.vtime > m.makespan {
+                m.makespan = p.vtime;
+            }
+            for (name, secs) in p.phases.entries() {
+                *sums.entry(name).or_insert(0.0) += secs;
+                let e = maxes.entry(name).or_insert(0.0);
+                if *secs > *e {
+                    *e = *secs;
+                }
+            }
+        }
+        for (name, secs) in sums {
+            m.phase_sums.add(name, secs);
+        }
+        for (name, secs) in maxes {
+            m.phase_max.add(name, secs);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn proc(vtime: f64, msgs: u64, bytes: u64, conflicts: u64, rounds: u32) -> ProcMetrics {
+        ProcMetrics {
+            vtime,
+            sent_msgs: msgs,
+            sent_bytes: bytes,
+            conflicts,
+            rounds,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn aggregate_sums_and_maxes_exactly() {
+        let mut a = proc(1.5, 10, 1000, 3, 2);
+        a.phases.add("color", 1.0);
+        a.phases.add("plan", 0.25);
+        let mut b = proc(2.5, 7, 500, 0, 5);
+        b.phases.add("color", 2.0);
+        let m = DistMetrics::aggregate(&[a, b], 0.125);
+        assert_eq!(m.num_procs, 2);
+        assert_eq!(m.total_msgs, 17);
+        assert_eq!(m.total_bytes, 1500);
+        assert_eq!(m.total_conflicts, 3);
+        assert_eq!(m.rounds, 5);
+        assert!((m.makespan - 2.5).abs() < 1e-15, "makespan = max vtime");
+        assert!((m.wall_secs - 0.125).abs() < 1e-15);
+        assert!((m.phase_sums.get("color") - 3.0).abs() < 1e-15);
+        assert!((m.phase_max.get("color") - 2.0).abs() < 1e-15);
+        assert!((m.phase_sums.get("plan") - 0.25).abs() < 1e-15);
+        assert!((m.phase_max.get("plan") - 0.25).abs() < 1e-15);
+        assert_eq!(m.phase_sums.get("absent"), 0.0);
+    }
+
+    #[test]
+    fn aggregate_of_nothing_is_zero() {
+        let m = DistMetrics::aggregate(&[], 0.0);
+        assert_eq!(m.num_procs, 0);
+        assert_eq!(m.total_msgs, 0);
+        assert_eq!(m.makespan, 0.0);
+        assert_eq!(m.rounds, 0);
+    }
+
+    #[test]
+    fn aggregate_single_proc_is_identity() {
+        let mut a = proc(0.75, 4, 64, 1, 3);
+        a.phases.add("recolor", 0.5);
+        let m = DistMetrics::aggregate(std::slice::from_ref(&a), 0.0);
+        assert_eq!(m.total_msgs, a.sent_msgs);
+        assert_eq!(m.total_bytes, a.sent_bytes);
+        assert_eq!(m.makespan, a.vtime);
+        assert_eq!(m.phase_sums.get("recolor"), m.phase_max.get("recolor"));
+    }
+}

@@ -1,0 +1,320 @@
+//! Per-process local views: owned vertices, ghost copies of remote
+//! neighbors, and the exchange lists the framework and recoloring use.
+//!
+//! Local index space: owned vertices first (ascending global id, so local
+//! order == global order within a process), ghosts after (also ascending
+//! global id). The local CSR stores the full adjacency of owned vertices
+//! (to owned and ghost neighbors alike, in local ids); ghosts have empty
+//! adjacency — a process never iterates a remote vertex's neighborhood,
+//! exactly as in the MPI original.
+
+use crate::color::{Color, Coloring, UNCOLORED};
+use crate::graph::{CsrGraph, VertexId};
+use crate::partition::Partition;
+use std::collections::HashMap;
+
+/// Global vertex → (owner process, local index on the owner).
+#[derive(Debug, Clone)]
+pub struct GlobalMap {
+    pub owner: Vec<u32>,
+    pub local: Vec<u32>,
+}
+
+/// One process's share of the graph.
+#[derive(Debug, Clone)]
+pub struct LocalGraph {
+    pub rank: u32,
+    pub nprocs: usize,
+    /// Local CSR: owned vertices `0..n_owned()` with full adjacency in
+    /// local ids; ghosts `n_owned()..n_local()` with empty adjacency.
+    pub csr: CsrGraph,
+    owned_count: usize,
+    /// Global id of every local vertex (owned, then ghosts).
+    pub global_ids: Vec<VertexId>,
+    /// Whether the vertex (by its *global* neighborhood) has any neighbor
+    /// outside this process's part.
+    pub is_boundary: Vec<bool>,
+    /// Owning process of every local vertex.
+    pub owner: Vec<u32>,
+    /// Processes this one shares at least one cut edge with, sorted.
+    pub neighbor_procs: Vec<usize>,
+    /// Per entry of `neighbor_procs`: owned local ids (ascending) whose
+    /// colors that process needs (it holds them as ghosts).
+    pub send_lists: Vec<Vec<u32>>,
+    /// Global id → local id for every vertex present here.
+    pub index: HashMap<VertexId, u32>,
+}
+
+impl LocalGraph {
+    #[inline]
+    pub fn n_owned(&self) -> usize {
+        self.owned_count
+    }
+
+    #[inline]
+    pub fn n_local(&self) -> usize {
+        self.global_ids.len()
+    }
+
+    /// Local id of a global vertex present on this process.
+    #[inline]
+    pub fn local_of(&self, gid: VertexId) -> u32 {
+        self.index[&gid]
+    }
+}
+
+/// Split `g` into per-process local views according to `part`.
+pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (GlobalMap, Vec<LocalGraph>) {
+    assert_eq!(g.num_vertices(), part.parts.len());
+    let nprocs = part.num_parts;
+    let members = part.members();
+
+    let mut owner = vec![0u32; g.num_vertices()];
+    let mut local = vec![0u32; g.num_vertices()];
+    for (p, ms) in members.iter().enumerate() {
+        for (i, &v) in ms.iter().enumerate() {
+            owner[v as usize] = p as u32;
+            local[v as usize] = i as u32;
+        }
+    }
+
+    let mut locals = Vec::with_capacity(nprocs);
+    for (p, owned) in members.iter().enumerate() {
+        let rank = p as u32;
+        let n_owned = owned.len();
+
+        let mut ghosts: Vec<VertexId> = Vec::new();
+        for &u in owned {
+            for &v in g.neighbors(u) {
+                if part.part_of(v) != rank {
+                    ghosts.push(v);
+                }
+            }
+        }
+        ghosts.sort_unstable();
+        ghosts.dedup();
+
+        let n_local = n_owned + ghosts.len();
+        let mut index: HashMap<VertexId, u32> = HashMap::with_capacity(n_local);
+        let mut global_ids: Vec<VertexId> = Vec::with_capacity(n_local);
+        for (i, &v) in owned.iter().enumerate() {
+            index.insert(v, i as u32);
+            global_ids.push(v);
+        }
+        for (j, &v) in ghosts.iter().enumerate() {
+            index.insert(v, (n_owned + j) as u32);
+            global_ids.push(v);
+        }
+
+        let mut xadj = vec![0u64; n_local + 1];
+        for (i, &u) in owned.iter().enumerate() {
+            xadj[i + 1] = xadj[i] + g.degree(u) as u64;
+        }
+        for j in n_owned..n_local {
+            xadj[j + 1] = xadj[j];
+        }
+        let mut adjncy: Vec<VertexId> = Vec::with_capacity(xadj[n_owned] as usize);
+        for &u in owned {
+            for &v in g.neighbors(u) {
+                adjncy.push(index[&v]);
+            }
+        }
+        let csr = CsrGraph::new(xadj, adjncy, format!("{}@p{p}", g.name));
+
+        let is_boundary: Vec<bool> = global_ids
+            .iter()
+            .map(|&v| g.neighbors(v).iter().any(|&u| part.part_of(u) != rank))
+            .collect();
+        let owner_l: Vec<u32> = global_ids.iter().map(|&v| owner[v as usize]).collect();
+
+        let mut neighbor_procs: Vec<usize> =
+            ghosts.iter().map(|&v| owner[v as usize] as usize).collect();
+        neighbor_procs.sort_unstable();
+        neighbor_procs.dedup();
+
+        let mut send_lists: Vec<Vec<u32>> = vec![Vec::new(); neighbor_procs.len()];
+        let mut scratch: Vec<usize> = Vec::new();
+        for (i, &u) in owned.iter().enumerate() {
+            scratch.clear();
+            for &v in g.neighbors(u) {
+                let q = part.part_of(v) as usize;
+                if q != p {
+                    scratch.push(q);
+                }
+            }
+            scratch.sort_unstable();
+            scratch.dedup();
+            for &q in scratch.iter() {
+                let qi = neighbor_procs.binary_search(&q).unwrap();
+                send_lists[qi].push(i as u32);
+            }
+        }
+
+        locals.push(LocalGraph {
+            rank,
+            nprocs,
+            csr,
+            owned_count: n_owned,
+            global_ids,
+            is_boundary,
+            owner: owner_l,
+            neighbor_procs,
+            send_lists,
+            index,
+        });
+    }
+    (GlobalMap { owner, local }, locals)
+}
+
+/// Per-process color state over the local index space (owned + ghosts).
+#[derive(Debug, Clone)]
+pub struct ColorState {
+    pub colors: Vec<Color>,
+}
+
+impl ColorState {
+    /// Everything uncolored — the initial-coloring entry state.
+    pub fn uncolored(lg: &LocalGraph) -> Self {
+        ColorState {
+            colors: vec![UNCOLORED; lg.n_local()],
+        }
+    }
+
+    /// Project a global coloring onto this process's local vertices —
+    /// the recoloring entry state.
+    pub fn from_global(lg: &LocalGraph, c: &Coloring) -> Self {
+        ColorState {
+            colors: lg.global_ids.iter().map(|&v| c.get(v)).collect(),
+        }
+    }
+
+    /// `(global id, color)` of every owned vertex — what a process reports
+    /// back to the coordinator.
+    pub fn owned_pairs(&self, lg: &LocalGraph) -> Vec<(u32, u32)> {
+        (0..lg.n_owned())
+            .map(|i| (lg.global_ids[i], self.colors[i]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+    use crate::partition::{self, Partitioner};
+
+    fn split(g: &CsrGraph, procs: usize) -> Vec<LocalGraph> {
+        let part = partition::partition(g, Partitioner::Block, procs, 1);
+        build_local_graphs(g, &part).1
+    }
+
+    #[test]
+    fn owned_and_ghost_layout() {
+        let g = synth::path(6); // 0-1-2-3-4-5, block into [0,1,2] [3,4,5]
+        let locals = split(&g, 2);
+        assert_eq!(locals[0].n_owned(), 3);
+        assert_eq!(locals[0].n_local(), 4); // ghost: 3
+        assert_eq!(locals[0].global_ids, vec![0, 1, 2, 3]);
+        assert_eq!(locals[1].global_ids, vec![3, 4, 5, 2]);
+        assert_eq!(locals[0].neighbor_procs, vec![1]);
+        assert_eq!(locals[1].neighbor_procs, vec![0]);
+        // only vertex 2 (resp. 3) is boundary among owned
+        assert_eq!(locals[0].is_boundary[..3], [false, false, true]);
+        assert_eq!(locals[0].send_lists, vec![vec![2]]);
+        assert_eq!(locals[1].send_lists, vec![vec![0]]);
+        // ghost has empty adjacency
+        assert_eq!(locals[0].csr.degree(3), 0);
+        // owned adjacency is complete: local 2 sees local 1 and ghost 3
+        assert_eq!(locals[0].csr.neighbors(2), &[1, 3]);
+    }
+
+    #[test]
+    fn degree_conservation() {
+        let g = synth::fem_like(500, 9.0, 24, 0.01, 3, "f");
+        for procs in [1, 2, 5] {
+            let locals = split(&g, procs);
+            let owned: usize = locals.iter().map(|l| l.n_owned()).sum();
+            assert_eq!(owned, g.num_vertices());
+            let deg: u64 = locals.iter().map(|l| l.csr.xadj[l.n_owned()]).sum();
+            assert_eq!(deg, 2 * g.num_edges() as u64);
+        }
+    }
+
+    #[test]
+    fn neighbor_relation_is_symmetric() {
+        let g = synth::erdos_renyi(300, 1500, 9);
+        let locals = split(&g, 5);
+        for l in &locals {
+            for &q in &l.neighbor_procs {
+                assert!(
+                    locals[q].neighbor_procs.contains(&(l.rank as usize)),
+                    "p{} lists p{q} but not vice versa",
+                    l.rank
+                );
+                assert_ne!(q, l.rank as usize);
+            }
+            assert_eq!(l.neighbor_procs.len(), l.send_lists.len());
+        }
+    }
+
+    #[test]
+    fn send_lists_cover_exactly_the_ghost_copies() {
+        let g = synth::grid2d(8, 8);
+        let locals = split(&g, 4);
+        for l in &locals {
+            for (qi, &q) in l.neighbor_procs.iter().enumerate() {
+                // what q holds as ghosts owned by l
+                let ghosts_on_q: Vec<u32> = locals[q].global_ids[locals[q].n_owned()..]
+                    .iter()
+                    .copied()
+                    .filter(|&v| locals[q].owner[locals[q].local_of(v) as usize] == l.rank)
+                    .collect();
+                let sent: Vec<u32> = l.send_lists[qi]
+                    .iter()
+                    .map(|&i| l.global_ids[i as usize])
+                    .collect();
+                let mut a = ghosts_on_q.clone();
+                a.sort_unstable();
+                assert_eq!(sent, a, "p{}→p{q}", l.rank);
+            }
+        }
+    }
+
+    #[test]
+    fn color_state_roundtrip() {
+        let g = synth::cycle(10);
+        let locals = split(&g, 3);
+        let c = Coloring::from_vec((0..10).map(|v| v % 3).collect());
+        let mut merged = Coloring::uncolored(10);
+        for l in &locals {
+            let st = ColorState::from_global(l, &c);
+            for (gid, col) in st.owned_pairs(l) {
+                merged.set(gid, col);
+            }
+            // ghosts projected too
+            for i in l.n_owned()..l.n_local() {
+                assert_eq!(st.colors[i], c.get(l.global_ids[i]));
+            }
+        }
+        assert_eq!(merged.colors, c.colors);
+        let st = ColorState::uncolored(&locals[0]);
+        assert!(st.colors.iter().all(|&c| c == UNCOLORED));
+    }
+
+    #[test]
+    fn empty_parts_are_fine() {
+        let g = synth::path(3);
+        // 5 parts over 3 vertices → at least two empty parts
+        let part = partition::partition(&g, Partitioner::Block, 5, 1);
+        let (_, locals) = build_local_graphs(&g, &part);
+        assert_eq!(locals.len(), 5);
+        let owned: usize = locals.iter().map(|l| l.n_owned()).sum();
+        assert_eq!(owned, 3);
+        for l in &locals {
+            if l.n_owned() == 0 {
+                assert!(l.neighbor_procs.is_empty());
+                assert_eq!(l.n_local(), 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,600 @@
+//! Distributed recoloring (paper §3, §3.1): synchronous RC — provably
+//! identical to sequential Culberson iterated greedy — and asynchronous aRC.
+//!
+//! **RC.** One recoloring iteration walks the previous coloring's color
+//! classes in a globally-agreed permutation, one superstep per class. A
+//! color class of a valid coloring is an independent set, so every process
+//! can recolor its owned members of the current class concurrently with
+//! first-fit against the *new* colors of earlier classes — no conflicts,
+//! and exactly the sequential result for any process count
+//! (`rust/tests/recoloring.rs` pins this equivalence).
+//!
+//! **Communication schemes (§3.1, Fig 4).** The base scheme sends one
+//! boundary-update message per neighbor per class step — `k` messages per
+//! ordered process pair, most of them empty because per-pair boundaries are
+//! tiny relative to `k`. The piggybacked scheme first exchanges a *plan*
+//! per pair (the schedule of class steps that will actually carry data —
+//! the receiver's deadlines), then sends only nonempty messages; each data
+//! message implicitly flushes everything up to its step, and the plan tells
+//! the receiver how far it may run ahead without waiting. Preparation cost
+//! is booked under the "plan" phase (Fig 4's `prep` bar).
+//!
+//! **aRC (§2.2.2, §4.2.3).** Asynchronous recoloring reruns the
+//! speculative superstep framework with the visit order induced by the
+//! class permutation: cheaper, conflict-prone, quality between FSS and RC.
+
+use crate::color::recolor::{Permutation, RecolorSchedule};
+use crate::color::select::Selection;
+use crate::color::UNCOLORED;
+use crate::dist::comm::{self, Endpoint, MsgKind};
+use crate::dist::cost::CostModel;
+use crate::dist::framework::{self, FrameworkConfig};
+use crate::dist::proc::{ColorState, LocalGraph};
+use crate::dist::ProcMetrics;
+use crate::util::bitset::ColorMarker;
+use crate::util::rng::{mix64, Rng};
+
+/// Boundary-update communication scheme for synchronous recoloring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommScheme {
+    /// One message per neighbor per class step, empty or not.
+    Base,
+    /// Plan/deadline exchange up front, then only nonempty messages.
+    Piggyback,
+}
+
+impl std::str::FromStr for CommScheme {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "base" => Ok(CommScheme::Base),
+            "piggyback" | "pb" | "improved" => Ok(CommScheme::Piggyback),
+            other => Err(format!("unknown comm scheme {other:?} (base|piggyback)")),
+        }
+    }
+}
+
+/// Configuration of distributed synchronous recoloring.
+#[derive(Debug, Clone, Copy)]
+pub struct RecolorConfig {
+    pub schedule: RecolorSchedule,
+    pub iterations: u32,
+    pub scheme: CommScheme,
+    /// Seeds the class permutation for `RAND` schedules — identical on
+    /// every process, so the permutation (and therefore the result) is
+    /// independent of the process count.
+    pub seed: u64,
+}
+
+impl Default for RecolorConfig {
+    fn default() -> Self {
+        RecolorConfig {
+            schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
+            iterations: 1,
+            scheme: CommScheme::Piggyback,
+            seed: 42,
+        }
+    }
+}
+
+/// The class permutation RNG for iteration `iter` — a pure function of
+/// `(seed, iter)` so every process, at every process count, agrees.
+fn perm_rng(seed: u64, iter: u32) -> Rng {
+    Rng::new(mix64(seed, 0x9C1A_55E5 ^ iter as u64))
+}
+
+/// Per-pair piggyback plan: for each neighbor (in `neighbor_procs` order),
+/// the sorted class steps at which this process will send a nonempty
+/// update. A pure function of the send lists, the old colors and the class
+/// permutation — the unit tests pin it against the base scheme's schedule.
+pub fn build_plans(
+    lg: &LocalGraph,
+    old_colors: &[u32],
+    step_of_class: &[u32],
+) -> Vec<Vec<u32>> {
+    lg.send_lists
+        .iter()
+        .map(|list| {
+            let mut steps: Vec<u32> = list
+                .iter()
+                .filter(|&&v| old_colors[v as usize] != crate::color::UNCOLORED)
+                .map(|&v| step_of_class[old_colors[v as usize] as usize])
+                .collect();
+            steps.sort_unstable();
+            steps.dedup();
+            steps
+        })
+        .collect()
+}
+
+/// One process's share of synchronous recoloring. Appends the global color
+/// count after every iteration to `trace`.
+pub fn recolor_process_sync(
+    ep: &mut Endpoint,
+    lg: &LocalGraph,
+    cost: &CostModel,
+    cfg: &RecolorConfig,
+    state: &mut ColorState,
+    trace: &mut Vec<usize>,
+) -> ProcMetrics {
+    let mut m = ProcMetrics {
+        rank: ep.rank,
+        ..Default::default()
+    };
+    ep.wait_on_recv = true;
+    let n_owned = lg.n_owned();
+    let n_local = lg.n_local();
+    let npairs = lg.neighbor_procs.len();
+    let mut marker = ColorMarker::new(64);
+
+    for iter in 1..=cfg.iterations {
+        let t0 = ep.clock;
+        let mut plan_dt = 0.0;
+
+        // --- global class structure of the current coloring
+        let local_k = (0..n_owned)
+            .map(|v| state.colors[v])
+            .filter(|&c| c != UNCOLORED)
+            .map(|c| c as u64 + 1)
+            .max()
+            .unwrap_or(0);
+        let k = ep.allreduce_max_u64(local_k) as usize;
+        if k == 0 {
+            trace.push(0);
+            continue;
+        }
+        let mut sizes = vec![0u64; k];
+        for v in 0..n_owned {
+            let c = state.colors[v];
+            if c != UNCOLORED {
+                sizes[c as usize] += 1;
+            }
+        }
+        ep.allreduce_sum_vec_u64(&mut sizes);
+        let sizes_usize: Vec<usize> = sizes.iter().map(|&s| s as usize).collect();
+        let perm = cfg.schedule.permutation_at(iter);
+        let mut prng = perm_rng(cfg.seed, iter);
+        let class_order = perm.permute_classes(&sizes_usize, &mut prng);
+        let mut step_of_class = vec![0u32; k];
+        for (t, &c) in class_order.iter().enumerate() {
+            step_of_class[c as usize] = t as u32;
+        }
+
+        // owned members per class, ascending local id (== ascending global
+        // id), via counting sort — the sequential visit order, sharded
+        let mut class_start = vec![0usize; k + 1];
+        for v in 0..n_owned {
+            let c = state.colors[v];
+            if c != UNCOLORED {
+                class_start[c as usize + 1] += 1;
+            }
+        }
+        for c in 0..k {
+            class_start[c + 1] += class_start[c];
+        }
+        let mut members = vec![0u32; class_start[k]];
+        let mut cursor = class_start.clone();
+        for v in 0..n_owned {
+            let c = state.colors[v];
+            if c != UNCOLORED {
+                members[cursor[c as usize]] = v as u32;
+                cursor[c as usize] += 1;
+            }
+        }
+        ep.clock += cost.color_cost(n_owned as u64, 0);
+
+        // per-pair, per-step update lists from the old classes
+        let mut pair_sched: Vec<Vec<Vec<u32>>> = Vec::with_capacity(npairs);
+        for list in &lg.send_lists {
+            let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); k];
+            for &v in list {
+                let c = state.colors[v as usize];
+                if c != UNCOLORED {
+                    buckets[step_of_class[c as usize] as usize].push(v);
+                }
+            }
+            pair_sched.push(buckets);
+        }
+
+        // --- piggyback plan/deadline exchange
+        let mut plans_in: Vec<Vec<bool>> = Vec::new();
+        if cfg.scheme == CommScheme::Piggyback {
+            let tp0 = ep.clock;
+            // derive each pair's plan from the same buckets that gate the
+            // data sends below, so plan and schedule agree by construction
+            // (build_plans is the pure spec of this, pinned by unit tests)
+            let plans_out: Vec<Vec<u32>> = pair_sched
+                .iter()
+                .map(|buckets| {
+                    buckets
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, b)| !b.is_empty())
+                        .map(|(t, _)| t as u32)
+                        .collect()
+                })
+                .collect();
+            let planned_entries: u64 =
+                lg.send_lists.iter().map(|l| l.len() as u64).sum::<u64>() + k as u64;
+            ep.clock += cost.color_cost(planned_entries, 0);
+            for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
+                let payload = comm::encode_u32s(&plans_out[qi]);
+                ep.clock += cost.pack_cost(payload.len() as u64);
+                ep.send(q, MsgKind::Plan, iter, 0, payload);
+            }
+            for &q in &lg.neighbor_procs {
+                let data = ep.recv_from(q, MsgKind::Plan, iter, 0);
+                ep.clock += cost.pack_cost(data.len() as u64);
+                let mut flags = vec![false; k];
+                for t in comm::decode_u32s(&data) {
+                    flags[t as usize] = true;
+                }
+                plans_in.push(flags);
+            }
+            plan_dt = ep.clock - tp0;
+            m.phases.add("plan", plan_dt);
+        }
+
+        // --- class supersteps: first-fit against the new coloring only
+        let mut newc = vec![UNCOLORED; n_local];
+        for (t, &c) in class_order.iter().enumerate() {
+            let batch = &members[class_start[c as usize]..class_start[c as usize + 1]];
+            let mut scans: u64 = 0;
+            for &v in batch {
+                marker.next_epoch();
+                let s = lg.csr.xadj[v as usize] as usize;
+                let e = lg.csr.xadj[v as usize + 1] as usize;
+                scans += (e - s) as u64;
+                for &u in &lg.csr.adjncy[s..e] {
+                    let cu = newc[u as usize];
+                    if cu != UNCOLORED {
+                        marker.mark(cu);
+                    }
+                }
+                newc[v as usize] = marker.first_unmarked();
+            }
+            ep.clock += cost.color_cost(batch.len() as u64, scans);
+
+            for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
+                let vs = &pair_sched[qi][t];
+                if cfg.scheme == CommScheme::Piggyback && vs.is_empty() {
+                    continue; // the plan told the receiver to skip this step
+                }
+                let pairs: Vec<(u32, u32)> = vs
+                    .iter()
+                    .map(|&v| (lg.global_ids[v as usize], newc[v as usize]))
+                    .collect();
+                let payload = comm::encode_pairs(&pairs);
+                ep.clock += cost.pack_cost(payload.len() as u64);
+                ep.send(q, MsgKind::Recolor, iter, t as u32, payload);
+            }
+            for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
+                let expected = match cfg.scheme {
+                    CommScheme::Base => true,
+                    CommScheme::Piggyback => plans_in[qi][t],
+                };
+                if !expected {
+                    continue;
+                }
+                let data = ep.recv_from(q, MsgKind::Recolor, iter, t as u32);
+                ep.clock += cost.pack_cost(data.len() as u64);
+                for (gid, c) in comm::decode_pairs(&data) {
+                    newc[lg.local_of(gid) as usize] = c;
+                }
+            }
+        }
+        state.colors.copy_from_slice(&newc);
+
+        // --- trace: global color count after this iteration
+        let local_new_k = (0..n_owned)
+            .map(|v| state.colors[v])
+            .filter(|&c| c != UNCOLORED)
+            .map(|c| c as u64 + 1)
+            .max()
+            .unwrap_or(0);
+        let kk = ep.allreduce_max_u64(local_new_k);
+        trace.push(kk as usize);
+        m.phases.add("recolor", (ep.clock - t0) - plan_dt);
+    }
+
+    m.vtime = ep.clock;
+    m.sent_msgs = ep.sent_msgs;
+    m.sent_bytes = ep.sent_bytes;
+    m.recv_msgs = ep.recv_msgs;
+    m
+}
+
+/// One asynchronous recoloring iteration (aRC): rerun the speculative
+/// framework with the class-permutation-induced visit order.
+#[allow(clippy::too_many_arguments)]
+pub fn recolor_process_async(
+    ep: &mut Endpoint,
+    lg: &LocalGraph,
+    cost: &CostModel,
+    fw: &FrameworkConfig,
+    perm: Permutation,
+    iter: u32,
+    seed: u64,
+    state: &mut ColorState,
+) -> ProcMetrics {
+    let mut m = ProcMetrics {
+        rank: ep.rank,
+        ..Default::default()
+    };
+    let t0 = ep.clock;
+    let n_owned = lg.n_owned();
+
+    // global class structure, as in RC
+    let local_k = (0..n_owned)
+        .map(|v| state.colors[v])
+        .filter(|&c| c != UNCOLORED)
+        .map(|c| c as u64 + 1)
+        .max()
+        .unwrap_or(0);
+    let k = ep.allreduce_max_u64(local_k) as usize;
+    if k == 0 {
+        return m;
+    }
+    let mut sizes = vec![0u64; k];
+    for v in 0..n_owned {
+        let c = state.colors[v];
+        if c != UNCOLORED {
+            sizes[c as usize] += 1;
+        }
+    }
+    ep.allreduce_sum_vec_u64(&mut sizes);
+    let sizes_usize: Vec<usize> = sizes.iter().map(|&s| s as usize).collect();
+    let mut prng = perm_rng(seed, iter);
+    let class_order = perm.permute_classes(&sizes_usize, &mut prng);
+
+    // owned visit order: classes in permuted order, ascending ids within
+    let mut local_counts = vec![0usize; k];
+    let mut n_colored = 0usize;
+    for v in 0..n_owned {
+        let c = state.colors[v];
+        if c != UNCOLORED {
+            local_counts[c as usize] += 1;
+            n_colored += 1;
+        }
+    }
+    let mut start = vec![0usize; k];
+    let mut a = 0usize;
+    for &c in &class_order {
+        start[c as usize] = a;
+        a += local_counts[c as usize];
+    }
+    let mut order = vec![0u32; n_colored];
+    let mut cur = start;
+    for v in 0..n_owned {
+        let c = state.colors[v];
+        if c != UNCOLORED {
+            order[cur[c as usize]] = v as u32;
+            cur[c as usize] += 1;
+        }
+    }
+    ep.clock += cost.color_cost(n_owned as u64, 0);
+
+    // speculative rerun from scratch with first-fit
+    for c in state.colors.iter_mut() {
+        *c = UNCOLORED;
+    }
+    let mut fw2 = *fw;
+    fw2.selection = Selection::FirstFit;
+    fw2.seed = mix64(seed, 0xA12C ^ iter as u64);
+    let fm = framework::color_process(ep, lg, &fw2, cost, state, Vec::new(), Some(order));
+    m.conflicts = fm.conflicts;
+    m.rounds = fm.rounds;
+    m.phases.add("recolor", ep.clock - t0);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::{greedy_color, Coloring, Ordering};
+    use crate::dist::cost::NetworkModel;
+    use crate::dist::proc::build_local_graphs;
+    use crate::dist::DistMetrics;
+    use crate::graph::synth;
+    use crate::graph::CsrGraph;
+    use crate::partition::{self, Partitioner};
+
+    fn run(
+        g: &CsrGraph,
+        init: &Coloring,
+        procs: usize,
+        scheme: CommScheme,
+    ) -> (Coloring, DistMetrics, Vec<usize>) {
+        let part = partition::partition(g, Partitioner::Block, procs, 1);
+        let (_, locals) = build_local_graphs(g, &part);
+        let cost = CostModel::fixed();
+        let eps = comm::network(procs, NetworkModel::default());
+        let cfg = RecolorConfig {
+            scheme,
+            ..Default::default()
+        };
+        let mut outs: Vec<Option<(Vec<(u32, u32)>, Vec<usize>, ProcMetrics)>> =
+            (0..procs).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .zip(locals.iter())
+                .map(|(ep, lg)| {
+                    let cost = &cost;
+                    let cfg = &cfg;
+                    s.spawn(move || {
+                        let mut ep = ep;
+                        let mut state = ColorState::from_global(lg, init);
+                        let mut trace = Vec::new();
+                        let m = recolor_process_sync(&mut ep, lg, cost, cfg, &mut state, &mut trace);
+                        (state.owned_pairs(lg), trace, m)
+                    })
+                })
+                .collect();
+            for (i, h) in hs.into_iter().enumerate() {
+                outs[i] = Some(h.join().unwrap());
+            }
+        });
+        let mut coloring = Coloring::uncolored(g.num_vertices());
+        let mut per = Vec::new();
+        let mut trace = Vec::new();
+        for (pairs, t, m) in outs.into_iter().map(|o| o.unwrap()) {
+            for (gid, c) in pairs {
+                coloring.set(gid, c);
+            }
+            trace = t;
+            per.push(m);
+        }
+        (coloring, DistMetrics::aggregate(&per, 0.0), trace)
+    }
+
+    fn workload() -> (CsrGraph, Coloring) {
+        let g = synth::fem_like(800, 10.0, 26, 0.01, 5, "fem");
+        let init = greedy_color(&g, Ordering::Natural, crate::color::Selection::RandomX(8), 3);
+        (g, init)
+    }
+
+    #[test]
+    fn plan_matches_base_schedule_and_has_no_empty_steps() {
+        let (g, init) = workload();
+        let part = partition::partition(&g, Partitioner::Block, 4, 1);
+        let (_, locals) = build_local_graphs(&g, &part);
+        let k = init.num_colors();
+        // identity permutation for a direct schedule comparison
+        let step_of_class: Vec<u32> = (0..k as u32).collect();
+        for lg in &locals {
+            let old: Vec<u32> = lg.global_ids[..lg.n_owned()]
+                .iter()
+                .map(|&v| init.get(v))
+                .collect();
+            let plans = build_plans(lg, &old, &step_of_class);
+            assert_eq!(plans.len(), lg.neighbor_procs.len());
+            for (qi, plan) in plans.iter().enumerate() {
+                // sorted, unique, in range
+                assert!(plan.windows(2).all(|w| w[0] < w[1]));
+                assert!(plan.iter().all(|&t| (t as usize) < k));
+                // a step is planned iff the base scheme would have data:
+                // some send-list member's old class maps to that step
+                let base_nonempty: Vec<u32> = {
+                    let mut s: Vec<u32> = lg.send_lists[qi]
+                        .iter()
+                        .map(|&v| step_of_class[old[v as usize] as usize])
+                        .collect();
+                    s.sort_unstable();
+                    s.dedup();
+                    s
+                };
+                assert_eq!(plan, &base_nonempty, "deadline bookkeeping drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn piggyback_never_sends_empty_data_messages() {
+        // base sends pairs*k data messages; piggyback exactly the nonempty
+        // schedule + one plan message per pair — strictly fewer whenever
+        // any (pair, class) combination is empty.
+        let (g, init) = workload();
+        let (cb, mb, _) = run(&g, &init, 5, CommScheme::Base);
+        let (cp, mp, _) = run(&g, &init, 5, CommScheme::Piggyback);
+        assert_eq!(cb.colors, cp.colors, "schemes must agree exactly");
+        cb.validate(&g).unwrap();
+        let part = partition::partition(&g, Partitioner::Block, 5, 1);
+        let (_, locals) = build_local_graphs(&g, &part);
+        let pairs: u64 = locals.iter().map(|l| l.neighbor_procs.len() as u64).sum();
+        let k = init.num_colors() as u64;
+        assert!(mb.total_msgs >= pairs * k, "base sends every (pair, class)");
+        // nonempty data steps, computed independently from the plans
+        let step_of_class: Vec<u32> = {
+            let sizes = init.class_sizes();
+            let mut prng = perm_rng(42, 1);
+            let order = Permutation::NonDecreasing.permute_classes(&sizes, &mut prng);
+            let mut inv = vec![0u32; sizes.len()];
+            for (t, &c) in order.iter().enumerate() {
+                inv[c as usize] = t as u32;
+            }
+            inv
+        };
+        let mut nonempty: u64 = 0;
+        for lg in &locals {
+            let old: Vec<u32> = lg.global_ids[..lg.n_owned()]
+                .iter()
+                .map(|&v| init.get(v))
+                .collect();
+            nonempty += build_plans(lg, &old, &step_of_class)
+                .iter()
+                .map(|p| p.len() as u64)
+                .sum::<u64>();
+        }
+        let collectives = mb.total_msgs - pairs * k;
+        assert_eq!(
+            mp.total_msgs,
+            nonempty + pairs + collectives,
+            "piggyback = nonempty data + one plan per pair + collectives"
+        );
+        assert!(mp.total_msgs < mb.total_msgs);
+    }
+
+    #[test]
+    fn multi_iteration_schemes_agree() {
+        let (g, init) = workload();
+        let part = partition::partition(&g, Partitioner::Block, 3, 1);
+        let (_, locals) = build_local_graphs(&g, &part);
+        let cost = CostModel::fixed();
+        let mut results = Vec::new();
+        for scheme in [CommScheme::Base, CommScheme::Piggyback] {
+            let cfg = RecolorConfig {
+                iterations: 4,
+                scheme,
+                ..Default::default()
+            };
+            let eps = comm::network(3, NetworkModel::ideal());
+            let mut outs: Vec<Option<(Vec<(u32, u32)>, Vec<usize>)>> = vec![None, None, None];
+            std::thread::scope(|s| {
+                let hs: Vec<_> = eps
+                    .into_iter()
+                    .zip(locals.iter())
+                    .map(|(ep, lg)| {
+                        let cost = &cost;
+                        let cfg = &cfg;
+                        let init = &init;
+                        s.spawn(move || {
+                            let mut ep = ep;
+                            let mut state = ColorState::from_global(lg, init);
+                            let mut trace = Vec::new();
+                            recolor_process_sync(&mut ep, lg, cost, cfg, &mut state, &mut trace);
+                            (state.owned_pairs(lg), trace)
+                        })
+                    })
+                    .collect();
+                for (i, h) in hs.into_iter().enumerate() {
+                    outs[i] = Some(h.join().unwrap());
+                }
+            });
+            let mut coloring = Coloring::uncolored(g.num_vertices());
+            let mut trace = Vec::new();
+            for (pairs, t) in outs.into_iter().map(|o| o.unwrap()) {
+                for (gid, c) in pairs {
+                    coloring.set(gid, c);
+                }
+                trace = t;
+            }
+            assert_eq!(trace.len(), 4);
+            assert!(trace.windows(2).all(|w| w[1] <= w[0]), "monotone: {trace:?}");
+            results.push((coloring, trace));
+        }
+        assert_eq!(results[0].0.colors, results[1].0.colors);
+        assert_eq!(results[0].1, results[1].1);
+        results[0].0.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn comm_scheme_parses() {
+        assert_eq!("base".parse::<CommScheme>().unwrap(), CommScheme::Base);
+        assert_eq!(
+            "piggyback".parse::<CommScheme>().unwrap(),
+            CommScheme::Piggyback
+        );
+        assert!("x".parse::<CommScheme>().is_err());
+    }
+}

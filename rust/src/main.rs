@@ -13,8 +13,9 @@
 //! `fem:N:AVGDEG:MAXDEG`, or a Table-1 name (`auto`, `bmw3_2`, `hood`,
 //! `ldoor`, `msdoor`, `pwtk`) at `--scale` fraction of paper size.
 
-use anyhow::{bail, Context, Result};
+use dgcolor::bail;
 use dgcolor::color::recolor::{self, RecolorSchedule};
+use dgcolor::util::error::{Context, Error, Result};
 use dgcolor::color::{greedy_color, Ordering, Selection};
 use dgcolor::coordinator::{run_job, ColoringConfig};
 use dgcolor::graph::rmat::{self, RmatParams};
@@ -139,7 +140,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let method: Partitioner = args
         .str_or("partitioner", "bfs")
         .parse()
-        .map_err(anyhow::Error::msg)?;
+        .map_err(Error::msg)?;
     let seed: u64 = args.get_or("seed", 42u64)?;
     let t = Timer::start();
     let p = partition::partition(&g, method, procs, seed);
@@ -161,16 +162,16 @@ fn cmd_seq(args: &Args) -> Result<()> {
     let ordering: Ordering = args
         .str_or("ordering", "nat")
         .parse()
-        .map_err(anyhow::Error::msg)?;
+        .map_err(Error::msg)?;
     let selection: Selection = args
         .str_or("selection", "ff")
         .parse()
-        .map_err(anyhow::Error::msg)?;
+        .map_err(Error::msg)?;
     let iters: u32 = args.get_or("recolor", 0u32)?;
     let schedule: RecolorSchedule = args
         .str_or("schedule", "nd")
         .parse()
-        .map_err(anyhow::Error::msg)?;
+        .map_err(Error::msg)?;
     let seed: u64 = args.get_or("seed", 42u64)?;
     let distance: u32 = args.get_or("distance", 1u32)?;
 
@@ -183,9 +184,9 @@ fn cmd_seq(args: &Args) -> Result<()> {
     let t_color = t.secs();
     if distance == 2 {
         dgcolor::color::distance2::validate_d2(&g, &c0)
-            .map_err(|(u, v)| anyhow::anyhow!("distance-2 conflict ({u},{v})"))?;
+            .map_err(|(u, v)| dgcolor::err!("distance-2 conflict ({u},{v})"))?;
     } else {
-        c0.validate(&g).map_err(|e| anyhow::anyhow!("{e}"))?;
+        c0.validate(&g).map_err(|e| dgcolor::err!("{e}"))?;
     }
 
     let mut tab = Table::new(
@@ -212,13 +213,13 @@ fn cmd_seq(args: &Args) -> Result<()> {
                 trace.push(c.num_colors());
             }
             dgcolor::color::distance2::validate_d2(&g, &c)
-                .map_err(|(u, v)| anyhow::anyhow!("distance-2 conflict ({u},{v})"))?;
+                .map_err(|(u, v)| dgcolor::err!("distance-2 conflict ({u},{v})"))?;
             (c, trace)
         } else {
             recolor::recolor_iterate(&g, &c0, schedule, iters, &mut rng)
         };
         if distance == 1 {
-            cr.validate(&g).map_err(|e| anyhow::anyhow!("{e}"))?;
+            cr.validate(&g).map_err(|e| dgcolor::err!("{e}"))?;
         }
         tab.row(&["recolor schedule", &schedule.label()]);
         tab.row(&["recolor iterations", &iters.to_string()]);
@@ -257,12 +258,12 @@ fn cmd_kernel(args: &Args) -> Result<()> {
     use dgcolor::color::Coloring;
     use dgcolor::runtime::{BatchColorer, KernelRuntime};
     if !KernelRuntime::artifacts_present() {
-        bail!("artifacts missing — run `make artifacts` first");
+        bail!("kernel runtime unavailable — run `make artifacts` and build with `--features xla`");
     }
     let g = load_graph(args)?;
     let seed: u64 = args.get_or("seed", 42u64)?;
     let x: Option<u32> = match args.get_str("selection") {
-        Some(s) => match s.parse::<Selection>().map_err(anyhow::Error::msg)? {
+        Some(s) => match s.parse::<Selection>().map_err(Error::msg)? {
             Selection::FirstFit => None,
             Selection::RandomX(x) => Some(x),
             other => bail!("kernel backend supports ff|r<X>, not {other:?}"),
@@ -276,7 +277,7 @@ fn cmd_kernel(args: &Args) -> Result<()> {
     let t = Timer::start();
     bc.color_sequence(&g, &order, x, &mut c)?;
     let secs = t.secs();
-    c.validate(&g).map_err(|e| anyhow::anyhow!("{e}"))?;
+    c.validate(&g).map_err(|e| dgcolor::err!("{e}"))?;
     let mut tab = Table::new(
         &format!("kernel-backend coloring of {}", g.name),
         &["metric", "value"],

@@ -15,8 +15,8 @@
 use super::client::{KernelRuntime, BATCH, DMAX, EDGE_BATCH, NCOLORS};
 use crate::color::{Color, Coloring, UNCOLORED};
 use crate::graph::{CsrGraph, VertexId};
+use crate::util::error::Result;
 use crate::util::{ColorMarker, Rng};
-use anyhow::Result;
 
 pub struct BatchColorer {
     rt: KernelRuntime,

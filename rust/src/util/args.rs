@@ -4,7 +4,8 @@
 //! subcommands. Typed getters parse on access and report errors with the
 //! flag name.
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 use std::collections::BTreeMap;
 use std::str::FromStr;
 
@@ -91,7 +92,7 @@ impl Args {
         let v = self
             .options
             .get(name)
-            .ok_or_else(|| anyhow!("missing required option --{name}"))?;
+            .ok_or_else(|| err!("missing required option --{name}"))?;
         v.parse::<T>()
             .with_context(|| format!("invalid value {v:?} for --{name}"))
     }

@@ -1,0 +1,157 @@
+//! Minimal error/result substrate (`anyhow` is unavailable offline).
+//!
+//! A single string-backed [`Error`] with `anyhow`-style ergonomics: the
+//! [`Context`] extension trait for `Result`/`Option`, a blanket `From` for
+//! every `std::error::Error` (so `?` works on io/parse errors), and the
+//! [`err!`](crate::err), [`bail!`](crate::bail) and
+//! [`ensure!`](crate::ensure) macros. Deliberately no source chain: every
+//! layer of context is folded into the message, which is all the CLI and
+//! the test harness ever print.
+
+use std::fmt;
+
+/// String-backed error. Does **not** implement `std::error::Error` itself —
+/// exactly like `anyhow::Error`, this is what allows the blanket
+/// `From<E: std::error::Error>` impl to coexist with `From<String>`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like `anyhow::Error`, a blanket conversion from every std error so `?`
+// works on io/parse failures. No `From<String>`/`From<&str>` impls — they
+// would overlap with this blanket under coherence's future-compatibility
+// rule (upstream could implement `Error` for `String`); use `Error::msg`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style extension for attaching context to failures.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (mirrors `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (mirrors `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::err!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds (mirrors
+/// `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail_helper()
+    }
+    fn bail_helper() -> Result<u32> {
+        crate::bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+        assert_eq!(format!("{e:#}"), "boom 42");
+        let e = crate::err!("x={}", 1);
+        assert_eq!(format!("{e:?}"), "x=1");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(v: u32) -> Result<()> {
+            crate::ensure!(v < 10, "too big: {v}");
+            Ok(())
+        }
+        assert!(check(5).is_ok());
+        assert_eq!(check(15).unwrap_err().to_string(), "too big: 15");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let r: std::result::Result<u32, String> = Err("inner".into());
+        assert_eq!(
+            r.with_context(|| "outer").unwrap_err().to_string(),
+            "outer: inner"
+        );
+    }
+}

@@ -2,7 +2,7 @@
 //! bench prints a paper-style table to stdout and mirrors it as CSV under
 //! `results/`.
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::fmt::Write as _;
 use std::fs;
 use std::path::Path;

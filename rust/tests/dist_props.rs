@@ -1,0 +1,199 @@
+//! Property tests for the distributed runtime (`util::prop` harness):
+//! `run_job` must return a valid coloring across random graphs, seeds,
+//! process counts, superstep sizes, both communication modes, and every
+//! recoloring mode — plus determinism and trace-shape invariants.
+
+use dgcolor::color::recolor::{Permutation, RecolorSchedule};
+use dgcolor::color::{Ordering, Selection};
+use dgcolor::coordinator::{run_job, ColoringConfig, RecolorMode};
+use dgcolor::dist::cost::CostModel;
+use dgcolor::dist::recolor::{CommScheme, RecolorConfig};
+use dgcolor::dist::NetworkModel;
+use dgcolor::graph::{CsrGraph, GraphBuilder};
+use dgcolor::util::prop::{check, PropConfig};
+use dgcolor::util::Rng;
+
+fn random_graph(rng: &mut Rng) -> CsrGraph {
+    let n = rng.range(2, 500);
+    let m = rng.range(1, 5 * n);
+    let mut b = GraphBuilder::new(n);
+    for _ in 0..m {
+        b.add_edge(rng.range(0, n) as u32, rng.range(0, n) as u32);
+    }
+    b.build(format!("dp-{n}-{m}"))
+}
+
+fn random_config(rng: &mut Rng) -> ColoringConfig {
+    let ordering = *rng.choose(&[
+        Ordering::Natural,
+        Ordering::InternalFirst,
+        Ordering::BoundaryFirst,
+        Ordering::LargestFirst,
+        Ordering::SmallestLast,
+    ]);
+    let selection = *rng.choose(&[
+        Selection::FirstFit,
+        Selection::StaggeredFirstFit,
+        Selection::LeastUsed,
+        Selection::RandomX(rng.range(1, 30) as u32),
+    ]);
+    let recolor = match rng.below(4) {
+        0 => RecolorMode::None,
+        1 => RecolorMode::Sync(RecolorConfig {
+            schedule: RecolorSchedule::Fixed(*rng.choose(&[
+                Permutation::NonDecreasing,
+                Permutation::NonIncreasing,
+                Permutation::Reverse,
+                Permutation::Random,
+            ])),
+            iterations: rng.range(1, 4) as u32,
+            scheme: if rng.chance(0.5) {
+                CommScheme::Base
+            } else {
+                CommScheme::Piggyback
+            },
+            seed: rng.next_u64(),
+        }),
+        2 => RecolorMode::Async {
+            perm: Permutation::NonDecreasing,
+            iterations: rng.range(1, 3) as u32,
+        },
+        _ => RecolorMode::Sync(RecolorConfig::default()),
+    };
+    ColoringConfig {
+        num_procs: rng.range(1, 10),
+        superstep_size: rng.range(1, 400),
+        sync: rng.chance(0.5),
+        ordering,
+        selection,
+        recolor,
+        seed: rng.next_u64(),
+        network: if rng.chance(0.3) {
+            NetworkModel::ideal()
+        } else {
+            NetworkModel::default()
+        },
+        fixed_cost: Some(CostModel::fixed()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_run_job_always_valid() {
+    check(
+        "run_job valid across graphs/configs/modes",
+        PropConfig { cases: 40, seed: 0xD157 },
+        |rng, _| {
+            let g = random_graph(rng);
+            let cfg = random_config(rng);
+            // run_job validates internally and errors on any conflict
+            let r = run_job(&g, &cfg).map_err(|e| format!("{}: {e}", cfg.label()))?;
+            r.coloring
+                .validate(&g)
+                .map_err(|e| format!("{}: {e}", cfg.label()))?;
+            if r.num_colors != r.coloring.num_colors() {
+                return Err("num_colors disagrees with coloring".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sync_runs_are_deterministic() {
+    check(
+        "sync determinism",
+        PropConfig { cases: 12, seed: 0xD158 },
+        |rng, _| {
+            let g = random_graph(rng);
+            let mut cfg = random_config(rng);
+            cfg.sync = true;
+            let a = run_job(&g, &cfg).map_err(|e| e.to_string())?;
+            let b = run_job(&g, &cfg).map_err(|e| e.to_string())?;
+            if a.coloring.colors != b.coloring.colors {
+                return Err(format!("colors diverged for {}", cfg.label()));
+            }
+            if a.metrics.total_msgs != b.metrics.total_msgs
+                || a.metrics.total_bytes != b.metrics.total_bytes
+                || a.metrics.total_conflicts != b.metrics.total_conflicts
+            {
+                return Err(format!("accounting diverged for {}", cfg.label()));
+            }
+            if (a.metrics.makespan - b.metrics.makespan).abs() > 1e-15 {
+                return Err(format!("makespan diverged for {}", cfg.label()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sync_recolor_trace_is_monotone() {
+    check(
+        "RC trace monotone (Culberson)",
+        PropConfig { cases: 20, seed: 0xD159 },
+        |rng, _| {
+            let g = random_graph(rng);
+            let iters = rng.range(1, 5) as u32;
+            let cfg = ColoringConfig {
+                num_procs: rng.range(1, 7),
+                selection: Selection::RandomX(rng.range(2, 20) as u32),
+                recolor: RecolorMode::Sync(RecolorConfig {
+                    schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
+                    iterations: iters,
+                    scheme: CommScheme::Piggyback,
+                    seed: rng.next_u64(),
+                }),
+                seed: rng.next_u64(),
+                fixed_cost: Some(CostModel::fixed()),
+                ..Default::default()
+            };
+            let r = run_job(&g, &cfg).map_err(|e| e.to_string())?;
+            if r.recolor_trace.len() != iters as usize + 1 {
+                return Err(format!(
+                    "trace length {} != {}",
+                    r.recolor_trace.len(),
+                    iters + 1
+                ));
+            }
+            if !r.recolor_trace.windows(2).all(|w| w[1] <= w[0]) {
+                return Err(format!("trace not monotone: {:?}", r.recolor_trace));
+            }
+            if *r.recolor_trace.last().unwrap() != r.num_colors {
+                return Err("trace tail != final colors".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_comm_schemes_agree() {
+    check(
+        "Base == Piggyback results",
+        PropConfig { cases: 15, seed: 0xD15A },
+        |rng, _| {
+            let g = random_graph(rng);
+            let seed = rng.next_u64();
+            let procs = rng.range(1, 8);
+            let mk = |scheme| ColoringConfig {
+                num_procs: procs,
+                recolor: RecolorMode::Sync(RecolorConfig {
+                    schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
+                    iterations: 2,
+                    scheme,
+                    seed: 7,
+                }),
+                seed,
+                fixed_cost: Some(CostModel::fixed()),
+                ..Default::default()
+            };
+            let a = run_job(&g, &mk(CommScheme::Base)).map_err(|e| e.to_string())?;
+            let b = run_job(&g, &mk(CommScheme::Piggyback)).map_err(|e| e.to_string())?;
+            if a.coloring.colors != b.coloring.colors {
+                return Err("schemes disagree".into());
+            }
+            Ok(())
+        },
+    );
+}
