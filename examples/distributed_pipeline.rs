@@ -1,20 +1,33 @@
 //! End-to-end driver (the EXPERIMENTS.md §E2E run): a real workload —
 //! RMAT-Good at 2^18 vertices / ~2M edges — through the full system:
-//! partition → distributed superstep coloring → synchronous recoloring with
-//! piggybacking, swept over process counts, reporting quality + virtual
-//! runtime + exact message counts at each scale.
+//! one coordinator [`Session`] running partition → distributed superstep
+//! coloring → synchronous recoloring with piggybacking, swept over process
+//! counts, reporting quality + virtual runtime + exact message counts at
+//! each scale. The last run streams its phase/iteration events to stdout.
 //!
 //! Run: `cargo run --release --example distributed_pipeline`
 //! (REPRO_FULL=1 raises the graph to the paper's 2^24 scale.)
 
-use dgcolor::color::recolor::{Permutation, RecolorSchedule};
 use dgcolor::color::{greedy_color, Ordering, Selection};
-use dgcolor::coordinator::{run_job, ColoringConfig, RecolorMode};
-use dgcolor::dist::recolor::{CommScheme, RecolorConfig};
+use dgcolor::coordinator::event::{Event, Observer};
+use dgcolor::coordinator::job::nd;
+use dgcolor::coordinator::{Job, Session};
 use dgcolor::graph::rmat::{self, RmatParams};
+use dgcolor::partition::Partitioner;
 use dgcolor::util::bench::full_scale;
 use dgcolor::util::table::{fmt_secs, Table};
 use dgcolor::util::timer::Timer;
+
+/// Print recoloring progress as it streams out of the run.
+struct IterationPrinter;
+
+impl Observer for IterationPrinter {
+    fn on_event(&self, event: &Event) {
+        if let Event::RecolorIteration { iter, k } = event {
+            println!("  [event] recolor iteration {iter}: {k} colors");
+        }
+    }
+}
 
 fn main() -> dgcolor::util::error::Result<()> {
     let scale = if full_scale() { 24 } else { 18 };
@@ -33,6 +46,9 @@ fn main() -> dgcolor::util::error::Result<()> {
     let seq_sl = greedy_color(&g, Ordering::SmallestLast, Selection::FirstFit, 1).num_colors();
     println!("sequential: NAT={seq_nat} SL={seq_sl}\n");
 
+    // one session: the graph is partitioned once per process count and the
+    // cost model is calibrated once for the whole sweep
+    let session = Session::new(g);
     let mut t = Table::new(
         "FSS + 2×RC-ND(piggyback) across scales",
         &["procs", "initial", "final", "conflicts", "msgs", "virtual time", "sim wall"],
@@ -42,21 +58,18 @@ fn main() -> dgcolor::util::error::Result<()> {
     } else {
         &[4, 16, 64, 128]
     };
-    for &p in procs_list {
-        let cfg = ColoringConfig {
-            num_procs: p,
-            ordering: Ordering::SmallestLast,
-            selection: Selection::FirstFit,
-            partitioner: dgcolor::partition::Partitioner::Block, // paper: block for RMAT
-            recolor: RecolorMode::Sync(RecolorConfig {
-                schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
-                iterations: 2,
-                scheme: CommScheme::Piggyback,
-                seed: 42,
-            }),
-            ..Default::default()
+    for (i, &p) in procs_list.iter().enumerate() {
+        let job = Job::on(&session)
+            .procs(p)
+            .ordering(Ordering::SmallestLast)
+            .partitioner(Partitioner::Block) // paper: block for RMAT
+            .sync_recolor(nd(2));
+        let r = if i + 1 == procs_list.len() {
+            println!("streaming events for the P={p} run:");
+            job.run_observed(&IterationPrinter)?
+        } else {
+            job.run()?
         };
-        let r = run_job(&g, &cfg)?;
         t.row(&[
             p.to_string(),
             r.initial_colors.to_string(),
@@ -66,6 +79,9 @@ fn main() -> dgcolor::util::error::Result<()> {
             fmt_secs(r.metrics.makespan),
             fmt_secs(r.metrics.wall_secs),
         ]);
+        // one job per proc count: the key is never revisited, so drop the
+        // cached partition (matters at the 2^24 REPRO_FULL scale)
+        session.clear_cached_partitions();
     }
     t.print();
     t.save_csv("e2e_distributed_pipeline")?;

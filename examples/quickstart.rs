@@ -1,11 +1,13 @@
 //! Quickstart: generate a small FEM-like mesh, color it sequentially with
-//! the three paper orderings, run one distributed job with the paper's
-//! "quality" preset, and validate everything.
+//! the three paper orderings, then open a coordinator [`Session`] and run
+//! the paper's "speed"/"quality" presets plus an early-stopped recoloring
+//! job through the fluent [`Job`] builder.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use dgcolor::color::{greedy_color, Ordering, Selection};
-use dgcolor::coordinator::{run_job, ColoringConfig};
+use dgcolor::coordinator::job::nd;
+use dgcolor::coordinator::{Job, Session};
 use dgcolor::graph::synth;
 use dgcolor::util::table::{fmt_secs, Table};
 use dgcolor::util::timer::Timer;
@@ -34,24 +36,42 @@ fn main() -> dgcolor::util::error::Result<()> {
     }
     t.print();
 
-    // 3. distributed runs: "speed" vs "quality" presets on 8 processes
+    // 3. a session owns the graph and caches partitions + the calibrated
+    //    cost model, so the three jobs below partition exactly once
+    let session = Session::new(g);
     let mut t = Table::new(
-        "distributed (8 procs)",
-        &["preset", "colors", "virtual time", "messages"],
+        "distributed (8 procs, one session)",
+        &["job", "colors", "trace", "virtual time", "messages"],
     );
-    for (name, cfg) in [
-        ("speed  (FIxxND0)", ColoringConfig::speed(8)),
-        ("quality(R5IxxND1)", ColoringConfig::quality(8)),
+    let speed = Job::on(&session).procs(8).speed().run()?;
+    let quality = Job::on(&session).procs(8).quality().run()?;
+    // the new scenario: keep recoloring until an iteration improves the
+    // color count by less than 5%
+    let early = Job::on(&session)
+        .procs(8)
+        .selection(Selection::RandomX(5))
+        .sync_recolor(nd(6))
+        .stop_when_improvement_below(0.05)
+        .run()?;
+    for (name, r) in [
+        ("speed  (FIxxND0)", &speed),
+        ("quality(R5IxxND1)", &quality),
+        ("ND6 + stop@5%", &early),
     ] {
-        let r = run_job(&g, &cfg)?;
         t.row(&[
             name.to_string(),
             r.num_colors.to_string(),
+            format!("{:?}", r.recolor_trace),
             fmt_secs(r.metrics.makespan),
             r.metrics.total_msgs.to_string(),
         ]);
     }
     t.print();
+    println!(
+        "\npartition calls for 3 jobs: {} (cached per (partitioner, procs, seed))",
+        session.partition_calls()
+    );
+    println!("early stop ran {} of 6 iterations", early.recolor_trace.len() - 1);
     println!("\nall colorings validated ✓");
     Ok(())
 }

@@ -2,22 +2,24 @@
 //! strategies × recoloring iterations on the Table-1 stand-in graphs and
 //! print the time-quality frontier, highlighting the paper's two
 //! recommended presets ("speed" = FIxxND0, "quality" = R(5-10)IxxND1).
+//! The sweep runs on one [`Session`] per graph, so the 12 configurations
+//! share a single partitioning of each graph.
 //!
 //! Run: `cargo run --release --example time_quality_tradeoff`
 
 use dgcolor::color::recolor::{Permutation, RecolorSchedule};
 use dgcolor::color::{Ordering, Selection};
 use dgcolor::coordinator::sweep::{pareto, run_sweep, SweepPoint};
-use dgcolor::coordinator::{ColoringConfig, RecolorMode};
+use dgcolor::coordinator::{ColoringConfig, RecolorMode, Session};
 use dgcolor::dist::recolor::{CommScheme, RecolorConfig};
 use dgcolor::graph::synth;
 use dgcolor::util::table::Table;
 
 fn main() -> dgcolor::util::error::Result<()> {
     // two representative real-world stand-ins at example scale
-    let graphs = vec![
-        synth::paper_graph(&synth::TABLE1_SPECS[0], 0.03, 1), // auto
-        synth::paper_graph(&synth::TABLE1_SPECS[2], 0.05, 2), // hood
+    let sessions = vec![
+        Session::new(synth::paper_graph(&synth::TABLE1_SPECS[0], 0.03, 1)), // auto
+        Session::new(synth::paper_graph(&synth::TABLE1_SPECS[2], 0.05, 2)), // hood
     ];
     let procs = 32; // the paper presents Fig 8-10 at 32 processes
 
@@ -37,6 +39,7 @@ fn main() -> dgcolor::util::error::Result<()> {
                     iterations: iters,
                     scheme: CommScheme::Piggyback,
                     seed: 42,
+                    ..Default::default()
                 })
             };
             configs.push(ColoringConfig {
@@ -51,7 +54,14 @@ fn main() -> dgcolor::util::error::Result<()> {
         ordering: Ordering::InternalFirst,
         ..Default::default()
     };
-    let points = run_sweep(&graphs, configs, &baseline, procs)?;
+    let points = run_sweep(&sessions, configs, &baseline, procs)?;
+    for s in &sessions {
+        assert_eq!(
+            s.partition_calls(),
+            1,
+            "all configs share one partition key"
+        );
+    }
 
     let fmt = |p: &SweepPoint| {
         vec![

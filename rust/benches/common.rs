@@ -5,7 +5,7 @@
 
 #![allow(dead_code)]
 
-use dgcolor::coordinator::ColoringConfig;
+use dgcolor::coordinator::{ColoringConfig, Job, RunResult, Session};
 use dgcolor::dist::cost::CostModel;
 use dgcolor::graph::rmat::{self, RmatParams};
 use dgcolor::graph::synth::{self, PaperGraphSpec, TABLE1_SPECS};
@@ -43,6 +43,30 @@ pub fn rmat_graphs() -> Vec<CsrGraph> {
         rmat::generate(&RmatParams::good(s, 8), 12, "RMAT-Good"),
         rmat::generate(&RmatParams::bad(s, 8), 13, "RMAT-Bad"),
     ]
+}
+
+/// Wrap graphs in coordinator sessions with the fixed cost model pinned —
+/// every bench job shares partitions per `(partitioner, procs, seed)` key.
+pub fn sessions(graphs: Vec<CsrGraph>) -> Vec<Session> {
+    graphs
+        .into_iter()
+        .map(|g| Session::new(g).with_cost_model(CostModel::fixed()))
+        .collect()
+}
+
+/// [`real_world_graphs`] as sessions, keeping the spec for labels.
+pub fn real_world_sessions() -> Vec<(&'static PaperGraphSpec, Session)> {
+    real_world_graphs()
+        .into_iter()
+        .map(|(spec, g)| (spec, Session::new(g).with_cost_model(CostModel::fixed())))
+        .collect()
+}
+
+/// Run one config on a session; bench configs are static, so validation
+/// or run failures are bugs worth a panic.
+pub fn run(s: &Session, cfg: ColoringConfig) -> RunResult {
+    s.run(&Job::from_config(cfg).expect("valid bench config"))
+        .expect("bench run failed")
 }
 
 /// Processor counts swept by the distributed benches (paper: 1..512).

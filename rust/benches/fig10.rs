@@ -7,26 +7,23 @@ mod common;
 
 use dgcolor::coordinator::sweep::{paper_grid, pareto, run_sweep, SweepPoint};
 use dgcolor::coordinator::ColoringConfig;
-use dgcolor::dist::cost::CostModel;
 use dgcolor::util::table::Table;
 
 fn main() {
     common::print_header("Fig 10 — combined time-quality trade-off (P=32)");
-    let graphs: Vec<_> = common::real_world_graphs()
-        .into_iter()
-        .map(|(_, g)| g)
-        .collect();
-    let baseline = ColoringConfig {
-        fixed_cost: Some(CostModel::fixed()),
-        ..Default::default()
-    };
+    // the 3×64 grid shares one partition key: each graph partitions once
+    // for the union of all three sweeps
+    let sessions = common::sessions(
+        common::real_world_graphs()
+            .into_iter()
+            .map(|(_, g)| g)
+            .collect(),
+    );
+    let baseline = ColoringConfig::default();
     let mut all: Vec<SweepPoint> = Vec::new();
     for iters in [0u32, 1, 2] {
-        let mut configs = paper_grid(iters, 42);
-        for c in configs.iter_mut() {
-            c.fixed_cost = Some(CostModel::fixed());
-        }
-        all.extend(run_sweep(&graphs, configs, &baseline, 32).unwrap());
+        let configs = paper_grid(iters, 42);
+        all.extend(run_sweep(&sessions, configs, &baseline, 32).unwrap());
     }
     let mut t = Table::new(
         "all points (0/1/2 ND iterations)",

@@ -28,6 +28,7 @@ fn run_scheme(g: &CsrGraph, init: &Coloring, procs: usize, scheme: CommScheme) -
         iterations: 1,
         scheme,
         seed: 11,
+        ..Default::default()
     };
     let mut per: Vec<Option<ProcMetrics>> = (0..procs).map(|_| None).collect();
     std::thread::scope(|s| {
@@ -39,7 +40,7 @@ fn run_scheme(g: &CsrGraph, init: &Coloring, procs: usize, scheme: CommScheme) -
                     let mut ep = ep;
                     let mut state = ColorState::from_global(lg, init);
                     let mut trace = Vec::new();
-                    recolor_process_sync(&mut ep, lg, &cost, &cfg, &mut state, &mut trace)
+                    recolor_process_sync(&mut ep, lg, &cost, &cfg, &mut state, &mut trace, None)
                 })
             })
             .collect();

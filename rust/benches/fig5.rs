@@ -1,37 +1,44 @@
 //! Fig 5: recoloring on the real-world graphs — FSS (First-Fit + SL + sync)
 //! vs FSS+RC (synchronous, piggybacked) vs FSS+aRC, normalized colors and
 //! normalized virtual runtime vs processor count. Sequential LF/SL lines
-//! printed as quality references.
+//! printed as quality references. One session per graph: every
+//! (mode, procs) job reuses the session's cached partitions.
 
 #[path = "common.rs"]
 mod common;
 
 use dgcolor::color::recolor::Permutation;
 use dgcolor::color::{greedy_color, Ordering, Selection};
-use dgcolor::coordinator::{run_job, RecolorMode};
+use dgcolor::coordinator::RecolorMode;
 use dgcolor::dist::recolor::RecolorConfig;
 use dgcolor::util::table::Table;
 
 fn main() {
     common::print_header("Fig 5 — FSS vs FSS+RC vs FSS+aRC on real-world graphs");
-    let graphs = common::real_world_graphs();
+    let sessions = common::real_world_sessions();
     // baselines: NAT colors + NAT virtual time at P=1
     let mut base_colors = Vec::new();
     let mut base_time = Vec::new();
-    for (_, g) in &graphs {
+    for (_, s) in &sessions {
         let mut cfg = common::base_cfg(1);
         cfg.ordering = Ordering::Natural;
-        let r = run_job(g, &cfg).unwrap();
+        let r = common::run(s, cfg);
         base_colors.push(r.num_colors as f64);
         base_time.push(r.metrics.makespan.max(1e-12));
     }
-    let seq_lf: Vec<f64> = graphs
+    let seq_lf: Vec<f64> = sessions
         .iter()
-        .map(|(_, g)| greedy_color(g, Ordering::LargestFirst, Selection::FirstFit, 1).num_colors() as f64)
+        .map(|(_, s)| {
+            greedy_color(s.graph(), Ordering::LargestFirst, Selection::FirstFit, 1).num_colors()
+                as f64
+        })
         .collect();
-    let seq_sl: Vec<f64> = graphs
+    let seq_sl: Vec<f64> = sessions
         .iter()
-        .map(|(_, g)| greedy_color(g, Ordering::SmallestLast, Selection::FirstFit, 1).num_colors() as f64)
+        .map(|(_, s)| {
+            greedy_color(s.graph(), Ordering::SmallestLast, Selection::FirstFit, 1).num_colors()
+                as f64
+        })
         .collect();
     println!(
         "sequential references: LF = {:.3}, SL = {:.3} (normalized colors)",
@@ -67,11 +74,11 @@ fn main() {
         for (_, mk) in &modes {
             let mut colors = Vec::new();
             let mut times = Vec::new();
-            for (_, g) in &graphs {
+            for (_, s) in &sessions {
                 let mut cfg = common::base_cfg(p);
                 cfg.ordering = Ordering::SmallestLast;
                 cfg.recolor = mk(42);
-                let r = run_job(g, &cfg).unwrap();
+                let r = common::run(s, cfg);
                 colors.push(r.num_colors as f64);
                 times.push(r.metrics.makespan.max(1e-12));
             }
@@ -80,6 +87,10 @@ fn main() {
         }
         tc.row(&color_cells);
         tt.row(&time_cells);
+        // the next proc count is a fresh partition key: bound retention
+        for (_, s) in &sessions {
+            s.clear_cached_partitions();
+        }
     }
     tc.print();
     tt.print();

@@ -1,20 +1,21 @@
 //! Fig 6: impact of recoloring on the RMAT graphs — per-graph colors for
 //! FSS / FSS+aRC / FSS+RC vs processor count (a,b,c) and aggregated
-//! normalized runtime (d). Block partitioning, as in the paper.
+//! normalized runtime (d). Block partitioning, as in the paper. One
+//! session per graph shares the block partitions across all three modes.
 
 #[path = "common.rs"]
 mod common;
 
 use dgcolor::color::recolor::Permutation;
 use dgcolor::color::{greedy_color, Ordering, Selection};
-use dgcolor::coordinator::{run_job, ColoringConfig, RecolorMode};
+use dgcolor::coordinator::{ColoringConfig, RecolorMode};
 use dgcolor::dist::recolor::RecolorConfig;
 use dgcolor::partition::Partitioner;
 use dgcolor::util::table::Table;
 
 fn main() {
     common::print_header("Fig 6 — recoloring on RMAT graphs");
-    let graphs = common::rmat_graphs();
+    let sessions = common::sessions(common::rmat_graphs());
     let procs: Vec<usize> = common::procs_list().into_iter().filter(|&p| p >= 4).collect();
 
     let mk_cfg = |p: usize, mode: RecolorMode| ColoringConfig {
@@ -30,7 +31,8 @@ fn main() {
         .map(|&p| (p, Vec::new(), Vec::new(), Vec::new()))
         .collect();
     let mut base_time: Vec<f64> = Vec::new();
-    for g in &graphs {
+    for s in &sessions {
+        let g = s.graph();
         let seq_lf = greedy_color(g, Ordering::LargestFirst, Selection::FirstFit, 1).num_colors();
         let seq_sl = greedy_color(g, Ordering::SmallestLast, Selection::FirstFit, 1).num_colors();
         let mut t = Table::new(
@@ -41,26 +43,22 @@ fn main() {
         let mut cfg4 = common::base_cfg(4);
         cfg4.partitioner = Partitioner::Block;
         cfg4.ordering = Ordering::Natural;
-        base_time.push(run_job(g, &cfg4).unwrap().metrics.makespan.max(1e-12));
+        let rb = common::run(s, cfg4);
+        base_time.push(rb.metrics.makespan.max(1e-12));
 
         for (pi, &p) in procs.iter().enumerate() {
-            let fss = run_job(g, &mk_cfg(p, RecolorMode::None)).unwrap();
-            let arc = run_job(
-                g,
-                &mk_cfg(
+            let fss = common::run(s, mk_cfg(p, RecolorMode::None));
+            let arc = common::run(
+                s,
+                mk_cfg(
                     p,
                     RecolorMode::Async {
                         perm: Permutation::NonDecreasing,
                         iterations: 1,
                     },
                 ),
-            )
-            .unwrap();
-            let rc = run_job(
-                g,
-                &mk_cfg(p, RecolorMode::Sync(RecolorConfig::default())),
-            )
-            .unwrap();
+            );
+            let rc = common::run(s, mk_cfg(p, RecolorMode::Sync(RecolorConfig::default())));
             t.row(&[
                 p.to_string(),
                 fss.num_colors.to_string(),
@@ -70,6 +68,9 @@ fn main() {
             time_rows[pi].1.push(fss.metrics.makespan.max(1e-12));
             time_rows[pi].2.push(arc.metrics.makespan.max(1e-12));
             time_rows[pi].3.push(rc.metrics.makespan.max(1e-12));
+            // the three modes shared this proc count's partition; the
+            // next proc count is a fresh key, so bound retention
+            s.clear_cached_partitions();
         }
         t.print();
         t.save_csv(&format!("fig6_colors_{}", g.name)).unwrap();

@@ -1,31 +1,39 @@
 //! Fig 7: impact of the *number* of recoloring iterations on the
 //! real-world graphs in distributed memory — normalized colors vs P for
-//! 0/1/2/5/10 ND iterations, with sequential LF/SL reference lines.
+//! 0/1/2/5/10 ND iterations, with sequential LF/SL reference lines. One
+//! session per graph: all 5×|procs| jobs share the cached partitions.
 
 #[path = "common.rs"]
 mod common;
 
 use dgcolor::color::recolor::{Permutation, RecolorSchedule};
 use dgcolor::color::{greedy_color, Ordering, Selection};
-use dgcolor::coordinator::{run_job, RecolorMode};
+use dgcolor::coordinator::RecolorMode;
 use dgcolor::dist::recolor::{CommScheme, RecolorConfig};
 use dgcolor::util::table::Table;
 
 fn main() {
     common::print_header("Fig 7 — number of recoloring iterations (real-world, distributed)");
-    let graphs = common::real_world_graphs();
+    let sessions = common::real_world_sessions();
     let mut base_colors = Vec::new();
-    for (_, g) in &graphs {
-        base_colors
-            .push(greedy_color(g, Ordering::Natural, Selection::FirstFit, 1).num_colors() as f64);
+    for (_, s) in &sessions {
+        base_colors.push(
+            greedy_color(s.graph(), Ordering::Natural, Selection::FirstFit, 1).num_colors() as f64,
+        );
     }
-    let seq_lf: Vec<f64> = graphs
+    let seq_lf: Vec<f64> = sessions
         .iter()
-        .map(|(_, g)| greedy_color(g, Ordering::LargestFirst, Selection::FirstFit, 1).num_colors() as f64)
+        .map(|(_, s)| {
+            greedy_color(s.graph(), Ordering::LargestFirst, Selection::FirstFit, 1).num_colors()
+                as f64
+        })
         .collect();
-    let seq_sl: Vec<f64> = graphs
+    let seq_sl: Vec<f64> = sessions
         .iter()
-        .map(|(_, g)| greedy_color(g, Ordering::SmallestLast, Selection::FirstFit, 1).num_colors() as f64)
+        .map(|(_, s)| {
+            greedy_color(s.graph(), Ordering::SmallestLast, Selection::FirstFit, 1).num_colors()
+                as f64
+        })
         .collect();
     println!(
         "sequential references: LF = {:.3}, SL = {:.3}",
@@ -42,7 +50,7 @@ fn main() {
         let mut cells = vec![p.to_string()];
         for &iters in &iter_counts {
             let mut colors = Vec::new();
-            for (_, g) in &graphs {
+            for (_, s) in &sessions {
                 let mut cfg = common::base_cfg(p);
                 cfg.ordering = Ordering::SmallestLast;
                 cfg.recolor = if iters == 0 {
@@ -53,13 +61,19 @@ fn main() {
                         iterations: iters,
                         scheme: CommScheme::Piggyback,
                         seed: 42,
+                        ..Default::default()
                     })
                 };
-                colors.push(run_job(g, &cfg).unwrap().num_colors as f64);
+                let r = common::run(s, cfg);
+                colors.push(r.num_colors as f64);
             }
             cells.push(format!("{:.3}", common::norm_geo(&colors, &base_colors)));
         }
         t.row(&cells);
+        // all iteration counts shared this proc count's partition key
+        for (_, s) in &sessions {
+            s.clear_cached_partitions();
+        }
     }
     t.print();
     t.save_csv("fig7").unwrap();

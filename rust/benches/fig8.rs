@@ -8,26 +8,23 @@ mod common;
 
 use dgcolor::coordinator::sweep::{paper_grid, run_sweep};
 use dgcolor::coordinator::ColoringConfig;
-use dgcolor::dist::cost::CostModel;
 use dgcolor::util::stats;
 use dgcolor::util::table::Table;
 use std::collections::BTreeMap;
 
 fn main() {
     common::print_header("Fig 8 — parameter sweep without recoloring (P=32)");
-    let graphs: Vec<_> = common::real_world_graphs()
-        .into_iter()
-        .map(|(_, g)| g)
-        .collect();
-    let mut configs = paper_grid(0, 42);
-    for c in configs.iter_mut() {
-        c.fixed_cost = Some(CostModel::fixed());
-    }
-    let baseline = ColoringConfig {
-        fixed_cost: Some(CostModel::fixed()),
-        ..Default::default()
-    };
-    let points = run_sweep(&graphs, configs, &baseline, 32).unwrap();
+    // sessions pin the fixed cost model and share one partitioning of each
+    // graph across the whole 64-config grid
+    let sessions = common::sessions(
+        common::real_world_graphs()
+            .into_iter()
+            .map(|(_, g)| g)
+            .collect(),
+    );
+    let configs = paper_grid(0, 42);
+    let baseline = ColoringConfig::default();
+    let points = run_sweep(&sessions, configs, &baseline, 32).unwrap();
 
     // full scatter to CSV
     let mut t = Table::new("sweep points", &["config", "norm colors", "norm time"]);

@@ -6,25 +6,22 @@ mod common;
 
 use dgcolor::coordinator::sweep::{paper_grid, run_sweep};
 use dgcolor::coordinator::ColoringConfig;
-use dgcolor::dist::cost::CostModel;
 use dgcolor::util::table::Table;
 
 fn main() {
     common::print_header("Fig 9 — parameter sweep with ND recoloring (P=32)");
-    let graphs: Vec<_> = common::real_world_graphs()
-        .into_iter()
-        .map(|(_, g)| g)
-        .collect();
-    let baseline = ColoringConfig {
-        fixed_cost: Some(CostModel::fixed()),
-        ..Default::default()
-    };
+    // one session per graph across both sweeps: ND1 and ND2 share the
+    // same partition key, so each graph partitions exactly once
+    let sessions = common::sessions(
+        common::real_world_graphs()
+            .into_iter()
+            .map(|(_, g)| g)
+            .collect(),
+    );
+    let baseline = ColoringConfig::default();
     for iters in [1u32, 2] {
-        let mut configs = paper_grid(iters, 42);
-        for c in configs.iter_mut() {
-            c.fixed_cost = Some(CostModel::fixed());
-        }
-        let points = run_sweep(&graphs, configs, &baseline, 32).unwrap();
+        let configs = paper_grid(iters, 42);
+        let points = run_sweep(&sessions, configs, &baseline, 32).unwrap();
         let mut t = Table::new(
             &format!("ND{iters} sweep points"),
             &["config", "norm colors", "norm time"],

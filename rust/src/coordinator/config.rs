@@ -8,7 +8,7 @@ use crate::dist::recolor::{CommScheme, RecolorConfig};
 use crate::dist::NetworkModel;
 use crate::partition::Partitioner;
 use crate::util::args::Args;
-use crate::util::error::{Error, Result};
+use crate::util::error::{Context, Error, Result};
 
 /// What recoloring (if any) follows the initial distributed coloring.
 #[derive(Debug, Clone, Copy)]
@@ -46,6 +46,11 @@ pub struct ColoringConfig {
     pub network: NetworkModel,
     /// `None` → calibrate on this host; `Some` → fixed rates (tests).
     pub fixed_cost: Option<CostModel>,
+    /// Stop recoloring once an iteration's relative improvement
+    /// `(k_prev - k) / k_prev` falls below this threshold — the builder's
+    /// `stop_when_improvement_below`. Requires a recoloring mode; not
+    /// encoded in [`ColoringConfig::label`].
+    pub early_stop: Option<f64>,
 }
 
 impl Default for ColoringConfig {
@@ -61,6 +66,7 @@ impl Default for ColoringConfig {
             seed: 42,
             network: NetworkModel::default(),
             fixed_cost: None,
+            early_stop: None,
         }
     }
 }
@@ -90,6 +96,7 @@ impl ColoringConfig {
                 iterations: 1,
                 scheme: CommScheme::Piggyback,
                 seed: 42,
+                ..Default::default()
             }),
             ..Default::default()
         }
@@ -101,7 +108,9 @@ impl ColoringConfig {
 
     /// Parse from CLI arguments (`--procs`, `--ordering`, `--selection`,
     /// `--superstep`, `--async`, `--recolor <n>`, `--arc`, `--schedule`,
-    /// `--scheme`, `--partitioner`, `--seed`, `--ideal-net`).
+    /// `--scheme`, `--partitioner`, `--seed`, `--ideal-net`,
+    /// `--stop-eps <f>`). Parse-only: validation happens when the config
+    /// becomes a [`Job`](super::Job).
     pub fn from_args(a: &Args) -> Result<Self> {
         let mut cfg = ColoringConfig {
             num_procs: a.get_or("procs", 4usize)?,
@@ -121,6 +130,12 @@ impl ColoringConfig {
         }
         if a.has_flag("ideal-net") {
             cfg.network = NetworkModel::ideal();
+        }
+        if let Some(s) = a.get_str("stop-eps") {
+            let eps: f64 = s
+                .parse()
+                .with_context(|| format!("invalid value {s:?} for --stop-eps"))?;
+            cfg.early_stop = Some(eps);
         }
         let iters: u32 = a.get_or("recolor", 0u32)?;
         if iters > 0 {
@@ -147,6 +162,7 @@ impl ColoringConfig {
                     iterations: iters,
                     scheme,
                     seed: cfg.seed,
+                    ..Default::default()
                 });
             }
         }
@@ -214,6 +230,14 @@ mod tests {
     fn arc_parse() {
         let cfg = ColoringConfig::from_args(&parse("--recolor 1 --arc")).unwrap();
         assert!(matches!(cfg.recolor, RecolorMode::Async { iterations: 1, .. }));
+    }
+
+    #[test]
+    fn stop_eps_parse() {
+        let cfg = ColoringConfig::from_args(&parse("--recolor 4 --stop-eps 0.05")).unwrap();
+        assert_eq!(cfg.early_stop, Some(0.05));
+        assert!(ColoringConfig::from_args(&parse("--stop-eps nope")).is_err());
+        assert_eq!(ColoringConfig::from_args(&parse("")).unwrap().early_stop, None);
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! The streaming event/observer layer of the coordinator.
+//!
+//! A run of the pipeline is a sequence of paper phases (partition →
+//! initial coloring → recoloring → validation); an [`Observer`] passed to
+//! [`Session::run_observed`](super::Session::run_observed) receives an
+//! [`Event`] at every phase boundary, superstep, conflict-resolution round
+//! and recoloring iteration. Events carry only *globally agreed* values —
+//! color counts and loser totals come straight off allreduces, and
+//! superstep indices run over the round's allreduced per-rank step-count
+//! maximum — and only rank 0 emits, so the stream is deterministic and
+//! well ordered:
+//!
+//! ```text
+//! PhaseStarted(Partition)
+//! PhaseStarted(InitialColoring)
+//!   SuperstepDone*  ConflictRound*        (per resolution round)
+//! PhaseStarted(Recoloring)?               (when recoloring is configured)
+//!   RecolorIteration*                     (sync RC)
+//!   SuperstepDone* ConflictRound* RecolorIteration*   (aRC)
+//! PhaseStarted(Validation)
+//! Done
+//! ```
+//!
+//! Observers must not mutate run state; emission never touches the virtual
+//! clocks, so an observed run is bit-for-bit identical to an unobserved
+//! one (`tests/session_api.rs` pins both properties).
+//!
+//! Layering note: `dist::framework` and `dist::recolor` import these types
+//! to emit superstep/iteration events — a deliberate inversion of the
+//! usual coordinator→dist direction, kept because the phases are
+//! pipeline-level concepts and a single event vocabulary beats a parallel
+//! dist-level one. If `dist` ever needs to stand alone, move the enum down
+//! and re-export it here.
+
+use std::sync::Mutex;
+
+/// The pipeline phases, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Graph partitioning (or a session cache hit).
+    Partition,
+    /// Speculative distributed initial coloring (paper §2.2).
+    InitialColoring,
+    /// Iterative recoloring, RC or aRC (paper §3).
+    Recoloring,
+    /// Global validation of the merged coloring.
+    Validation,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Partition => "partition",
+            Phase::InitialColoring => "initial_coloring",
+            Phase::Recoloring => "recoloring",
+            Phase::Validation => "validation",
+        }
+    }
+}
+
+/// One observable step of a coordinator run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    /// A pipeline phase begins.
+    PhaseStarted { phase: Phase },
+    /// One superstep of the Bozdağ framework finished its boundary
+    /// exchange (`round` is the conflict-resolution round, 1-based).
+    SuperstepDone { round: u32, step: u32 },
+    /// An end-of-round conflict sweep completed; `conflicts` is the global
+    /// number of losers that will recolor next round (0 terminates).
+    ConflictRound { round: u32, conflicts: u64 },
+    /// A recoloring iteration finished; `k` is the global color count
+    /// after it — the same value appended to `RunResult::recolor_trace`.
+    RecolorIteration { iter: u32, k: usize },
+    /// The run finished and validated with `colors` colors.
+    Done { colors: usize },
+}
+
+/// Receives the event stream of a run. Implementations must be `Sync`:
+/// events originating inside the distributed section are delivered from a
+/// simulated-process thread (always rank 0's).
+pub trait Observer: Sync {
+    fn on_event(&self, event: &Event);
+}
+
+/// Emit `event` once globally: only rank 0 forwards, everyone else drops.
+/// Call sites place this directly after a collective so the payload is
+/// identical on every rank and the choice of emitter is immaterial.
+#[inline]
+pub fn emit_rank0(obs: Option<&dyn Observer>, rank: usize, event: Event) {
+    if rank == 0 {
+        if let Some(o) = obs {
+            o.on_event(&event);
+        }
+    }
+}
+
+/// An [`Observer`] that records every event, for tests and programmatic
+/// consumers.
+#[derive(Debug, Default)]
+pub struct EventLog {
+    events: Mutex<Vec<Event>>,
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        EventLog::default()
+    }
+
+    /// Snapshot of the events received so far.
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Drain the log.
+    pub fn take(&self) -> Vec<Event> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+}
+
+impl Observer for EventLog {
+    fn on_event(&self, event: &Event) {
+        self.events.lock().unwrap().push(*event);
+    }
+}
+
+/// An [`Observer`] that prints one JSON object per event to stdout — the
+/// CLI's `--json` mode. Machine-readable without serde: every payload is
+/// numeric or a fixed identifier, so the encoding is trivial.
+#[derive(Debug, Default)]
+pub struct JsonLines;
+
+impl Observer for JsonLines {
+    fn on_event(&self, event: &Event) {
+        println!("{}", event_json(event));
+    }
+}
+
+/// Encode one event as a single-line JSON object.
+pub fn event_json(event: &Event) -> String {
+    match event {
+        Event::PhaseStarted { phase } => {
+            format!("{{\"event\":\"phase_started\",\"phase\":\"{}\"}}", phase.name())
+        }
+        Event::SuperstepDone { round, step } => {
+            format!("{{\"event\":\"superstep_done\",\"round\":{round},\"step\":{step}}}")
+        }
+        Event::ConflictRound { round, conflicts } => {
+            format!("{{\"event\":\"conflict_round\",\"round\":{round},\"conflicts\":{conflicts}}}")
+        }
+        Event::RecolorIteration { iter, k } => {
+            format!("{{\"event\":\"recolor_iteration\",\"iter\":{iter},\"k\":{k}}}")
+        }
+        Event::Done { colors } => {
+            format!("{{\"event\":\"done\",\"colors\":{colors}}}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_log_records_in_order() {
+        let log = EventLog::new();
+        log.on_event(&Event::PhaseStarted { phase: Phase::Partition });
+        log.on_event(&Event::Done { colors: 3 });
+        assert_eq!(
+            log.events(),
+            vec![
+                Event::PhaseStarted { phase: Phase::Partition },
+                Event::Done { colors: 3 },
+            ]
+        );
+        assert_eq!(log.take().len(), 2);
+        assert!(log.events().is_empty());
+    }
+
+    #[test]
+    fn emit_rank0_only_rank_zero_forwards() {
+        let log = EventLog::new();
+        emit_rank0(Some(&log), 1, Event::Done { colors: 1 });
+        emit_rank0(Some(&log), 3, Event::Done { colors: 1 });
+        assert!(log.events().is_empty());
+        emit_rank0(Some(&log), 0, Event::Done { colors: 1 });
+        assert_eq!(log.events().len(), 1);
+        emit_rank0(None, 0, Event::Done { colors: 1 }); // no observer: no-op
+    }
+
+    #[test]
+    fn json_encoding_is_stable() {
+        assert_eq!(
+            event_json(&Event::PhaseStarted { phase: Phase::InitialColoring }),
+            "{\"event\":\"phase_started\",\"phase\":\"initial_coloring\"}"
+        );
+        assert_eq!(
+            event_json(&Event::SuperstepDone { round: 2, step: 7 }),
+            "{\"event\":\"superstep_done\",\"round\":2,\"step\":7}"
+        );
+        assert_eq!(
+            event_json(&Event::ConflictRound { round: 1, conflicts: 0 }),
+            "{\"event\":\"conflict_round\",\"round\":1,\"conflicts\":0}"
+        );
+        assert_eq!(
+            event_json(&Event::RecolorIteration { iter: 1, k: 12 }),
+            "{\"event\":\"recolor_iteration\",\"iter\":1,\"k\":12}"
+        );
+        assert_eq!(event_json(&Event::Done { colors: 9 }), "{\"event\":\"done\",\"colors\":9}");
+    }
+
+    #[test]
+    fn phase_names_cover_all_phases() {
+        let names: Vec<_> = [
+            Phase::Partition,
+            Phase::InitialColoring,
+            Phase::Recoloring,
+            Phase::Validation,
+        ]
+        .iter()
+        .map(|p| p.name())
+        .collect();
+        assert_eq!(
+            names,
+            vec!["partition", "initial_coloring", "recoloring", "validation"]
+        );
+    }
+}

@@ -1,0 +1,418 @@
+//! Validated job descriptions and the fluent [`JobBuilder`].
+//!
+//! A [`Job`] is a [`ColoringConfig`] that has passed validation — the
+//! checks that used to live inside `run_job` plus the ones new knobs need
+//! (early stop requires recoloring, `RandomX(0)` is meaningless, …). Build
+//! one fluently against a [`Session`]:
+//!
+//! ```ignore
+//! let r = Job::on(&session)
+//!     .procs(8)
+//!     .selection(Selection::RandomX(5))
+//!     .sync_recolor(nd(2))
+//!     .stop_when_improvement_below(0.05)
+//!     .run()?;
+//! ```
+//!
+//! or convert an existing config (the sweep grids, CLI parsing) with
+//! [`Job::from_config`]. The builder treats an explicit `.seed(s)` call
+//! as the one seed knob of the run: at `build()` it is copied into the
+//! sync-recoloring schedule, so `RAND` permutations follow the job seed.
+//! A `RecolorConfig` whose `seed` field the caller set directly (without
+//! calling `.seed()`) is kept verbatim, and `from_config` performs no
+//! normalization at all — legacy configs keep their explicit recoloring
+//! seed.
+
+use super::config::{ColoringConfig, RecolorMode};
+use super::event::Observer;
+use super::pipeline::RunResult;
+use super::session::Session;
+use crate::color::recolor::{Permutation, RecolorSchedule};
+use crate::color::{Ordering, Selection};
+use crate::dist::cost::{CostModel, NetworkModel};
+use crate::dist::recolor::{CommScheme, RecolorConfig};
+use crate::partition::Partitioner;
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// A validated distributed-coloring job.
+#[derive(Debug, Clone, Copy)]
+pub struct Job {
+    cfg: ColoringConfig,
+}
+
+impl Job {
+    /// Start building a job bound to `session` (enables `.run()`).
+    pub fn on(session: &Session) -> JobBuilder<'_> {
+        JobBuilder {
+            session: Some(session),
+            cfg: ColoringConfig::default(),
+            seed_set: false,
+        }
+    }
+
+    /// Start building an unbound job (pass it to [`Session::run`] later).
+    pub fn builder() -> JobBuilder<'static> {
+        JobBuilder {
+            session: None,
+            cfg: ColoringConfig::default(),
+            seed_set: false,
+        }
+    }
+
+    /// Validate an existing config as-is.
+    pub fn from_config(cfg: ColoringConfig) -> Result<Job> {
+        validate(&cfg)?;
+        Ok(Job { cfg })
+    }
+
+    pub fn config(&self) -> &ColoringConfig {
+        &self.cfg
+    }
+
+    /// Compact label in the paper's naming style (see
+    /// [`ColoringConfig::label`]).
+    pub fn label(&self) -> String {
+        self.cfg.label()
+    }
+}
+
+/// The validation that every job passes exactly once, at build time.
+fn validate(cfg: &ColoringConfig) -> Result<()> {
+    ensure!(cfg.num_procs >= 1, "need at least one process");
+    ensure!(cfg.superstep_size >= 1, "superstep size must be >= 1");
+    if let Selection::RandomX(0) = cfg.selection {
+        bail!("RandomX selection needs X >= 1 (r0 is meaningless)");
+    }
+    match &cfg.recolor {
+        RecolorMode::None => {}
+        RecolorMode::Sync(rc) => {
+            ensure!(
+                rc.iterations >= 1,
+                "sync recoloring with 0 iterations — use RecolorMode::None"
+            );
+            validate_eps(rc.early_stop)?;
+            ensure!(
+                !(cfg.early_stop.is_some() && rc.early_stop.is_some()),
+                "early stop set on both the job and its RecolorConfig — set exactly one"
+            );
+        }
+        RecolorMode::Async { iterations, .. } => {
+            ensure!(
+                *iterations >= 1,
+                "async recoloring with 0 iterations — use RecolorMode::None"
+            );
+        }
+    }
+    if cfg.early_stop.is_some() {
+        ensure!(
+            !matches!(cfg.recolor, RecolorMode::None),
+            "early stop requires a recoloring mode (it bounds recoloring iterations)"
+        );
+        validate_eps(cfg.early_stop)?;
+    }
+    Ok(())
+}
+
+fn validate_eps(eps: Option<f64>) -> Result<()> {
+    if let Some(e) = eps {
+        ensure!(
+            e.is_finite() && e > 0.0 && e < 1.0,
+            "early-stop threshold must be a relative improvement in (0, 1), got {e}"
+        );
+    }
+    Ok(())
+}
+
+/// Fluent, validated construction of a [`Job`]. Every setter returns the
+/// builder; `build()` runs the validation and `run()` additionally
+/// executes on the bound session.
+#[derive(Clone, Copy)]
+pub struct JobBuilder<'s> {
+    session: Option<&'s Session>,
+    cfg: ColoringConfig,
+    /// Whether `.seed()` was called — only then does `build()` propagate
+    /// the job seed into the sync-recoloring schedule.
+    seed_set: bool,
+}
+
+impl<'s> JobBuilder<'s> {
+    pub fn procs(mut self, num_procs: usize) -> Self {
+        self.cfg.num_procs = num_procs;
+        self
+    }
+
+    /// The run's one seed: ordering/selection RNGs, partitioning, and (set
+    /// at `build()`) the sync-recoloring schedule.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self.seed_set = true;
+        self
+    }
+
+    pub fn partitioner(mut self, partitioner: Partitioner) -> Self {
+        self.cfg.partitioner = partitioner;
+        self
+    }
+
+    pub fn ordering(mut self, ordering: Ordering) -> Self {
+        self.cfg.ordering = ordering;
+        self
+    }
+
+    pub fn selection(mut self, selection: Selection) -> Self {
+        self.cfg.selection = selection;
+        self
+    }
+
+    pub fn superstep(mut self, size: usize) -> Self {
+        self.cfg.superstep_size = size;
+        self
+    }
+
+    /// Synchronous superstep communication in the initial coloring
+    /// (the default).
+    pub fn sync_comm(mut self) -> Self {
+        self.cfg.sync = true;
+        self
+    }
+
+    /// Asynchronous (overlapped) superstep communication.
+    pub fn async_comm(mut self) -> Self {
+        self.cfg.sync = false;
+        self
+    }
+
+    pub fn network(mut self, network: NetworkModel) -> Self {
+        self.cfg.network = network;
+        self
+    }
+
+    /// Pin the compute cost model (tests/benches); overrides the session's
+    /// calibrated model.
+    pub fn fixed_cost(mut self, cost: CostModel) -> Self {
+        self.cfg.fixed_cost = Some(cost);
+        self
+    }
+
+    /// The paper's "speed" preset (FIxxND0): First Fit, Internal-First, no
+    /// recoloring. Keeps procs/seed/network/cost already set.
+    pub fn speed(mut self) -> Self {
+        self.cfg.ordering = Ordering::InternalFirst;
+        self.cfg.selection = Selection::FirstFit;
+        self.cfg.recolor = RecolorMode::None;
+        self.cfg.early_stop = None;
+        self
+    }
+
+    /// The paper's "quality" preset (R5IxxND1): Random-5 Fit,
+    /// Internal-First, one ND synchronous recoloring iteration.
+    pub fn quality(mut self) -> Self {
+        self.cfg.ordering = Ordering::InternalFirst;
+        self.cfg.selection = Selection::RandomX(5);
+        self.cfg.recolor = RecolorMode::Sync(nd(1));
+        self
+    }
+
+    /// Synchronous recoloring with the given schedule — see the [`nd`],
+    /// [`ni`], [`rv`] and [`rand_perm`] shorthands.
+    pub fn sync_recolor(mut self, rc: RecolorConfig) -> Self {
+        self.cfg.recolor = RecolorMode::Sync(rc);
+        self
+    }
+
+    /// Asynchronous (speculative) recoloring — aRC.
+    pub fn async_recolor(mut self, perm: Permutation, iterations: u32) -> Self {
+        self.cfg.recolor = RecolorMode::Async { perm, iterations };
+        self
+    }
+
+    pub fn no_recolor(mut self) -> Self {
+        self.cfg.recolor = RecolorMode::None;
+        self
+    }
+
+    /// Stop recoloring once an iteration's relative improvement
+    /// `(k_prev - k) / k_prev` falls below `eps` — the time-quality knob
+    /// the paper motivates (Figs 8-10) for workloads where later
+    /// iterations stall.
+    pub fn stop_when_improvement_below(mut self, eps: f64) -> Self {
+        self.cfg.early_stop = Some(eps);
+        self
+    }
+
+    /// Validate and produce the [`Job`].
+    pub fn build(mut self) -> Result<Job> {
+        // one seed knob: an explicit .seed() call drives the recoloring
+        // schedule too; a caller-supplied RecolorConfig seed is otherwise
+        // kept verbatim
+        if self.seed_set {
+            if let RecolorMode::Sync(ref mut rc) = self.cfg.recolor {
+                rc.seed = self.cfg.seed;
+            }
+        }
+        Job::from_config(self.cfg)
+    }
+
+    /// Build and run on the bound session.
+    pub fn run(self) -> Result<RunResult> {
+        let session = self.require_session()?;
+        session.run(&self.build()?)
+    }
+
+    /// Build and run on the bound session, streaming events to `obs`.
+    pub fn run_observed(self, obs: &dyn Observer) -> Result<RunResult> {
+        let session = self.require_session()?;
+        session.run_observed(&self.build()?, obs)
+    }
+
+    fn require_session(&self) -> Result<&'s Session> {
+        match self.session {
+            Some(s) => Ok(s),
+            None => bail!("job builder is not bound to a session — use Job::on(&session)"),
+        }
+    }
+}
+
+/// `iterations` of synchronous Non-Decreasing recoloring (the paper's best
+/// fixed permutation), piggybacked.
+pub fn nd(iterations: u32) -> RecolorConfig {
+    sync_rc(RecolorSchedule::Fixed(Permutation::NonDecreasing), iterations)
+}
+
+/// `iterations` of synchronous Non-Increasing recoloring, piggybacked.
+pub fn ni(iterations: u32) -> RecolorConfig {
+    sync_rc(RecolorSchedule::Fixed(Permutation::NonIncreasing), iterations)
+}
+
+/// `iterations` of synchronous Reverse recoloring, piggybacked.
+pub fn rv(iterations: u32) -> RecolorConfig {
+    sync_rc(RecolorSchedule::Fixed(Permutation::Reverse), iterations)
+}
+
+/// `iterations` of synchronous random-permutation recoloring, piggybacked.
+pub fn rand_perm(iterations: u32) -> RecolorConfig {
+    sync_rc(RecolorSchedule::Fixed(Permutation::Random), iterations)
+}
+
+fn sync_rc(schedule: RecolorSchedule, iterations: u32) -> RecolorConfig {
+    RecolorConfig {
+        schedule,
+        iterations,
+        scheme: CommScheme::Piggyback,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_matches_config_presets() {
+        let j = Job::builder().procs(32).speed().build().unwrap();
+        assert_eq!(j.label(), ColoringConfig::speed(32).label());
+        let j = Job::builder().procs(32).quality().build().unwrap();
+        assert_eq!(j.label(), ColoringConfig::quality(32).label());
+    }
+
+    #[test]
+    fn builder_seed_flows_into_recolor_schedule() {
+        let j = Job::builder().seed(99).sync_recolor(nd(2)).build().unwrap();
+        match j.config().recolor {
+            RecolorMode::Sync(rc) => {
+                assert_eq!(rc.seed, 99);
+                assert_eq!(rc.iterations, 2);
+                assert_eq!(rc.scheme, CommScheme::Piggyback);
+            }
+            _ => panic!("expected sync recoloring"),
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        assert!(Job::builder().procs(0).build().is_err());
+        assert!(Job::builder().superstep(0).build().is_err());
+        assert!(Job::builder().selection(Selection::RandomX(0)).build().is_err());
+        assert!(Job::builder().sync_recolor(nd(0)).build().is_err());
+        assert!(Job::builder()
+            .async_recolor(Permutation::NonDecreasing, 0)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn early_stop_needs_recoloring_and_sane_eps() {
+        assert!(Job::builder().stop_when_improvement_below(0.1).build().is_err());
+        for bad in [0.0, -0.5, 1.0, 2.0, f64::NAN, f64::INFINITY] {
+            assert!(
+                Job::builder()
+                    .sync_recolor(nd(4))
+                    .stop_when_improvement_below(bad)
+                    .build()
+                    .is_err(),
+                "eps {bad} should be rejected"
+            );
+        }
+        let ok = Job::builder()
+            .sync_recolor(nd(4))
+            .stop_when_improvement_below(0.05)
+            .build()
+            .unwrap();
+        assert_eq!(ok.config().early_stop, Some(0.05));
+        // the policy lives on exactly one knob: job-level and
+        // RecolorConfig-level together are rejected
+        let both = RecolorConfig {
+            early_stop: Some(0.3),
+            ..nd(4)
+        };
+        assert!(Job::builder().sync_recolor(both).build().is_ok());
+        assert!(Job::builder()
+            .sync_recolor(both)
+            .stop_when_improvement_below(0.01)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn unbound_builder_cannot_run() {
+        assert!(Job::builder().run().is_err());
+    }
+
+    #[test]
+    fn explicit_recolor_seed_survives_build_without_seed_call() {
+        // a caller-supplied RecolorConfig seed is only overridden by an
+        // explicit .seed() call, never by the default job seed
+        let rc = RecolorConfig {
+            seed: 777,
+            ..nd(2)
+        };
+        let j = Job::builder().sync_recolor(rc).build().unwrap();
+        match j.config().recolor {
+            RecolorMode::Sync(rc) => assert_eq!(rc.seed, 777),
+            _ => unreachable!(),
+        }
+        let j = Job::builder().sync_recolor(rc).seed(9).build().unwrap();
+        match j.config().recolor {
+            RecolorMode::Sync(rc) => assert_eq!(rc.seed, 9),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn from_config_keeps_explicit_recolor_seed() {
+        let cfg = ColoringConfig {
+            seed: 5,
+            recolor: RecolorMode::Sync(RecolorConfig {
+                seed: 1234,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let j = Job::from_config(cfg).unwrap();
+        match j.config().recolor {
+            RecolorMode::Sync(rc) => assert_eq!(rc.seed, 1234),
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,10 +1,42 @@
-//! Coordinator: configuration, the end-to-end pipeline and experiment
-//! drivers. This is the layer the CLI, the examples and every bench target
-//! talk to.
+//! Coordinator: the user-facing layer the CLI, the examples and every
+//! bench target talk to.
+//!
+//! * [`config`] — [`ColoringConfig`], one struct per knob of the paper's
+//!   parameter space, parseable from CLI arguments.
+//! * [`job`] — validated [`Job`]s and the fluent [`JobBuilder`] with the
+//!   paper's speed/quality presets and the early-stop policy.
+//! * [`session`] — a [`Session`] owns a graph plus cached artifacts
+//!   (partitions per `(partitioner, procs, seed)` key, a calibrated cost
+//!   model) and runs many jobs against them.
+//! * [`event`] — the streaming [`Event`]/[`Observer`] layer: phase
+//!   boundaries, supersteps, conflict rounds and recoloring iterations.
+//! * [`pipeline`] — the end-to-end run (partition → initial coloring →
+//!   recoloring → validation → metrics) producing a [`RunResult`].
+//! * [`sweep`] — the Fig 8-10 parameter sweeps, running every job through
+//!   per-graph [`Session`]s (one partition per key per sweep).
+//!
+//! Typical use:
+//!
+//! ```ignore
+//! let session = Session::new(graph);
+//! let r = Job::on(&session)
+//!     .procs(8)
+//!     .quality()
+//!     .stop_when_improvement_below(0.05)
+//!     .run()?;
+//! ```
 
 pub mod config;
+pub mod event;
+pub mod job;
 pub mod pipeline;
+pub mod session;
 pub mod sweep;
 
 pub use config::{ColoringConfig, RecolorMode};
-pub use pipeline::{run_job, RunResult};
+pub use event::{Event, EventLog, JsonLines, Observer, Phase};
+pub use job::{Job, JobBuilder};
+pub use pipeline::RunResult;
+pub use session::Session;
+#[allow(deprecated)]
+pub use pipeline::run_job;

@@ -1,17 +1,26 @@
 //! The end-to-end pipeline: partition → distributed initial coloring →
 //! (optional) recoloring → validation → metrics.
+//!
+//! The entry point is [`Session::run`](super::Session::run) (via
+//! [`Job::on`](super::Job::on)); the session supplies the cached partition
+//! and cost model and this module drives the distributed phases, streaming
+//! [`Event`]s to an optional [`Observer`]. The free function [`run_job`]
+//! remains as a deprecated shim that re-partitions and re-calibrates on
+//! every call.
 
 use super::config::{ColoringConfig, RecolorMode};
+use super::event::{emit_rank0, Event, Observer, Phase};
+use super::job::Job;
 use crate::color::Coloring;
 use crate::dist::framework::{self, FrameworkConfig};
 use crate::dist::proc::ColorState;
 use crate::dist::recolor;
 use crate::dist::runner::{run_distributed, ProcResult};
-use crate::dist::DistMetrics;
+use crate::dist::{CostModel, DistMetrics};
+use crate::err;
 use crate::graph::CsrGraph;
-use crate::partition::{self, PartitionMetrics};
+use crate::partition::{self, Partition, PartitionMetrics};
 use crate::util::error::Result;
-use crate::{ensure, err};
 
 /// Everything a run produces.
 #[derive(Debug, Clone)]
@@ -22,17 +31,52 @@ pub struct RunResult {
     pub partition_metrics: PartitionMetrics,
     /// Colors after the initial coloring (before any recoloring).
     pub initial_colors: usize,
-    /// Global color count after each recoloring iteration.
+    /// Global color count after the initial coloring and after each
+    /// recoloring iteration that ran (early stop can make this shorter
+    /// than `1 + iterations`).
     pub recolor_trace: Vec<usize>,
     pub config_label: String,
 }
 
-/// Run a full distributed coloring job and validate the result.
-pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
-    ensure!(cfg.num_procs >= 1, "need at least one process");
-    let part = partition::partition(g, cfg.partitioner, cfg.num_procs, cfg.seed);
-    let part_metrics = partition::metrics(g, &part);
-    let cost = cfg.cost_model();
+impl RunResult {
+    /// One-line JSON summary (the CLI's `--json` result record).
+    pub fn summary_json(&self) -> String {
+        let trace: Vec<String> = self.recolor_trace.iter().map(|k| k.to_string()).collect();
+        format!(
+            "{{\"result\":\"coloring\",\"config\":\"{}\",\"colors\":{},\"initial_colors\":{},\
+             \"recolor_trace\":[{}],\"makespan\":{:e},\"messages\":{},\"bytes\":{},\
+             \"conflicts\":{},\"rounds\":{}}}",
+            self.config_label,
+            self.num_colors,
+            self.initial_colors,
+            trace.join(","),
+            self.metrics.makespan,
+            self.metrics.total_msgs,
+            self.metrics.total_bytes,
+            self.metrics.total_conflicts,
+            self.metrics.rounds,
+        )
+    }
+}
+
+/// Run a validated job against pre-built artifacts. This is the shared
+/// core under [`Session::run`](super::Session::run) and the [`run_job`]
+/// shim: everything per-graph (partition, metrics, cost model) comes in
+/// from the caller, so sessions can cache it across jobs.
+pub(crate) fn execute(
+    g: &CsrGraph,
+    part: &Partition,
+    part_metrics: &PartitionMetrics,
+    cost: &CostModel,
+    job: &Job,
+    obs: Option<&dyn Observer>,
+) -> Result<RunResult> {
+    let cfg = job.config();
+    if let Some(o) = obs {
+        o.on_event(&Event::PhaseStarted {
+            phase: Phase::InitialColoring,
+        });
+    }
 
     let fw = FrameworkConfig {
         ordering: cfg.ordering,
@@ -43,11 +87,25 @@ pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
         max_rounds: 200,
     };
 
-    let recolor_mode = cfg.recolor;
-    let outcome = run_distributed(g, &part, cfg.network, |ep, lg| {
+    // sync RC reads the early-stop policy from its own config; aRC is
+    // iterated here, so the pipeline applies the policy itself below.
+    // Validation rejects jobs that set both knobs, so this never
+    // overrides a caller-supplied RecolorConfig policy.
+    let recolor_mode = match (cfg.recolor, cfg.early_stop) {
+        (RecolorMode::Sync(mut rc), Some(eps)) => {
+            rc.early_stop = Some(eps);
+            RecolorMode::Sync(rc)
+        }
+        (mode, _) => mode,
+    };
+    let early_stop = cfg.early_stop;
+    let cost = *cost;
+
+    let mut outcome = run_distributed(g, part, cfg.network, |ep, lg| {
         let mut state = ColorState::uncolored(lg);
         let to_color: Vec<u32> = (0..lg.n_owned() as u32).collect();
-        let mut metrics = framework::color_process(ep, lg, &fw, &cost, &mut state, to_color, None);
+        let mut metrics =
+            framework::color_process(ep, lg, &fw, &cost, &mut state, to_color, None, obs);
 
         // the initial color count is the first trace entry
         let n_owned = lg.n_owned();
@@ -59,12 +117,21 @@ pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
             framework::comm_timed(ep, &mut metrics, |ep| ep.allreduce_max_u64(local_kmax));
         metrics.recolor_trace.push(initial_k as usize);
 
+        if !matches!(recolor_mode, RecolorMode::None) {
+            emit_rank0(
+                obs,
+                ep.rank,
+                Event::PhaseStarted {
+                    phase: Phase::Recoloring,
+                },
+            );
+        }
         match &recolor_mode {
             RecolorMode::None => {}
             RecolorMode::Sync(rc) => {
                 let mut trace = Vec::new();
                 let m =
-                    recolor::recolor_process_sync(ep, lg, &cost, rc, &mut state, &mut trace);
+                    recolor::recolor_process_sync(ep, lg, &cost, rc, &mut state, &mut trace, obs);
                 metrics.phases.merge(&m.phases);
                 metrics.conflicts += m.conflicts;
                 metrics.recolor_trace.extend(trace);
@@ -72,7 +139,7 @@ pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
             RecolorMode::Async { perm, iterations } => {
                 for iter in 1..=*iterations {
                     let m = recolor::recolor_process_async(
-                        ep, lg, &cost, &fw, *perm, iter, cfg.seed, &mut state,
+                        ep, lg, &cost, &fw, *perm, iter, cfg.seed, &mut state, obs,
                     );
                     metrics.phases.merge(&m.phases);
                     metrics.conflicts += m.conflicts;
@@ -84,7 +151,24 @@ pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
                     let k = framework::comm_timed(ep, &mut metrics, |ep| {
                         ep.allreduce_max_u64(local_kmax)
                     });
+                    let prev = *metrics.recolor_trace.last().unwrap_or(&0);
                     metrics.recolor_trace.push(k as usize);
+                    emit_rank0(
+                        obs,
+                        ep.rank,
+                        Event::RecolorIteration {
+                            iter,
+                            k: k as usize,
+                        },
+                    );
+                    if let Some(eps) = early_stop {
+                        // prev and k come from allreduces: every process
+                        // stops at the same iteration
+                        let improvement = (prev as f64 - k as f64) / (prev as f64).max(1.0);
+                        if improvement < eps {
+                            break;
+                        }
+                    }
                 }
             }
         }
@@ -100,61 +184,94 @@ pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
         }
     });
 
+    if let Some(o) = obs {
+        o.on_event(&Event::PhaseStarted {
+            phase: Phase::Validation,
+        });
+    }
     outcome
         .coloring
         .validate(g)
         .map_err(|e| err!("invalid coloring from {}: {e}", cfg.label()))?;
 
-    let trace = outcome.per_proc[0].recolor_trace.clone();
+    // every process derives the trace from the same allreduced counts —
+    // take rank 0's instead of cloning it
+    debug_assert!(
+        outcome
+            .per_proc
+            .iter()
+            .all(|p| p.recolor_trace == outcome.per_proc[0].recolor_trace),
+        "per-process recolor traces diverged"
+    );
+    let trace = std::mem::take(&mut outcome.per_proc[0].recolor_trace);
+    let num_colors = outcome.coloring.num_colors();
+    if let Some(o) = obs {
+        o.on_event(&Event::Done { colors: num_colors });
+    }
     Ok(RunResult {
-        num_colors: outcome.coloring.num_colors(),
-        initial_colors: *trace.first().unwrap_or(&outcome.coloring.num_colors()),
+        num_colors,
+        initial_colors: *trace.first().unwrap_or(&num_colors),
         recolor_trace: trace,
         coloring: outcome.coloring,
         metrics: outcome.metrics,
-        partition_metrics: part_metrics,
+        partition_metrics: part_metrics.clone(),
         config_label: cfg.label(),
     })
+}
+
+/// Run a full distributed coloring job and validate the result.
+///
+/// Kept as a one-shot shim: it re-partitions the graph and re-resolves the
+/// cost model on every call. Build a [`Session`](super::Session) and run
+/// jobs through [`Job::on`](super::Job::on) instead — identical results,
+/// cached artifacts. The shim applies the full [`Job`] validation, so
+/// degenerate configs the old `run_job` silently tolerated (a zero
+/// superstep size, `RandomX(0)`, zero-iteration recoloring) now error.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::Session and run jobs via Job::on(&session)"
+)]
+pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
+    let job = Job::from_config(*cfg)?;
+    let part = partition::partition(g, cfg.partitioner, cfg.num_procs, cfg.seed);
+    let part_metrics = partition::metrics(g, &part);
+    let cost = cfg.cost_model();
+    execute(g, &part, &part_metrics, &cost, &job, None)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::color::recolor::{Permutation, RecolorSchedule};
+    use crate::color::recolor::Permutation;
     use crate::color::{Ordering, Selection};
+    use crate::coordinator::job::nd;
+    use crate::coordinator::session::Session;
     use crate::dist::cost::CostModel;
-    use crate::dist::recolor::{CommScheme, RecolorConfig};
     use crate::graph::synth;
 
-    fn base_cfg(procs: usize) -> ColoringConfig {
-        ColoringConfig {
-            num_procs: procs,
-            fixed_cost: Some(CostModel::fixed()),
-            ..Default::default()
-        }
+    fn session(g: CsrGraph) -> Session {
+        Session::new(g).with_cost_model(CostModel::fixed())
     }
 
     #[test]
     fn initial_coloring_valid() {
-        let g = synth::grid2d(20, 20);
-        let r = run_job(&g, &base_cfg(4)).unwrap();
-        assert!(r.num_colors >= 2 && r.num_colors <= g.max_degree() + 1);
+        let s = session(synth::grid2d(20, 20));
+        let r = Job::on(&s).procs(4).run().unwrap();
+        let dmax = s.graph().max_degree();
+        assert!(r.num_colors >= 2 && r.num_colors <= dmax + 1);
         assert_eq!(r.recolor_trace.len(), 1);
         assert!(r.metrics.makespan > 0.0);
     }
 
     #[test]
     fn sync_recolor_reduces_or_holds() {
-        let g = synth::fem_like(3000, 12.0, 30, 0.0, 7, "fem");
-        let mut cfg = base_cfg(4);
-        cfg.selection = Selection::RandomX(10);
-        cfg.recolor = RecolorMode::Sync(RecolorConfig {
-            schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
-            iterations: 3,
-            scheme: CommScheme::Piggyback,
-            seed: 42,
-        });
-        let r = run_job(&g, &cfg).unwrap();
+        let s = session(synth::fem_like(3000, 12.0, 30, 0.0, 7, "fem"));
+        let r = Job::on(&s)
+            .procs(4)
+            .selection(Selection::RandomX(10))
+            .sync_recolor(nd(3))
+            .run()
+            .unwrap();
         assert_eq!(r.recolor_trace.len(), 4);
         assert!(r.recolor_trace.windows(2).all(|w| w[1] <= w[0]),
             "trace {:?}", r.recolor_trace);
@@ -163,33 +280,44 @@ mod tests {
 
     #[test]
     fn async_recolor_valid() {
-        let g = synth::grid2d(30, 30);
-        let mut cfg = base_cfg(4);
-        cfg.recolor = RecolorMode::Async {
-            perm: Permutation::NonDecreasing,
-            iterations: 1,
-        };
-        let r = run_job(&g, &cfg).unwrap();
+        let s = session(synth::grid2d(30, 30));
+        let r = Job::on(&s)
+            .procs(4)
+            .async_recolor(Permutation::NonDecreasing, 1)
+            .run()
+            .unwrap();
         assert_eq!(r.recolor_trace.len(), 2);
         assert!(r.num_colors >= 2);
     }
 
     #[test]
     fn async_comm_initial_coloring() {
-        let g = synth::erdos_renyi(1500, 9000, 13);
-        let mut cfg = base_cfg(6);
-        cfg.sync = false;
-        cfg.ordering = Ordering::SmallestLast;
-        let r = run_job(&g, &cfg).unwrap();
-        assert!(r.num_colors <= g.max_degree() + 1);
+        let s = session(synth::erdos_renyi(1500, 9000, 13));
+        let r = Job::on(&s)
+            .procs(6)
+            .async_comm()
+            .ordering(Ordering::SmallestLast)
+            .run()
+            .unwrap();
+        assert!(r.num_colors <= s.graph().max_degree() + 1);
     }
 
     #[test]
     fn single_proc_matches_sequential_shape() {
-        let g = synth::grid2d(15, 15);
-        let r = run_job(&g, &base_cfg(1)).unwrap();
+        let s = session(synth::grid2d(15, 15));
+        let r = Job::on(&s).procs(1).run().unwrap();
         // one processor, no boundary, no conflicts
         assert_eq!(r.metrics.total_conflicts, 0);
         assert!(r.num_colors <= 4);
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let s = session(synth::grid2d(8, 8));
+        let r = Job::on(&s).procs(2).run().unwrap();
+        let j = r.summary_json();
+        assert!(j.starts_with("{\"result\":\"coloring\""));
+        assert!(j.contains(&format!("\"colors\":{}", r.num_colors)));
+        assert!(j.ends_with('}'));
     }
 }

@@ -1,0 +1,208 @@
+//! Reusable run state: a [`Session`] owns a graph plus cached, keyed
+//! artifacts and runs many jobs against them.
+//!
+//! `run_job` re-partitions the graph and re-calibrates the cost model on
+//! every call, so a 64-config sweep pays for identical partitioning work
+//! 64 times. A session does each only once:
+//!
+//! * **Partitions** are cached per `(partitioner, num_procs, seed)` key —
+//!   every job that shares the key reuses the `Partition` and its
+//!   [`PartitionMetrics`] (both deterministic functions of the key).
+//! * **The cost model** is calibrated at most once per session (jobs with
+//!   an explicit `fixed_cost` bypass it).
+//!
+//! A cached run is bit-for-bit identical to a fresh `run_job` call with
+//! the same config (`tests/session_api.rs` pins this), so sessions are a
+//! pure speedup. `partition_calls()` exposes the cache's miss count; the
+//! sweep tests pin "one partition per key per sweep" with it. Sessions
+//! are `Send + Sync`, so a multi-graph sweep can run one session per
+//! thread. The cache never evicts on its own — a proc-count sweep on a
+//! huge graph touches each key once, so call
+//! [`Session::clear_cached_partitions`] between scales to bound
+//! retention.
+
+use super::event::{Event, Observer, Phase};
+use super::job::Job;
+use super::pipeline::{self, RunResult};
+use crate::dist::cost::CostModel;
+use crate::graph::CsrGraph;
+use crate::partition::{self, Partition, PartitionMetrics, Partitioner};
+use crate::util::error::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A partition together with its quality metrics, cached per key.
+#[derive(Debug)]
+pub struct PartitionHandle {
+    pub partition: Partition,
+    pub metrics: PartitionMetrics,
+}
+
+type PartKey = (Partitioner, usize, u64);
+
+/// Owns a graph and the per-graph artifacts jobs share. See the module
+/// docs; construct with [`Session::new`], run with [`Session::run`] or the
+/// fluent [`Job::on`](super::Job::on).
+pub struct Session {
+    graph: CsrGraph,
+    partitions: Mutex<HashMap<PartKey, Arc<PartitionHandle>>>,
+    cost: Mutex<Option<CostModel>>,
+    partition_calls: AtomicUsize,
+}
+
+impl Session {
+    pub fn new(graph: CsrGraph) -> Session {
+        Session {
+            graph,
+            partitions: Mutex::new(HashMap::new()),
+            cost: Mutex::new(None),
+            partition_calls: AtomicUsize::new(0),
+        }
+    }
+
+    /// Pin the session's cost model (tests/benches) instead of calibrating
+    /// on first use. Jobs with their own `fixed_cost` still take
+    /// precedence.
+    pub fn with_cost_model(self, cost: CostModel) -> Session {
+        *self.cost.lock().unwrap() = Some(cost);
+        self
+    }
+
+    pub fn graph(&self) -> &CsrGraph {
+        &self.graph
+    }
+
+    /// The session cost model, calibrating on this host at most once (the
+    /// lock is held through calibration so concurrent callers wait
+    /// instead of recalibrating).
+    pub fn cost_model(&self) -> CostModel {
+        let mut cost = self.cost.lock().unwrap();
+        *cost.get_or_insert_with(CostModel::calibrated)
+    }
+
+    /// The partition for `(partitioner, num_procs, seed)`, computed on
+    /// first use and cached.
+    pub fn partition(
+        &self,
+        partitioner: Partitioner,
+        num_procs: usize,
+        seed: u64,
+    ) -> Arc<PartitionHandle> {
+        let key = (partitioner, num_procs, seed);
+        let mut map = self.partitions.lock().unwrap();
+        if let Some(h) = map.get(&key) {
+            return Arc::clone(h);
+        }
+        self.partition_calls.fetch_add(1, Ordering::Relaxed);
+        let p = partition::partition(&self.graph, partitioner, num_procs, seed);
+        let metrics = partition::metrics(&self.graph, &p);
+        let h = Arc::new(PartitionHandle {
+            partition: p,
+            metrics,
+        });
+        map.insert(key, Arc::clone(&h));
+        h
+    }
+
+    /// How many times the session actually partitioned (cache misses).
+    pub fn partition_calls(&self) -> usize {
+        self.partition_calls.load(Ordering::Relaxed)
+    }
+
+    /// How many distinct partition keys are cached.
+    pub fn cached_partitions(&self) -> usize {
+        self.partitions.lock().unwrap().len()
+    }
+
+    /// Drop every cached partition (the miss counter keeps counting).
+    /// Useful mid-session when sweeping keys that are never revisited —
+    /// e.g. one job per process count on a huge graph.
+    pub fn clear_cached_partitions(&self) {
+        self.partitions.lock().unwrap().clear();
+    }
+
+    /// Run one job against the session's cached artifacts.
+    pub fn run(&self, job: &Job) -> Result<RunResult> {
+        self.run_inner(job, None)
+    }
+
+    /// Run one job, streaming [`Event`]s to `obs`.
+    pub fn run_observed(&self, job: &Job, obs: &dyn Observer) -> Result<RunResult> {
+        self.run_inner(job, Some(obs))
+    }
+
+    /// Run a batch of jobs in order, returning every full [`RunResult`].
+    /// (`sweep::run_sweep` loops [`Session::run`] instead so it can reduce
+    /// each result to two scalars without retaining the colorings.)
+    pub fn run_many(&self, jobs: &[Job]) -> Result<Vec<RunResult>> {
+        jobs.iter().map(|j| self.run(j)).collect()
+    }
+
+    fn run_inner(&self, job: &Job, obs: Option<&dyn Observer>) -> Result<RunResult> {
+        let cfg = job.config();
+        if let Some(o) = obs {
+            o.on_event(&Event::PhaseStarted {
+                phase: Phase::Partition,
+            });
+        }
+        let part = self.partition(cfg.partitioner, cfg.num_procs, cfg.seed);
+        let cost = cfg.fixed_cost.unwrap_or_else(|| self.cost_model());
+        pipeline::execute(&self.graph, &part.partition, &part.metrics, &cost, job, obs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+
+    #[test]
+    fn partition_cache_hits_by_key() {
+        let s = Session::new(synth::grid2d(12, 12)).with_cost_model(CostModel::fixed());
+        let a = s.partition(Partitioner::Block, 4, 1);
+        let b = s.partition(Partitioner::Block, 4, 1);
+        assert_eq!(s.partition_calls(), 1, "second lookup must hit the cache");
+        assert!(Arc::ptr_eq(&a, &b));
+        s.partition(Partitioner::Block, 8, 1);
+        s.partition(Partitioner::BfsGrow, 4, 1);
+        s.partition(Partitioner::Block, 4, 2);
+        assert_eq!(s.partition_calls(), 4);
+        assert_eq!(s.cached_partitions(), 4);
+        // clearing bounds retention; the miss counter keeps its history
+        s.clear_cached_partitions();
+        assert_eq!(s.cached_partitions(), 0);
+        s.partition(Partitioner::Block, 4, 1);
+        assert_eq!(s.partition_calls(), 5);
+    }
+
+    #[test]
+    fn sessions_are_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Session>();
+    }
+
+    #[test]
+    fn pinned_cost_model_is_returned_verbatim() {
+        let s = Session::new(synth::grid2d(4, 4)).with_cost_model(CostModel::fixed());
+        assert_eq!(s.cost_model(), CostModel::fixed());
+    }
+
+    #[test]
+    fn run_many_matches_individual_runs() {
+        let s = Session::new(synth::grid2d(15, 15)).with_cost_model(CostModel::fixed());
+        let jobs = [
+            Job::on(&s).procs(2).speed().build().unwrap(),
+            Job::on(&s).procs(4).quality().build().unwrap(),
+        ];
+        let batch = s.run_many(&jobs).unwrap();
+        assert_eq!(batch.len(), 2);
+        for (job, r) in jobs.iter().zip(&batch) {
+            let single = s.run(job).unwrap();
+            assert_eq!(single.coloring.colors, r.coloring.colors);
+            assert_eq!(single.recolor_trace, r.recolor_trace);
+        }
+        // speed@2 and quality@4 use different keys; reruns hit the cache
+        assert_eq!(s.partition_calls(), 2);
+    }
+}

@@ -1,12 +1,19 @@
-//! Parameter sweeps for Figs 8-10: run a grid of configurations on a set of
-//! graphs and report normalized (colors, runtime) per configuration.
+//! Parameter sweeps for Figs 8-10: run a grid of configurations on a set
+//! of graphs and report normalized (colors, runtime) per configuration.
+//!
+//! Sweeps run through [`Session`]s: each graph's session partitions every
+//! distinct `(partitioner, procs, seed)` key exactly once for the whole
+//! sweep — the paper grid shares one key, so a 64-config sweep does 1
+//! partition per graph instead of 65 (the unit tests pin the call count).
+//! Runs are reduced to scalars on the fly; use [`Session::run_many`] when
+//! the full [`RunResult`](super::RunResult)s are wanted.
 
 use super::config::{ColoringConfig, RecolorMode};
-use super::pipeline::run_job;
+use super::job::Job;
+use super::session::Session;
 use crate::color::recolor::{Permutation, RecolorSchedule};
 use crate::color::{Ordering, Selection};
 use crate::dist::recolor::{CommScheme, RecolorConfig};
-use crate::graph::CsrGraph;
 use crate::util::error::Result;
 use crate::util::stats;
 
@@ -45,6 +52,7 @@ pub fn paper_grid(recolor_iters: u32, seed: u64) -> Vec<ColoringConfig> {
                             iterations: recolor_iters,
                             scheme: CommScheme::Piggyback,
                             seed,
+                            ..Default::default()
                         })
                     };
                     out.push(ColoringConfig {
@@ -63,38 +71,50 @@ pub fn paper_grid(recolor_iters: u32, seed: u64) -> Vec<ColoringConfig> {
     out
 }
 
-/// Run every configuration over every graph; normalize each metric per
-/// graph against `baseline` and aggregate by geometric mean.
+/// Run every configuration over every graph session; normalize each metric
+/// per graph against `baseline` and aggregate by geometric mean. All jobs
+/// of a graph go through its session, so partitioning work is shared per
+/// `(partitioner, procs, seed)` key.
 pub fn run_sweep(
-    graphs: &[CsrGraph],
-    mut configs: Vec<ColoringConfig>,
+    sessions: &[Session],
+    configs: Vec<ColoringConfig>,
     baseline: &ColoringConfig,
     num_procs: usize,
 ) -> Result<Vec<SweepPoint>> {
-    let mut base_colors = Vec::new();
-    let mut base_time = Vec::new();
+    // jobs[0] is the baseline, jobs[1..] the grid
+    let mut jobs = Vec::with_capacity(configs.len() + 1);
     let mut bl = *baseline;
     bl.num_procs = num_procs;
-    for g in graphs {
-        let r = run_job(g, &bl)?;
-        base_colors.push(r.num_colors as f64);
-        base_time.push(r.metrics.makespan.max(1e-12));
-    }
-    let mut points = Vec::new();
-    for cfg in configs.iter_mut() {
+    jobs.push(Job::from_config(bl)?);
+    for mut cfg in configs {
         cfg.num_procs = num_procs;
-        let mut colors = Vec::new();
-        let mut time = Vec::new();
-        for g in graphs {
-            let r = run_job(g, cfg)?;
-            colors.push(r.num_colors as f64);
-            time.push(r.metrics.makespan.max(1e-12));
+        jobs.push(Job::from_config(cfg)?);
+    }
+
+    // reduce each run to (colors, makespan) immediately — a sweep holds
+    // two floats per (graph, job), never the per-vertex colorings
+    let mut per_graph: Vec<Vec<(f64, f64)>> = Vec::with_capacity(sessions.len());
+    for s in sessions {
+        let mut rows = Vec::with_capacity(jobs.len());
+        for job in &jobs {
+            let r = s.run(job)?;
+            rows.push((r.num_colors as f64, r.metrics.makespan.max(1e-12)));
         }
+        per_graph.push(rows);
+    }
+
+    let base_colors: Vec<f64> = per_graph.iter().map(|rs| rs[0].0).collect();
+    let base_time: Vec<f64> = per_graph.iter().map(|rs| rs[0].1).collect();
+
+    let mut points = Vec::with_capacity(jobs.len() - 1);
+    for (ji, job) in jobs.iter().enumerate().skip(1) {
+        let colors: Vec<f64> = per_graph.iter().map(|rs| rs[ji].0).collect();
+        let time: Vec<f64> = per_graph.iter().map(|rs| rs[ji].1).collect();
         points.push(SweepPoint {
-            label: cfg.label(),
+            label: job.label(),
             norm_colors: stats::normalized_geomean(&colors, &base_colors),
             norm_time: stats::normalized_geomean(&time, &base_time),
-            recolor_iters: cfg.recolor.iterations(),
+            recolor_iters: job.config().recolor.iterations(),
         });
     }
     Ok(points)
@@ -122,6 +142,14 @@ mod tests {
     use crate::dist::cost::CostModel;
     use crate::graph::synth;
 
+    fn sessions() -> Vec<Session> {
+        vec![
+            Session::new(synth::grid2d(12, 12)).with_cost_model(CostModel::fixed()),
+            Session::new(synth::fem_like(600, 8.0, 20, 0.0, 2, "f"))
+                .with_cost_model(CostModel::fixed()),
+        ]
+    }
+
     #[test]
     fn grid_has_64_points() {
         assert_eq!(paper_grid(0, 1).len(), 4 * 2 * 2 * 4);
@@ -132,18 +160,41 @@ mod tests {
 
     #[test]
     fn sweep_runs_and_normalizes() {
-        let graphs = vec![synth::grid2d(12, 12), synth::fem_like(600, 8.0, 20, 0.0, 2, "f")];
-        let mut cfgs = vec![ColoringConfig::default(), ColoringConfig::quality(4)];
-        for c in cfgs.iter_mut() {
-            c.fixed_cost = Some(CostModel::fixed());
-        }
-        let mut baseline = ColoringConfig::default();
-        baseline.fixed_cost = Some(CostModel::fixed());
-        let pts = run_sweep(&graphs, cfgs, &baseline, 4).unwrap();
+        let sessions = sessions();
+        let cfgs = vec![ColoringConfig::default(), ColoringConfig::quality(4)];
+        let baseline = ColoringConfig::default();
+        let pts = run_sweep(&sessions, cfgs, &baseline, 4).unwrap();
         assert_eq!(pts.len(), 2);
         // the baseline config normalizes to exactly 1
         assert!((pts[0].norm_colors - 1.0).abs() < 1e-9);
         assert!((pts[0].norm_time - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_partitions_each_key_exactly_once() {
+        // baseline + both configs share (BfsGrow, 4, 42): one partition
+        // call per graph for the whole sweep — the acceptance pin
+        let sessions = sessions();
+        let cfgs = vec![
+            ColoringConfig::default(),
+            ColoringConfig::speed(4),
+            ColoringConfig::quality(4),
+        ];
+        let baseline = ColoringConfig::default();
+        run_sweep(&sessions, cfgs, &baseline, 4).unwrap();
+        for s in &sessions {
+            assert_eq!(s.partition_calls(), 1, "on {}", s.graph().name);
+        }
+        // a second sweep with a different seed adds exactly one more key
+        let reseeded = ColoringConfig {
+            seed: 7,
+            ..Default::default()
+        };
+        run_sweep(&sessions, vec![reseeded], &baseline, 4).unwrap();
+        for s in &sessions {
+            assert_eq!(s.partition_calls(), 2);
+            assert_eq!(s.cached_partitions(), 2);
+        }
     }
 
     #[test]

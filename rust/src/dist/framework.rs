@@ -26,6 +26,7 @@
 use crate::color::order::{self, Ordering};
 use crate::color::select::{SelectState, Selection};
 use crate::color::UNCOLORED;
+use crate::coordinator::event::{emit_rank0, Event, Observer};
 use crate::dist::comm::{self, Endpoint, MsgKind};
 use crate::dist::cost::CostModel;
 use crate::dist::proc::{ColorState, LocalGraph};
@@ -93,7 +94,11 @@ fn epoch(round: u32, step: u64) -> u64 {
 /// Colors `to_color` (owned local ids) into `state`, exchanging boundary
 /// colors with neighbor processes every superstep and resolving cut-edge
 /// conflicts in rounds. `order_override` (used by asynchronous recoloring)
-/// bypasses `fw.ordering` with an explicit visit order.
+/// bypasses `fw.ordering` with an explicit visit order. Rank 0 streams
+/// [`Event::SuperstepDone`] / [`Event::ConflictRound`] to `obs`; emission
+/// never touches the virtual clocks, so observed runs are bit-for-bit
+/// identical to unobserved ones.
+#[allow(clippy::too_many_arguments)]
 pub fn color_process(
     ep: &mut Endpoint,
     lg: &LocalGraph,
@@ -102,6 +107,7 @@ pub fn color_process(
     state: &mut ColorState,
     to_color: Vec<u32>,
     order_override: Option<Vec<u32>>,
+    obs: Option<&dyn Observer>,
 ) -> ProcMetrics {
     let mut metrics = ProcMetrics {
         rank: ep.rank,
@@ -224,6 +230,14 @@ pub fn color_process(
                     colored_at[li] = epoch(round, step);
                 }
             }
+            emit_rank0(
+                obs,
+                ep.rank,
+                Event::SuperstepDone {
+                    round,
+                    step: step as u32,
+                },
+            );
         }
 
         // -- end-of-round sweep: same-superstep collisions on cut edges.
@@ -261,6 +275,14 @@ pub fn color_process(
         ep.clock += cost.color_cost(0, sweep_scans);
 
         let global_losers = ep.allreduce_sum_u64(losers.len() as u64);
+        emit_rank0(
+            obs,
+            ep.rank,
+            Event::ConflictRound {
+                round,
+                conflicts: global_losers,
+            },
+        );
         if global_losers == 0 {
             break;
         }
@@ -380,7 +402,7 @@ mod tests {
                         let mut ep = ep;
                         let mut state = ColorState::uncolored(lg);
                         let to: Vec<u32> = (0..lg.n_owned() as u32).collect();
-                        let m = color_process(&mut ep, lg, fw, cost, &mut state, to, None);
+                        let m = color_process(&mut ep, lg, fw, cost, &mut state, to, None, None);
                         (state.owned_pairs(lg), m, ep.clock)
                     })
                 })

@@ -26,6 +26,7 @@
 use crate::color::recolor::{Permutation, RecolorSchedule};
 use crate::color::select::Selection;
 use crate::color::UNCOLORED;
+use crate::coordinator::event::{emit_rank0, Event, Observer};
 use crate::dist::comm::{self, Endpoint, MsgKind};
 use crate::dist::cost::CostModel;
 use crate::dist::framework::{self, FrameworkConfig};
@@ -64,6 +65,10 @@ pub struct RecolorConfig {
     /// every process, so the permutation (and therefore the result) is
     /// independent of the process count.
     pub seed: u64,
+    /// Stop before `iterations` once an iteration's relative improvement
+    /// `(k_prev - k) / k_prev` falls below this threshold. Both counts are
+    /// allreduced, so every process takes the same decision.
+    pub early_stop: Option<f64>,
 }
 
 impl Default for RecolorConfig {
@@ -73,6 +78,7 @@ impl Default for RecolorConfig {
             iterations: 1,
             scheme: CommScheme::Piggyback,
             seed: 42,
+            early_stop: None,
         }
     }
 }
@@ -108,7 +114,10 @@ pub fn build_plans(
 }
 
 /// One process's share of synchronous recoloring. Appends the global color
-/// count after every iteration to `trace`.
+/// count after every iteration to `trace`; rank 0 mirrors each entry to
+/// `obs` as [`Event::RecolorIteration`]. With `cfg.early_stop` set, the
+/// loop exits early once improvement stalls (identically on every
+/// process — the decision is a function of allreduced counts only).
 pub fn recolor_process_sync(
     ep: &mut Endpoint,
     lg: &LocalGraph,
@@ -116,6 +125,7 @@ pub fn recolor_process_sync(
     cfg: &RecolorConfig,
     state: &mut ColorState,
     trace: &mut Vec<usize>,
+    obs: Option<&dyn Observer>,
 ) -> ProcMetrics {
     let mut m = ProcMetrics {
         rank: ep.rank,
@@ -141,6 +151,7 @@ pub fn recolor_process_sync(
         let k = ep.allreduce_max_u64(local_k) as usize;
         if k == 0 {
             trace.push(0);
+            emit_rank0(obs, ep.rank, Event::RecolorIteration { iter, k: 0 });
             continue;
         }
         let mut sizes = vec![0u64; k];
@@ -295,6 +306,23 @@ pub fn recolor_process_sync(
         let kk = ep.allreduce_max_u64(local_new_k);
         trace.push(kk as usize);
         m.phases.add("recolor", (ep.clock - t0) - plan_dt);
+        emit_rank0(
+            obs,
+            ep.rank,
+            Event::RecolorIteration {
+                iter,
+                k: kk as usize,
+            },
+        );
+        if let Some(eps) = cfg.early_stop {
+            // k (before) and kk (after) are allreduced: every process
+            // computes the same improvement and stops at the same
+            // iteration, keeping traces and schedules aligned.
+            let improvement = (k as f64 - kk as f64) / (k as f64).max(1.0);
+            if improvement < eps {
+                break;
+            }
+        }
     }
 
     m.vtime = ep.clock;
@@ -316,6 +344,7 @@ pub fn recolor_process_async(
     iter: u32,
     seed: u64,
     state: &mut ColorState,
+    obs: Option<&dyn Observer>,
 ) -> ProcMetrics {
     let mut m = ProcMetrics {
         rank: ep.rank,
@@ -381,7 +410,7 @@ pub fn recolor_process_async(
     let mut fw2 = *fw;
     fw2.selection = Selection::FirstFit;
     fw2.seed = mix64(seed, 0xA12C ^ iter as u64);
-    let fm = framework::color_process(ep, lg, &fw2, cost, state, Vec::new(), Some(order));
+    let fm = framework::color_process(ep, lg, &fw2, cost, state, Vec::new(), Some(order), obs);
     m.conflicts = fm.conflicts;
     m.rounds = fm.rounds;
     m.phases.add("recolor", ep.clock - t0);
@@ -426,7 +455,9 @@ mod tests {
                         let mut ep = ep;
                         let mut state = ColorState::from_global(lg, init);
                         let mut trace = Vec::new();
-                        let m = recolor_process_sync(&mut ep, lg, cost, cfg, &mut state, &mut trace);
+                        let m = recolor_process_sync(
+                            &mut ep, lg, cost, cfg, &mut state, &mut trace, None,
+                        );
                         (state.owned_pairs(lg), trace, m)
                     })
                 })
@@ -562,7 +593,9 @@ mod tests {
                             let mut ep = ep;
                             let mut state = ColorState::from_global(lg, init);
                             let mut trace = Vec::new();
-                            recolor_process_sync(&mut ep, lg, cost, cfg, &mut state, &mut trace);
+                            recolor_process_sync(
+                                &mut ep, lg, cost, cfg, &mut state, &mut trace, None,
+                            );
                             (state.owned_pairs(lg), trace)
                         })
                     })

@@ -22,9 +22,14 @@
 //! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO artifacts
 //!   produced by `python/compile/aot.py` and exposes batched kernel-backed
 //!   color selection to the coordinator.
-//! * [`coordinator`] — the user-facing layer: configuration, the end-to-end
-//!   pipeline (partition → initial coloring → recoloring → validation →
-//!   report) and the experiment drivers behind every paper table and figure.
+//! * [`coordinator`] — the user-facing layer: reusable
+//!   [`Session`](coordinator::Session)s owning a graph plus cached
+//!   partitions and cost models, validated [`Job`](coordinator::Job)s
+//!   built fluently with presets and an early-stop policy, a streaming
+//!   [`Event`](coordinator::Event)/[`Observer`](coordinator::Observer)
+//!   layer over the pipeline (partition → initial coloring → recoloring →
+//!   validation), and the experiment drivers behind every paper table and
+//!   figure.
 //!
 //! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
 //! reproduction results.

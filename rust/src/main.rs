@@ -17,7 +17,7 @@ use dgcolor::bail;
 use dgcolor::color::recolor::{self, RecolorSchedule};
 use dgcolor::util::error::{Context, Error, Result};
 use dgcolor::color::{greedy_color, Ordering, Selection};
-use dgcolor::coordinator::{run_job, ColoringConfig};
+use dgcolor::coordinator::{ColoringConfig, Job, JsonLines, Session};
 use dgcolor::graph::rmat::{self, RmatParams};
 use dgcolor::graph::{mtx, stats, synth, CsrGraph};
 use dgcolor::partition::{self, Partitioner};
@@ -36,7 +36,25 @@ fn main() {
 
 fn run() -> Result<()> {
     let (sub, args) = Args::from_env()?.subcommand();
+    // `dgcolor <sub> --help` / `-h` prints the subcommand's usage instead
+    // of failing on a missing --graph. Scan raw argv: the parser would
+    // otherwise swallow `-h` as the value of a preceding boolean flag
+    // (`dgcolor color --json -h`).
+    let want_help = std::env::args()
+        .skip(1)
+        .any(|a| a == "--help" || a == "-h");
     match sub.as_deref() {
+        Some("-h") | Some("help") => {
+            print_help();
+            Ok(())
+        }
+        Some(cmd) if want_help => match usage_for(cmd) {
+            Some(usage) => {
+                println!("{usage}");
+                Ok(())
+            }
+            None => bail!("unknown subcommand {cmd:?} (try --help)"),
+        },
         Some("info") => cmd_info(&args),
         Some("generate") => cmd_generate(&args),
         Some("partition") => cmd_partition(&args),
@@ -51,18 +69,69 @@ fn run() -> Result<()> {
     }
 }
 
+/// Per-subcommand usage text (`dgcolor <sub> --help`).
+fn usage_for(cmd: &str) -> Option<&'static str> {
+    match cmd {
+        "info" => Some(
+            "usage: dgcolor info --graph <spec>\n\
+             \n\
+             Print a summary (|V|, |E|, Δ, average degree) of the graph.",
+        ),
+        "generate" => Some(
+            "usage: dgcolor generate --graph <spec> --out <file.mtx>\n\
+             \n\
+             Materialize a generated graph as a Matrix-Market file.",
+        ),
+        "partition" => Some(
+            "usage: dgcolor partition --graph <spec> [--procs P] [--partitioner block|bfs]\n\
+             \u{20}                        [--seed S]\n\
+             \n\
+             Partition the graph and report edge cut, boundary size and imbalance.",
+        ),
+        "seq" => Some(
+            "usage: dgcolor seq --graph <spec> [--ordering nat|lf|sl|if|bf] [--selection ff|sff|lu|r<X>]\n\
+             \u{20}                  [--recolor N] [--schedule nd|ni|rv|rand|ND-RAND%x] [--distance 1|2]\n\
+             \u{20}                  [--seed S]\n\
+             \n\
+             Sequential greedy coloring with optional Culberson iterated-greedy recoloring.",
+        ),
+        "color" => Some(
+            "usage: dgcolor color --graph <spec> [--procs P] [--ordering O] [--selection S]\n\
+             \u{20}                    [--superstep N] [--async] [--recolor N] [--arc]\n\
+             \u{20}                    [--schedule nd|ni|rv|rand|ND-RAND%x] [--scheme base|piggyback]\n\
+             \u{20}                    [--stop-eps F] [--partitioner block|bfs] [--seed S]\n\
+             \u{20}                    [--ideal-net] [--json]\n\
+             \n\
+             Distributed coloring with optional iterative recoloring.\n\
+             --stop-eps F  stop recoloring once an iteration improves the color\n\
+             \u{20}             count by less than the relative fraction F\n\
+             --json        stream one JSON event per phase/superstep/iteration\n\
+             \u{20}             (plus a final result record) instead of the table",
+        ),
+        "kernel" => Some(
+            "usage: dgcolor kernel --graph <spec> [--selection ff|r<X>] [--seed S]\n\
+             \n\
+             Color through the AOT-compiled Pallas kernels over PJRT\n\
+             (requires `make artifacts` and a build with --features xla).",
+        ),
+        _ => None,
+    }
+}
+
 fn print_help() {
     println!(
         "dgcolor — distributed graph coloring with iterative recoloring\n\
          \n\
          usage: dgcolor <info|generate|partition|seq|color|kernel> --graph <spec> [options]\n\
+         \u{20}      dgcolor <subcommand> --help for per-subcommand options\n\
          \n\
          graph specs: file.mtx | grid:RxC | er:N:M | rmat-(er|good|bad):SCALE[:EF]\n\
          \u{20}             | fem:N:AVG:MAX | auto|bmw3_2|hood|ldoor|msdoor|pwtk [--scale F]\n\
          \n\
          color options: --procs P --ordering nat|lf|sl|if|bf --selection ff|sff|lu|r<X>\n\
          \u{20}              --superstep N --async --recolor N --schedule nd|ni|rv|rand|ND-RAND%x\n\
-         \u{20}              --scheme base|piggyback --arc --partitioner block|bfs --seed S"
+         \u{20}              --scheme base|piggyback --arc --partitioner block|bfs --seed S\n\
+         \u{20}              --stop-eps F (early-stop recoloring) --json (stream events)"
     );
 }
 
@@ -232,11 +301,21 @@ fn cmd_seq(args: &Args) -> Result<()> {
 }
 
 fn cmd_color(args: &Args) -> Result<()> {
-    let g = load_graph(args)?;
+    let session = Session::new(load_graph(args)?);
     let cfg = ColoringConfig::from_args(args)?;
-    let r = run_job(&g, &cfg)?;
+    let job = Job::from_config(cfg)?;
+    if args.has_flag("json") {
+        let r = session.run_observed(&job, &JsonLines)?;
+        println!("{}", r.summary_json());
+        return Ok(());
+    }
+    let r = session.run(&job)?;
     let mut tab = Table::new(
-        &format!("distributed coloring of {} [{}]", g.name, r.config_label),
+        &format!(
+            "distributed coloring of {} [{}]",
+            session.graph().name,
+            r.config_label
+        ),
         &["metric", "value"],
     );
     tab.row(&["processes", &cfg.num_procs.to_string()]);
@@ -288,4 +367,29 @@ fn cmd_kernel(args: &Args) -> Result<()> {
     tab.row(&["time", &fmt_secs(secs)]);
     tab.print();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_subcommand_has_usage() {
+        for cmd in ["info", "generate", "partition", "seq", "color", "kernel"] {
+            let u = usage_for(cmd).unwrap();
+            assert!(
+                u.starts_with(&format!("usage: dgcolor {cmd}")),
+                "usage for {cmd} malformed"
+            );
+            assert!(u.contains("--graph"), "{cmd} usage must mention --graph");
+        }
+        assert!(usage_for("nope").is_none());
+    }
+
+    #[test]
+    fn color_usage_documents_new_flags() {
+        let u = usage_for("color").unwrap();
+        assert!(u.contains("--stop-eps"));
+        assert!(u.contains("--json"));
+    }
 }

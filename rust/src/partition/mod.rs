@@ -88,8 +88,9 @@ pub fn metrics(g: &CsrGraph, p: &Partition) -> PartitionMetrics {
     }
 }
 
-/// Partitioner selector used by the CLI / config layer.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Partitioner selector used by the CLI / config layer. `Hash` so the
+/// session layer can key partition caches by `(partitioner, procs, seed)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Partitioner {
     Block,
     BfsGrow,

@@ -1,16 +1,25 @@
-//! Integration tests for the distributed superstep framework.
+//! Integration tests for the distributed superstep framework, driven
+//! through the session API.
 
 use dgcolor::color::{Ordering, Selection};
-use dgcolor::coordinator::{run_job, ColoringConfig};
+use dgcolor::coordinator::{ColoringConfig, Job, RunResult, Session};
 use dgcolor::dist::cost::CostModel;
 use dgcolor::graph::rmat::{self, RmatParams};
 use dgcolor::graph::synth;
+use dgcolor::graph::CsrGraph;
 use dgcolor::partition::Partitioner;
+
+fn session(g: CsrGraph) -> Session {
+    Session::new(g).with_cost_model(CostModel::fixed())
+}
+
+fn run(s: &Session, cfg: ColoringConfig) -> RunResult {
+    s.run(&Job::from_config(cfg).unwrap()).unwrap()
+}
 
 fn cfg(procs: usize) -> ColoringConfig {
     ColoringConfig {
         num_procs: procs,
-        fixed_cost: Some(CostModel::fixed()),
         ..Default::default()
     }
 }
@@ -22,13 +31,14 @@ fn valid_across_proc_counts_and_graphs() {
         synth::erdos_renyi(1200, 7200, 5),
         rmat::generate(&RmatParams::good(10, 6), 6, "rmat-good"),
     ];
-    for g in &graphs {
+    for g in graphs {
+        let s = session(g);
         for procs in [1, 2, 4, 8, 16] {
-            let r = run_job(g, &cfg(procs)).unwrap();
+            let r = run(&s, cfg(procs));
             assert!(
-                r.num_colors <= g.max_degree() + 1,
+                r.num_colors <= s.graph().max_degree() + 1,
                 "{} p={procs}: {} colors",
-                g.name,
+                s.graph().name,
                 r.num_colors
             );
         }
@@ -37,21 +47,22 @@ fn valid_across_proc_counts_and_graphs() {
 
 #[test]
 fn sync_mode_is_deterministic() {
-    let g = synth::erdos_renyi(1000, 8000, 17);
-    let a = run_job(&g, &cfg(8)).unwrap();
-    let b = run_job(&g, &cfg(8)).unwrap();
+    let s = session(synth::erdos_renyi(1000, 8000, 17));
+    let a = run(&s, cfg(8));
+    let b = run(&s, cfg(8)); // second run hits the partition cache
     assert_eq!(a.coloring.colors, b.coloring.colors);
     assert_eq!(a.metrics.total_msgs, b.metrics.total_msgs);
     assert_eq!(a.metrics.makespan, b.metrics.makespan);
+    assert_eq!(s.partition_calls(), 1);
 }
 
 #[test]
 fn conflicts_grow_with_procs_on_er() {
     // the framework's conflicts come from boundary edges colored in the
     // same superstep; more processors → more boundary → more conflicts
-    let g = rmat::generate(&RmatParams::er(12, 8), 9, "rmat-er");
-    let few = run_job(&g, &cfg(2)).unwrap();
-    let many = run_job(&g, &cfg(32)).unwrap();
+    let s = session(rmat::generate(&RmatParams::er(12, 8), 9, "rmat-er"));
+    let few = run(&s, cfg(2));
+    let many = run(&s, cfg(32));
     assert!(
         many.metrics.total_conflicts >= few.metrics.total_conflicts,
         "p=2 {} vs p=32 {}",
@@ -62,13 +73,13 @@ fn conflicts_grow_with_procs_on_er() {
 
 #[test]
 fn smaller_supersteps_fewer_conflicts_more_messages() {
-    let g = rmat::generate(&RmatParams::er(11, 8), 10, "rmat-er");
-    let mut small = cfg(8);
-    small.superstep_size = 100;
-    let mut large = cfg(8);
-    large.superstep_size = 5000;
-    let rs = run_job(&g, &small).unwrap();
-    let rl = run_job(&g, &large).unwrap();
+    let s = session(rmat::generate(&RmatParams::er(11, 8), 10, "rmat-er"));
+    let rs = s
+        .run(&Job::on(&s).procs(8).superstep(100).build().unwrap())
+        .unwrap();
+    let rl = s
+        .run(&Job::on(&s).procs(8).superstep(5000).build().unwrap())
+        .unwrap();
     assert!(
         rs.metrics.total_msgs > rl.metrics.total_msgs,
         "small {} vs large {}",
@@ -85,18 +96,20 @@ fn smaller_supersteps_fewer_conflicts_more_messages() {
 
 #[test]
 fn async_valid_and_converges() {
-    let g = rmat::generate(&RmatParams::good(10, 8), 12, "rmat-good");
-    let mut c = cfg(8);
-    c.sync = false;
-    c.superstep_size = 200;
-    let r = run_job(&g, &c).unwrap();
-    assert!(r.num_colors <= g.max_degree() + 1);
+    let s = session(rmat::generate(&RmatParams::good(10, 8), 12, "rmat-good"));
+    let r = Job::on(&s)
+        .procs(8)
+        .async_comm()
+        .superstep(200)
+        .run()
+        .unwrap();
+    assert!(r.num_colors <= s.graph().max_degree() + 1);
     assert!(r.metrics.rounds < 50, "rounds {}", r.metrics.rounds);
 }
 
 #[test]
 fn orderings_work_distributed() {
-    let g = synth::fem_like(2000, 12.0, 30, 0.0, 8, "fem");
+    let s = session(synth::fem_like(2000, 12.0, 30, 0.0, 8, "fem"));
     for ord in [
         Ordering::Natural,
         Ordering::InternalFirst,
@@ -104,16 +117,16 @@ fn orderings_work_distributed() {
         Ordering::LargestFirst,
         Ordering::SmallestLast,
     ] {
-        let mut c = cfg(6);
-        c.ordering = ord;
-        let r = run_job(&g, &c).unwrap();
-        assert!(r.num_colors <= g.max_degree() + 1, "{ord:?}");
+        let r = Job::on(&s).procs(6).ordering(ord).run().unwrap();
+        assert!(r.num_colors <= s.graph().max_degree() + 1, "{ord:?}");
     }
+    // five orderings, one partition key
+    assert_eq!(s.partition_calls(), 1);
 }
 
 #[test]
 fn selections_work_distributed() {
-    let g = synth::erdos_renyi(1500, 9000, 21);
+    let s = session(synth::erdos_renyi(1500, 9000, 21));
     for sel in [
         Selection::FirstFit,
         Selection::StaggeredFirstFit,
@@ -121,11 +134,9 @@ fn selections_work_distributed() {
         Selection::RandomX(5),
         Selection::RandomX(50),
     ] {
-        let mut c = cfg(6);
-        c.selection = sel;
-        let r = run_job(&g, &c).unwrap();
+        let r = Job::on(&s).procs(6).selection(sel).run().unwrap();
         assert!(
-            r.num_colors <= g.max_degree() + 50 + 1,
+            r.num_colors <= s.graph().max_degree() + 50 + 1,
             "{sel:?}: {}",
             r.num_colors
         );
@@ -135,13 +146,14 @@ fn selections_work_distributed() {
 #[test]
 fn random_x_reduces_conflicts() {
     // §3.2: random selection decorrelates concurrent choices
-    let g = rmat::generate(&RmatParams::er(12, 8), 30, "rmat-er");
-    let mut ff = cfg(16);
-    ff.superstep_size = 5000;
-    let mut r5 = ff;
-    r5.selection = Selection::RandomX(5);
-    let cf = run_job(&g, &ff).unwrap();
-    let cr = run_job(&g, &r5).unwrap();
+    let s = session(rmat::generate(&RmatParams::er(12, 8), 30, "rmat-er"));
+    let cf = Job::on(&s).procs(16).superstep(5000).run().unwrap();
+    let cr = Job::on(&s)
+        .procs(16)
+        .superstep(5000)
+        .selection(Selection::RandomX(5))
+        .run()
+        .unwrap();
     assert!(
         cr.metrics.total_conflicts < cf.metrics.total_conflicts,
         "R5 {} vs FF {}",
@@ -152,27 +164,37 @@ fn random_x_reduces_conflicts() {
 
 #[test]
 fn block_vs_bfs_partition_boundary() {
-    let g = synth::fem_like(4000, 12.0, 30, 0.0, 9, "fem");
-    let mut blk = cfg(8);
-    blk.partitioner = Partitioner::Block;
-    let mut bfs = cfg(8);
-    bfs.partitioner = Partitioner::BfsGrow;
-    let rb = run_job(&g, &blk).unwrap();
-    let rg = run_job(&g, &bfs).unwrap();
+    let s = session(synth::fem_like(4000, 12.0, 30, 0.0, 9, "fem"));
+    let rb = Job::on(&s)
+        .procs(8)
+        .partitioner(Partitioner::Block)
+        .run()
+        .unwrap();
+    let rg = Job::on(&s)
+        .procs(8)
+        .partitioner(Partitioner::BfsGrow)
+        .run()
+        .unwrap();
     // both valid; bfs-grow should not have wildly more cut than block
-    assert!(rb.num_colors <= g.max_degree() + 1);
-    assert!(rg.num_colors <= g.max_degree() + 1);
+    assert!(rb.num_colors <= s.graph().max_degree() + 1);
+    assert!(rg.num_colors <= s.graph().max_degree() + 1);
+    // two partitioners → two cache keys
+    assert_eq!(s.partition_calls(), 2);
 }
 
 #[test]
 fn virtual_time_grows_with_messages_not_wallclock() {
-    let g = synth::erdos_renyi(800, 4000, 2);
-    let mut a = cfg(2);
-    a.network = dgcolor::dist::NetworkModel::ideal();
-    let mut b = cfg(2);
-    b.network = dgcolor::dist::NetworkModel::new(1e-3, 1e-9);
-    let ra = run_job(&g, &a).unwrap();
-    let rb = run_job(&g, &b).unwrap();
+    let s = session(synth::erdos_renyi(800, 4000, 2));
+    let ra = Job::on(&s)
+        .procs(2)
+        .network(dgcolor::dist::NetworkModel::ideal())
+        .run()
+        .unwrap();
+    let rb = Job::on(&s)
+        .procs(2)
+        .network(dgcolor::dist::NetworkModel::new(1e-3, 1e-9))
+        .run()
+        .unwrap();
     assert!(rb.metrics.makespan > ra.metrics.makespan + 1e-4);
     assert_eq!(ra.coloring.colors, rb.coloring.colors, "net model must not change results");
 }

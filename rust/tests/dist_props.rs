@@ -1,11 +1,11 @@
 //! Property tests for the distributed runtime (`util::prop` harness):
-//! `run_job` must return a valid coloring across random graphs, seeds,
+//! session runs must return a valid coloring across random graphs, seeds,
 //! process counts, superstep sizes, both communication modes, and every
 //! recoloring mode — plus determinism and trace-shape invariants.
 
 use dgcolor::color::recolor::{Permutation, RecolorSchedule};
 use dgcolor::color::{Ordering, Selection};
-use dgcolor::coordinator::{run_job, ColoringConfig, RecolorMode};
+use dgcolor::coordinator::{ColoringConfig, Job, RecolorMode, RunResult, Session};
 use dgcolor::dist::cost::CostModel;
 use dgcolor::dist::recolor::{CommScheme, RecolorConfig};
 use dgcolor::dist::NetworkModel;
@@ -53,6 +53,7 @@ fn random_config(rng: &mut Rng) -> ColoringConfig {
                 CommScheme::Piggyback
             },
             seed: rng.next_u64(),
+            ..Default::default()
         }),
         2 => RecolorMode::Async {
             perm: Permutation::NonDecreasing,
@@ -78,18 +79,23 @@ fn random_config(rng: &mut Rng) -> ColoringConfig {
     }
 }
 
+fn run(s: &Session, cfg: ColoringConfig) -> Result<RunResult, String> {
+    let job = Job::from_config(cfg).map_err(|e| e.to_string())?;
+    s.run(&job).map_err(|e| format!("{}: {e}", cfg.label()))
+}
+
 #[test]
-fn prop_run_job_always_valid() {
+fn prop_session_runs_always_valid() {
     check(
-        "run_job valid across graphs/configs/modes",
+        "session runs valid across graphs/configs/modes",
         PropConfig { cases: 40, seed: 0xD157 },
         |rng, _| {
-            let g = random_graph(rng);
+            let s = Session::new(random_graph(rng));
             let cfg = random_config(rng);
-            // run_job validates internally and errors on any conflict
-            let r = run_job(&g, &cfg).map_err(|e| format!("{}: {e}", cfg.label()))?;
+            // the pipeline validates internally and errors on any conflict
+            let r = run(&s, cfg)?;
             r.coloring
-                .validate(&g)
+                .validate(s.graph())
                 .map_err(|e| format!("{}: {e}", cfg.label()))?;
             if r.num_colors != r.coloring.num_colors() {
                 return Err("num_colors disagrees with coloring".into());
@@ -105,11 +111,13 @@ fn prop_sync_runs_are_deterministic() {
         "sync determinism",
         PropConfig { cases: 12, seed: 0xD158 },
         |rng, _| {
-            let g = random_graph(rng);
+            let s = Session::new(random_graph(rng));
             let mut cfg = random_config(rng);
             cfg.sync = true;
-            let a = run_job(&g, &cfg).map_err(|e| e.to_string())?;
-            let b = run_job(&g, &cfg).map_err(|e| e.to_string())?;
+            // the second run reuses the cached partition: determinism here
+            // also pins cache-hit equivalence
+            let a = run(&s, cfg)?;
+            let b = run(&s, cfg)?;
             if a.coloring.colors != b.coloring.colors {
                 return Err(format!("colors diverged for {}", cfg.label()));
             }
@@ -143,12 +151,13 @@ fn prop_sync_recolor_trace_is_monotone() {
                     iterations: iters,
                     scheme: CommScheme::Piggyback,
                     seed: rng.next_u64(),
+                    ..Default::default()
                 }),
                 seed: rng.next_u64(),
                 fixed_cost: Some(CostModel::fixed()),
                 ..Default::default()
             };
-            let r = run_job(&g, &cfg).map_err(|e| e.to_string())?;
+            let r = run(&Session::new(g), cfg)?;
             if r.recolor_trace.len() != iters as usize + 1 {
                 return Err(format!(
                     "trace length {} != {}",
@@ -173,7 +182,7 @@ fn prop_comm_schemes_agree() {
         "Base == Piggyback results",
         PropConfig { cases: 15, seed: 0xD15A },
         |rng, _| {
-            let g = random_graph(rng);
+            let s = Session::new(random_graph(rng));
             let seed = rng.next_u64();
             let procs = rng.range(1, 8);
             let mk = |scheme| ColoringConfig {
@@ -183,13 +192,14 @@ fn prop_comm_schemes_agree() {
                     iterations: 2,
                     scheme,
                     seed: 7,
+                    ..Default::default()
                 }),
                 seed,
                 fixed_cost: Some(CostModel::fixed()),
                 ..Default::default()
             };
-            let a = run_job(&g, &mk(CommScheme::Base)).map_err(|e| e.to_string())?;
-            let b = run_job(&g, &mk(CommScheme::Piggyback)).map_err(|e| e.to_string())?;
+            let a = run(&s, mk(CommScheme::Base))?;
+            let b = run(&s, mk(CommScheme::Piggyback))?;
             if a.coloring.colors != b.coloring.colors {
                 return Err("schemes disagree".into());
             }

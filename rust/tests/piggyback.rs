@@ -30,6 +30,7 @@ fn run_scheme(
         iterations,
         scheme,
         seed: 11,
+        ..Default::default()
     };
     let mut outs: Vec<Option<(Vec<(u32, u32)>, ProcMetrics)>> = (0..procs).map(|_| None).collect();
     std::thread::scope(|s| {
@@ -39,7 +40,9 @@ fn run_scheme(
                 let mut ep = ep;
                 let mut state = ColorState::from_global(lg, initial);
                 let mut trace = Vec::new();
-                let m = recolor_process_sync(&mut ep, lg, &cost, &cfg, &mut state, &mut trace);
+                let m = recolor_process_sync(
+                    &mut ep, lg, &cost, &cfg, &mut state, &mut trace, None,
+                );
                 (state.owned_pairs(lg), m)
             }));
         }

@@ -1,22 +1,22 @@
 //! End-to-end pipeline tests: the paper's "speed" and "quality" presets,
-//! scaling behaviour, and metric sanity.
+//! scaling behaviour, and metric sanity — all through the session API.
 
-use dgcolor::coordinator::{run_job, ColoringConfig};
+use dgcolor::coordinator::{Job, Session};
 use dgcolor::dist::cost::CostModel;
 use dgcolor::graph::rmat::{self, RmatParams};
 use dgcolor::graph::synth;
+use dgcolor::graph::CsrGraph;
 
-fn with_fixed_cost(mut c: ColoringConfig) -> ColoringConfig {
-    c.fixed_cost = Some(CostModel::fixed());
-    c
+fn session(g: CsrGraph) -> Session {
+    Session::new(g).with_cost_model(CostModel::fixed())
 }
 
 #[test]
 fn speed_and_quality_presets_run() {
     // bmw3_2-like density: enough color headroom for recoloring to matter
-    let g = synth::fem_like(6000, 30.0, 90, 0.01, 77, "fem");
-    let speed = run_job(&g, &with_fixed_cost(ColoringConfig::speed(8))).unwrap();
-    let quality = run_job(&g, &with_fixed_cost(ColoringConfig::quality(8))).unwrap();
+    let s = session(synth::fem_like(6000, 30.0, 90, 0.01, 77, "fem"));
+    let speed = Job::on(&s).procs(8).speed().run().unwrap();
+    let quality = Job::on(&s).procs(8).quality().run().unwrap();
     // the quality preset must produce fewer colors …
     assert!(
         quality.num_colors < speed.num_colors,
@@ -29,17 +29,16 @@ fn speed_and_quality_presets_run() {
     // … at a higher (but sane) runtime
     assert!(quality.metrics.makespan > speed.metrics.makespan);
     assert!(quality.metrics.makespan < 100.0 * speed.metrics.makespan);
+    // both presets share (partitioner, procs, seed): one partition call
+    assert_eq!(s.partition_calls(), 1);
 }
 
 #[test]
 fn recoloring_quality_stable_as_procs_grow() {
     // paper's headline: RC keeps colors near-sequential as P grows, while
     // the plain framework drifts upward on conflict-heavy graphs
-    let g = rmat::generate(&RmatParams::good(11, 8), 3, "rmat-good");
-    let colors_at = |p: usize| {
-        let r = run_job(&g, &with_fixed_cost(ColoringConfig::quality(p))).unwrap();
-        r.num_colors
-    };
+    let s = session(rmat::generate(&RmatParams::good(11, 8), 3, "rmat-good"));
+    let colors_at = |p: usize| Job::on(&s).procs(p).quality().run().unwrap().num_colors;
     let c4 = colors_at(4);
     let c32 = colors_at(32);
     assert!(
@@ -52,15 +51,9 @@ fn recoloring_quality_stable_as_procs_grow() {
 fn makespan_improves_with_procs_on_large_graph() {
     // virtual time must show parallel speedup from 1 to 8 procs on a
     // compute-heavy workload
-    let g = rmat::generate(&RmatParams::er(14, 8), 4, "rmat-er");
-    let t1 = run_job(&g, &with_fixed_cost(ColoringConfig::speed(1)))
-        .unwrap()
-        .metrics
-        .makespan;
-    let t8 = run_job(&g, &with_fixed_cost(ColoringConfig::speed(8)))
-        .unwrap()
-        .metrics
-        .makespan;
+    let s = session(rmat::generate(&RmatParams::er(14, 8), 4, "rmat-er"));
+    let t1 = Job::on(&s).procs(1).speed().run().unwrap().metrics.makespan;
+    let t8 = Job::on(&s).procs(8).speed().run().unwrap().metrics.makespan;
     assert!(
         t8 < t1,
         "no virtual speedup: t1={t1} t8={t8}"
@@ -69,8 +62,8 @@ fn makespan_improves_with_procs_on_large_graph() {
 
 #[test]
 fn metrics_are_consistent() {
-    let g = synth::grid2d(30, 30);
-    let r = run_job(&g, &with_fixed_cost(ColoringConfig::quality(6))).unwrap();
+    let s = session(synth::grid2d(30, 30));
+    let r = Job::on(&s).procs(6).quality().run().unwrap();
     let m = &r.metrics;
     assert_eq!(m.num_procs, 6);
     assert!(m.total_bytes > 0);
@@ -86,8 +79,8 @@ fn metrics_are_consistent() {
 
 #[test]
 fn trace_records_initial_plus_iterations() {
-    let g = synth::grid2d(20, 20);
-    let r = run_job(&g, &with_fixed_cost(ColoringConfig::quality(4))).unwrap();
+    let s = session(synth::grid2d(20, 20));
+    let r = Job::on(&s).procs(4).quality().run().unwrap();
     assert_eq!(r.recolor_trace.len(), 2); // initial + 1 ND iteration
     assert_eq!(r.initial_colors, r.recolor_trace[0]);
     assert_eq!(r.num_colors, *r.recolor_trace.last().unwrap());

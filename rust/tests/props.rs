@@ -3,7 +3,7 @@
 
 use dgcolor::color::recolor::{recolor_once, Permutation};
 use dgcolor::color::{greedy_color, Ordering, Selection};
-use dgcolor::coordinator::{run_job, ColoringConfig, RecolorMode};
+use dgcolor::coordinator::{ColoringConfig, Job, RecolorMode, Session};
 use dgcolor::dist::cost::CostModel;
 use dgcolor::dist::framework::loses;
 use dgcolor::dist::proc::build_local_graphs;
@@ -115,7 +115,8 @@ fn prop_distributed_always_valid() {
                 fixed_cost: Some(CostModel::fixed()),
                 ..Default::default()
             };
-            run_job(&g, &cfg).map_err(|e| e.to_string())?;
+            let job = Job::from_config(cfg).map_err(|e| e.to_string())?;
+            Session::new(g).run(&job).map_err(|e| e.to_string())?;
             Ok(())
         },
     );

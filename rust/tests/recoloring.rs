@@ -4,7 +4,7 @@
 
 use dgcolor::color::recolor::{recolor_once, Permutation, RecolorSchedule};
 use dgcolor::color::{greedy_color, Coloring, Ordering, Selection};
-use dgcolor::coordinator::{run_job, ColoringConfig, RecolorMode};
+use dgcolor::coordinator::{ColoringConfig, Job, RecolorMode, Session};
 use dgcolor::dist::comm::network;
 use dgcolor::dist::cost::CostModel;
 use dgcolor::dist::proc::{build_local_graphs, ColorState};
@@ -14,7 +14,6 @@ use dgcolor::graph::rmat::{self, RmatParams};
 use dgcolor::graph::synth;
 use dgcolor::graph::CsrGraph;
 use dgcolor::partition::{self, Partitioner};
-use dgcolor::util::rng::mix64;
 use dgcolor::util::Rng;
 
 /// Run distributed sync recoloring directly over a given initial coloring
@@ -36,6 +35,7 @@ fn dist_recolor(
         iterations: 1,
         scheme,
         seed,
+        ..Default::default()
     };
     let mut outs: Vec<Option<(Vec<(u32, u32)>, Vec<usize>, dgcolor::dist::ProcMetrics)>> =
         (0..procs).map(|_| None).collect();
@@ -47,7 +47,9 @@ fn dist_recolor(
                 let mut ep = ep;
                 let mut state = ColorState::from_global(lg, initial);
                 let mut trace = Vec::new();
-                let m = recolor_process_sync(&mut ep, lg, &cost, &cfgr, &mut state, &mut trace);
+                let m = recolor_process_sync(
+                    &mut ep, lg, &cost, &cfgr, &mut state, &mut trace, None,
+                );
                 (state.owned_pairs(lg), trace, m)
             }));
         }
@@ -61,6 +63,11 @@ fn dist_recolor(
     for (pairs, t, m) in outs.into_iter().map(|o| o.unwrap()) {
         for (gid, c) in pairs {
             coloring.set(gid, c);
+        }
+        // every process derives its trace from allreduced counts — the
+        // invariant the pipeline's take-instead-of-clone relies on
+        if !trace.is_empty() {
+            assert_eq!(trace, t, "per-process recolor traces diverged");
         }
         trace = t;
         per_proc.push(m);
@@ -134,19 +141,20 @@ fn rc_is_conflict_free() {
 #[test]
 fn multiple_iterations_monotone_and_improving() {
     let g = synth::fem_like(3000, 13.0, 32, 0.004, 6, "fem");
-    let mut cfg = ColoringConfig {
+    let cfg = ColoringConfig {
         num_procs: 8,
         selection: Selection::RandomX(10),
         fixed_cost: Some(CostModel::fixed()),
+        recolor: RecolorMode::Sync(RecolorConfig {
+            schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
+            iterations: 10,
+            scheme: CommScheme::Piggyback,
+            seed: 42,
+            ..Default::default()
+        }),
         ..Default::default()
     };
-    cfg.recolor = RecolorMode::Sync(RecolorConfig {
-        schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
-        iterations: 10,
-        scheme: CommScheme::Piggyback,
-        seed: 42,
-    });
-    let r = run_job(&g, &cfg).unwrap();
+    let r = Session::new(g).run(&Job::from_config(cfg).unwrap()).unwrap();
     assert_eq!(r.recolor_trace.len(), 11);
     assert!(
         r.recolor_trace.windows(2).all(|w| w[1] <= w[0]),
@@ -158,20 +166,19 @@ fn multiple_iterations_monotone_and_improving() {
 
 #[test]
 fn arc_valid_and_usually_helps() {
-    let g = rmat::generate(&RmatParams::good(10, 8), 14, "rmat-good");
-    let base = ColoringConfig {
-        num_procs: 8,
-        ordering: Ordering::SmallestLast,
-        fixed_cost: Some(CostModel::fixed()),
-        ..Default::default()
-    };
-    let no_rc = run_job(&g, &base).unwrap();
-    let mut with_arc = base;
-    with_arc.recolor = RecolorMode::Async {
-        perm: Permutation::NonDecreasing,
-        iterations: 1,
-    };
-    let arc = run_job(&g, &with_arc).unwrap();
+    let s = Session::new(rmat::generate(&RmatParams::good(10, 8), 14, "rmat-good"))
+        .with_cost_model(CostModel::fixed());
+    let no_rc = Job::on(&s)
+        .procs(8)
+        .ordering(Ordering::SmallestLast)
+        .run()
+        .unwrap();
+    let arc = Job::on(&s)
+        .procs(8)
+        .ordering(Ordering::SmallestLast)
+        .async_recolor(Permutation::NonDecreasing, 1)
+        .run()
+        .unwrap();
     // paper §4.2.3: aRC's improvement over FSS is modest (<10% on RMAT) and
     // can dip slightly below FSS on small instances — require "ballpark"
     assert!(
@@ -185,15 +192,15 @@ fn arc_valid_and_usually_helps() {
 #[test]
 fn rc_beats_arc_on_quality() {
     // paper §4.2.3: sync RC yields fewer (or equal) colors than aRC
-    let g = rmat::generate(&RmatParams::bad(10, 6), 15, "rmat-bad");
+    let s = Session::new(rmat::generate(&RmatParams::bad(10, 6), 15, "rmat-bad"))
+        .with_cost_model(CostModel::fixed());
     let mk = |mode: RecolorMode| {
         let cfg = ColoringConfig {
             num_procs: 8,
             recolor: mode,
-            fixed_cost: Some(CostModel::fixed()),
             ..Default::default()
         };
-        run_job(&g, &cfg).unwrap().num_colors
+        s.run(&Job::from_config(cfg).unwrap()).unwrap().num_colors
     };
     let rc = mk(RecolorMode::Sync(RecolorConfig::default()));
     let arc = mk(RecolorMode::Async {

@@ -1,0 +1,253 @@
+//! Tests for the session-based job API: partition-cache-hit equivalence
+//! with the legacy `run_job` shim, builder validation, the early-stop
+//! policy, and the observer event-stream invariants.
+
+use dgcolor::color::Selection;
+use dgcolor::coordinator::job::nd;
+use dgcolor::coordinator::{
+    ColoringConfig, Event, EventLog, Job, Phase, RunResult, Session,
+};
+use dgcolor::dist::cost::CostModel;
+use dgcolor::graph::synth;
+
+fn bitwise_eq(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.coloring.colors, b.coloring.colors, "colors differ");
+    assert_eq!(a.recolor_trace, b.recolor_trace, "traces differ");
+    assert_eq!(a.num_colors, b.num_colors);
+    assert_eq!(a.initial_colors, b.initial_colors);
+    assert_eq!(a.metrics.total_msgs, b.metrics.total_msgs);
+    assert_eq!(a.metrics.total_bytes, b.metrics.total_bytes);
+    assert_eq!(a.metrics.total_conflicts, b.metrics.total_conflicts);
+    assert_eq!(
+        a.metrics.makespan.to_bits(),
+        b.metrics.makespan.to_bits(),
+        "makespan differs"
+    );
+    assert_eq!(a.partition_metrics, b.partition_metrics);
+    assert_eq!(a.config_label, b.config_label);
+}
+
+/// A session run from the partition cache equals a fresh `run_job` call
+/// bit for bit — caching and observation are pure speedups.
+#[test]
+fn cached_run_equals_fresh_run_job_bit_for_bit() {
+    let g = synth::fem_like(1500, 11.0, 28, 0.004, 3, "fem");
+    let cfg = ColoringConfig {
+        num_procs: 6,
+        selection: Selection::RandomX(5),
+        recolor: dgcolor::coordinator::RecolorMode::Sync(nd(2)),
+        fixed_cost: Some(CostModel::fixed()),
+        ..Default::default()
+    };
+    #[allow(deprecated)]
+    let fresh = dgcolor::coordinator::run_job(&g, &cfg).unwrap();
+
+    let s = Session::new(g);
+    let job = Job::from_config(cfg).unwrap();
+    let first = s.run(&job).unwrap(); // cache miss
+    let log = EventLog::new();
+    let second = s.run_observed(&job, &log).unwrap(); // cache hit, observed
+    assert_eq!(s.partition_calls(), 1, "second run must hit the cache");
+    assert!(!log.events().is_empty());
+
+    bitwise_eq(&fresh, &first);
+    bitwise_eq(&fresh, &second);
+}
+
+#[test]
+fn builder_validation_errors_surface() {
+    let s = Session::new(synth::grid2d(6, 6));
+    assert!(Job::on(&s).procs(0).run().is_err());
+    assert!(Job::on(&s).superstep(0).run().is_err());
+    assert!(Job::on(&s).selection(Selection::RandomX(0)).run().is_err());
+    assert!(Job::on(&s).sync_recolor(nd(0)).run().is_err());
+    // early stop without recoloring is rejected before anything runs
+    assert!(Job::on(&s).stop_when_improvement_below(0.05).run().is_err());
+    assert!(Job::on(&s)
+        .sync_recolor(nd(3))
+        .stop_when_improvement_below(1.5)
+        .run()
+        .is_err());
+    // nothing valid ran: no partitions were computed
+    assert_eq!(s.partition_calls(), 0);
+}
+
+/// Early stop produces an exact prefix of the unstopped trace: iterations
+/// are pure functions of (seed, iteration index), so stopping early never
+/// changes the iterations that do run.
+#[test]
+fn early_stop_trace_is_prefix_of_full_trace() {
+    let s = Session::new(synth::fem_like(2500, 12.0, 30, 0.004, 9, "fem"))
+        .with_cost_model(CostModel::fixed());
+    let full = Job::on(&s)
+        .procs(6)
+        .selection(Selection::RandomX(10))
+        .sync_recolor(nd(8))
+        .run()
+        .unwrap();
+    let stopped = Job::on(&s)
+        .procs(6)
+        .selection(Selection::RandomX(10))
+        .sync_recolor(nd(8))
+        .stop_when_improvement_below(0.03)
+        .run()
+        .unwrap();
+    assert!(
+        stopped.recolor_trace.len() <= full.recolor_trace.len(),
+        "stopped {:?} vs full {:?}",
+        stopped.recolor_trace,
+        full.recolor_trace
+    );
+    assert_eq!(
+        stopped.recolor_trace[..],
+        full.recolor_trace[..stopped.recolor_trace.len()],
+        "early-stopped trace must be a prefix"
+    );
+    // the run stopped for the right reason: the last executed iteration
+    // improved by less than eps (unless all 8 iterations ran)
+    if stopped.recolor_trace.len() < full.recolor_trace.len() {
+        let n = stopped.recolor_trace.len();
+        let prev = stopped.recolor_trace[n - 2] as f64;
+        let last = stopped.recolor_trace[n - 1] as f64;
+        assert!((prev - last) / prev.max(1.0) < 0.03);
+        // and every earlier iteration improved by at least eps
+        for w in stopped.recolor_trace[..n - 1].windows(2) {
+            assert!(
+                (w[0] as f64 - w[1] as f64) / (w[0] as f64).max(1.0) >= 0.03,
+                "iteration before the stop improved too little: {:?}",
+                stopped.recolor_trace
+            );
+        }
+    }
+}
+
+/// The event stream is well ordered: phases in pipeline order, recoloring
+/// iterations consecutive from 1 with `k`s exactly matching the trace,
+/// `Done` last with the final color count.
+#[test]
+fn observer_event_stream_is_well_ordered() {
+    let s = Session::new(synth::fem_like(2000, 11.0, 26, 0.004, 4, "fem"))
+        .with_cost_model(CostModel::fixed());
+    let log = EventLog::new();
+    let r = Job::on(&s)
+        .procs(4)
+        .selection(Selection::RandomX(5))
+        .sync_recolor(nd(3))
+        .run_observed(&log)
+        .unwrap();
+    let events = log.take();
+
+    // phases appear exactly once, in pipeline order
+    let phase_indices: Vec<usize> = events
+        .iter()
+        .enumerate()
+        .filter_map(|(i, e)| matches!(e, Event::PhaseStarted { .. }).then_some(i))
+        .collect();
+    let phases: Vec<Phase> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::PhaseStarted { phase } => Some(*phase),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        phases,
+        vec![
+            Phase::Partition,
+            Phase::InitialColoring,
+            Phase::Recoloring,
+            Phase::Validation,
+        ]
+    );
+    assert_eq!(phase_indices[0], 0, "stream opens with PhaseStarted(Partition)");
+    assert!(matches!(events.last(), Some(Event::Done { .. })));
+    match events.last() {
+        Some(Event::Done { colors }) => assert_eq!(*colors, r.num_colors),
+        _ => unreachable!(),
+    }
+
+    // superstep/conflict events land between InitialColoring and Recoloring
+    for (i, e) in events.iter().enumerate() {
+        if matches!(e, Event::SuperstepDone { .. } | Event::ConflictRound { .. }) {
+            assert!(i > phase_indices[1], "{e:?} before initial coloring");
+            assert!(i < phase_indices[3], "{e:?} after validation started");
+        }
+    }
+    // conflict rounds are strictly increasing and terminate with 0 losers
+    let rounds: Vec<(u32, u64)> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::ConflictRound { round, conflicts } => Some((*round, *conflicts)),
+            _ => None,
+        })
+        .collect();
+    assert!(!rounds.is_empty());
+    assert!(rounds.windows(2).all(|w| w[0].0 < w[1].0));
+    assert_eq!(rounds.last().unwrap().1, 0, "last round resolves everything");
+
+    // recoloring iterations: consecutive from 1, ks == recolor_trace[1..]
+    let iters: Vec<(u32, usize)> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::RecolorIteration { iter, k } => Some((*iter, *k)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        iters.iter().map(|&(i, _)| i).collect::<Vec<_>>(),
+        (1..=3).collect::<Vec<_>>()
+    );
+    assert_eq!(
+        iters.iter().map(|&(_, k)| k).collect::<Vec<_>>(),
+        r.recolor_trace[1..].to_vec(),
+        "event ks must match the recolor trace"
+    );
+    for (i, _) in events.iter().enumerate().filter(|(_, e)| {
+        matches!(e, Event::RecolorIteration { .. })
+    }) {
+        assert!(i > phase_indices[2] && i < phase_indices[3]);
+    }
+}
+
+/// aRC runs also stream `RecolorIteration` events matching the trace, and
+/// a run without recoloring has no Recoloring phase at all.
+#[test]
+fn observer_covers_arc_and_no_recolor_runs() {
+    let s = Session::new(synth::grid2d(20, 20)).with_cost_model(CostModel::fixed());
+
+    let log = EventLog::new();
+    let r = Job::on(&s)
+        .procs(4)
+        .async_recolor(dgcolor::color::recolor::Permutation::NonDecreasing, 2)
+        .run_observed(&log)
+        .unwrap();
+    let ks: Vec<usize> = log
+        .take()
+        .iter()
+        .filter_map(|e| match e {
+            Event::RecolorIteration { k, .. } => Some(*k),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(ks, r.recolor_trace[1..].to_vec());
+
+    let log = EventLog::new();
+    Job::on(&s).procs(4).speed().run_observed(&log).unwrap();
+    let events = log.take();
+    assert!(events
+        .iter()
+        .all(|e| !matches!(e, Event::PhaseStarted { phase: Phase::Recoloring }
+            | Event::RecolorIteration { .. })));
+}
+
+/// Observed and unobserved runs are identical — emission never touches
+/// the virtual clocks.
+#[test]
+fn observation_does_not_perturb_results() {
+    let s = Session::new(synth::erdos_renyi(900, 5400, 11)).with_cost_model(CostModel::fixed());
+    let job = Job::on(&s).procs(5).quality().build().unwrap();
+    let plain = s.run(&job).unwrap();
+    let log = EventLog::new();
+    let observed = s.run_observed(&job, &log).unwrap();
+    bitwise_eq(&plain, &observed);
+}
