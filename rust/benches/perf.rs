@@ -1,7 +1,14 @@
 //! §Perf microbenchmarks: real-wallclock throughput of every hot path —
 //! sequential greedy (edges/s), recoloring iteration, orderings, the
-//! message transport, the partitioners, and (when artifacts exist) the
-//! PJRT kernel batch latency. Results feed EXPERIMENTS.md §Perf.
+//! message transport (allocating vs pooled), ghost lookups, the
+//! partitioners, and (when artifacts exist) the PJRT kernel batch latency.
+//! Results feed EXPERIMENTS.md §Perf, and `--json <path>` writes the
+//! machine-readable `BENCH_perf.json` trajectory (format in DESIGN.md
+//! "Memory discipline on hot paths"):
+//!
+//! ```text
+//! cargo bench --bench perf -- --json ../BENCH_perf.json
+//! ```
 
 #[path = "common.rs"]
 mod common;
@@ -9,46 +16,61 @@ mod common;
 use dgcolor::color::recolor::{recolor_once, Permutation};
 use dgcolor::color::{greedy_color, Ordering, Selection};
 use dgcolor::dist::comm::{network, MsgKind};
+use dgcolor::dist::proc::build_local_graphs;
 use dgcolor::dist::NetworkModel;
 use dgcolor::graph::rmat::{self, RmatParams};
 use dgcolor::graph::synth;
 use dgcolor::partition::{self, Partitioner};
-use dgcolor::util::bench::{bench, BenchConfig};
+use dgcolor::util::args::Args;
+use dgcolor::util::bench::{bench, BenchConfig, BenchResult, JsonReport};
 use dgcolor::util::Rng;
 
+/// `bench`, recorded into the JSON trajectory.
+fn b<T>(
+    rep: &mut JsonReport,
+    cfg: &BenchConfig,
+    name: &str,
+    f: impl FnMut(usize) -> T,
+) -> BenchResult {
+    let r = bench(name, cfg, f);
+    rep.record(&r);
+    r
+}
+
+const TRANSPORT_MSGS: u32 = 10_000;
+
 fn main() {
+    let args = Args::from_env().expect("args");
     common::print_header("§Perf — hot-path microbenchmarks (real wallclock)");
     let cfg = BenchConfig::default();
+    let mut rep = JsonReport::new();
 
     // L3.1: sequential greedy throughput on a large ER-ish graph
     let g = rmat::generate(&RmatParams::er(18, 8), 3, "er18");
     let edges = 2.0 * g.num_edges() as f64;
-    let r = bench("greedy FF natural (er18, 2M edges)", &cfg, |i| {
+    let r = b(&mut rep, &cfg, "greedy FF natural (er18, 2M edges)", |i| {
         greedy_color(&g, Ordering::Natural, Selection::FirstFit, i as u64)
     });
-    println!(
-        "    → {:.1}M edge-scans/s",
-        edges / r.min() / 1e6
-    );
+    println!("    → {:.1}M edge-scans/s", edges / r.min() / 1e6);
 
     // L3.2: greedy on mesh (branchier degree distribution)
     let mesh = synth::fem_like(100_000, 25.0, 76, 0.004, 5, "mesh100k");
     let mesh_edges = 2.0 * mesh.num_edges() as f64;
-    let r = bench("greedy FF natural (mesh 1.25M edges)", &cfg, |i| {
+    let r = b(&mut rep, &cfg, "greedy FF natural (mesh 1.25M edges)", |i| {
         greedy_color(&mesh, Ordering::Natural, Selection::FirstFit, i as u64)
     });
     println!("    → {:.1}M edge-scans/s", mesh_edges / r.min() / 1e6);
 
     // L3.3: selection strategies overhead vs FF
     for sel in [Selection::StaggeredFirstFit, Selection::LeastUsed, Selection::RandomX(10)] {
-        bench(&format!("greedy {} (mesh)", sel.short_name()), &cfg, |i| {
+        b(&mut rep, &cfg, &format!("greedy {} (mesh)", sel.short_name()), |i| {
             greedy_color(&mesh, Ordering::Natural, sel, i as u64)
         });
     }
 
     // L3.4: orderings
     for ord in [Ordering::LargestFirst, Ordering::SmallestLast] {
-        bench(&format!("greedy FF {} (mesh)", ord.short_name()), &cfg, |i| {
+        b(&mut rep, &cfg, &format!("greedy FF {} (mesh)", ord.short_name()), |i| {
             greedy_color(&mesh, ord, Selection::FirstFit, i as u64)
         });
     }
@@ -56,36 +78,94 @@ fn main() {
     // L3.5: one recoloring iteration (target ≤ 1.3× greedy)
     let c0 = greedy_color(&mesh, Ordering::Natural, Selection::FirstFit, 1);
     let mut rng = Rng::new(9);
-    let rr = bench("recolor_once ND (mesh)", &cfg, |_| {
+    let rr = b(&mut rep, &cfg, "recolor_once ND (mesh)", |_| {
         recolor_once(&mesh, &c0, Permutation::NonDecreasing, &mut rng)
     });
     println!("    → {:.1}M edge-scans/s", mesh_edges / rr.min() / 1e6);
 
     // L3.6: partitioners
-    bench("block partition (mesh, 64 parts)", &cfg, |_| {
+    b(&mut rep, &cfg, "block partition (mesh, 64 parts)", |_| {
         partition::partition(&mesh, Partitioner::Block, 64, 1)
     });
-    bench("bfs-grow partition (mesh, 64 parts)", &cfg, |_| {
+    b(&mut rep, &cfg, "bfs-grow partition (mesh, 64 parts)", |_| {
         partition::partition(&mesh, Partitioner::BfsGrow, 64, 1)
     });
 
-    // L3.7: transport round-trip cost (real thread channel overhead)
-    let r = bench("transport 10k msgs ping-pong", &cfg, |_| {
+    // L3.7: transport bookkeeping, loopback (no thread channel in the way).
+    // "alloc" is the pre-pool shape — one fresh Vec per message, the
+    // received Vec dropped; "pooled" is the steady-state zero-allocation
+    // path. The ratio is the tentpole claim of the pooled transport.
+    let r_alloc = b(&mut rep, &cfg, "transport loopback 10k msgs (alloc per msg)", |_| {
+        let mut eps = network(1, NetworkModel::ideal());
+        let mut e = eps.pop().unwrap();
+        for i in 0..TRANSPORT_MSGS {
+            e.send(0, MsgKind::Colors, 0, i, vec![0u8; 64]);
+            let _ = e.recv_from(0, MsgKind::Colors, 0, i);
+        }
+        e
+    });
+    let r_pool = b(&mut rep, &cfg, "transport loopback 10k msgs (pooled)", |_| {
+        let mut eps = network(1, NetworkModel::ideal());
+        let mut e = eps.pop().unwrap();
+        let payload = [0u8; 64];
+        let mut out = Vec::new();
+        for i in 0..TRANSPORT_MSGS {
+            e.send_from(0, MsgKind::Colors, 0, i, &payload);
+            e.recv_into(0, MsgKind::Colors, 0, i, &mut out);
+        }
+        e
+    });
+    println!(
+        "    → {:.2}µs vs {:.2}µs per message — pooled speedup {:.2}×",
+        r_alloc.min() / TRANSPORT_MSGS as f64 * 1e6,
+        r_pool.min() / TRANSPORT_MSGS as f64 * 1e6,
+        r_alloc.min() / r_pool.min()
+    );
+
+    // L3.8: cross-thread exchange with both endpoints sending and
+    // receiving (the superstep traffic shape; pools self-sustain)
+    b(&mut rep, &cfg, "transport 2-proc exchange 10k msgs (pooled)", |_| {
         let mut eps = network(2, NetworkModel::ideal());
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
         let t = std::thread::spawn(move || {
-            for i in 0..10_000u32 {
-                e1.send(0, MsgKind::Colors, 0, i, vec![0u8; 8]);
+            let payload = [0u8; 64];
+            let mut out = Vec::new();
+            for i in 0..TRANSPORT_MSGS {
+                e1.send_from(0, MsgKind::Colors, 0, i, &payload);
+                e1.recv_into(0, MsgKind::Colors, 0, i, &mut out);
             }
             e1
         });
-        for i in 0..10_000u32 {
-            let _ = e0.recv_from(1, MsgKind::Colors, 0, i);
+        let payload = [0u8; 64];
+        let mut out = Vec::new();
+        for i in 0..TRANSPORT_MSGS {
+            e0.send_from(1, MsgKind::Colors, 0, i, &payload);
+            e0.recv_into(1, MsgKind::Colors, 0, i, &mut out);
         }
         t.join().unwrap()
     });
-    println!("    → {:.2}µs per message (real)", r.min() / 10_000.0 * 1e6);
+
+    // L3.9: dense ghost indexing — every ghost on every process once
+    let part = partition::partition(&mesh, Partitioner::BfsGrow, 16, 1);
+    let (_, locals) = build_local_graphs(&mesh, &part);
+    let queries: Vec<(usize, u32)> = locals
+        .iter()
+        .enumerate()
+        .flat_map(|(p, l)| l.global_ids[l.n_owned()..].iter().map(move |&g| (p, g)))
+        .collect();
+    let r = b(&mut rep, &cfg, "ghost local_of (mesh, 16 parts)", |_| {
+        let mut acc = 0u64;
+        for &(p, gid) in &queries {
+            acc += locals[p].local_of(gid) as u64;
+        }
+        acc
+    });
+    println!(
+        "    → {:.1}M ghost lookups/s ({} ghosts)",
+        queries.len() as f64 / r.min() / 1e6,
+        queries.len()
+    );
 
     // L1/L2: PJRT kernel batch latency (when artifacts are built)
     if dgcolor::runtime::KernelRuntime::artifacts_present() {
@@ -93,7 +173,7 @@ fn main() {
             dgcolor::runtime::KernelRuntime::load(&dgcolor::runtime::KernelRuntime::artifacts_dir())
                 .expect("artifacts load");
         let matrix = vec![-1i32; 256 * 64];
-        let r = bench("PJRT first_fit batch (256×64)", &cfg, |_| {
+        let r = b(&mut rep, &cfg, "PJRT first_fit batch (256×64)", |_| {
             rt.first_fit_batch(&matrix).unwrap()
         });
         println!(
@@ -102,14 +182,19 @@ fn main() {
             r.min() * 1e6 / 256.0
         );
         let u = vec![0.5f32; 256];
-        bench("PJRT random_x batch (256×64)", &cfg, |_| {
+        b(&mut rep, &cfg, "PJRT random_x batch (256×64)", |_| {
             rt.random_x_batch(&matrix, &u, 5).unwrap()
         });
         let e = vec![0i32; 4096];
-        bench("PJRT conflict batch (4096 edges)", &cfg, |_| {
+        b(&mut rep, &cfg, "PJRT conflict batch (4096 edges)", |_| {
             rt.conflict_batch(&e, &e, &e, &e, &e, &e).unwrap()
         });
     } else {
         println!("(PJRT kernel benches skipped: run `make artifacts`)");
+    }
+
+    if let Some(path) = args.get_str("json") {
+        rep.write(path).expect("write BENCH_perf.json");
+        println!("\nwrote {path}");
     }
 }

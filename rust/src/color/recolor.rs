@@ -155,7 +155,9 @@ pub fn recolor_order(coloring: &Coloring, perm: Permutation, rng: &mut Rng) -> V
 }
 
 /// One sequential recoloring iteration (first-fit; Culberson's theorem needs
-/// first-fit for monotonicity).
+/// first-fit for monotonicity). The pass allocates only the visit order and
+/// the output coloring: forbidden-color marking rides the stamped bit-set
+/// marker inside [`SelectState`], reset per vertex in O(1).
 pub fn recolor_once(
     g: &CsrGraph,
     coloring: &Coloring,

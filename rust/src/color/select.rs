@@ -63,6 +63,12 @@ impl Selection {
 /// Mutable per-processor state a selection strategy needs across a coloring
 /// sweep: the forbidden-marker, local color-usage counts (LeastUsed), the
 /// stagger offset (SFF) and the RNG (RandomX).
+///
+/// Forbidden colors are marked in the epoch-stamped bit-set
+/// [`ColorMarker`]: `begin_vertex` invalidates all marks in O(1) (no
+/// per-vertex clearing) and the palette scan reads 64 colors per word, so
+/// a whole coloring sweep performs zero heap allocations after the marker
+/// reaches the palette size.
 pub struct SelectState {
     pub strategy: Selection,
     pub marker: ColorMarker,

@@ -178,6 +178,7 @@ pub(crate) fn execute(
         metrics.sent_msgs = ep.sent_msgs;
         metrics.sent_bytes = ep.sent_bytes;
         metrics.recv_msgs = ep.recv_msgs;
+        metrics.dropped_msgs = ep.dropped_msgs;
         ProcResult {
             colors: state.owned_pairs(lg),
             metrics,

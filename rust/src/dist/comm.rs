@@ -10,6 +10,14 @@
 //! virtual time. Matching is exact on `(from, kind, round, seq)` with an
 //! out-of-order buffer, so processes may run arbitrarily far apart in real
 //! time while the virtual schedule stays deterministic.
+//!
+//! Payload buffers are pooled per endpoint ([`Endpoint::take_buf`] /
+//! [`Endpoint::send_from`] / [`Endpoint::recv_into`]): buffers ride the
+//! messages that carry them and are recycled on receive, so steady-state
+//! supersteps and collectives allocate nothing (DESIGN.md "Memory
+//! discipline on hot paths"). Pooling never changes a modeled quantity —
+//! `sent_msgs`, `sent_bytes` and the clocks are functions of payload
+//! lengths only.
 
 use crate::dist::cost::NetworkModel;
 use std::collections::VecDeque;
@@ -17,6 +25,36 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 
 /// Fixed accounting overhead per message (envelope: kind/round/seq/len).
 pub const MSG_HEADER_BYTES: usize = 16;
+
+/// Upper bound on buffers a pool retains; beyond it returned buffers are
+/// dropped so a burst (e.g. a serialized cleanup round) can't pin memory.
+const POOL_MAX_BUFFERS: usize = 1024;
+
+/// Free list of payload buffers. Buffers migrate with the messages that
+/// carry them: a send takes from the sender's pool, `recv_into` returns the
+/// transported buffer to the *receiver's* pool. Exchanges are symmetric
+/// (every data/collective message is answered within a round), so after
+/// warm-up each endpoint's pool is self-sustaining and steady-state sends
+/// allocate nothing.
+#[derive(Default)]
+struct BufferPool {
+    free: Vec<Vec<u8>>,
+}
+
+impl BufferPool {
+    #[inline]
+    fn take(&mut self) -> Vec<u8> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    #[inline]
+    fn put(&mut self, mut buf: Vec<u8>) {
+        if self.free.len() < POOL_MAX_BUFFERS {
+            buf.clear();
+            self.free.push(buf);
+        }
+    }
+}
 
 /// Message classes; part of the match key so phases can never steal each
 /// other's traffic even when processes drift apart in real time.
@@ -57,9 +95,19 @@ pub struct Endpoint {
     /// arrival time. `false` (asynchronous): data is consumed without
     /// advancing the clock, modeling fully overlapped communication.
     pub wait_on_recv: bool,
+    /// Messages whose receiver endpoint was already gone. Legal only during
+    /// an acknowledged shutdown (`teardown`); anywhere else a drop means a
+    /// protocol or pooling bug, so `send` debug-asserts it never happens.
+    pub dropped_msgs: u64,
+    /// Set by a caller that is intentionally racing its peers' shutdown;
+    /// silences the dropped-message debug assertion.
+    pub teardown: bool,
     txs: Vec<Sender<Message>>,
     rx: Receiver<Message>,
     pending: VecDeque<Message>,
+    pool: BufferPool,
+    /// Private staging for collective payloads (never escapes the endpoint).
+    coll_buf: Vec<u8>,
     coll_seq: u32,
 }
 
@@ -83,9 +131,13 @@ pub fn network(procs: usize, model: NetworkModel) -> Vec<Endpoint> {
             sent_bytes: 0,
             recv_msgs: 0,
             wait_on_recv: true,
+            dropped_msgs: 0,
+            teardown: false,
             txs: txs.clone(),
             rx,
             pending: VecDeque::new(),
+            pool: BufferPool::default(),
+            coll_buf: Vec::new(),
             coll_seq: 0,
         })
         .collect()
@@ -109,10 +161,60 @@ impl Endpoint {
         };
         if to == self.rank {
             self.pending.push_back(msg);
-        } else {
-            // receiver may already have shut down (harmless at teardown)
-            let _ = self.txs[to].send(msg);
+        } else if self.txs[to].send(msg).is_err() {
+            // counted as sent above (the wire cost was paid); the receiver's
+            // endpoint is gone, which only an acknowledged teardown permits
+            self.dropped_msgs += 1;
+            debug_assert!(
+                self.teardown,
+                "p{} dropped a {kind:?} message to p{to} outside teardown",
+                self.rank
+            );
         }
+    }
+
+    /// Take an empty pooled payload buffer. Fill it and pass it to [`send`]
+    /// (zero-copy); the transport hands it to the receiver's pool once
+    /// consumed via [`recv_into`]. Buffers not sent go back via [`put_buf`].
+    ///
+    /// [`send`]: Endpoint::send
+    /// [`recv_into`]: Endpoint::recv_into
+    /// [`put_buf`]: Endpoint::put_buf
+    #[inline]
+    pub fn take_buf(&mut self) -> Vec<u8> {
+        self.pool.take()
+    }
+
+    /// Return an unsent buffer to the pool.
+    #[inline]
+    pub fn put_buf(&mut self, buf: Vec<u8>) {
+        self.pool.put(buf);
+    }
+
+    /// Send a copy of `payload` in a pooled buffer — the allocation-free
+    /// counterpart of building a fresh `Vec` per [`send`](Endpoint::send).
+    /// Accounting and virtual-clock behavior are identical to `send`.
+    pub fn send_from(&mut self, to: usize, kind: MsgKind, round: u32, seq: u32, payload: &[u8]) {
+        let mut buf = self.pool.take();
+        buf.extend_from_slice(payload);
+        self.send(to, kind, round, seq, buf);
+    }
+
+    /// Receive the matching message into `out` (cleared first) and recycle
+    /// the transported buffer into this endpoint's pool — the steady-state
+    /// receive path: one `memcpy`, zero allocations.
+    pub fn recv_into(
+        &mut self,
+        from: usize,
+        kind: MsgKind,
+        round: u32,
+        seq: u32,
+        out: &mut Vec<u8>,
+    ) {
+        let payload = self.recv_from(from, kind, round, seq);
+        out.clear();
+        out.extend_from_slice(&payload);
+        self.pool.put(payload);
     }
 
     /// Blocking receive of the message matching `(from, kind, round, seq)`
@@ -157,20 +259,26 @@ impl Endpoint {
         if self.nprocs == 1 {
             return v;
         }
-        if self.rank == 0 {
+        // stage through the endpoint-owned collective buffer so per-round
+        // collectives allocate nothing in steady state
+        let mut buf = std::mem::take(&mut self.coll_buf);
+        let out = if self.rank == 0 {
             let mut acc = v;
             for p in 1..self.nprocs {
-                let data = self.recv_from(p, MsgKind::Collective, seq, 0);
-                acc = op(acc, decode_u64(&data));
+                self.recv_into(p, MsgKind::Collective, seq, 0, &mut buf);
+                acc = op(acc, decode_u64(&buf));
             }
             for p in 1..self.nprocs {
-                self.send(p, MsgKind::Collective, seq, 1, encode_u64(acc));
+                self.send_from(p, MsgKind::Collective, seq, 1, &acc.to_le_bytes());
             }
             acc
         } else {
-            self.send(0, MsgKind::Collective, seq, 0, encode_u64(v));
-            decode_u64(&self.recv_from(0, MsgKind::Collective, seq, 1))
-        }
+            self.send_from(0, MsgKind::Collective, seq, 0, &v.to_le_bytes());
+            self.recv_into(0, MsgKind::Collective, seq, 1, &mut buf);
+            decode_u64(&buf)
+        };
+        self.coll_buf = buf;
+        out
     }
 
     /// Global max. All processes must call every collective in the same
@@ -191,25 +299,29 @@ impl Endpoint {
         if self.nprocs == 1 {
             return;
         }
+        let mut buf = std::mem::take(&mut self.coll_buf);
         if self.rank == 0 {
             for p in 1..self.nprocs {
-                let data = self.recv_from(p, MsgKind::Collective, seq, 0);
-                let theirs = decode_u64s(&data);
-                assert_eq!(theirs.len(), vals.len(), "allreduce vec length mismatch");
-                for (a, b) in vals.iter_mut().zip(theirs) {
+                self.recv_into(p, MsgKind::Collective, seq, 0, &mut buf);
+                assert_eq!(buf.len(), vals.len() * 8, "allreduce vec length mismatch");
+                for (a, b) in vals.iter_mut().zip(decode_u64s_iter(&buf)) {
                     *a = a.wrapping_add(b);
                 }
             }
-            let payload = encode_u64s(vals);
+            encode_u64s_into(vals, &mut buf);
             for p in 1..self.nprocs {
-                self.send(p, MsgKind::Collective, seq, 1, payload.clone());
+                self.send_from(p, MsgKind::Collective, seq, 1, &buf);
             }
         } else {
-            self.send(0, MsgKind::Collective, seq, 0, encode_u64s(vals));
-            let data = self.recv_from(0, MsgKind::Collective, seq, 1);
-            let theirs = decode_u64s(&data);
-            vals.copy_from_slice(&theirs);
+            encode_u64s_into(vals, &mut buf);
+            self.send_from(0, MsgKind::Collective, seq, 0, &buf);
+            self.recv_into(0, MsgKind::Collective, seq, 1, &mut buf);
+            assert_eq!(buf.len(), vals.len() * 8, "allreduce vec length mismatch");
+            for (a, b) in vals.iter_mut().zip(decode_u64s_iter(&buf)) {
+                *a = b;
+            }
         }
+        self.coll_buf = buf;
     }
 
     /// Synchronize all processes (and, in synchronous mode, their clocks).
@@ -219,6 +331,11 @@ impl Endpoint {
 }
 
 // --- wire encoding -------------------------------------------------------
+//
+// Every format has an `_into` encoder (clears and fills a reusable buffer)
+// and an `_iter` decoder (streams straight off the payload slice) so hot
+// paths never allocate; the `Vec`-returning forms remain for tests and
+// cold paths.
 
 pub fn encode_u64(v: u64) -> Vec<u8> {
     v.to_le_bytes().to_vec()
@@ -230,62 +347,93 @@ pub fn decode_u64(b: &[u8]) -> u64 {
     u64::from_le_bytes(a)
 }
 
-pub fn encode_u64s(vs: &[u64]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(vs.len() * 8);
+pub fn encode_u64s_into(vs: &[u64], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(vs.len() * 8);
     for v in vs {
         out.extend_from_slice(&v.to_le_bytes());
     }
+}
+
+pub fn encode_u64s(vs: &[u64]) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_u64s_into(vs, &mut out);
     out
+}
+
+pub fn decode_u64s_iter(b: &[u8]) -> impl Iterator<Item = u64> + '_ {
+    b.chunks_exact(8).map(|c| {
+        let mut a = [0u8; 8];
+        a.copy_from_slice(c);
+        u64::from_le_bytes(a)
+    })
 }
 
 pub fn decode_u64s(b: &[u8]) -> Vec<u64> {
-    b.chunks_exact(8)
-        .map(|c| {
-            let mut a = [0u8; 8];
-            a.copy_from_slice(c);
-            u64::from_le_bytes(a)
-        })
-        .collect()
+    decode_u64s_iter(b).collect()
 }
 
-pub fn encode_u32s(vs: &[u32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(vs.len() * 4);
+pub fn encode_u32s_into(vs: &[u32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(vs.len() * 4);
     for v in vs {
         out.extend_from_slice(&v.to_le_bytes());
     }
+}
+
+pub fn encode_u32s(vs: &[u32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_u32s_into(vs, &mut out);
     out
+}
+
+pub fn decode_u32s_iter(b: &[u8]) -> impl Iterator<Item = u32> + '_ {
+    b.chunks_exact(4).map(|c| {
+        let mut a = [0u8; 4];
+        a.copy_from_slice(c);
+        u32::from_le_bytes(a)
+    })
 }
 
 pub fn decode_u32s(b: &[u8]) -> Vec<u32> {
-    b.chunks_exact(4)
-        .map(|c| {
-            let mut a = [0u8; 4];
-            a.copy_from_slice(c);
-            u32::from_le_bytes(a)
-        })
-        .collect()
+    decode_u32s_iter(b).collect()
+}
+
+/// Append one `(id, color)` pair to a wire buffer — for callers that build
+/// a payload directly in a pooled buffer without staging a pair list.
+#[inline]
+pub fn push_pair(out: &mut Vec<u8>, a: u32, b: u32) {
+    out.extend_from_slice(&a.to_le_bytes());
+    out.extend_from_slice(&b.to_le_bytes());
 }
 
 /// Encode `(id, color)` pairs — the boundary-update wire format.
-pub fn encode_pairs(ps: &[(u32, u32)]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(ps.len() * 8);
+pub fn encode_pairs_into(ps: &[(u32, u32)], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(ps.len() * 8);
     for &(a, b) in ps {
-        out.extend_from_slice(&a.to_le_bytes());
-        out.extend_from_slice(&b.to_le_bytes());
+        push_pair(out, a, b);
     }
+}
+
+pub fn encode_pairs(ps: &[(u32, u32)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_pairs_into(ps, &mut out);
     out
 }
 
+pub fn decode_pairs_iter(b: &[u8]) -> impl Iterator<Item = (u32, u32)> + '_ {
+    b.chunks_exact(8).map(|c| {
+        let mut x = [0u8; 4];
+        let mut y = [0u8; 4];
+        x.copy_from_slice(&c[..4]);
+        y.copy_from_slice(&c[4..]);
+        (u32::from_le_bytes(x), u32::from_le_bytes(y))
+    })
+}
+
 pub fn decode_pairs(b: &[u8]) -> Vec<(u32, u32)> {
-    b.chunks_exact(8)
-        .map(|c| {
-            let mut x = [0u8; 4];
-            let mut y = [0u8; 4];
-            x.copy_from_slice(&c[..4]);
-            y.copy_from_slice(&c[4..]);
-            (u32::from_le_bytes(x), u32::from_le_bytes(y))
-        })
-        .collect()
+    decode_pairs_iter(b).collect()
 }
 
 #[cfg(test)]
@@ -321,6 +469,92 @@ mod tests {
         assert!(p1.is_empty());
         assert_eq!(b.recv_msgs, 2);
         assert_eq!(b.sent_msgs, 0);
+    }
+
+    #[test]
+    fn pooled_send_recv_accounting_matches_alloc_path() {
+        // send_from/recv_into must be observationally identical to
+        // send/recv_from: same bytes, same counters, same clocks
+        let model = NetworkModel::new(1e-3, 1e-6);
+        let mut eps = network(2, model);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let payload = [7u8; 40];
+        a.send(1, MsgKind::Colors, 0, 0, payload.to_vec());
+        a.send_from(1, MsgKind::Colors, 0, 1, &payload);
+        assert_eq!(a.sent_msgs, 2);
+        assert_eq!(a.sent_bytes, 2 * (40 + MSG_HEADER_BYTES) as u64);
+        let t_alloc = {
+            let eps2 = network(2, model);
+            let mut e = eps2.into_iter().next().unwrap();
+            e.send(0, MsgKind::Colors, 0, 0, payload.to_vec()); // self-send
+            e.clock
+        };
+        let t_pool = {
+            let eps2 = network(2, model);
+            let mut e = eps2.into_iter().next().unwrap();
+            e.send_from(0, MsgKind::Colors, 0, 0, &payload);
+            e.clock
+        };
+        assert_eq!(t_alloc.to_bits(), t_pool.to_bits(), "clock charge diverged");
+        let v = b.recv_from(0, MsgKind::Colors, 0, 0);
+        let mut w = Vec::new();
+        b.recv_into(0, MsgKind::Colors, 0, 1, &mut w);
+        assert_eq!(v, payload.to_vec());
+        assert_eq!(w, payload.to_vec());
+        assert_eq!(b.recv_msgs, 2);
+    }
+
+    #[test]
+    fn buffers_recycle_through_the_pool() {
+        let mut eps = network(1, NetworkModel::ideal());
+        let mut e = eps.pop().unwrap();
+        let mut out = Vec::new();
+        // self-send loop: after the first iteration the pool feeds each
+        // send; recv_into keeps handing the buffer back
+        for i in 0..100u32 {
+            let mut buf = e.take_buf();
+            assert!(buf.is_empty());
+            buf.extend_from_slice(&i.to_le_bytes());
+            e.send(0, MsgKind::Colors, 0, i, buf);
+            e.recv_into(0, MsgKind::Colors, 0, i, &mut out);
+            assert_eq!(out, i.to_le_bytes().to_vec());
+        }
+        assert_eq!(e.sent_msgs, 100);
+        assert_eq!(e.recv_msgs, 100);
+        assert_eq!(e.dropped_msgs, 0);
+    }
+
+    #[test]
+    fn teardown_drops_are_counted() {
+        let mut eps = network(2, NetworkModel::ideal());
+        let mut a = eps.remove(0);
+        drop(eps); // receiver endpoint gone
+        a.teardown = true;
+        a.send(1, MsgKind::Colors, 0, 0, vec![1, 2, 3]);
+        assert_eq!(a.dropped_msgs, 1);
+        // the wire cost was still paid (accounting is send-side)
+        assert_eq!(a.sent_msgs, 1);
+        assert_eq!(a.sent_bytes, (3 + MSG_HEADER_BYTES) as u64);
+    }
+
+    #[test]
+    fn iter_decoders_match_vec_decoders() {
+        let vs = vec![0u64, 1, u64::MAX, 42];
+        let b = encode_u64s(&vs);
+        assert_eq!(decode_u64s_iter(&b).collect::<Vec<_>>(), vs);
+        let us = vec![7u32, 0, u32::MAX];
+        let b = encode_u32s(&us);
+        assert_eq!(decode_u32s_iter(&b).collect::<Vec<_>>(), us);
+        let ps = vec![(1u32, 2u32), (u32::MAX, 0), (9, 9)];
+        let mut buf = vec![0xAAu8; 3]; // _into must clear stale content
+        encode_pairs_into(&ps, &mut buf);
+        assert_eq!(decode_pairs_iter(&buf).collect::<Vec<_>>(), ps);
+        let mut manual = Vec::new();
+        for &(x, y) in &ps {
+            push_pair(&mut manual, x, y);
+        }
+        assert_eq!(manual, buf);
     }
 
     #[test]

@@ -89,6 +89,34 @@ fn epoch(round: u32, step: u64) -> u64 {
     ((round as u64) << 32) | step
 }
 
+/// Per-process staging reused across supersteps and rounds, so the
+/// steady-state superstep performs zero heap allocations (DESIGN.md
+/// "Memory discipline on hot paths"): boundary updates are staged in
+/// per-neighbor buffers, encoded into pooled transport buffers, and
+/// decoded from a single receive scratch.
+struct ExchangeScratch {
+    /// Per-neighbor `(global id, color)` staging, aligned with
+    /// `neighbor_procs`.
+    upd: Vec<Vec<(u32, u32)>>,
+    /// Receive/decode staging.
+    dec: Vec<u8>,
+    /// Per-process superstep counts of the current round.
+    steps_of: Vec<u64>,
+    /// Owner-dedup scratch for one boundary vertex.
+    parts: Vec<usize>,
+}
+
+impl ExchangeScratch {
+    fn for_graph(lg: &LocalGraph) -> Self {
+        ExchangeScratch {
+            upd: vec![Vec::new(); lg.neighbor_procs.len()],
+            dec: Vec::new(),
+            steps_of: vec![0; lg.nprocs],
+            parts: Vec::new(),
+        }
+    }
+}
+
 /// One process's share of a speculative distributed coloring.
 ///
 /// Colors `to_color` (owned local ids) into `state`, exchanging boundary
@@ -149,18 +177,19 @@ pub fn color_process(
     // Epoch (round, superstep) at which each local vertex was last colored.
     let mut colored_at: Vec<u64> = vec![u64::MAX; lg.n_local()];
     let mut round: u32 = 0;
-    let mut scratch_parts: Vec<usize> = Vec::new();
+    let mut scratch = ExchangeScratch::for_graph(lg);
+    let mut losers: Vec<u32> = Vec::new();
 
     loop {
         round += 1;
-        let my_steps = ((pending.len() + ss - 1) / ss) as u64;
+        let my_steps = pending.len().div_ceil(ss) as u64;
         // every process learns every step count, so pairs can skip the
         // exchange for supersteps where the sender has nothing to color —
         // conflict-resolution rounds stay cheap
-        let mut steps_of = vec![0u64; lg.nprocs];
-        steps_of[ep.rank] = my_steps;
-        ep.allreduce_sum_vec_u64(&mut steps_of);
-        let max_steps = steps_of.iter().copied().max().unwrap_or(0);
+        scratch.steps_of.fill(0);
+        scratch.steps_of[ep.rank] = my_steps;
+        ep.allreduce_sum_vec_u64(&mut scratch.steps_of);
+        let max_steps = scratch.steps_of.iter().copied().max().unwrap_or(0);
 
         for step in 0..max_steps {
             let lo = (step as usize) * ss;
@@ -191,40 +220,43 @@ pub fn color_process(
             // -- exchange: this batch's boundary colors, one message per
             //    neighbor per non-empty superstep (the step-count vector
             //    tells receivers which supersteps each sender skips)
-            let mut upd: Vec<Vec<(u32, u32)>> = vec![Vec::new(); lg.neighbor_procs.len()];
+            for u in scratch.upd.iter_mut() {
+                u.clear();
+            }
             for &v in batch {
                 if !lg.is_boundary[v as usize] {
                     continue;
                 }
-                scratch_parts.clear();
+                scratch.parts.clear();
                 let s = lg.csr.xadj[v as usize] as usize;
                 let e = lg.csr.xadj[v as usize + 1] as usize;
                 for &u in &lg.csr.adjncy[s..e] {
                     if (u as usize) >= n_owned {
-                        scratch_parts.push(lg.owner[u as usize] as usize);
+                        scratch.parts.push(lg.owner[u as usize] as usize);
                     }
                 }
-                scratch_parts.sort_unstable();
-                scratch_parts.dedup();
-                for &q in scratch_parts.iter() {
+                scratch.parts.sort_unstable();
+                scratch.parts.dedup();
+                for &q in scratch.parts.iter() {
                     let qi = lg.neighbor_procs.binary_search(&q).unwrap();
-                    upd[qi].push((lg.global_ids[v as usize], state.colors[v as usize]));
+                    scratch.upd[qi].push((lg.global_ids[v as usize], state.colors[v as usize]));
                 }
             }
             if step < my_steps {
                 for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
-                    let payload = comm::encode_pairs(&upd[qi]);
+                    let mut payload = ep.take_buf();
+                    comm::encode_pairs_into(&scratch.upd[qi], &mut payload);
                     ep.clock += cost.pack_cost(payload.len() as u64);
                     ep.send(q, MsgKind::Colors, round, step as u32, payload);
                 }
             }
             for &q in &lg.neighbor_procs {
-                if step >= steps_of[q] {
+                if step >= scratch.steps_of[q] {
                     continue; // that sender had no batch this superstep
                 }
-                let data = ep.recv_from(q, MsgKind::Colors, round, step as u32);
-                ep.clock += cost.pack_cost(data.len() as u64);
-                for (gid, c) in comm::decode_pairs(&data) {
+                ep.recv_into(q, MsgKind::Colors, round, step as u32, &mut scratch.dec);
+                ep.clock += cost.pack_cost(scratch.dec.len() as u64);
+                for (gid, c) in comm::decode_pairs_iter(&scratch.dec) {
                     let li = lg.local_of(gid) as usize;
                     state.colors[li] = c;
                     colored_at[li] = epoch(round, step);
@@ -243,7 +275,7 @@ pub fn color_process(
         // -- end-of-round sweep: same-superstep collisions on cut edges.
         // Updates from earlier supersteps were visible, so only equal
         // epochs can collide; the loser recolors next round.
-        let mut losers: Vec<u32> = Vec::new();
+        losers.clear();
         let mut sweep_scans: u64 = 0;
         for &v in &pending {
             if !lg.is_boundary[v as usize] {
@@ -287,11 +319,11 @@ pub fn color_process(
             break;
         }
         if round >= fw.max_rounds {
-            serial_cleanup(ep, lg, cost, &mut st, state, &losers, round + 1);
+            serial_cleanup(ep, lg, cost, &mut st, state, &losers, round + 1, &mut scratch);
             round += 1;
             break;
         }
-        pending = losers;
+        std::mem::swap(&mut pending, &mut losers);
     }
 
     metrics.rounds += round;
@@ -302,6 +334,7 @@ pub fn color_process(
 /// Worst-case safety valve: processes take turns (rank order) recoloring
 /// their remaining losers, so no two conflicting vertices ever choose
 /// concurrently and the result is conflict-free by construction.
+#[allow(clippy::too_many_arguments)]
 fn serial_cleanup(
     ep: &mut Endpoint,
     lg: &LocalGraph,
@@ -310,13 +343,15 @@ fn serial_cleanup(
     state: &mut ColorState,
     losers: &[u32],
     tag: u32,
+    scratch: &mut ExchangeScratch,
 ) {
     let n_owned = lg.n_owned();
     for r in 0..lg.nprocs {
         if lg.rank as usize == r {
             let mut scans: u64 = 0;
-            let mut upd: Vec<Vec<(u32, u32)>> = vec![Vec::new(); lg.neighbor_procs.len()];
-            let mut scratch: Vec<usize> = Vec::new();
+            for u in scratch.upd.iter_mut() {
+                u.clear();
+            }
             for &v in losers {
                 st.begin_vertex();
                 let s = lg.csr.xadj[v as usize] as usize;
@@ -329,26 +364,28 @@ fn serial_cleanup(
                     }
                 }
                 state.colors[v as usize] = st.pick();
-                scratch.clear();
+                scratch.parts.clear();
                 for &u in &lg.csr.adjncy[s..e] {
                     if (u as usize) >= n_owned {
-                        scratch.push(lg.owner[u as usize] as usize);
+                        scratch.parts.push(lg.owner[u as usize] as usize);
                     }
                 }
-                scratch.sort_unstable();
-                scratch.dedup();
-                for &q in scratch.iter() {
+                scratch.parts.sort_unstable();
+                scratch.parts.dedup();
+                for &q in scratch.parts.iter() {
                     let qi = lg.neighbor_procs.binary_search(&q).unwrap();
-                    upd[qi].push((lg.global_ids[v as usize], state.colors[v as usize]));
+                    scratch.upd[qi].push((lg.global_ids[v as usize], state.colors[v as usize]));
                 }
             }
             ep.clock += cost.color_cost(losers.len() as u64, scans);
             for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
-                ep.send(q, MsgKind::Colors, tag, r as u32, comm::encode_pairs(&upd[qi]));
+                let mut payload = ep.take_buf();
+                comm::encode_pairs_into(&scratch.upd[qi], &mut payload);
+                ep.send(q, MsgKind::Colors, tag, r as u32, payload);
             }
         } else if lg.neighbor_procs.binary_search(&r).is_ok() {
-            let data = ep.recv_from(r, MsgKind::Colors, tag, r as u32);
-            for (gid, c) in comm::decode_pairs(&data) {
+            ep.recv_into(r, MsgKind::Colors, tag, r as u32, &mut scratch.dec);
+            for (gid, c) in comm::decode_pairs_iter(&scratch.dec) {
                 state.colors[lg.local_of(gid) as usize] = c;
             }
         }

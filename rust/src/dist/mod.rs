@@ -46,6 +46,10 @@ pub struct ProcMetrics {
     pub sent_msgs: u64,
     pub sent_bytes: u64,
     pub recv_msgs: u64,
+    /// Messages whose receiver endpoint was already gone (see
+    /// [`Endpoint::dropped_msgs`]); nonzero only during acknowledged
+    /// teardown, and always zero for a completed job.
+    pub dropped_msgs: u64,
 }
 
 /// Job-level aggregation over all processes.
@@ -58,6 +62,8 @@ pub struct DistMetrics {
     pub total_bytes: u64,
     /// Total conflicts (one per conflicting cut edge per round).
     pub total_conflicts: u64,
+    /// Sum of teardown-dropped messages (zero for any completed job).
+    pub total_dropped: u64,
     /// Max conflict-resolution rounds over processes.
     pub rounds: u32,
     /// Virtual makespan: max final clock over processes.
@@ -86,6 +92,7 @@ impl DistMetrics {
             m.total_msgs += p.sent_msgs;
             m.total_bytes += p.sent_bytes;
             m.total_conflicts += p.conflicts;
+            m.total_dropped += p.dropped_msgs;
             m.rounds = m.rounds.max(p.rounds);
             if p.vtime > m.makespan {
                 m.makespan = p.vtime;

@@ -7,13 +7,20 @@
 //! (to owned and ghost neighbors alike, in local ids); ghosts have empty
 //! adjacency — a process never iterates a remote vertex's neighborhood,
 //! exactly as in the MPI original.
+//!
+//! Global→local lookup ([`LocalGraph::local_of`]) is dense: owned vertices
+//! resolve in O(1) through the shared [`GlobalMap`], ghosts by binary
+//! search over the sorted ghost tail of `global_ids` — no per-process hash
+//! map, no hashing on the boundary receive path.
 
 use crate::color::{Color, Coloring, UNCOLORED};
 use crate::graph::{CsrGraph, VertexId};
 use crate::partition::Partition;
-use std::collections::HashMap;
+use std::sync::Arc;
 
-/// Global vertex → (owner process, local index on the owner).
+/// Global vertex → (owner process, local index on the owner). Built once
+/// per partition and shared read-only by every [`LocalGraph`] — 8 bytes per
+/// global vertex total, instead of a per-process hash map over its locals.
 #[derive(Debug, Clone)]
 pub struct GlobalMap {
     pub owner: Vec<u32>,
@@ -41,8 +48,8 @@ pub struct LocalGraph {
     /// Per entry of `neighbor_procs`: owned local ids (ascending) whose
     /// colors that process needs (it holds them as ghosts).
     pub send_lists: Vec<Vec<u32>>,
-    /// Global id → local id for every vertex present here.
-    pub index: HashMap<VertexId, u32>,
+    /// The partition-wide vertex directory, shared across processes.
+    pub gmap: Arc<GlobalMap>,
 }
 
 impl LocalGraph {
@@ -56,15 +63,28 @@ impl LocalGraph {
         self.global_ids.len()
     }
 
-    /// Local id of a global vertex present on this process.
+    /// Local id of a global vertex present on this process: O(1) through
+    /// the shared [`GlobalMap`] for owned vertices, binary search over the
+    /// sorted ghost tail of `global_ids` otherwise. This is the boundary
+    /// receive path's lookup — dense reads instead of a hash probe per
+    /// ghost update.
     #[inline]
     pub fn local_of(&self, gid: VertexId) -> u32 {
-        self.index[&gid]
+        if self.gmap.owner[gid as usize] == self.rank {
+            return self.gmap.local[gid as usize];
+        }
+        let ghosts = &self.global_ids[self.owned_count..];
+        match ghosts.binary_search(&gid) {
+            Ok(j) => (self.owned_count + j) as u32,
+            Err(_) => panic!("vertex {gid} is not present on process {}", self.rank),
+        }
     }
 }
 
-/// Split `g` into per-process local views according to `part`.
-pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (GlobalMap, Vec<LocalGraph>) {
+/// Split `g` into per-process local views according to `part`. The
+/// returned [`GlobalMap`] is the same shared directory every local graph
+/// holds through [`LocalGraph::gmap`].
+pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (Arc<GlobalMap>, Vec<LocalGraph>) {
     assert_eq!(g.num_vertices(), part.parts.len());
     let nprocs = part.num_parts;
     let members = part.members();
@@ -77,6 +97,7 @@ pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (GlobalMap, Vec<Loc
             local[v as usize] = i as u32;
         }
     }
+    let gmap = Arc::new(GlobalMap { owner, local });
 
     let mut locals = Vec::with_capacity(nprocs);
     for (p, owned) in members.iter().enumerate() {
@@ -95,16 +116,18 @@ pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (GlobalMap, Vec<Loc
         ghosts.dedup();
 
         let n_local = n_owned + ghosts.len();
-        let mut index: HashMap<VertexId, u32> = HashMap::with_capacity(n_local);
         let mut global_ids: Vec<VertexId> = Vec::with_capacity(n_local);
-        for (i, &v) in owned.iter().enumerate() {
-            index.insert(v, i as u32);
-            global_ids.push(v);
-        }
-        for (j, &v) in ghosts.iter().enumerate() {
-            index.insert(v, (n_owned + j) as u32);
-            global_ids.push(v);
-        }
+        global_ids.extend_from_slice(owned);
+        global_ids.extend_from_slice(&ghosts);
+        // same lookup LocalGraph::local_of performs once constructed
+        let lid = |v: VertexId| -> u32 {
+            if gmap.owner[v as usize] == rank {
+                gmap.local[v as usize]
+            } else {
+                let j = ghosts.binary_search(&v).expect("neighbor is owned or ghost");
+                (n_owned + j) as u32
+            }
+        };
 
         let mut xadj = vec![0u64; n_local + 1];
         for (i, &u) in owned.iter().enumerate() {
@@ -116,7 +139,7 @@ pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (GlobalMap, Vec<Loc
         let mut adjncy: Vec<VertexId> = Vec::with_capacity(xadj[n_owned] as usize);
         for &u in owned {
             for &v in g.neighbors(u) {
-                adjncy.push(index[&v]);
+                adjncy.push(lid(v));
             }
         }
         let csr = CsrGraph::new(xadj, adjncy, format!("{}@p{p}", g.name));
@@ -125,10 +148,12 @@ pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (GlobalMap, Vec<Loc
             .iter()
             .map(|&v| g.neighbors(v).iter().any(|&u| part.part_of(u) != rank))
             .collect();
-        let owner_l: Vec<u32> = global_ids.iter().map(|&v| owner[v as usize]).collect();
+        let owner_l: Vec<u32> = global_ids.iter().map(|&v| gmap.owner[v as usize]).collect();
 
-        let mut neighbor_procs: Vec<usize> =
-            ghosts.iter().map(|&v| owner[v as usize] as usize).collect();
+        let mut neighbor_procs: Vec<usize> = ghosts
+            .iter()
+            .map(|&v| gmap.owner[v as usize] as usize)
+            .collect();
         neighbor_procs.sort_unstable();
         neighbor_procs.dedup();
 
@@ -160,10 +185,10 @@ pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (GlobalMap, Vec<Loc
             owner: owner_l,
             neighbor_procs,
             send_lists,
-            index,
+            gmap: Arc::clone(&gmap),
         });
     }
-    (GlobalMap { owner, local }, locals)
+    (gmap, locals)
 }
 
 /// Per-process color state over the local index space (owned + ghosts).
@@ -226,6 +251,32 @@ mod tests {
         assert_eq!(locals[0].csr.degree(3), 0);
         // owned adjacency is complete: local 2 sees local 1 and ghost 3
         assert_eq!(locals[0].csr.neighbors(2), &[1, 3]);
+    }
+
+    #[test]
+    fn local_of_resolves_every_local_vertex() {
+        let g = synth::erdos_renyi(200, 900, 4);
+        let part = partition::partition(&g, Partitioner::Block, 4, 1);
+        let (gmap, locals) = build_local_graphs(&g, &part);
+        for l in &locals {
+            for (i, &gid) in l.global_ids.iter().enumerate() {
+                assert_eq!(l.local_of(gid), i as u32, "p{} gid {gid}", l.rank);
+            }
+            // owned lookups come straight from the shared directory
+            for i in 0..l.n_owned() {
+                let gid = l.global_ids[i] as usize;
+                assert_eq!(gmap.owner[gid], l.rank);
+                assert_eq!(gmap.local[gid], i as u32);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not present")]
+    fn local_of_panics_for_absent_vertex() {
+        let g = synth::path(6); // blocks [0,1,2] [3,4,5]; vertex 5 not on p0
+        let locals = split(&g, 2);
+        locals[0].local_of(5);
     }
 
     #[test]

@@ -25,7 +25,7 @@
 
 use crate::color::recolor::{Permutation, RecolorSchedule};
 use crate::color::select::Selection;
-use crate::color::UNCOLORED;
+use crate::color::{Color, UNCOLORED};
 use crate::coordinator::event::{emit_rank0, Event, Observer};
 use crate::dist::comm::{self, Endpoint, MsgKind};
 use crate::dist::cost::CostModel;
@@ -113,6 +113,50 @@ pub fn build_plans(
         .collect()
 }
 
+/// Per-process staging for synchronous recoloring, reused across
+/// iterations so the per-class supersteps are allocation-free in steady
+/// state. Class-indexed vectors are resized per iteration (k changes as
+/// recoloring shrinks the palette) but keep their capacity.
+struct SyncScratch {
+    /// Global class sizes (allreduced).
+    sizes: Vec<u64>,
+    /// `sizes` as `usize` for the permutation API.
+    sizes_usize: Vec<usize>,
+    /// class → superstep of the current permutation.
+    step_of_class: Vec<u32>,
+    /// Counting-sort class offsets over owned vertices (`k + 1` entries).
+    class_start: Vec<usize>,
+    /// Scatter cursor of the counting sort.
+    cursor: Vec<usize>,
+    /// Owned members, class-consecutive, ascending id within a class.
+    members: Vec<u32>,
+    /// Per neighbor, per superstep: send-list members to update.
+    pair_sched: Vec<Vec<Vec<u32>>>,
+    /// Per neighbor: which supersteps the peer announced data for.
+    plans_in: Vec<Vec<bool>>,
+    /// The next coloring, staged over the local index space.
+    newc: Vec<Color>,
+    /// Receive/decode staging.
+    dec: Vec<u8>,
+}
+
+impl SyncScratch {
+    fn new(n_local: usize, npairs: usize) -> Self {
+        SyncScratch {
+            sizes: Vec::new(),
+            sizes_usize: Vec::new(),
+            step_of_class: Vec::new(),
+            class_start: Vec::new(),
+            cursor: Vec::new(),
+            members: Vec::new(),
+            pair_sched: vec![Vec::new(); npairs],
+            plans_in: vec![Vec::new(); npairs],
+            newc: vec![UNCOLORED; n_local],
+            dec: Vec::new(),
+        }
+    }
+}
+
 /// One process's share of synchronous recoloring. Appends the global color
 /// count after every iteration to `trace`; rank 0 mirrors each entry to
 /// `obs` as [`Event::RecolorIteration`]. With `cfg.early_stop` set, the
@@ -137,6 +181,11 @@ pub fn recolor_process_sync(
     let npairs = lg.neighbor_procs.len();
     let mut marker = ColorMarker::new(64);
 
+    // Staging reused across iterations (class counts resize per iteration,
+    // but capacity is retained): steady-state class supersteps allocate
+    // nothing (DESIGN.md "Memory discipline on hot paths").
+    let mut scratch = SyncScratch::new(n_local, npairs);
+
     for iter in 1..=cfg.iterations {
         let t0 = ep.clock;
         let mut plan_dt = 0.0;
@@ -154,102 +203,111 @@ pub fn recolor_process_sync(
             emit_rank0(obs, ep.rank, Event::RecolorIteration { iter, k: 0 });
             continue;
         }
-        let mut sizes = vec![0u64; k];
+        scratch.sizes.clear();
+        scratch.sizes.resize(k, 0);
         for v in 0..n_owned {
             let c = state.colors[v];
             if c != UNCOLORED {
-                sizes[c as usize] += 1;
+                scratch.sizes[c as usize] += 1;
             }
         }
-        ep.allreduce_sum_vec_u64(&mut sizes);
-        let sizes_usize: Vec<usize> = sizes.iter().map(|&s| s as usize).collect();
+        ep.allreduce_sum_vec_u64(&mut scratch.sizes);
+        scratch.sizes_usize.clear();
+        scratch.sizes_usize.extend(scratch.sizes.iter().map(|&s| s as usize));
         let perm = cfg.schedule.permutation_at(iter);
         let mut prng = perm_rng(cfg.seed, iter);
-        let class_order = perm.permute_classes(&sizes_usize, &mut prng);
-        let mut step_of_class = vec![0u32; k];
+        let class_order = perm.permute_classes(&scratch.sizes_usize, &mut prng);
+        scratch.step_of_class.clear();
+        scratch.step_of_class.resize(k, 0);
         for (t, &c) in class_order.iter().enumerate() {
-            step_of_class[c as usize] = t as u32;
+            scratch.step_of_class[c as usize] = t as u32;
         }
 
         // owned members per class, ascending local id (== ascending global
         // id), via counting sort — the sequential visit order, sharded
-        let mut class_start = vec![0usize; k + 1];
+        scratch.class_start.clear();
+        scratch.class_start.resize(k + 1, 0);
         for v in 0..n_owned {
             let c = state.colors[v];
             if c != UNCOLORED {
-                class_start[c as usize + 1] += 1;
+                scratch.class_start[c as usize + 1] += 1;
             }
         }
         for c in 0..k {
-            class_start[c + 1] += class_start[c];
+            scratch.class_start[c + 1] += scratch.class_start[c];
         }
-        let mut members = vec![0u32; class_start[k]];
-        let mut cursor = class_start.clone();
+        scratch.members.clear();
+        scratch.members.resize(scratch.class_start[k], 0);
+        scratch.cursor.clear();
+        scratch.cursor.extend_from_slice(&scratch.class_start);
         for v in 0..n_owned {
             let c = state.colors[v];
             if c != UNCOLORED {
-                members[cursor[c as usize]] = v as u32;
-                cursor[c as usize] += 1;
+                scratch.members[scratch.cursor[c as usize]] = v as u32;
+                scratch.cursor[c as usize] += 1;
             }
         }
         ep.clock += cost.color_cost(n_owned as u64, 0);
 
         // per-pair, per-step update lists from the old classes
-        let mut pair_sched: Vec<Vec<Vec<u32>>> = Vec::with_capacity(npairs);
-        for list in &lg.send_lists {
-            let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for buckets in scratch.pair_sched.iter_mut() {
+            for b in buckets.iter_mut() {
+                b.clear();
+            }
+            if buckets.len() < k {
+                buckets.resize_with(k, Vec::new);
+            }
+        }
+        for (qi, list) in lg.send_lists.iter().enumerate() {
             for &v in list {
                 let c = state.colors[v as usize];
                 if c != UNCOLORED {
-                    buckets[step_of_class[c as usize] as usize].push(v);
+                    let t = scratch.step_of_class[c as usize] as usize;
+                    scratch.pair_sched[qi][t].push(v);
                 }
             }
-            pair_sched.push(buckets);
         }
 
         // --- piggyback plan/deadline exchange
-        let mut plans_in: Vec<Vec<bool>> = Vec::new();
         if cfg.scheme == CommScheme::Piggyback {
             let tp0 = ep.clock;
             // derive each pair's plan from the same buckets that gate the
             // data sends below, so plan and schedule agree by construction
             // (build_plans is the pure spec of this, pinned by unit tests)
-            let plans_out: Vec<Vec<u32>> = pair_sched
-                .iter()
-                .map(|buckets| {
-                    buckets
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, b)| !b.is_empty())
-                        .map(|(t, _)| t as u32)
-                        .collect()
-                })
-                .collect();
             let planned_entries: u64 =
                 lg.send_lists.iter().map(|l| l.len() as u64).sum::<u64>() + k as u64;
             ep.clock += cost.color_cost(planned_entries, 0);
             for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
-                let payload = comm::encode_u32s(&plans_out[qi]);
+                let mut payload = ep.take_buf();
+                for (t, b) in scratch.pair_sched[qi][..k].iter().enumerate() {
+                    if !b.is_empty() {
+                        payload.extend_from_slice(&(t as u32).to_le_bytes());
+                    }
+                }
                 ep.clock += cost.pack_cost(payload.len() as u64);
                 ep.send(q, MsgKind::Plan, iter, 0, payload);
             }
-            for &q in &lg.neighbor_procs {
-                let data = ep.recv_from(q, MsgKind::Plan, iter, 0);
-                ep.clock += cost.pack_cost(data.len() as u64);
-                let mut flags = vec![false; k];
-                for t in comm::decode_u32s(&data) {
+            for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
+                ep.recv_into(q, MsgKind::Plan, iter, 0, &mut scratch.dec);
+                ep.clock += cost.pack_cost(scratch.dec.len() as u64);
+                let flags = &mut scratch.plans_in[qi];
+                flags.clear();
+                flags.resize(k, false);
+                for t in comm::decode_u32s_iter(&scratch.dec) {
                     flags[t as usize] = true;
                 }
-                plans_in.push(flags);
             }
             plan_dt = ep.clock - tp0;
             m.phases.add("plan", plan_dt);
         }
 
         // --- class supersteps: first-fit against the new coloring only
-        let mut newc = vec![UNCOLORED; n_local];
+        let newc = &mut scratch.newc;
+        newc.fill(UNCOLORED);
         for (t, &c) in class_order.iter().enumerate() {
-            let batch = &members[class_start[c as usize]..class_start[c as usize + 1]];
+            let lo = scratch.class_start[c as usize];
+            let hi = scratch.class_start[c as usize + 1];
+            let batch = &scratch.members[lo..hi];
             let mut scans: u64 = 0;
             for &v in batch {
                 marker.next_epoch();
@@ -267,34 +325,33 @@ pub fn recolor_process_sync(
             ep.clock += cost.color_cost(batch.len() as u64, scans);
 
             for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
-                let vs = &pair_sched[qi][t];
+                let vs = &scratch.pair_sched[qi][t];
                 if cfg.scheme == CommScheme::Piggyback && vs.is_empty() {
                     continue; // the plan told the receiver to skip this step
                 }
-                let pairs: Vec<(u32, u32)> = vs
-                    .iter()
-                    .map(|&v| (lg.global_ids[v as usize], newc[v as usize]))
-                    .collect();
-                let payload = comm::encode_pairs(&pairs);
+                let mut payload = ep.take_buf();
+                for &v in vs {
+                    comm::push_pair(&mut payload, lg.global_ids[v as usize], newc[v as usize]);
+                }
                 ep.clock += cost.pack_cost(payload.len() as u64);
                 ep.send(q, MsgKind::Recolor, iter, t as u32, payload);
             }
             for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
                 let expected = match cfg.scheme {
                     CommScheme::Base => true,
-                    CommScheme::Piggyback => plans_in[qi][t],
+                    CommScheme::Piggyback => scratch.plans_in[qi][t],
                 };
                 if !expected {
                     continue;
                 }
-                let data = ep.recv_from(q, MsgKind::Recolor, iter, t as u32);
-                ep.clock += cost.pack_cost(data.len() as u64);
-                for (gid, c) in comm::decode_pairs(&data) {
+                ep.recv_into(q, MsgKind::Recolor, iter, t as u32, &mut scratch.dec);
+                ep.clock += cost.pack_cost(scratch.dec.len() as u64);
+                for (gid, c) in comm::decode_pairs_iter(&scratch.dec) {
                     newc[lg.local_of(gid) as usize] = c;
                 }
             }
         }
-        state.colors.copy_from_slice(&newc);
+        state.colors.copy_from_slice(newc);
 
         // --- trace: global color count after this iteration
         let local_new_k = (0..n_owned)
@@ -329,6 +386,7 @@ pub fn recolor_process_sync(
     m.sent_msgs = ep.sent_msgs;
     m.sent_bytes = ep.sent_bytes;
     m.recv_msgs = ep.recv_msgs;
+    m.dropped_msgs = ep.dropped_msgs;
     m
 }
 

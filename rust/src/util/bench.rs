@@ -81,6 +81,57 @@ pub fn bench<T, F: FnMut(usize) -> T>(name: &str, cfg: &BenchConfig, mut f: F) -
     r
 }
 
+/// Machine-readable perf trajectory: collects [`BenchResult`]s and writes
+/// the `BENCH_perf.json` format documented in DESIGN.md ("Memory
+/// discipline on hot paths") —
+/// `{"_meta": {"format": 1}, "<name>": {"min": s, "median": s, "iters": n}, ...}`
+/// with times in seconds. Keys starting with `_` are metadata, not
+/// benchmarks.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    entries: Vec<(String, f64, f64, usize)>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, r: &BenchResult) {
+        self.entries
+            .push((r.name.clone(), r.min(), r.median(), r.samples_secs.len()));
+    }
+
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len());
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        // comma precedes each entry so an empty report is still valid JSON
+        let mut s = String::from("{\n  \"_meta\": {\"format\": 1}");
+        for (name, min, median, iters) in self.entries.iter() {
+            s.push_str(&format!(
+                ",\n  \"{}\": {{\"min\": {min:e}, \"median\": {median:e}, \"iters\": {iters}}}",
+                esc(name)
+            ));
+        }
+        s.push_str("\n}\n");
+        s
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
 /// Run `f` once and report its duration (for long end-to-end experiments
 /// where repetition is driven at a higher level).
 pub fn once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
@@ -118,5 +169,34 @@ mod tests {
         let (v, s) = once("compute", || 21 * 2);
         assert_eq!(v, 42);
         assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut rep = JsonReport::new();
+        rep.record(&BenchResult {
+            name: "a \"quoted\" bench".into(),
+            samples_secs: vec![0.5, 0.25, 1.0],
+        });
+        rep.record(&BenchResult {
+            name: "plain".into(),
+            samples_secs: vec![2.0],
+        });
+        let j = rep.to_json();
+        assert!(j.starts_with("{\n  \"_meta\": {\"format\": 1},\n"));
+        assert!(j.contains(
+            "\"a \\\"quoted\\\" bench\": {\"min\": 2.5e-1, \"median\": 5e-1, \"iters\": 3}"
+        ));
+        assert!(j.contains("\"plain\": {\"min\": 2e0, \"median\": 2e0, \"iters\": 1}"));
+        assert!(j.trim_end().ends_with('}'));
+        // exactly one comma between the two benchmark entries
+        assert_eq!(j.matches("},\n").count(), 2); // after _meta and entry 1
+    }
+
+    #[test]
+    fn json_report_empty_is_valid_json() {
+        // no entries → no trailing comma after the _meta object
+        let j = JsonReport::new().to_json();
+        assert_eq!(j, "{\n  \"_meta\": {\"format\": 1}\n}\n");
     }
 }

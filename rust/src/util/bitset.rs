@@ -88,31 +88,44 @@ impl BitSet {
     }
 }
 
-/// Stamped marker array: the O(1)-reset "forbidden colors" structure used by
-/// every greedy coloring inner loop.
+/// Stamped dense color marker: the O(1)-reset "forbidden colors" structure
+/// used by every greedy coloring inner loop.
 ///
-/// `mark(c)` stamps color `c` for the current vertex; advancing the epoch
-/// with `next_epoch()` invalidates all marks without touching memory. This is
-/// the standard trick that keeps the greedy loop allocation- and reset-free.
+/// Marks live in a bit set (`u64` words, as in [`BitSet`]) whose words are
+/// validated lazily by a per-word epoch stamp: advancing the epoch with
+/// `next_epoch()` invalidates every mark without touching memory, and a
+/// word's bits are only trusted when its stamp matches the current epoch, so
+/// no per-vertex clearing ever happens. Compared to one stamp per color, the
+/// palette scan (`first_unmarked`) inspects 64 colors per load instead of
+/// one, which keeps first-fit cheap once palettes grow past a few dozen
+/// colors (§Perf: `greedy`/`recolor_once` in `benches/perf.rs`).
 #[derive(Clone, Debug)]
 pub struct ColorMarker {
-    stamp: Vec<u32>,
+    /// Mark bits; word `w` is meaningful only when `word_epoch[w] == epoch`.
+    words: Vec<u64>,
+    /// Epoch at which each word of `words` was last written.
+    word_epoch: Vec<u32>,
     epoch: u32,
+    /// Colors `0..cap` are representable without growth.
+    cap: usize,
 }
 
 impl ColorMarker {
     /// `capacity` must exceed any color value that will be marked (Δ+1 is
     /// always enough for first-fit; Random-X may probe up to Δ+X).
     pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
         ColorMarker {
-            stamp: vec![0; capacity.max(1)],
+            words: vec![0; cap.div_ceil(64)],
+            word_epoch: vec![0; cap.div_ceil(64)],
             epoch: 0,
+            cap,
         }
     }
 
     #[inline]
     pub fn capacity(&self) -> usize {
-        self.stamp.len()
+        self.cap
     }
 
     /// Start marking for a new vertex.
@@ -121,7 +134,7 @@ impl ColorMarker {
         self.epoch = self.epoch.wrapping_add(1);
         if self.epoch == 0 {
             // wrapped: hard reset once every 2^32 epochs
-            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.word_epoch.iter_mut().for_each(|s| *s = 0);
             self.epoch = 1;
         }
     }
@@ -129,30 +142,47 @@ impl ColorMarker {
     /// Grow capacity (amortized; preserves current epoch marks as unmarked).
     #[inline]
     pub fn ensure(&mut self, capacity: usize) {
-        if capacity > self.stamp.len() {
-            self.stamp.resize(capacity.next_power_of_two(), 0);
+        if capacity > self.cap {
+            self.cap = capacity.next_power_of_two();
+            let nw = self.cap.div_ceil(64);
+            self.words.resize(nw, 0);
+            self.word_epoch.resize(nw, 0);
         }
     }
 
     #[inline]
     pub fn mark(&mut self, color: u32) {
         self.ensure(color as usize + 1);
-        self.stamp[color as usize] = self.epoch;
+        let c = color as usize;
+        let wi = c >> 6;
+        if self.word_epoch[wi] != self.epoch {
+            self.word_epoch[wi] = self.epoch;
+            self.words[wi] = 0;
+        }
+        self.words[wi] |= 1u64 << (c & 63);
     }
 
     #[inline]
     pub fn is_marked(&self, color: u32) -> bool {
-        (color as usize) < self.stamp.len() && self.stamp[color as usize] == self.epoch
+        let c = color as usize;
+        if c >= self.cap {
+            return false;
+        }
+        let wi = c >> 6;
+        self.word_epoch[wi] == self.epoch && (self.words[wi] >> (c & 63)) & 1 == 1
     }
 
-    /// Smallest unmarked color (first fit).
+    /// Smallest unmarked color (first fit). Scans 64 colors per word load;
+    /// a word whose stamp is stale counts as all-unmarked.
     #[inline]
     pub fn first_unmarked(&self) -> u32 {
-        let mut c = 0u32;
-        while (c as usize) < self.stamp.len() && self.stamp[c as usize] == self.epoch {
-            c += 1;
+        for (wi, (&w, &we)) in self.words.iter().zip(self.word_epoch.iter()).enumerate() {
+            let marked = if we == self.epoch { w } else { 0 };
+            if marked != u64::MAX {
+                return ((wi << 6) + (!marked).trailing_zeros() as usize) as u32;
+            }
         }
-        c
+        self.cap as u32
     }
 
     /// The `k`-th unmarked color (0-based) — Random-X-Fit picks uniformly
@@ -254,6 +284,54 @@ mod tests {
         m.mark(1000);
         assert!(m.is_marked(1000));
         assert!(!m.is_marked(999));
+    }
+
+    #[test]
+    fn marker_matches_naive_reference() {
+        // pin the word-backed marker against a HashSet-per-vertex reference
+        // across random mark patterns, growth, and many epochs
+        let mut m = ColorMarker::new(4);
+        let mut x = 0x2545_F491_4F6C_DD1Du64;
+        let mut rng = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        };
+        for _ in 0..500 {
+            m.next_epoch();
+            let mut reference = std::collections::HashSet::new();
+            for _ in 0..(rng() % 20) {
+                let c = (rng() % 300) as u32;
+                m.mark(c);
+                reference.insert(c);
+            }
+            let first = (0..).find(|c| !reference.contains(c)).unwrap();
+            assert_eq!(m.first_unmarked(), first);
+            for c in 0..310u32 {
+                assert_eq!(m.is_marked(c), reference.contains(&c), "color {c}");
+            }
+            let k = (rng() % 5) as u32;
+            let kth = (0..)
+                .filter(|c| !reference.contains(c))
+                .nth(k as usize)
+                .unwrap();
+            assert_eq!(m.kth_unmarked(k), kth);
+        }
+    }
+
+    #[test]
+    fn marker_full_word_scans_past() {
+        // 64 marked colors fill word 0 exactly; the scan must move on
+        let mut m = ColorMarker::new(128);
+        m.next_epoch();
+        for c in 0..64 {
+            m.mark(c);
+        }
+        assert_eq!(m.first_unmarked(), 64);
+        m.mark(64);
+        m.mark(65);
+        assert_eq!(m.first_unmarked(), 66);
     }
 
     #[test]

@@ -7,9 +7,11 @@ use dgcolor::color::recolor::{Permutation, RecolorSchedule};
 use dgcolor::color::{Ordering, Selection};
 use dgcolor::coordinator::{ColoringConfig, Job, RecolorMode, RunResult, Session};
 use dgcolor::dist::cost::CostModel;
+use dgcolor::dist::proc::build_local_graphs;
 use dgcolor::dist::recolor::{CommScheme, RecolorConfig};
 use dgcolor::dist::NetworkModel;
 use dgcolor::graph::{CsrGraph, GraphBuilder};
+use dgcolor::partition::{self, Partitioner};
 use dgcolor::util::prop::{check, PropConfig};
 use dgcolor::util::Rng;
 
@@ -170,6 +172,61 @@ fn prop_sync_recolor_trace_is_monotone() {
             }
             if *r.recolor_trace.last().unwrap() != r.num_colors {
                 return Err("trace tail != final colors".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dense_lookup_agrees_with_hashmap_reference() {
+    // `LocalGraph::local_of` (O(1) GlobalMap read for owned vertices +
+    // binary search over the sorted ghost tail) must agree with the
+    // HashMap the old implementation kept, on every vertex of every
+    // process, across random graphs, partitioners, and process counts.
+    check(
+        "dense ghost indexing == HashMap reference",
+        PropConfig { cases: 40, seed: 0xD15B },
+        |rng, _| {
+            let g = random_graph(rng);
+            let procs = rng.range(1, 9);
+            let partitioner = if rng.chance(0.5) {
+                Partitioner::Block
+            } else {
+                Partitioner::BfsGrow
+            };
+            let part = partition::partition(&g, partitioner, procs, rng.next_u64());
+            let (gmap, locals) = build_local_graphs(&g, &part);
+            for lg in &locals {
+                let mut reference = std::collections::HashMap::new();
+                for (i, &gid) in lg.global_ids.iter().enumerate() {
+                    reference.insert(gid, i as u32);
+                }
+                for (&gid, &li) in reference.iter() {
+                    if lg.local_of(gid) != li {
+                        return Err(format!(
+                            "p{}: local_of({gid}) = {} != {li}",
+                            lg.rank,
+                            lg.local_of(gid)
+                        ));
+                    }
+                }
+                // owned lookups are direct GlobalMap reads — pin the
+                // directory itself so the O(1) path can't silently rot
+                for i in 0..lg.n_owned() {
+                    let gid = lg.global_ids[i] as usize;
+                    if gmap.owner[gid] != lg.rank || gmap.local[gid] != i as u32 {
+                        return Err(format!(
+                            "p{}: GlobalMap disagrees at gid {gid}: owner {} local {}",
+                            lg.rank, gmap.owner[gid], gmap.local[gid]
+                        ));
+                    }
+                }
+                // ghost tail must be sorted or the binary search is unsound
+                let ghosts = &lg.global_ids[lg.n_owned()..];
+                if !ghosts.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(format!("p{}: ghost tail not strictly sorted", lg.rank));
+                }
             }
             Ok(())
         },
