@@ -1,0 +1,75 @@
+//! BSP step engine end-to-end check (the CI oversubscription guard): run
+//! one small sweep — framework coloring + 2× piggybacked RC-ND — on the
+//! step engine at growing process counts, re-run p=64 on the
+//! thread-per-process reference runner, and **assert** the two paths agree
+//! bit-for-bit on every modeled quantity while reporting both simulator
+//! wallclocks. A regression that re-introduces blocking/oversubscription
+//! in the engine shows up as a wallclock blowup or an assert here.
+//!
+//! Run: `cargo run --release --example bsp_engine`
+
+use dgcolor::coordinator::job::nd;
+use dgcolor::coordinator::{Job, Session};
+use dgcolor::dist::{CostModel, Engine};
+use dgcolor::graph::rmat::{self, RmatParams};
+use dgcolor::util::table::{fmt_secs, Table};
+
+fn main() -> dgcolor::util::error::Result<()> {
+    let g = rmat::generate(&RmatParams::er(13, 8), 7, "er13");
+    println!(
+        "RMAT-ER scale 13: |V|={} |E|={} Δ={}\n",
+        g.num_vertices(),
+        g.num_edges(),
+        g.max_degree(),
+    );
+    let session = Session::new(g).with_cost_model(CostModel::fixed());
+
+    let mut t = Table::new(
+        "FSS + 2×RC-ND(piggyback) on the BSP step engine",
+        &["procs", "colors", "msgs", "virtual time", "sim wall"],
+    );
+    for p in [4usize, 16, 64] {
+        let r = Job::on(&session)
+            .procs(p)
+            .sync_recolor(nd(2))
+            .engine(Engine::Bsp)
+            .run()?;
+        t.row(&[
+            p.to_string(),
+            r.num_colors.to_string(),
+            r.metrics.total_msgs.to_string(),
+            fmt_secs(r.metrics.makespan),
+            fmt_secs(r.metrics.wall_secs),
+        ]);
+    }
+    t.print();
+
+    // reference check at the largest scale: the thread runner must agree
+    // on every modeled quantity, bit for bit
+    let job = |engine| {
+        Job::on(&session)
+            .procs(64)
+            .sync_recolor(nd(2))
+            .engine(engine)
+            .build()
+            .unwrap()
+    };
+    let by_engine = session.run(&job(Engine::Bsp))?;
+    let by_threads = session.run(&job(Engine::Threads))?;
+    assert_eq!(by_engine.coloring.colors, by_threads.coloring.colors);
+    assert_eq!(by_engine.recolor_trace, by_threads.recolor_trace);
+    assert_eq!(by_engine.metrics.total_msgs, by_threads.metrics.total_msgs);
+    assert_eq!(by_engine.metrics.total_bytes, by_threads.metrics.total_bytes);
+    assert_eq!(
+        by_engine.metrics.makespan.to_bits(),
+        by_threads.metrics.makespan.to_bits()
+    );
+    assert_eq!(by_engine.metrics.total_dropped, 0);
+    println!(
+        "\np=64 engine vs thread runner: identical results ✓  \
+         (sim wall {} vs {})",
+        fmt_secs(by_engine.metrics.wall_secs),
+        fmt_secs(by_threads.metrics.wall_secs),
+    );
+    Ok(())
+}

@@ -15,9 +15,11 @@ mod common;
 
 use dgcolor::color::recolor::{recolor_once, Permutation};
 use dgcolor::color::{greedy_color, Ordering, Selection};
+use dgcolor::coordinator::{Job, Session};
 use dgcolor::dist::comm::{network, MsgKind};
-use dgcolor::dist::proc::build_local_graphs;
-use dgcolor::dist::NetworkModel;
+use dgcolor::dist::cost::CostModel;
+use dgcolor::dist::proc::{build_local_graphs, build_local_graphs_parallel};
+use dgcolor::dist::{Engine, NetworkModel};
 use dgcolor::graph::rmat::{self, RmatParams};
 use dgcolor::graph::synth;
 use dgcolor::partition::{self, Partitioner};
@@ -165,6 +167,61 @@ fn main() {
         "    → {:.1}M ghost lookups/s ({} ghosts)",
         queries.len() as f64 / r.min() / 1e6,
         queries.len()
+    );
+
+    // L3.10: BSP step engine vs thread-per-proc runner at growing process
+    // counts (same modeled results — tests pin bit-for-bit equality — so
+    // the ratio is pure simulator wallclock). The thread runner pays one
+    // OS thread per simulated process; the engine runs every process on
+    // min(cores, p) pooled workers, so the gap widens with p.
+    let dist_g = rmat::generate(&RmatParams::er(14, 8), 11, "er14");
+    let session = Session::new(dist_g).with_cost_model(CostModel::fixed());
+    for procs in [4usize, 16, 64, 256] {
+        let job = |engine: Engine| {
+            Job::on(&session)
+                .procs(procs)
+                .engine(engine)
+                .build()
+                .unwrap()
+        };
+        // warm the partition + local-graph cache: both paths then measure
+        // only the distributed run itself
+        session.run(&job(Engine::Bsp)).expect("warmup run");
+        let rt = b(
+            &mut rep,
+            &cfg,
+            &format!("dist run p={procs} (thread runner, er14)"),
+            |_| session.run(&job(Engine::Threads)).unwrap().num_colors,
+        );
+        let re = b(
+            &mut rep,
+            &cfg,
+            &format!("dist run p={procs} (step engine, er14)"),
+            |_| session.run(&job(Engine::Bsp)).unwrap().num_colors,
+        );
+        println!(
+            "    → step engine {:.2}× vs thread runner at p={procs}",
+            rt.min() / re.min()
+        );
+    }
+
+    // L3.11: local-graph artifacts — fresh serial build vs the pooled
+    // parallel build vs a session cache hit (Arc clone, effectively free)
+    let part64 = partition::partition(session.graph(), Partitioner::BfsGrow, 64, 1);
+    b(&mut rep, &cfg, "local graphs p=64 build (serial, er14)", |_| {
+        build_local_graphs(session.graph(), &part64)
+    });
+    b(&mut rep, &cfg, "local graphs p=64 build (pooled, er14)", |_| {
+        build_local_graphs_parallel(session.graph(), &part64)
+    });
+    let handle = session.partition(Partitioner::BfsGrow, 64, 1);
+    handle.locals(session.graph()); // populate the cache
+    let rc = b(&mut rep, &cfg, "local graphs p=64 (session cached)", |_| {
+        handle.locals(session.graph()).locals.len()
+    });
+    println!(
+        "    → cached local-graph lookup {:.3}µs (vs a full rebuild per run)",
+        rc.min() * 1e6
     );
 
     // L1/L2: PJRT kernel batch latency (when artifacts are built)

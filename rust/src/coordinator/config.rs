@@ -5,7 +5,7 @@ use crate::color::recolor::{Permutation, RecolorSchedule};
 use crate::color::{Ordering, Selection};
 use crate::dist::cost::CostModel;
 use crate::dist::recolor::{CommScheme, RecolorConfig};
-use crate::dist::NetworkModel;
+use crate::dist::{Engine, NetworkModel};
 use crate::partition::Partitioner;
 use crate::util::args::Args;
 use crate::util::error::{Context, Error, Result};
@@ -51,6 +51,10 @@ pub struct ColoringConfig {
     /// `stop_when_improvement_below`. Requires a recoloring mode; not
     /// encoded in [`ColoringConfig::label`].
     pub early_stop: Option<f64>,
+    /// Which execution path simulates the processes. Never changes a
+    /// modeled quantity (colors, messages, bytes, clocks) — only the
+    /// simulator's wallclock — so it is not encoded in the label.
+    pub engine: Engine,
 }
 
 impl Default for ColoringConfig {
@@ -67,6 +71,7 @@ impl Default for ColoringConfig {
             network: NetworkModel::default(),
             fixed_cost: None,
             early_stop: None,
+            engine: Engine::Auto,
         }
     }
 }
@@ -109,8 +114,8 @@ impl ColoringConfig {
     /// Parse from CLI arguments (`--procs`, `--ordering`, `--selection`,
     /// `--superstep`, `--async`, `--recolor <n>`, `--arc`, `--schedule`,
     /// `--scheme`, `--partitioner`, `--seed`, `--ideal-net`,
-    /// `--stop-eps <f>`). Parse-only: validation happens when the config
-    /// becomes a [`Job`](super::Job).
+    /// `--stop-eps <f>`, `--engine auto|threads|bsp`). Parse-only:
+    /// validation happens when the config becomes a [`Job`](super::Job).
     pub fn from_args(a: &Args) -> Result<Self> {
         let mut cfg = ColoringConfig {
             num_procs: a.get_or("procs", 4usize)?,
@@ -130,6 +135,9 @@ impl ColoringConfig {
         }
         if a.has_flag("ideal-net") {
             cfg.network = NetworkModel::ideal();
+        }
+        if let Some(s) = a.get_str("engine") {
+            cfg.engine = s.parse().map_err(Error::msg)?;
         }
         if let Some(s) = a.get_str("stop-eps") {
             let eps: f64 = s
@@ -238,6 +246,16 @@ mod tests {
         assert_eq!(cfg.early_stop, Some(0.05));
         assert!(ColoringConfig::from_args(&parse("--stop-eps nope")).is_err());
         assert_eq!(ColoringConfig::from_args(&parse("")).unwrap().early_stop, None);
+    }
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!(ColoringConfig::from_args(&parse("")).unwrap().engine, Engine::Auto);
+        let cfg = ColoringConfig::from_args(&parse("--engine threads")).unwrap();
+        assert_eq!(cfg.engine, Engine::Threads);
+        let cfg = ColoringConfig::from_args(&parse("--engine bsp")).unwrap();
+        assert_eq!(cfg.engine, Engine::Bsp);
+        assert!(ColoringConfig::from_args(&parse("--engine warp")).is_err());
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::color::recolor::{Permutation, RecolorSchedule};
 use crate::color::{Ordering, Selection};
 use crate::dist::cost::{CostModel, NetworkModel};
 use crate::dist::recolor::{CommScheme, RecolorConfig};
+use crate::dist::Engine;
 use crate::partition::Partitioner;
 use crate::util::error::Result;
 use crate::{bail, ensure};
@@ -110,6 +111,13 @@ fn validate(cfg: &ColoringConfig) -> Result<()> {
             "early stop requires a recoloring mode (it bounds recoloring iterations)"
         );
         validate_eps(cfg.early_stop)?;
+    }
+    if cfg.engine == Engine::Bsp {
+        ensure!(
+            !matches!(cfg.recolor, RecolorMode::Async { .. }),
+            "the BSP step engine does not run aRC — use Engine::Auto (falls back to \
+             threads) or Engine::Threads for async recoloring"
+        );
     }
     Ok(())
 }
@@ -192,6 +200,15 @@ impl<'s> JobBuilder<'s> {
     /// calibrated model.
     pub fn fixed_cost(mut self, cost: CostModel) -> Self {
         self.cfg.fixed_cost = Some(cost);
+        self
+    }
+
+    /// Which execution path simulates the processes ([`Engine::Auto`] by
+    /// default: the BSP step engine, with a thread-runner fallback for
+    /// aRC). Never changes a modeled quantity — only the simulator's
+    /// wallclock.
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.cfg.engine = engine;
         self
     }
 
@@ -377,6 +394,23 @@ mod tests {
     #[test]
     fn unbound_builder_cannot_run() {
         assert!(Job::builder().run().is_err());
+    }
+
+    #[test]
+    fn bsp_engine_rejects_arc_but_auto_accepts_it() {
+        let arc = Job::builder()
+            .async_recolor(Permutation::NonDecreasing, 1)
+            .engine(Engine::Bsp)
+            .build();
+        assert!(arc.is_err(), "explicit Bsp + aRC must be rejected");
+        for engine in [Engine::Auto, Engine::Threads] {
+            assert!(Job::builder()
+                .async_recolor(Permutation::NonDecreasing, 1)
+                .engine(engine)
+                .build()
+                .is_ok());
+        }
+        assert!(Job::builder().engine(Engine::Bsp).sync_recolor(nd(2)).build().is_ok());
     }
 
     #[test]

@@ -12,14 +12,15 @@ use super::config::{ColoringConfig, RecolorMode};
 use super::event::{emit_rank0, Event, Observer, Phase};
 use super::job::Job;
 use crate::color::Coloring;
-use crate::dist::framework::{self, FrameworkConfig};
-use crate::dist::proc::ColorState;
-use crate::dist::recolor;
-use crate::dist::runner::{run_distributed, ProcResult};
-use crate::dist::{CostModel, DistMetrics};
+use crate::dist::engine::{self, Engine, StepOutcome, StepProcess};
+use crate::dist::framework::{self, FrameworkConfig, FrameworkStep};
+use crate::dist::proc::{build_local_graphs, ColorState, LocalGraph};
+use crate::dist::recolor::{self, RecolorConfig, SyncRcStep};
+use crate::dist::runner::{run_distributed_with, ProcResult};
+use crate::dist::{CostModel, DistMetrics, Endpoint, ProcMetrics};
 use crate::err;
 use crate::graph::CsrGraph;
-use crate::partition::{self, Partition, PartitionMetrics};
+use crate::partition::{self, PartitionMetrics};
 use crate::util::error::Result;
 
 /// Everything a run produces.
@@ -59,14 +60,27 @@ impl RunResult {
     }
 }
 
+/// Which execution path runs the distributed section of a job. aRC owns
+/// data-dependent blocking structure, so it stays on the thread runner;
+/// everything else is bulk-synchronous and defaults to the step engine.
+fn resolve_engine(engine: Engine, recolor: &RecolorMode) -> Engine {
+    let arc = matches!(recolor, RecolorMode::Async { .. });
+    match engine {
+        Engine::Threads => Engine::Threads,
+        // validation rejects Bsp+aRC; Auto falls back
+        Engine::Auto | Engine::Bsp if arc => Engine::Threads,
+        Engine::Auto | Engine::Bsp => Engine::Bsp,
+    }
+}
+
 /// Run a validated job against pre-built artifacts. This is the shared
 /// core under [`Session::run`](super::Session::run) and the [`run_job`]
-/// shim: everything per-graph (partition, metrics, cost model) comes in
-/// from the caller, so sessions can cache it across jobs.
+/// shim: everything per-graph (partition metrics, local graphs, cost
+/// model) comes in from the caller, so sessions can cache it across jobs.
 pub(crate) fn execute(
     g: &CsrGraph,
-    part: &Partition,
     part_metrics: &PartitionMetrics,
+    locals: &[LocalGraph],
     cost: &CostModel,
     job: &Job,
     obs: Option<&dyn Observer>,
@@ -101,7 +115,18 @@ pub(crate) fn execute(
     let early_stop = cfg.early_stop;
     let cost = *cost;
 
-    let mut outcome = run_distributed(g, part, cfg.network, |ep, lg| {
+    if resolve_engine(cfg.engine, &recolor_mode) == Engine::Bsp {
+        let rc_cfg = match &recolor_mode {
+            RecolorMode::Sync(rc) => Some(*rc),
+            _ => None,
+        };
+        let outcome = engine::run_steps(g.num_vertices(), locals, cfg.network, |lg| {
+            JobMachine::new(lg, &fw, &cost, rc_cfg, obs)
+        });
+        return finalize(g, part_metrics, cfg, outcome, obs);
+    }
+
+    let outcome = run_distributed_with(g, locals, cfg.network, |ep, lg| {
         let mut state = ColorState::uncolored(lg);
         let to_color: Vec<u32> = (0..lg.n_owned() as u32).collect();
         let mut metrics =
@@ -184,7 +209,18 @@ pub(crate) fn execute(
             metrics,
         }
     });
+    finalize(g, part_metrics, cfg, outcome, obs)
+}
 
+/// The engine-independent tail of a run: validate, take the trace, emit
+/// the closing events, assemble the [`RunResult`].
+fn finalize(
+    g: &CsrGraph,
+    part_metrics: &PartitionMetrics,
+    cfg: &ColoringConfig,
+    mut outcome: crate::dist::DistOutcome,
+    obs: Option<&dyn Observer>,
+) -> Result<RunResult> {
     if let Some(o) = obs {
         o.on_event(&Event::PhaseStarted {
             phase: Phase::Validation,
@@ -220,6 +256,140 @@ pub(crate) fn execute(
     })
 }
 
+/// The pipeline closure above as a step machine for the BSP engine: the
+/// framework port, the initial-count allreduce (booked under "comm"), the
+/// recoloring phase event, the sync-RC port, and the final cumulative
+/// accounting — in exactly the thread closure's order, so both execution
+/// paths are bit-for-bit interchangeable.
+struct JobMachine<'a> {
+    lg: &'a LocalGraph,
+    cost: CostModel,
+    obs: Option<&'a dyn Observer>,
+    rc_cfg: Option<RecolorConfig>,
+    fw: Option<FrameworkStep<'a>>,
+    rc: Option<SyncRcStep<'a>>,
+    metrics: ProcMetrics,
+    colors: Option<ColorState>,
+    comm_t0: f64,
+    coll_seq: u32,
+    coll_acc: u64,
+    state: JobState,
+}
+
+enum JobState {
+    Framework,
+    InitKSend,
+    InitKReduce,
+    InitKFinish,
+    Recolor,
+    Finalize,
+}
+
+impl<'a> JobMachine<'a> {
+    fn new(
+        lg: &'a LocalGraph,
+        fw: &FrameworkConfig,
+        cost: &CostModel,
+        rc_cfg: Option<RecolorConfig>,
+        obs: Option<&'a dyn Observer>,
+    ) -> Self {
+        let to_color: Vec<u32> = (0..lg.n_owned() as u32).collect();
+        let colors = ColorState::uncolored(lg);
+        JobMachine {
+            lg,
+            cost: *cost,
+            obs,
+            rc_cfg,
+            fw: Some(FrameworkStep::new(lg, fw, cost, colors, to_color, None, obs)),
+            rc: None,
+            metrics: ProcMetrics::default(),
+            colors: None,
+            comm_t0: 0.0,
+            coll_seq: 0,
+            coll_acc: 0,
+            state: JobState::Framework,
+        }
+    }
+}
+
+impl StepProcess for JobMachine<'_> {
+    fn step(&mut self, ep: &mut Endpoint) -> StepOutcome {
+        match self.state {
+            JobState::Framework => {
+                if self.fw.as_mut().expect("framework machine").step_once(ep) {
+                    let (colors, metrics) = self.fw.take().unwrap().into_parts();
+                    self.colors = Some(colors);
+                    self.metrics = metrics;
+                    self.state = JobState::InitKSend;
+                }
+            }
+            JobState::InitKSend => {
+                // the initial color count is the first trace entry; the
+                // allreduce's virtual time is booked under "comm"
+                self.comm_t0 = ep.clock;
+                let colors = self.colors.as_ref().unwrap();
+                let local_kmax = (0..self.lg.n_owned())
+                    .map(|v| colors.colors[v] as u64 + 1)
+                    .max()
+                    .unwrap_or(0);
+                self.coll_acc = local_kmax;
+                self.coll_seq = ep.coll_send_u64(local_kmax);
+                self.state = JobState::InitKReduce;
+            }
+            JobState::InitKReduce => {
+                if ep.rank == 0 {
+                    self.coll_acc = ep.coll_reduce_u64(self.coll_seq, self.coll_acc, u64::max);
+                }
+                self.state = JobState::InitKFinish;
+            }
+            JobState::InitKFinish => {
+                let initial_k = ep.coll_finish_u64(self.coll_seq, self.coll_acc);
+                self.metrics.phases.add("comm", ep.clock - self.comm_t0);
+                self.metrics.recolor_trace.push(initial_k as usize);
+                match self.rc_cfg {
+                    Some(rc) => {
+                        emit_rank0(
+                            self.obs,
+                            ep.rank,
+                            Event::PhaseStarted {
+                                phase: Phase::Recoloring,
+                            },
+                        );
+                        let colors = self.colors.take().unwrap();
+                        self.rc = Some(SyncRcStep::new(self.lg, &self.cost, rc, colors, self.obs));
+                        self.state = JobState::Recolor;
+                    }
+                    None => self.state = JobState::Finalize,
+                }
+            }
+            JobState::Recolor => {
+                if self.rc.as_mut().expect("rc machine").step_once(ep) {
+                    let (colors, trace, m) = self.rc.take().unwrap().into_parts();
+                    self.colors = Some(colors);
+                    self.metrics.phases.merge(&m.phases);
+                    self.metrics.conflicts += m.conflicts;
+                    self.metrics.recolor_trace.extend(trace);
+                    self.state = JobState::Finalize;
+                }
+            }
+            JobState::Finalize => {
+                // final accounting comes from the endpoint (cumulative)
+                self.metrics.vtime = ep.clock;
+                self.metrics.sent_msgs = ep.sent_msgs;
+                self.metrics.sent_bytes = ep.sent_bytes;
+                self.metrics.recv_msgs = ep.recv_msgs;
+                self.metrics.dropped_msgs = ep.dropped_msgs;
+                let colors = self.colors.take().unwrap();
+                return StepOutcome::Done(ProcResult {
+                    colors: colors.owned_pairs(self.lg),
+                    metrics: std::mem::take(&mut self.metrics),
+                });
+            }
+        }
+        StepOutcome::Running
+    }
+}
+
 /// Run a full distributed coloring job and validate the result.
 ///
 /// Kept as a one-shot shim: it re-partitions the graph and re-resolves the
@@ -236,8 +406,9 @@ pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
     let job = Job::from_config(*cfg)?;
     let part = partition::partition(g, cfg.partitioner, cfg.num_procs, cfg.seed);
     let part_metrics = partition::metrics(g, &part);
+    let (_, locals) = build_local_graphs(g, &part);
     let cost = cfg.cost_model();
-    execute(g, &part, &part_metrics, &cost, &job, None)
+    execute(g, &part_metrics, &locals, &cost, &job, None)
 }
 
 #[cfg(test)]
@@ -310,6 +481,68 @@ mod tests {
         // one processor, no boundary, no conflicts
         assert_eq!(r.metrics.total_conflicts, 0);
         assert!(r.num_colors <= 4);
+    }
+
+    /// Thread runner and BSP step engine must be interchangeable: same
+    /// colors, traces, accounting bits, and the same event stream.
+    #[test]
+    fn thread_and_bsp_engines_are_bit_for_bit_interchangeable() {
+        use crate::coordinator::EventLog;
+        use crate::dist::Engine;
+        let s = session(synth::fem_like(1200, 10.0, 26, 0.004, 2, "fem"));
+        let builders: Vec<Job> = vec![
+            Job::on(&s).procs(6).speed().build().unwrap(),
+            Job::on(&s).procs(5).quality().build().unwrap(),
+            Job::on(&s)
+                .procs(4)
+                .selection(Selection::RandomX(7))
+                .superstep(32)
+                .sync_recolor(nd(3))
+                .build()
+                .unwrap(),
+            Job::on(&s).procs(3).async_comm().build().unwrap(),
+            Job::on(&s).procs(1).quality().build().unwrap(),
+        ];
+        for job in builders {
+            let mut cfg = *job.config();
+            cfg.engine = Engine::Threads;
+            let log_t = EventLog::new();
+            let t = s
+                .run_observed(&Job::from_config(cfg).unwrap(), &log_t)
+                .unwrap();
+            cfg.engine = Engine::Bsp;
+            let log_e = EventLog::new();
+            let e = s
+                .run_observed(&Job::from_config(cfg).unwrap(), &log_e)
+                .unwrap();
+            assert_eq!(t.coloring.colors, e.coloring.colors, "{}", cfg.label());
+            assert_eq!(t.recolor_trace, e.recolor_trace, "{}", cfg.label());
+            assert_eq!(t.num_colors, e.num_colors);
+            assert_eq!(t.metrics.total_msgs, e.metrics.total_msgs, "{}", cfg.label());
+            assert_eq!(t.metrics.total_bytes, e.metrics.total_bytes);
+            assert_eq!(t.metrics.total_conflicts, e.metrics.total_conflicts);
+            assert_eq!(t.metrics.total_dropped, 0);
+            assert_eq!(e.metrics.total_dropped, 0);
+            assert_eq!(
+                t.metrics.makespan.to_bits(),
+                e.metrics.makespan.to_bits(),
+                "makespan diverged for {}",
+                cfg.label()
+            );
+            assert_eq!(log_t.take(), log_e.take(), "event streams must match");
+        }
+    }
+
+    #[test]
+    fn arc_jobs_fall_back_to_threads_under_auto() {
+        // aRC under the default Auto engine must keep working (thread path)
+        let s = session(synth::grid2d(16, 16));
+        let r = Job::on(&s)
+            .procs(4)
+            .async_recolor(Permutation::NonDecreasing, 2)
+            .run()
+            .unwrap();
+        assert_eq!(r.recolor_trace.len(), 3);
     }
 
     #[test]

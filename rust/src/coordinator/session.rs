@@ -1,13 +1,19 @@
 //! Reusable run state: a [`Session`] owns a graph plus cached, keyed
 //! artifacts and runs many jobs against them.
 //!
-//! `run_job` re-partitions the graph and re-calibrates the cost model on
-//! every call, so a 64-config sweep pays for identical partitioning work
-//! 64 times. A session does each only once:
+//! The deprecated `run_job` shim re-partitions the graph, rebuilds every
+//! per-process local view and re-calibrates the cost model on every call,
+//! so a 64-config sweep pays for identical preparation work 64 times. A
+//! session does each only once:
 //!
 //! * **Partitions** are cached per `(partitioner, num_procs, seed)` key —
 //!   every job that shares the key reuses the `Partition` and its
 //!   [`PartitionMetrics`] (both deterministic functions of the key).
+//! * **Local graphs** — the per-process views with ghosts the distributed
+//!   phases run on — are built lazily per cached partition, in parallel on
+//!   the worker pool ([`build_local_graphs_parallel`]), and shared as
+//!   `Arc<[LocalGraph]>` + `Arc<GlobalMap>` by every subsequent run of the
+//!   same key ([`PartitionHandle::locals`]).
 //! * **The cost model** is calibrated at most once per session (jobs with
 //!   an explicit `fixed_cost` bypass it).
 //!
@@ -16,48 +22,112 @@
 //! pure speedup. `partition_calls()` exposes the cache's miss count; the
 //! sweep tests pin "one partition per key per sweep" with it. Sessions
 //! are `Send + Sync`, so a multi-graph sweep can run one session per
-//! thread. The cache never evicts on its own — a proc-count sweep on a
-//! huge graph touches each key once, so call
-//! [`Session::clear_cached_partitions`] between scales to bound
-//! retention.
+//! thread.
+//!
+//! The cache holds at most [`Session::partition_cache_cap`] keys
+//! (default [`DEFAULT_PARTITION_CACHE_CAP`]); inserting past the cap
+//! evicts the least-recently-used entry and counts it in
+//! [`Session::partition_evictions`], so a long process-count sweep on a
+//! huge graph does not hold every scale's ghosts alive. Handles already
+//! held by callers stay valid after eviction (they are `Arc`s);
+//! re-requesting an evicted key recomputes it.
+//! [`Session::clear_cached_partitions`] still drops everything at once.
 
 use super::event::{Event, Observer, Phase};
 use super::job::Job;
 use super::pipeline::{self, RunResult};
 use crate::dist::cost::CostModel;
+use crate::dist::proc::{build_local_graphs_parallel, GlobalMap, LocalGraph};
 use crate::graph::CsrGraph;
 use crate::partition::{self, Partition, PartitionMetrics, Partitioner};
 use crate::util::error::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
-/// A partition together with its quality metrics, cached per key.
+/// Default bound on cached partition keys per session.
+pub const DEFAULT_PARTITION_CACHE_CAP: usize = 32;
+
+/// The distributed-run artifacts derived from one partition: the shared
+/// vertex directory and every process's local view, both `Arc`-shared
+/// across runs (and across the simulated processes of each run).
+#[derive(Debug, Clone)]
+pub struct LocalArtifacts {
+    pub gmap: Arc<GlobalMap>,
+    pub locals: Arc<[LocalGraph]>,
+}
+
+/// A partition together with its quality metrics and lazily-built local
+/// graphs, cached per key.
 #[derive(Debug)]
 pub struct PartitionHandle {
     pub partition: Partition,
     pub metrics: PartitionMetrics,
+    locals: OnceLock<LocalArtifacts>,
+}
+
+impl PartitionHandle {
+    fn new(partition: Partition, metrics: PartitionMetrics) -> PartitionHandle {
+        PartitionHandle {
+            partition,
+            metrics,
+            locals: OnceLock::new(),
+        }
+    }
+
+    /// The per-process local views of this partition, built on first use
+    /// (in parallel on the worker pool) and shared by every later run of
+    /// the same key.
+    pub fn locals(&self, g: &CsrGraph) -> &LocalArtifacts {
+        self.locals.get_or_init(|| {
+            let (gmap, locals) = build_local_graphs_parallel(g, &self.partition);
+            LocalArtifacts {
+                gmap,
+                locals: locals.into(),
+            }
+        })
+    }
+
+    /// Whether the local views were already built.
+    pub fn has_locals(&self) -> bool {
+        self.locals.get().is_some()
+    }
 }
 
 type PartKey = (Partitioner, usize, u64);
+
+struct CacheEntry {
+    handle: Arc<PartitionHandle>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct PartitionCache {
+    map: HashMap<PartKey, CacheEntry>,
+    tick: u64,
+}
 
 /// Owns a graph and the per-graph artifacts jobs share. See the module
 /// docs; construct with [`Session::new`], run with [`Session::run`] or the
 /// fluent [`Job::on`](super::Job::on).
 pub struct Session {
     graph: CsrGraph,
-    partitions: Mutex<HashMap<PartKey, Arc<PartitionHandle>>>,
+    partitions: Mutex<PartitionCache>,
     cost: Mutex<Option<CostModel>>,
     partition_calls: AtomicUsize,
+    evictions: AtomicUsize,
+    cache_cap: usize,
 }
 
 impl Session {
     pub fn new(graph: CsrGraph) -> Session {
         Session {
             graph,
-            partitions: Mutex::new(HashMap::new()),
+            partitions: Mutex::new(PartitionCache::default()),
             cost: Mutex::new(None),
             partition_calls: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+            cache_cap: DEFAULT_PARTITION_CACHE_CAP,
         }
     }
 
@@ -66,6 +136,14 @@ impl Session {
     /// precedence.
     pub fn with_cost_model(self, cost: CostModel) -> Session {
         *self.cost.lock().unwrap() = Some(cost);
+        self
+    }
+
+    /// Bound the partition/local-graph cache at `cap` keys (>= 1); the
+    /// least-recently-used entry is evicted past it.
+    pub fn with_partition_cache_cap(mut self, cap: usize) -> Session {
+        assert!(cap >= 1, "partition cache cap must be at least 1");
+        self.cache_cap = cap;
         self
     }
 
@@ -82,7 +160,7 @@ impl Session {
     }
 
     /// The partition for `(partitioner, num_procs, seed)`, computed on
-    /// first use and cached.
+    /// first use and cached (bounded LRU — see the module docs).
     pub fn partition(
         &self,
         partitioner: Partitioner,
@@ -90,18 +168,35 @@ impl Session {
         seed: u64,
     ) -> Arc<PartitionHandle> {
         let key = (partitioner, num_procs, seed);
-        let mut map = self.partitions.lock().unwrap();
-        if let Some(h) = map.get(&key) {
-            return Arc::clone(h);
+        let mut cache = self.partitions.lock().unwrap();
+        cache.tick += 1;
+        let tick = cache.tick;
+        if let Some(e) = cache.map.get_mut(&key) {
+            e.last_used = tick;
+            return Arc::clone(&e.handle);
         }
         self.partition_calls.fetch_add(1, Ordering::Relaxed);
         let p = partition::partition(&self.graph, partitioner, num_procs, seed);
         let metrics = partition::metrics(&self.graph, &p);
-        let h = Arc::new(PartitionHandle {
-            partition: p,
-            metrics,
-        });
-        map.insert(key, Arc::clone(&h));
+        let h = Arc::new(PartitionHandle::new(p, metrics));
+        if cache.map.len() >= self.cache_cap {
+            if let Some(lru) = cache
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                cache.map.remove(&lru);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        cache.map.insert(
+            key,
+            CacheEntry {
+                handle: Arc::clone(&h),
+                last_used: tick,
+            },
+        );
         h
     }
 
@@ -110,16 +205,26 @@ impl Session {
         self.partition_calls.load(Ordering::Relaxed)
     }
 
+    /// How many cached partitions were evicted by the LRU bound.
+    pub fn partition_evictions(&self) -> usize {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// The cache bound (see [`Session::with_partition_cache_cap`]).
+    pub fn partition_cache_cap(&self) -> usize {
+        self.cache_cap
+    }
+
     /// How many distinct partition keys are cached.
     pub fn cached_partitions(&self) -> usize {
-        self.partitions.lock().unwrap().len()
+        self.partitions.lock().unwrap().map.len()
     }
 
     /// Drop every cached partition (the miss counter keeps counting).
     /// Useful mid-session when sweeping keys that are never revisited —
     /// e.g. one job per process count on a huge graph.
     pub fn clear_cached_partitions(&self) {
-        self.partitions.lock().unwrap().clear();
+        self.partitions.lock().unwrap().map.clear();
     }
 
     /// Run one job against the session's cached artifacts.
@@ -148,7 +253,8 @@ impl Session {
         }
         let part = self.partition(cfg.partitioner, cfg.num_procs, cfg.seed);
         let cost = cfg.fixed_cost.unwrap_or_else(|| self.cost_model());
-        pipeline::execute(&self.graph, &part.partition, &part.metrics, &cost, job, obs)
+        let arts = part.locals(&self.graph);
+        pipeline::execute(&self.graph, &part.metrics, &arts.locals, &cost, job, obs)
     }
 }
 
@@ -174,6 +280,50 @@ mod tests {
         assert_eq!(s.cached_partitions(), 0);
         s.partition(Partitioner::Block, 4, 1);
         assert_eq!(s.partition_calls(), 5);
+    }
+
+    #[test]
+    fn lru_bound_evicts_and_counts() {
+        let s = Session::new(synth::grid2d(10, 10)).with_partition_cache_cap(2);
+        assert_eq!(s.partition_cache_cap(), 2);
+        let h1 = s.partition(Partitioner::Block, 2, 1);
+        s.partition(Partitioner::Block, 3, 1);
+        assert_eq!(s.partition_evictions(), 0);
+        // touch key 1 so key 2 is the LRU, then insert a third
+        s.partition(Partitioner::Block, 2, 1);
+        s.partition(Partitioner::Block, 4, 1);
+        assert_eq!(s.cached_partitions(), 2);
+        assert_eq!(s.partition_evictions(), 1);
+        // key 1 survived (recently used), key 2 was evicted
+        assert_eq!(s.partition_calls(), 3);
+        s.partition(Partitioner::Block, 2, 1);
+        assert_eq!(s.partition_calls(), 3, "key 1 must still be cached");
+        s.partition(Partitioner::Block, 3, 1);
+        assert_eq!(s.partition_calls(), 4, "key 2 was evicted, recomputes");
+        // an evicted handle held by the caller keeps working
+        assert_eq!(h1.partition.num_parts, 2);
+    }
+
+    #[test]
+    fn locals_are_built_once_per_key_and_shared() {
+        let g = synth::grid2d(14, 14);
+        let s = Session::new(g).with_cost_model(CostModel::fixed());
+        let h = s.partition(Partitioner::Block, 4, 1);
+        assert!(!h.has_locals(), "locals are lazy");
+        let a = h.locals(s.graph());
+        assert!(h.has_locals());
+        assert_eq!(a.locals.len(), 4);
+        let b = h.locals(s.graph());
+        assert!(
+            Arc::ptr_eq(&a.locals, &b.locals) && Arc::ptr_eq(&a.gmap, &b.gmap),
+            "locals must be built once and shared"
+        );
+        // a run through the same key reuses the same artifacts
+        let job = Job::on(&s).procs(4).build().unwrap();
+        s.run(&job).unwrap();
+        let c = s.partition(Partitioner::Block, 4, 1);
+        assert!(Arc::ptr_eq(&h, &c));
+        assert!(Arc::ptr_eq(&a.locals, &c.locals(s.graph()).locals));
     }
 
     #[test]

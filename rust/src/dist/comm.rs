@@ -240,6 +240,49 @@ impl Endpoint {
         }
     }
 
+    /// Non-blocking receive of the message matching `(from, kind, round,
+    /// seq)`, which **must already have been sent**. This is the BSP step
+    /// engine's receive path: the engine's delivery discipline guarantees
+    /// every message consumed in engine step *k* was sent in an earlier
+    /// step, so a miss is a protocol bug and panics loudly instead of
+    /// deadlocking a pooled worker. Accounting and clock behavior are
+    /// identical to [`recv_from`](Endpoint::recv_from).
+    pub fn try_recv_from(&mut self, from: usize, kind: MsgKind, round: u32, seq: u32) -> Vec<u8> {
+        while let Ok(m) = self.rx.try_recv() {
+            self.pending.push_back(m);
+        }
+        if let Some(i) = self
+            .pending
+            .iter()
+            .position(|m| m.from == from && m.kind == kind && m.round == round && m.seq == seq)
+        {
+            let m = self.pending.remove(i).unwrap();
+            return self.consume(m);
+        }
+        panic!(
+            "BSP delivery invariant violated: p{} expected {kind:?} round {round} seq {seq} \
+             from p{from} but it was never delivered",
+            self.rank
+        );
+    }
+
+    /// [`try_recv_from`](Endpoint::try_recv_from) into a reusable buffer,
+    /// recycling the transported buffer — the engine counterpart of
+    /// [`recv_into`](Endpoint::recv_into).
+    pub fn try_recv_into(
+        &mut self,
+        from: usize,
+        kind: MsgKind,
+        round: u32,
+        seq: u32,
+        out: &mut Vec<u8>,
+    ) {
+        let payload = self.try_recv_from(from, kind, round, seq);
+        out.clear();
+        out.extend_from_slice(&payload);
+        self.pool.put(payload);
+    }
+
     fn consume(&mut self, m: Message) -> Vec<u8> {
         self.recv_msgs += 1;
         if self.wait_on_recv && m.arrival > self.clock {
@@ -327,6 +370,120 @@ impl Endpoint {
     /// Synchronize all processes (and, in synchronous mode, their clocks).
     pub fn barrier(&mut self) {
         self.allreduce_max_u64(0);
+    }
+
+    // --- split collectives (BSP step engine) -----------------------------
+    //
+    // The blocking allreduces above interleave sends and receives across
+    // ranks, which only works when every rank runs on its own thread. The
+    // step engine instead splits each collective into three engine steps
+    // that never block:
+    //
+    //   1. `coll_send_*`   — every rank draws the sequence number; ranks
+    //                        != 0 send their contribution to rank 0.
+    //   2. `coll_reduce_*` — rank 0 folds the contributions (in rank
+    //                        order, exactly as the blocking reduction) and
+    //                        broadcasts the result; other ranks idle.
+    //   3. `coll_finish_*` — ranks != 0 receive the result; rank 0 (and
+    //                        the single-process case) returns its value.
+    //
+    // Per rank this performs the *same* sends and receives, in the same
+    // order, with the same payloads as the blocking counterpart, so every
+    // modeled quantity — messages, bytes, virtual clocks — is bit-for-bit
+    // identical (`split_collectives_match_blocking` pins this).
+
+    /// Phase 1 of a split allreduce over one `u64`; returns the sequence
+    /// number to pass to the later phases.
+    pub fn coll_send_u64(&mut self, v: u64) -> u32 {
+        let seq = self.next_coll();
+        if self.nprocs > 1 && self.rank != 0 {
+            self.send_from(0, MsgKind::Collective, seq, 0, &v.to_le_bytes());
+        }
+        seq
+    }
+
+    /// Phase 2: rank 0 folds every contribution into `v` with `op` and
+    /// broadcasts; must only be called on rank 0 (no-op when single-proc).
+    pub fn coll_reduce_u64(&mut self, seq: u32, v: u64, op: fn(u64, u64) -> u64) -> u64 {
+        if self.nprocs == 1 {
+            return v;
+        }
+        debug_assert_eq!(self.rank, 0, "coll_reduce is rank 0's phase");
+        let mut buf = std::mem::take(&mut self.coll_buf);
+        let mut acc = v;
+        for p in 1..self.nprocs {
+            self.try_recv_into(p, MsgKind::Collective, seq, 0, &mut buf);
+            acc = op(acc, decode_u64(&buf));
+        }
+        for p in 1..self.nprocs {
+            self.send_from(p, MsgKind::Collective, seq, 1, &acc.to_le_bytes());
+        }
+        self.coll_buf = buf;
+        acc
+    }
+
+    /// Phase 3: the reduced value. Rank 0 passes what `coll_reduce_u64`
+    /// returned; other ranks' `acc` argument is ignored (they receive).
+    pub fn coll_finish_u64(&mut self, seq: u32, acc: u64) -> u64 {
+        if self.nprocs == 1 || self.rank == 0 {
+            return acc;
+        }
+        let mut buf = std::mem::take(&mut self.coll_buf);
+        self.try_recv_into(0, MsgKind::Collective, seq, 1, &mut buf);
+        let out = decode_u64(&buf);
+        self.coll_buf = buf;
+        out
+    }
+
+    /// Phase 1 of a split element-wise vector sum (every process passes
+    /// the same length, as in [`allreduce_sum_vec_u64`]).
+    ///
+    /// [`allreduce_sum_vec_u64`]: Endpoint::allreduce_sum_vec_u64
+    pub fn coll_send_vec_u64(&mut self, vals: &[u64]) -> u32 {
+        let seq = self.next_coll();
+        if self.nprocs > 1 && self.rank != 0 {
+            let mut buf = std::mem::take(&mut self.coll_buf);
+            encode_u64s_into(vals, &mut buf);
+            self.send_from(0, MsgKind::Collective, seq, 0, &buf);
+            self.coll_buf = buf;
+        }
+        seq
+    }
+
+    /// Phase 2 (rank 0 only): fold contributions into `vals` and broadcast.
+    pub fn coll_reduce_vec_u64(&mut self, seq: u32, vals: &mut [u64]) {
+        if self.nprocs == 1 {
+            return;
+        }
+        debug_assert_eq!(self.rank, 0, "coll_reduce is rank 0's phase");
+        let mut buf = std::mem::take(&mut self.coll_buf);
+        for p in 1..self.nprocs {
+            self.try_recv_into(p, MsgKind::Collective, seq, 0, &mut buf);
+            assert_eq!(buf.len(), vals.len() * 8, "allreduce vec length mismatch");
+            for (a, b) in vals.iter_mut().zip(decode_u64s_iter(&buf)) {
+                *a = a.wrapping_add(b);
+            }
+        }
+        encode_u64s_into(vals, &mut buf);
+        for p in 1..self.nprocs {
+            self.send_from(p, MsgKind::Collective, seq, 1, &buf);
+        }
+        self.coll_buf = buf;
+    }
+
+    /// Phase 3: ranks != 0 overwrite `vals` with the broadcast result;
+    /// rank 0 (whose `vals` were reduced in place) is a no-op.
+    pub fn coll_finish_vec_u64(&mut self, seq: u32, vals: &mut [u64]) {
+        if self.nprocs == 1 || self.rank == 0 {
+            return;
+        }
+        let mut buf = std::mem::take(&mut self.coll_buf);
+        self.try_recv_into(0, MsgKind::Collective, seq, 1, &mut buf);
+        assert_eq!(buf.len(), vals.len() * 8, "allreduce vec length mismatch");
+        for (a, b) in vals.iter_mut().zip(decode_u64s_iter(&buf)) {
+            *a = b;
+        }
+        self.coll_buf = buf;
     }
 }
 
@@ -613,6 +770,107 @@ mod tests {
         }
         assert_eq!(a.clock, 0.0);
         assert_eq!(a.sent_msgs, 100);
+    }
+
+    #[test]
+    fn try_recv_matches_blocking_recv_and_panics_on_miss() {
+        let model = NetworkModel::new(1e-3, 1e-6);
+        let mut eps = network(2, model);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let payload = [9u8; 32];
+        a.send_from(1, MsgKind::Colors, 0, 0, &payload);
+        a.send_from(1, MsgKind::Colors, 0, 1, &payload);
+        // blocking and try paths consume identically (counters + clock)
+        let v = b.recv_from(0, MsgKind::Colors, 0, 0);
+        let clock_after_blocking = b.clock;
+        b.clock = 0.0;
+        let w = b.try_recv_from(0, MsgKind::Colors, 0, 1);
+        assert_eq!(v, w);
+        assert_eq!(b.clock.to_bits(), clock_after_blocking.to_bits());
+        assert_eq!(b.recv_msgs, 2);
+        // a receive for a message that was never sent is a loud bug
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            b.try_recv_from(0, MsgKind::Colors, 9, 9)
+        }));
+        assert!(r.is_err(), "missing message must panic, not block");
+    }
+
+    /// The split (engine) collectives must be bit-for-bit identical to the
+    /// blocking ones: same results, same per-rank message/byte counters,
+    /// same virtual clocks.
+    #[test]
+    fn split_collectives_match_blocking() {
+        for procs in [1usize, 2, 5] {
+            let model = NetworkModel::default();
+            // blocking reference, one thread per rank
+            let eps = network(procs, model);
+            let reference: Vec<(u64, u64, Vec<u64>, u64, u64, u64)> = std::thread::scope(|s| {
+                let hs: Vec<_> = eps
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, ep)| {
+                        s.spawn(move || {
+                            let mut ep = ep;
+                            let mx = ep.allreduce_max_u64(10 + r as u64);
+                            let sm = ep.allreduce_sum_u64(r as u64 + 1);
+                            let mut v = vec![r as u64, 1];
+                            ep.allreduce_sum_vec_u64(&mut v);
+                            (mx, sm, v, ep.clock.to_bits(), ep.sent_msgs, ep.sent_bytes)
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+            // split version, phase-stepped on a single thread
+            let mut eps = network(procs, model);
+            let seqs: Vec<u32> = eps
+                .iter_mut()
+                .enumerate()
+                .map(|(r, ep)| ep.coll_send_u64(10 + r as u64))
+                .collect();
+            let acc = eps[0].coll_reduce_u64(seqs[0], 10, u64::max);
+            let maxs: Vec<u64> = eps
+                .iter_mut()
+                .enumerate()
+                .map(|(r, ep)| ep.coll_finish_u64(seqs[r], acc))
+                .collect();
+            let seqs: Vec<u32> = eps
+                .iter_mut()
+                .enumerate()
+                .map(|(r, ep)| ep.coll_send_u64(r as u64 + 1))
+                .collect();
+            let acc = eps[0].coll_reduce_u64(seqs[0], 1, u64::wrapping_add);
+            let sums: Vec<u64> = eps
+                .iter_mut()
+                .enumerate()
+                .map(|(r, ep)| ep.coll_finish_u64(seqs[r], acc))
+                .collect();
+            let mut vecs: Vec<Vec<u64>> = (0..procs).map(|r| vec![r as u64, 1]).collect();
+            let seqs: Vec<u32> = eps
+                .iter_mut()
+                .zip(vecs.iter())
+                .map(|(ep, v)| ep.coll_send_vec_u64(v))
+                .collect();
+            eps[0].coll_reduce_vec_u64(seqs[0], &mut vecs[0]);
+            for (r, (ep, v)) in eps.iter_mut().zip(vecs.iter_mut()).enumerate() {
+                ep.coll_finish_vec_u64(seqs[r], v);
+            }
+
+            for (r, (mx, sm, v, clock_bits, msgs, bytes)) in reference.into_iter().enumerate() {
+                assert_eq!(maxs[r], mx, "p{r} max (procs={procs})");
+                assert_eq!(sums[r], sm, "p{r} sum (procs={procs})");
+                assert_eq!(vecs[r], v, "p{r} vec (procs={procs})");
+                assert_eq!(
+                    eps[r].clock.to_bits(),
+                    clock_bits,
+                    "p{r} clock diverged (procs={procs})"
+                );
+                assert_eq!(eps[r].sent_msgs, msgs, "p{r} msgs (procs={procs})");
+                assert_eq!(eps[r].sent_bytes, bytes, "p{r} bytes (procs={procs})");
+            }
+        }
     }
 
     #[test]

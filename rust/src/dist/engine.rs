@@ -1,0 +1,314 @@
+//! The BSP step engine: `p` simulated processes on `W` pooled worker
+//! threads.
+//!
+//! The thread-per-process runner ([`runner`](crate::dist::runner)) is a
+//! faithful oracle but oversubscribes the host exactly where the paper's
+//! scaling story gets interesting: at p=1024 simulated ranks a 4-core box
+//! pays for a thousand blocked OS threads and their context-switch storms.
+//! Both the superstep framework and synchronous recoloring are
+//! bulk-synchronous by construction — rounds of independent local compute
+//! separated by bulk exchanges and collectives — so no process ever needs
+//! to *block* on a message: it only needs the messages of earlier rounds
+//! to have been delivered.
+//!
+//! The engine exploits that. A process is an explicit state machine
+//! ([`StepProcess`]): each [`step`](StepProcess::step) call runs one
+//! non-blocking slice — local compute plus sends, or the receives of a
+//! slice that completed everywhere in an earlier engine step — against the
+//! process's endpoint (whose channel *is* the inbox). [`run_steps`]
+//! executes engine steps in lockstep: a fixed pool of
+//! `W = min(available_parallelism, p)` persistent workers
+//! ([`util::pool`](crate::util::pool)) steps every live process once, then
+//! a barrier makes the step's messages visible before anyone runs the next
+//! step. Receives therefore use the non-blocking
+//! [`Endpoint::try_recv_from`] (a miss panics instead of deadlocking), and
+//! collectives use the split `coll_*` phases.
+//!
+//! **Equivalence.** Every machine executes the *same* endpoint operations,
+//! in the same per-process order, with the same payloads as its blocking
+//! counterpart — the step boundaries only reorder wallclock, which no
+//! modeled quantity observes. Colorings, per-process message/byte counts,
+//! conflict counts and virtual clocks are bit-for-bit identical to the
+//! thread runner (`tests/accounting_fixture.rs` and
+//! `tests/dist_props.rs::prop_step_engine_matches_thread_runner` pin
+//! this). Asynchronous *recoloring* (aRC) reruns the speculative framework
+//! with data-dependent blocking structure owned by the thread path — jobs
+//! that use it fall back to the thread runner (see [`Engine`]).
+
+use crate::color::Coloring;
+use crate::dist::comm::{self, Endpoint};
+use crate::dist::cost::NetworkModel;
+use crate::dist::proc::LocalGraph;
+use crate::dist::runner::ProcResult;
+use crate::dist::{DistMetrics, DistOutcome};
+use crate::util::pool;
+use crate::util::timer::Timer;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+
+/// What one engine step of a process produced.
+pub enum StepOutcome {
+    /// More steps to run.
+    Running,
+    /// The process finished; its owned colors and metrics.
+    Done(ProcResult),
+}
+
+/// A simulated process as an explicit step state machine. Contract:
+///
+/// * every receive in a step must target a message sent in a *strictly
+///   earlier* engine step (use [`Endpoint::try_recv_from`] /
+///   [`Endpoint::try_recv_into`], which panic on a violation);
+/// * collectives are split across three consecutive steps via the
+///   endpoint's `coll_send_*` / `coll_reduce_*` / `coll_finish_*` phases;
+/// * all processes must walk state sequences of equal length per global
+///   phase (the algorithms here guarantee it: superstep counts, class
+///   counts and round continuation are all allreduced).
+pub trait StepProcess: Send {
+    fn step(&mut self, ep: &mut Endpoint) -> StepOutcome;
+}
+
+/// Which execution path runs a job's distributed section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// BSP step engine for the framework and sync RC; thread runner for
+    /// aRC. The default.
+    #[default]
+    Auto,
+    /// Always one OS thread per simulated process (the reference oracle).
+    Threads,
+    /// Always the BSP step engine; jobs with aRC are rejected at build.
+    Bsp,
+}
+
+impl std::str::FromStr for Engine {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(Engine::Auto),
+            "threads" | "thread" => Ok(Engine::Threads),
+            "bsp" | "steps" | "engine" => Ok(Engine::Bsp),
+            other => Err(format!("unknown engine {other:?} (auto|threads|bsp)")),
+        }
+    }
+}
+
+struct Slot<M> {
+    ep: Endpoint,
+    machine: M,
+    out: Option<ProcResult>,
+}
+
+/// Run one step machine per local graph to completion on the global worker
+/// pool and merge the results — the engine counterpart of
+/// [`run_distributed_with`](crate::dist::runner::run_distributed_with).
+/// `num_vertices` sizes the merged coloring; machines are constructed on
+/// the calling thread, in rank order.
+pub fn run_steps<'a, M, F>(
+    num_vertices: usize,
+    locals: &'a [LocalGraph],
+    net: NetworkModel,
+    make: F,
+) -> DistOutcome
+where
+    M: StepProcess + 'a,
+    F: Fn(&'a LocalGraph) -> M,
+{
+    let wall = Timer::start();
+    let procs = locals.len();
+    let eps = comm::network(procs, net);
+    let slots: Vec<Mutex<Slot<M>>> = eps
+        .into_iter()
+        .zip(locals.iter())
+        .map(|(ep, lg)| {
+            Mutex::new(Slot {
+                machine: make(lg),
+                ep,
+                out: None,
+            })
+        })
+        .collect();
+
+    let pool = pool::global();
+    let shards = pool.workers().min(procs).max(1);
+    let barrier = Barrier::new(shards);
+    let done = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    pool.scoped_run(shards, &|w| {
+        loop {
+            // one engine step: this worker's shard of live processes
+            let stepped = catch_unwind(AssertUnwindSafe(|| {
+                let mut newly = 0usize;
+                let mut i = w;
+                while i < procs {
+                    let mut guard = slots[i].lock().unwrap();
+                    let slot = &mut *guard;
+                    if slot.out.is_none() {
+                        if let StepOutcome::Done(r) = slot.machine.step(&mut slot.ep) {
+                            slot.out = Some(r);
+                            newly += 1;
+                        }
+                    }
+                    i += shards;
+                }
+                newly
+            }));
+            let panicked = match stepped {
+                Ok(newly) => {
+                    done.fetch_add(newly, Ordering::SeqCst);
+                    None
+                }
+                Err(p) => {
+                    failed.store(true, Ordering::SeqCst);
+                    Some(p)
+                }
+            };
+            // barrier 1: this step's sends and `done` updates are visible
+            barrier.wait();
+            let stop = failed.load(Ordering::SeqCst) || done.load(Ordering::SeqCst) == procs;
+            // barrier 2: everyone has read the stop decision before any
+            // worker can mutate `done` again — the decision is uniform
+            barrier.wait();
+            if let Some(p) = panicked {
+                resume_unwind(p);
+            }
+            if stop {
+                break;
+            }
+        }
+    });
+
+    let mut coloring = Coloring::uncolored(num_vertices);
+    let mut per_proc = Vec::with_capacity(procs);
+    for slot in slots {
+        let slot = slot.into_inner().unwrap();
+        let mut r = slot.out.expect("step machine ended without finishing");
+        r.metrics.rank = slot.ep.rank;
+        for (gid, c) in r.colors {
+            coloring.set(gid, c);
+        }
+        per_proc.push(r.metrics);
+    }
+    let metrics = DistMetrics::aggregate(&per_proc, wall.secs());
+    DistOutcome {
+        coloring,
+        metrics,
+        per_proc,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::proc::build_local_graphs;
+    use crate::dist::ProcMetrics;
+    use crate::graph::synth;
+    use crate::partition::{self, Partitioner};
+
+    /// A toy machine exercising the engine contract: one split collective,
+    /// then a message to the next rank received one step later.
+    struct Toy {
+        rank: usize,
+        nprocs: usize,
+        seq: u32,
+        acc: u64,
+        sum: u64,
+        state: u8,
+    }
+
+    impl StepProcess for Toy {
+        fn step(&mut self, ep: &mut Endpoint) -> StepOutcome {
+            use crate::dist::comm::MsgKind;
+            match self.state {
+                0 => {
+                    self.acc = self.rank as u64 + 1;
+                    self.seq = ep.coll_send_u64(self.acc);
+                }
+                1 => {
+                    if ep.rank == 0 {
+                        self.acc = ep.coll_reduce_u64(self.seq, self.acc, u64::wrapping_add);
+                    }
+                }
+                2 => {
+                    self.sum = ep.coll_finish_u64(self.seq, self.acc);
+                }
+                3 => {
+                    let to = (self.rank + 1) % self.nprocs;
+                    ep.send(to, MsgKind::Colors, 0, 0, self.sum.to_le_bytes().to_vec());
+                }
+                4 => {
+                    let from = (self.rank + self.nprocs - 1) % self.nprocs;
+                    let got = comm::decode_u64(&ep.try_recv_from(from, MsgKind::Colors, 0, 0));
+                    assert_eq!(got, self.sum, "ring neighbor disagrees on the sum");
+                }
+                _ => {
+                    return StepOutcome::Done(ProcResult {
+                        colors: Vec::new(),
+                        metrics: ProcMetrics {
+                            sent_msgs: ep.sent_msgs,
+                            vtime: self.sum as f64,
+                            ..Default::default()
+                        },
+                    });
+                }
+            }
+            self.state += 1;
+            StepOutcome::Running
+        }
+    }
+
+    #[test]
+    fn engine_runs_collectives_and_deferred_messages() {
+        for procs in [1usize, 3, 8, 33] {
+            let g = synth::path(procs.max(2));
+            let part = partition::partition(&g, Partitioner::Block, procs, 1);
+            let (_, locals) = build_local_graphs(&g, &part);
+            let out = run_steps(g.num_vertices(), &locals, NetworkModel::ideal(), |lg| Toy {
+                rank: lg.rank as usize,
+                nprocs: procs,
+                seq: 0,
+                acc: 0,
+                sum: 0,
+                state: 0,
+            });
+            let expect = (procs * (procs + 1) / 2) as f64;
+            assert_eq!(out.per_proc.len(), procs);
+            for (r, m) in out.per_proc.iter().enumerate() {
+                assert_eq!(m.rank, r, "rank stamped by the engine");
+                assert_eq!(m.vtime, expect, "p{r} allreduce sum");
+            }
+            assert_eq!(out.metrics.num_procs, procs);
+            assert_eq!(out.metrics.total_dropped, 0);
+        }
+    }
+
+    #[test]
+    fn machine_panics_propagate() {
+        struct Boom;
+        impl StepProcess for Boom {
+            fn step(&mut self, ep: &mut Endpoint) -> StepOutcome {
+                if ep.rank == 1 {
+                    panic!("machine boom");
+                }
+                StepOutcome::Running
+            }
+        }
+        let g = synth::path(4);
+        let part = partition::partition(&g, Partitioner::Block, 4, 1);
+        let (_, locals) = build_local_graphs(&g, &part);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            run_steps(g.num_vertices(), &locals, NetworkModel::ideal(), |_| Boom)
+        }));
+        assert!(r.is_err(), "a machine panic must fail the run loudly");
+    }
+
+    #[test]
+    fn engine_parses() {
+        assert_eq!("auto".parse::<Engine>().unwrap(), Engine::Auto);
+        assert_eq!("threads".parse::<Engine>().unwrap(), Engine::Threads);
+        assert_eq!("bsp".parse::<Engine>().unwrap(), Engine::Bsp);
+        assert!("x".parse::<Engine>().is_err());
+        assert_eq!(Engine::default(), Engine::Auto);
+    }
+}

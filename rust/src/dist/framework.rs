@@ -392,6 +392,429 @@ fn serial_cleanup(
     }
 }
 
+/// [`color_process`] as an explicit step state machine for the BSP step
+/// engine ([`dist::engine`](crate::dist::engine)): each
+/// [`step_once`](FrameworkStep::step_once) call runs one non-blocking
+/// slice — a superstep's compute+send, its receive half, a split-collective
+/// phase, or one turn of the serialized cleanup. The machine performs the
+/// *same* endpoint operations in the same per-process order as
+/// `color_process`, so every modeled quantity (colors, messages, bytes,
+/// conflicts, virtual clocks) is bit-for-bit identical; keep the two in
+/// lockstep when either changes.
+pub struct FrameworkStep<'a> {
+    lg: &'a LocalGraph,
+    fw: FrameworkConfig,
+    cost: CostModel,
+    obs: Option<&'a dyn Observer>,
+    to_color: Vec<u32>,
+    order_override: Option<Vec<u32>>,
+    colors: ColorState,
+    metrics: ProcMetrics,
+    st: SelectState,
+    scratch: ExchangeScratch,
+    pending: Vec<u32>,
+    losers: Vec<u32>,
+    colored_at: Vec<u64>,
+    t_start: f64,
+    round: u32,
+    my_steps: u64,
+    max_steps: u64,
+    coll_seq: u32,
+    coll_acc: u64,
+    state: FwState,
+}
+
+/// Which slice of `color_process` the next `step_once` call executes.
+enum FwState {
+    /// Visit order + its cost charge (the code before the round loop).
+    Init,
+    /// Round entry: superstep counts staged and contributed (collective
+    /// phase 1).
+    RoundBegin,
+    /// Step-count collective phase 2 (rank 0 reduces + broadcasts).
+    RoundReduce,
+    /// Step-count collective phase 3; decides the round's superstep count.
+    RoundFinish,
+    /// Superstep `s`: color the batch, stage and send boundary updates.
+    ColorStep(u64),
+    /// Superstep `s`: receive + apply the peers' updates (sent one engine
+    /// step earlier).
+    ExchangeStep(u64),
+    /// End-of-round conflict sweep + loser-count collective phase 1.
+    Sweep,
+    /// Loser-count collective phase 2.
+    SweepReduce,
+    /// Loser-count collective phase 3; break / cleanup / next round.
+    SweepFinish,
+    /// Serialized cleanup, rank `r`'s turn to recolor and send.
+    CleanupSend(usize),
+    /// Serialized cleanup, `r`'s neighbors receive (one step later).
+    CleanupRecv(usize),
+    Finished,
+}
+
+impl<'a> FrameworkStep<'a> {
+    /// Mirror of the [`color_process`] signature; `colors` is the entry
+    /// color state (`ColorState::uncolored` for an initial coloring).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        lg: &'a LocalGraph,
+        fw: &FrameworkConfig,
+        cost: &CostModel,
+        colors: ColorState,
+        to_color: Vec<u32>,
+        order_override: Option<Vec<u32>>,
+        obs: Option<&'a dyn Observer>,
+    ) -> Self {
+        let n_owned = lg.n_owned();
+        let estimate = (0..n_owned)
+            .map(|v| lg.csr.degree(v as u32))
+            .max()
+            .unwrap_or(0) as u32
+            + 1;
+        let st = SelectState::new(
+            fw.selection,
+            estimate,
+            mix64(fw.seed ^ 0xC0_10B, lg.rank as u64),
+        );
+        FrameworkStep {
+            lg,
+            fw: *fw,
+            cost: *cost,
+            obs,
+            to_color,
+            order_override,
+            colors,
+            metrics: ProcMetrics {
+                rank: lg.rank as usize,
+                ..Default::default()
+            },
+            st,
+            scratch: ExchangeScratch::for_graph(lg),
+            pending: Vec::new(),
+            losers: Vec::new(),
+            colored_at: vec![u64::MAX; lg.n_local()],
+            t_start: 0.0,
+            round: 0,
+            my_steps: 0,
+            max_steps: 0,
+            coll_seq: 0,
+            coll_acc: 0,
+            state: FwState::Init,
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, FwState::Finished)
+    }
+
+    /// The finished machine's color state and metrics (the
+    /// `color_process` return value plus the colors it filled in place).
+    pub fn into_parts(self) -> (ColorState, ProcMetrics) {
+        assert!(self.is_finished(), "framework step machine still running");
+        (self.colors, self.metrics)
+    }
+
+    fn finish(&mut self, ep: &mut Endpoint) {
+        self.metrics.rounds += self.round;
+        self.metrics.phases.add("color", ep.clock - self.t_start);
+        self.state = FwState::Finished;
+    }
+
+    /// Run one engine step; `true` once the machine reached `Finished`.
+    pub fn step_once(&mut self, ep: &mut Endpoint) -> bool {
+        let lg = self.lg;
+        let n_owned = lg.n_owned();
+        match self.state {
+            FwState::Init => {
+                self.t_start = ep.clock;
+                ep.wait_on_recv = self.fw.sync;
+                self.pending = match self.order_override.take() {
+                    Some(o) => o,
+                    None => {
+                        let mut rng = Rng::new(mix64(self.fw.seed ^ 0x0BDE_B, lg.rank as u64));
+                        ep.clock += self
+                            .cost
+                            .color_cost(self.to_color.len() as u64, lg.csr.xadj[n_owned])
+                            * 0.25;
+                        order::compute_order(
+                            &lg.csr,
+                            &self.to_color,
+                            self.fw.ordering,
+                            |v| lg.is_boundary[v as usize],
+                            &mut rng,
+                        )
+                    }
+                };
+                self.state = FwState::RoundBegin;
+            }
+            FwState::RoundBegin => {
+                self.round += 1;
+                let ss = self.fw.superstep_size.max(1);
+                self.my_steps = self.pending.len().div_ceil(ss) as u64;
+                self.scratch.steps_of.fill(0);
+                self.scratch.steps_of[ep.rank] = self.my_steps;
+                self.coll_seq = ep.coll_send_vec_u64(&self.scratch.steps_of);
+                self.state = FwState::RoundReduce;
+            }
+            FwState::RoundReduce => {
+                if ep.rank == 0 {
+                    ep.coll_reduce_vec_u64(self.coll_seq, &mut self.scratch.steps_of);
+                }
+                self.state = FwState::RoundFinish;
+            }
+            FwState::RoundFinish => {
+                ep.coll_finish_vec_u64(self.coll_seq, &mut self.scratch.steps_of);
+                self.max_steps = self.scratch.steps_of.iter().copied().max().unwrap_or(0);
+                self.state = if self.max_steps == 0 {
+                    FwState::Sweep
+                } else {
+                    FwState::ColorStep(0)
+                };
+            }
+            FwState::ColorStep(step) => {
+                let ss = self.fw.superstep_size.max(1);
+                let lo = (step as usize) * ss;
+                let hi = (lo + ss).min(self.pending.len());
+                let (lo, hi) = if lo < self.pending.len() {
+                    (lo, hi)
+                } else {
+                    (0, 0)
+                };
+
+                // -- compute: color the batch against the current local view
+                let mut scans: u64 = 0;
+                for &v in &self.pending[lo..hi] {
+                    self.st.begin_vertex();
+                    let s = lg.csr.xadj[v as usize] as usize;
+                    let e = lg.csr.xadj[v as usize + 1] as usize;
+                    scans += (e - s) as u64;
+                    for &u in &lg.csr.adjncy[s..e] {
+                        let cu = self.colors.colors[u as usize];
+                        if cu != UNCOLORED {
+                            self.st.forbid(cu);
+                        }
+                    }
+                    self.colors.colors[v as usize] = self.st.pick();
+                    self.colored_at[v as usize] = epoch(self.round, step);
+                }
+                ep.clock += self.cost.color_cost((hi - lo) as u64, scans);
+
+                // -- stage + send this batch's boundary colors
+                for u in self.scratch.upd.iter_mut() {
+                    u.clear();
+                }
+                for &v in &self.pending[lo..hi] {
+                    if !lg.is_boundary[v as usize] {
+                        continue;
+                    }
+                    self.scratch.parts.clear();
+                    let s = lg.csr.xadj[v as usize] as usize;
+                    let e = lg.csr.xadj[v as usize + 1] as usize;
+                    for &u in &lg.csr.adjncy[s..e] {
+                        if (u as usize) >= n_owned {
+                            self.scratch.parts.push(lg.owner[u as usize] as usize);
+                        }
+                    }
+                    self.scratch.parts.sort_unstable();
+                    self.scratch.parts.dedup();
+                    for &q in self.scratch.parts.iter() {
+                        let qi = lg.neighbor_procs.binary_search(&q).unwrap();
+                        self.scratch.upd[qi]
+                            .push((lg.global_ids[v as usize], self.colors.colors[v as usize]));
+                    }
+                }
+                if step < self.my_steps {
+                    for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
+                        let mut payload = ep.take_buf();
+                        comm::encode_pairs_into(&self.scratch.upd[qi], &mut payload);
+                        ep.clock += self.cost.pack_cost(payload.len() as u64);
+                        ep.send(q, MsgKind::Colors, self.round, step as u32, payload);
+                    }
+                }
+                self.state = FwState::ExchangeStep(step);
+            }
+            FwState::ExchangeStep(step) => {
+                for &q in &lg.neighbor_procs {
+                    if step >= self.scratch.steps_of[q] {
+                        continue; // that sender had no batch this superstep
+                    }
+                    ep.try_recv_into(
+                        q,
+                        MsgKind::Colors,
+                        self.round,
+                        step as u32,
+                        &mut self.scratch.dec,
+                    );
+                    ep.clock += self.cost.pack_cost(self.scratch.dec.len() as u64);
+                    for (gid, c) in comm::decode_pairs_iter(&self.scratch.dec) {
+                        let li = lg.local_of(gid) as usize;
+                        self.colors.colors[li] = c;
+                        self.colored_at[li] = epoch(self.round, step);
+                    }
+                }
+                emit_rank0(
+                    self.obs,
+                    ep.rank,
+                    Event::SuperstepDone {
+                        round: self.round,
+                        step: step as u32,
+                    },
+                );
+                let next = step + 1;
+                self.state = if next < self.max_steps {
+                    FwState::ColorStep(next)
+                } else {
+                    FwState::Sweep
+                };
+            }
+            FwState::Sweep => {
+                self.losers.clear();
+                let mut sweep_scans: u64 = 0;
+                for &v in &self.pending {
+                    if !lg.is_boundary[v as usize] {
+                        continue;
+                    }
+                    let cv = self.colors.colors[v as usize];
+                    let ev = self.colored_at[v as usize];
+                    let s = lg.csr.xadj[v as usize] as usize;
+                    let e = lg.csr.xadj[v as usize + 1] as usize;
+                    sweep_scans += (e - s) as u64;
+                    let mut lost = false;
+                    for &u in &lg.csr.adjncy[s..e] {
+                        let ui = u as usize;
+                        if ui < n_owned
+                            || self.colors.colors[ui] != cv
+                            || self.colored_at[ui] != ev
+                        {
+                            continue;
+                        }
+                        if loses(lg.global_ids[v as usize], lg.global_ids[ui], self.fw.seed) {
+                            lost = true;
+                            self.metrics.conflicts += 1;
+                        }
+                    }
+                    if lost {
+                        self.losers.push(v);
+                    }
+                }
+                ep.clock += self.cost.color_cost(0, sweep_scans);
+                self.coll_acc = self.losers.len() as u64;
+                self.coll_seq = ep.coll_send_u64(self.coll_acc);
+                self.state = FwState::SweepReduce;
+            }
+            FwState::SweepReduce => {
+                if ep.rank == 0 {
+                    self.coll_acc =
+                        ep.coll_reduce_u64(self.coll_seq, self.coll_acc, u64::wrapping_add);
+                }
+                self.state = FwState::SweepFinish;
+            }
+            FwState::SweepFinish => {
+                let global_losers = ep.coll_finish_u64(self.coll_seq, self.coll_acc);
+                emit_rank0(
+                    self.obs,
+                    ep.rank,
+                    Event::ConflictRound {
+                        round: self.round,
+                        conflicts: global_losers,
+                    },
+                );
+                if global_losers == 0 {
+                    self.finish(ep);
+                } else if self.round >= self.fw.max_rounds {
+                    self.state = FwState::CleanupSend(0);
+                } else {
+                    std::mem::swap(&mut self.pending, &mut self.losers);
+                    self.state = FwState::RoundBegin;
+                }
+            }
+            FwState::CleanupSend(r) => {
+                let tag = self.round + 1;
+                if ep.rank == r {
+                    let mut scans: u64 = 0;
+                    for u in self.scratch.upd.iter_mut() {
+                        u.clear();
+                    }
+                    for &v in &self.losers {
+                        self.st.begin_vertex();
+                        let s = lg.csr.xadj[v as usize] as usize;
+                        let e = lg.csr.xadj[v as usize + 1] as usize;
+                        scans += (e - s) as u64;
+                        for &u in &lg.csr.adjncy[s..e] {
+                            let cu = self.colors.colors[u as usize];
+                            if cu != UNCOLORED {
+                                self.st.forbid(cu);
+                            }
+                        }
+                        self.colors.colors[v as usize] = self.st.pick();
+                        self.scratch.parts.clear();
+                        for &u in &lg.csr.adjncy[s..e] {
+                            if (u as usize) >= n_owned {
+                                self.scratch.parts.push(lg.owner[u as usize] as usize);
+                            }
+                        }
+                        self.scratch.parts.sort_unstable();
+                        self.scratch.parts.dedup();
+                        for &q in self.scratch.parts.iter() {
+                            let qi = lg.neighbor_procs.binary_search(&q).unwrap();
+                            self.scratch.upd[qi]
+                                .push((lg.global_ids[v as usize], self.colors.colors[v as usize]));
+                        }
+                    }
+                    ep.clock += self.cost.color_cost(self.losers.len() as u64, scans);
+                    for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
+                        let mut payload = ep.take_buf();
+                        comm::encode_pairs_into(&self.scratch.upd[qi], &mut payload);
+                        ep.send(q, MsgKind::Colors, tag, r as u32, payload);
+                    }
+                }
+                self.state = FwState::CleanupRecv(r);
+            }
+            FwState::CleanupRecv(r) => {
+                let tag = self.round + 1;
+                if ep.rank != r && lg.neighbor_procs.binary_search(&r).is_ok() {
+                    ep.try_recv_into(r, MsgKind::Colors, tag, r as u32, &mut self.scratch.dec);
+                    for (gid, c) in comm::decode_pairs_iter(&self.scratch.dec) {
+                        self.colors.colors[lg.local_of(gid) as usize] = c;
+                    }
+                }
+                if r + 1 < lg.nprocs {
+                    self.state = FwState::CleanupSend(r + 1);
+                } else {
+                    self.round += 1;
+                    self.finish(ep);
+                }
+            }
+            FwState::Finished => {}
+        }
+        self.is_finished()
+    }
+}
+
+impl crate::dist::engine::StepProcess for FrameworkStep<'_> {
+    /// Standalone use of the framework on the engine: once finished, the
+    /// result carries the endpoint's cumulative accounting, exactly as a
+    /// thread-runner closure wrapping [`color_process`] would report.
+    fn step(&mut self, ep: &mut Endpoint) -> crate::dist::engine::StepOutcome {
+        use crate::dist::engine::StepOutcome;
+        if !self.step_once(ep) {
+            return StepOutcome::Running;
+        }
+        let colors = std::mem::replace(&mut self.colors, ColorState { colors: Vec::new() });
+        let mut metrics = std::mem::take(&mut self.metrics);
+        metrics.vtime = ep.clock;
+        metrics.sent_msgs = ep.sent_msgs;
+        metrics.sent_bytes = ep.sent_bytes;
+        metrics.recv_msgs = ep.recv_msgs;
+        metrics.dropped_msgs = ep.dropped_msgs;
+        StepOutcome::Done(crate::dist::ProcResult {
+            colors: colors.owned_pairs(self.lg),
+            metrics,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -483,5 +906,106 @@ mod tests {
             t_async <= t_sync,
             "async {t_async} should not exceed sync {t_sync}"
         );
+    }
+
+    /// The step-machine port must be bit-for-bit equal to `color_process`
+    /// on the thread runner: colors, per-proc messages/bytes, conflicts,
+    /// and virtual clocks.
+    #[test]
+    fn framework_step_machine_matches_thread_runner_bit_for_bit() {
+        use crate::dist::{engine, runner};
+        let g = synth::fem_like(700, 9.0, 24, 0.01, 3, "fw-step");
+        for (procs, sync, ss) in [(1usize, true, 64), (3, true, 16), (5, false, 7), (4, true, 1)] {
+            let part = partition::partition(&g, Partitioner::Block, procs, 1);
+            let (_, locals) = build_local_graphs(&g, &part);
+            let fw = FrameworkConfig {
+                superstep_size: ss,
+                sync,
+                selection: crate::color::Selection::RandomX(6),
+                ..Default::default()
+            };
+            let cost = CostModel::fixed();
+            let net = NetworkModel::default();
+            let by_threads = runner::run_distributed_with(&g, &locals, net, |ep, lg| {
+                let mut state = ColorState::uncolored(lg);
+                let to: Vec<u32> = (0..lg.n_owned() as u32).collect();
+                let mut m = color_process(ep, lg, &fw, &cost, &mut state, to, None, None);
+                m.vtime = ep.clock;
+                m.sent_msgs = ep.sent_msgs;
+                m.sent_bytes = ep.sent_bytes;
+                m.recv_msgs = ep.recv_msgs;
+                m.dropped_msgs = ep.dropped_msgs;
+                crate::dist::ProcResult {
+                    colors: state.owned_pairs(lg),
+                    metrics: m,
+                }
+            });
+            let by_engine = engine::run_steps(g.num_vertices(), &locals, net, |lg| {
+                let to: Vec<u32> = (0..lg.n_owned() as u32).collect();
+                FrameworkStep::new(lg, &fw, &cost, ColorState::uncolored(lg), to, None, None)
+            });
+            assert_eq!(
+                by_threads.coloring.colors, by_engine.coloring.colors,
+                "colors diverged (procs={procs} sync={sync} ss={ss})"
+            );
+            for (a, b) in by_threads.per_proc.iter().zip(by_engine.per_proc.iter()) {
+                assert_eq!(a.rank, b.rank);
+                assert_eq!(a.sent_msgs, b.sent_msgs, "p{} msgs", a.rank);
+                assert_eq!(a.sent_bytes, b.sent_bytes, "p{} bytes", a.rank);
+                assert_eq!(a.recv_msgs, b.recv_msgs, "p{} recvs", a.rank);
+                assert_eq!(a.conflicts, b.conflicts, "p{} conflicts", a.rank);
+                assert_eq!(a.rounds, b.rounds, "p{} rounds", a.rank);
+                assert_eq!(
+                    a.vtime.to_bits(),
+                    b.vtime.to_bits(),
+                    "p{} virtual clock diverged",
+                    a.rank
+                );
+                assert_eq!(a.dropped_msgs, 0);
+                assert_eq!(b.dropped_msgs, 0);
+            }
+        }
+    }
+
+    /// The serialized cleanup path (max_rounds exceeded) must also agree
+    /// across execution paths.
+    #[test]
+    fn framework_step_machine_matches_on_cleanup_path() {
+        use crate::dist::{engine, runner};
+        let g = synth::erdos_renyi(400, 2400, 17);
+        let part = partition::partition(&g, Partitioner::Block, 4, 1);
+        let (_, locals) = build_local_graphs(&g, &part);
+        // max_rounds 1 forces the serialized cleanup almost surely
+        let fw = FrameworkConfig {
+            superstep_size: 8,
+            max_rounds: 1,
+            ..Default::default()
+        };
+        let cost = CostModel::fixed();
+        let net = NetworkModel::default();
+        let by_threads = runner::run_distributed_with(&g, &locals, net, |ep, lg| {
+            let mut state = ColorState::uncolored(lg);
+            let to: Vec<u32> = (0..lg.n_owned() as u32).collect();
+            let mut m = color_process(ep, lg, &fw, &cost, &mut state, to, None, None);
+            m.vtime = ep.clock;
+            m.sent_msgs = ep.sent_msgs;
+            m.sent_bytes = ep.sent_bytes;
+            crate::dist::ProcResult {
+                colors: state.owned_pairs(lg),
+                metrics: m,
+            }
+        });
+        let by_engine = engine::run_steps(g.num_vertices(), &locals, net, |lg| {
+            let to: Vec<u32> = (0..lg.n_owned() as u32).collect();
+            FrameworkStep::new(lg, &fw, &cost, ColorState::uncolored(lg), to, None, None)
+        });
+        by_threads.coloring.validate(&g).unwrap();
+        assert_eq!(by_threads.coloring.colors, by_engine.coloring.colors);
+        for (a, b) in by_threads.per_proc.iter().zip(by_engine.per_proc.iter()) {
+            assert_eq!(a.sent_msgs, b.sent_msgs);
+            assert_eq!(a.sent_bytes, b.sent_bytes);
+            assert_eq!(a.vtime.to_bits(), b.vtime.to_bits());
+            assert_eq!(a.rounds, b.rounds);
+        }
     }
 }

@@ -13,9 +13,13 @@
 //!   communication scheme, and asynchronous recoloring (aRC).
 //! * [`runner`] — one thread per virtual process; merges results and
 //!   aggregates [`ProcMetrics`] into [`DistMetrics`].
+//! * [`engine`] — the BSP step engine: processes as step state machines
+//!   executed in lockstep on a fixed pool of worker threads; bit-for-bit
+//!   identical modeled quantities, no per-run thread spawns.
 
 pub mod comm;
 pub mod cost;
+pub mod engine;
 pub mod framework;
 pub mod proc;
 pub mod recolor;
@@ -23,7 +27,8 @@ pub mod runner;
 
 pub use comm::{network, Endpoint, MsgKind};
 pub use cost::{CostModel, NetworkModel};
-pub use runner::{run_distributed, DistOutcome, ProcResult};
+pub use engine::{run_steps, Engine, StepOutcome, StepProcess};
+pub use runner::{run_distributed, run_distributed_with, DistOutcome, ProcResult};
 
 use crate::util::timer::PhaseTimes;
 

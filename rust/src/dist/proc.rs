@@ -16,19 +16,19 @@
 use crate::color::{Color, Coloring, UNCOLORED};
 use crate::graph::{CsrGraph, VertexId};
 use crate::partition::Partition;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Global vertex → (owner process, local index on the owner). Built once
 /// per partition and shared read-only by every [`LocalGraph`] — 8 bytes per
 /// global vertex total, instead of a per-process hash map over its locals.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GlobalMap {
     pub owner: Vec<u32>,
     pub local: Vec<u32>,
 }
 
 /// One process's share of the graph.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LocalGraph {
     pub rank: u32,
     pub nprocs: usize,
@@ -81,14 +81,8 @@ impl LocalGraph {
     }
 }
 
-/// Split `g` into per-process local views according to `part`. The
-/// returned [`GlobalMap`] is the same shared directory every local graph
-/// holds through [`LocalGraph::gmap`].
-pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (Arc<GlobalMap>, Vec<LocalGraph>) {
-    assert_eq!(g.num_vertices(), part.parts.len());
-    let nprocs = part.num_parts;
-    let members = part.members();
-
+/// The shared global→(owner, local) directory of a partition.
+fn build_global_map(g: &CsrGraph, members: &[Vec<VertexId>]) -> Arc<GlobalMap> {
     let mut owner = vec![0u32; g.num_vertices()];
     let mut local = vec![0u32; g.num_vertices()];
     for (p, ms) in members.iter().enumerate() {
@@ -97,97 +91,152 @@ pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (Arc<GlobalMap>, Ve
             local[v as usize] = i as u32;
         }
     }
-    let gmap = Arc::new(GlobalMap { owner, local });
+    Arc::new(GlobalMap { owner, local })
+}
 
-    let mut locals = Vec::with_capacity(nprocs);
-    for (p, owned) in members.iter().enumerate() {
-        let rank = p as u32;
-        let n_owned = owned.len();
+/// Build process `p`'s local view — the per-rank body shared by the serial
+/// and pool-parallel builders. Pure per rank: reads only shared inputs.
+fn build_one_local(
+    g: &CsrGraph,
+    part: &Partition,
+    members: &[Vec<VertexId>],
+    gmap: &Arc<GlobalMap>,
+    p: usize,
+) -> LocalGraph {
+    let owned = &members[p];
+    let rank = p as u32;
+    let n_owned = owned.len();
 
-        let mut ghosts: Vec<VertexId> = Vec::new();
-        for &u in owned {
-            for &v in g.neighbors(u) {
-                if part.part_of(v) != rank {
-                    ghosts.push(v);
-                }
+    let mut ghosts: Vec<VertexId> = Vec::new();
+    for &u in owned {
+        for &v in g.neighbors(u) {
+            if part.part_of(v) != rank {
+                ghosts.push(v);
             }
         }
-        ghosts.sort_unstable();
-        ghosts.dedup();
-
-        let n_local = n_owned + ghosts.len();
-        let mut global_ids: Vec<VertexId> = Vec::with_capacity(n_local);
-        global_ids.extend_from_slice(owned);
-        global_ids.extend_from_slice(&ghosts);
-        // same lookup LocalGraph::local_of performs once constructed
-        let lid = |v: VertexId| -> u32 {
-            if gmap.owner[v as usize] == rank {
-                gmap.local[v as usize]
-            } else {
-                let j = ghosts.binary_search(&v).expect("neighbor is owned or ghost");
-                (n_owned + j) as u32
-            }
-        };
-
-        let mut xadj = vec![0u64; n_local + 1];
-        for (i, &u) in owned.iter().enumerate() {
-            xadj[i + 1] = xadj[i] + g.degree(u) as u64;
-        }
-        for j in n_owned..n_local {
-            xadj[j + 1] = xadj[j];
-        }
-        let mut adjncy: Vec<VertexId> = Vec::with_capacity(xadj[n_owned] as usize);
-        for &u in owned {
-            for &v in g.neighbors(u) {
-                adjncy.push(lid(v));
-            }
-        }
-        let csr = CsrGraph::new(xadj, adjncy, format!("{}@p{p}", g.name));
-
-        let is_boundary: Vec<bool> = global_ids
-            .iter()
-            .map(|&v| g.neighbors(v).iter().any(|&u| part.part_of(u) != rank))
-            .collect();
-        let owner_l: Vec<u32> = global_ids.iter().map(|&v| gmap.owner[v as usize]).collect();
-
-        let mut neighbor_procs: Vec<usize> = ghosts
-            .iter()
-            .map(|&v| gmap.owner[v as usize] as usize)
-            .collect();
-        neighbor_procs.sort_unstable();
-        neighbor_procs.dedup();
-
-        let mut send_lists: Vec<Vec<u32>> = vec![Vec::new(); neighbor_procs.len()];
-        let mut scratch: Vec<usize> = Vec::new();
-        for (i, &u) in owned.iter().enumerate() {
-            scratch.clear();
-            for &v in g.neighbors(u) {
-                let q = part.part_of(v) as usize;
-                if q != p {
-                    scratch.push(q);
-                }
-            }
-            scratch.sort_unstable();
-            scratch.dedup();
-            for &q in scratch.iter() {
-                let qi = neighbor_procs.binary_search(&q).unwrap();
-                send_lists[qi].push(i as u32);
-            }
-        }
-
-        locals.push(LocalGraph {
-            rank,
-            nprocs,
-            csr,
-            owned_count: n_owned,
-            global_ids,
-            is_boundary,
-            owner: owner_l,
-            neighbor_procs,
-            send_lists,
-            gmap: Arc::clone(&gmap),
-        });
     }
+    ghosts.sort_unstable();
+    ghosts.dedup();
+
+    let n_local = n_owned + ghosts.len();
+    let mut global_ids: Vec<VertexId> = Vec::with_capacity(n_local);
+    global_ids.extend_from_slice(owned);
+    global_ids.extend_from_slice(&ghosts);
+    // same lookup LocalGraph::local_of performs once constructed
+    let lid = |v: VertexId| -> u32 {
+        if gmap.owner[v as usize] == rank {
+            gmap.local[v as usize]
+        } else {
+            let j = ghosts.binary_search(&v).expect("neighbor is owned or ghost");
+            (n_owned + j) as u32
+        }
+    };
+
+    let mut xadj = vec![0u64; n_local + 1];
+    for (i, &u) in owned.iter().enumerate() {
+        xadj[i + 1] = xadj[i] + g.degree(u) as u64;
+    }
+    for j in n_owned..n_local {
+        xadj[j + 1] = xadj[j];
+    }
+    let mut adjncy: Vec<VertexId> = Vec::with_capacity(xadj[n_owned] as usize);
+    for &u in owned {
+        for &v in g.neighbors(u) {
+            adjncy.push(lid(v));
+        }
+    }
+    let csr = CsrGraph::new(xadj, adjncy, format!("{}@p{p}", g.name));
+
+    let is_boundary: Vec<bool> = global_ids
+        .iter()
+        .map(|&v| g.neighbors(v).iter().any(|&u| part.part_of(u) != rank))
+        .collect();
+    let owner_l: Vec<u32> = global_ids.iter().map(|&v| gmap.owner[v as usize]).collect();
+
+    let mut neighbor_procs: Vec<usize> = ghosts
+        .iter()
+        .map(|&v| gmap.owner[v as usize] as usize)
+        .collect();
+    neighbor_procs.sort_unstable();
+    neighbor_procs.dedup();
+
+    let mut send_lists: Vec<Vec<u32>> = vec![Vec::new(); neighbor_procs.len()];
+    let mut scratch: Vec<usize> = Vec::new();
+    for (i, &u) in owned.iter().enumerate() {
+        scratch.clear();
+        for &v in g.neighbors(u) {
+            let q = part.part_of(v) as usize;
+            if q != p {
+                scratch.push(q);
+            }
+        }
+        scratch.sort_unstable();
+        scratch.dedup();
+        for &q in scratch.iter() {
+            let qi = neighbor_procs.binary_search(&q).unwrap();
+            send_lists[qi].push(i as u32);
+        }
+    }
+
+    LocalGraph {
+        rank,
+        nprocs: part.num_parts,
+        csr,
+        owned_count: n_owned,
+        global_ids,
+        is_boundary,
+        owner: owner_l,
+        neighbor_procs,
+        send_lists,
+        gmap: Arc::clone(gmap),
+    }
+}
+
+/// Split `g` into per-process local views according to `part`. The
+/// returned [`GlobalMap`] is the same shared directory every local graph
+/// holds through [`LocalGraph::gmap`].
+pub fn build_local_graphs(g: &CsrGraph, part: &Partition) -> (Arc<GlobalMap>, Vec<LocalGraph>) {
+    assert_eq!(g.num_vertices(), part.parts.len());
+    let members = part.members();
+    let gmap = build_global_map(g, &members);
+    let locals = (0..part.num_parts)
+        .map(|p| build_one_local(g, part, &members, &gmap, p))
+        .collect();
+    (gmap, locals)
+}
+
+/// [`build_local_graphs`] with the per-rank builds spread over the global
+/// worker pool ([`util::pool`](crate::util::pool)) — each rank's view is
+/// an independent function of the shared inputs, so the outputs are
+/// identical to the serial builder's (`parallel_build_matches_serial`
+/// pins this). Used by `Session`s, whose cached builds happen once per
+/// partition key.
+pub fn build_local_graphs_parallel(
+    g: &CsrGraph,
+    part: &Partition,
+) -> (Arc<GlobalMap>, Vec<LocalGraph>) {
+    assert_eq!(g.num_vertices(), part.parts.len());
+    let nprocs = part.num_parts;
+    let pool = crate::util::pool::global();
+    let shards = pool.workers().min(nprocs).max(1);
+    if shards <= 1 {
+        return build_local_graphs(g, part);
+    }
+    let members = part.members();
+    let gmap = build_global_map(g, &members);
+    let slots: Vec<Mutex<Option<LocalGraph>>> = (0..nprocs).map(|_| Mutex::new(None)).collect();
+    pool.scoped_run(shards, &|w| {
+        let mut p = w;
+        while p < nprocs {
+            let lg = build_one_local(g, part, &members, &gmap, p);
+            *slots[p].lock().unwrap() = Some(lg);
+            p += shards;
+        }
+    });
+    let locals = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("rank build missing"))
+        .collect();
     (gmap, locals)
 }
 
@@ -350,6 +399,28 @@ mod tests {
         assert_eq!(merged.colors, c.colors);
         let st = ColorState::uncolored(&locals[0]);
         assert!(st.colors.iter().all(|&c| c == UNCOLORED));
+    }
+
+    /// The pool-parallel builder is a pure speedup: identical outputs to
+    /// the serial builder on every rank, for every partitioner and scale.
+    #[test]
+    fn parallel_build_matches_serial() {
+        let g = synth::fem_like(900, 10.0, 26, 0.01, 7, "par");
+        for (partitioner, procs) in [
+            (Partitioner::Block, 1usize),
+            (Partitioner::Block, 5),
+            (Partitioner::BfsGrow, 16),
+            (Partitioner::Block, 64),
+        ] {
+            let part = partition::partition(&g, partitioner, procs, 3);
+            let (gs, ls) = build_local_graphs(&g, &part);
+            let (gp, lp) = build_local_graphs_parallel(&g, &part);
+            assert_eq!(*gs, *gp, "global map diverged ({partitioner:?}, {procs})");
+            assert_eq!(ls.len(), lp.len());
+            for (a, b) in ls.iter().zip(lp.iter()) {
+                assert_eq!(a, b, "p{} local view diverged", a.rank);
+            }
+        }
     }
 
     #[test]

@@ -390,6 +390,414 @@ pub fn recolor_process_sync(
     m
 }
 
+/// [`recolor_process_sync`] as an explicit step state machine for the BSP
+/// step engine ([`dist::engine`](crate::dist::engine)): every
+/// [`step_once`](SyncRcStep::step_once) call runs one non-blocking slice —
+/// a split-collective phase, the plan exchange halves, or one class
+/// superstep's compute+send / receive half. The machine performs the same
+/// endpoint operations in the same per-process order as the blocking
+/// function, so colorings, traces, message/byte counts and virtual clocks
+/// are bit-for-bit identical; keep the two in lockstep when either
+/// changes. Works for both [`CommScheme`]s.
+pub struct SyncRcStep<'a> {
+    lg: &'a LocalGraph,
+    cost: CostModel,
+    cfg: RecolorConfig,
+    obs: Option<&'a dyn Observer>,
+    colors: ColorState,
+    trace: Vec<usize>,
+    m: ProcMetrics,
+    marker: ColorMarker,
+    scratch: SyncScratch,
+    /// Current iteration, 1-based (as the blocking loop counts).
+    iter: u32,
+    t0: f64,
+    tp0: f64,
+    plan_dt: f64,
+    k: usize,
+    class_order: Vec<u32>,
+    coll_seq: u32,
+    coll_acc: u64,
+    state: RcState,
+}
+
+/// Which slice of `recolor_process_sync` the next `step_once` executes.
+enum RcState {
+    /// Iteration entry: palette-size collective phase 1 (or finish).
+    IterBegin,
+    /// Palette-size collective phase 2 (rank 0).
+    KReduce,
+    /// Palette-size collective phase 3; class-size collective phase 1.
+    KFinish,
+    /// Class-size vector collective phase 2 (rank 0).
+    SizesReduce,
+    /// Class-size phase 3, permutation + counting sort + schedule build.
+    SizesFinish,
+    /// Piggyback plan build + send.
+    PlanSend,
+    /// Piggyback plan receive (one engine step later).
+    PlanRecv,
+    /// Class superstep `t`: recolor the class, send boundary updates.
+    ClassColor(usize),
+    /// Class superstep `t`: receive + apply the peers' updates.
+    ClassRecv(usize),
+    /// Commit the new coloring; new-palette collective phase 1.
+    IterEnd,
+    /// New-palette collective phase 2 (rank 0).
+    NewKReduce,
+    /// New-palette phase 3: trace, events, early stop, next iteration.
+    NewKFinish,
+    Finished,
+}
+
+impl<'a> SyncRcStep<'a> {
+    /// `colors` is the recoloring entry state
+    /// ([`ColorState::from_global`] or a finished framework machine's).
+    pub fn new(
+        lg: &'a LocalGraph,
+        cost: &CostModel,
+        cfg: RecolorConfig,
+        colors: ColorState,
+        obs: Option<&'a dyn Observer>,
+    ) -> Self {
+        SyncRcStep {
+            lg,
+            cost: *cost,
+            cfg,
+            obs,
+            colors,
+            trace: Vec::new(),
+            m: ProcMetrics {
+                rank: lg.rank as usize,
+                ..Default::default()
+            },
+            marker: ColorMarker::new(64),
+            scratch: SyncScratch::new(lg.n_local(), lg.neighbor_procs.len()),
+            iter: 1,
+            t0: 0.0,
+            tp0: 0.0,
+            plan_dt: 0.0,
+            k: 0,
+            class_order: Vec::new(),
+            coll_seq: 0,
+            coll_acc: 0,
+            state: RcState::IterBegin,
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, RcState::Finished)
+    }
+
+    /// The finished machine's colors, per-iteration trace, and metrics
+    /// (phase times; the endpoint's cumulative accounting is the caller's
+    /// to read, as with the blocking function's tail).
+    pub fn into_parts(self) -> (ColorState, Vec<usize>, ProcMetrics) {
+        assert!(self.is_finished(), "sync RC step machine still running");
+        (self.colors, self.trace, self.m)
+    }
+
+    /// Run one engine step; `true` once the machine reached `Finished`.
+    pub fn step_once(&mut self, ep: &mut Endpoint) -> bool {
+        let lg = self.lg;
+        let n_owned = lg.n_owned();
+        match self.state {
+            RcState::IterBegin => {
+                ep.wait_on_recv = true;
+                if self.iter > self.cfg.iterations {
+                    self.state = RcState::Finished;
+                } else {
+                    self.t0 = ep.clock;
+                    self.plan_dt = 0.0;
+                    let local_k = (0..n_owned)
+                        .map(|v| self.colors.colors[v])
+                        .filter(|&c| c != UNCOLORED)
+                        .map(|c| c as u64 + 1)
+                        .max()
+                        .unwrap_or(0);
+                    self.coll_acc = local_k;
+                    self.coll_seq = ep.coll_send_u64(local_k);
+                    self.state = RcState::KReduce;
+                }
+            }
+            RcState::KReduce => {
+                if ep.rank == 0 {
+                    self.coll_acc = ep.coll_reduce_u64(self.coll_seq, self.coll_acc, u64::max);
+                }
+                self.state = RcState::KFinish;
+            }
+            RcState::KFinish => {
+                self.k = ep.coll_finish_u64(self.coll_seq, self.coll_acc) as usize;
+                if self.k == 0 {
+                    self.trace.push(0);
+                    emit_rank0(
+                        self.obs,
+                        ep.rank,
+                        Event::RecolorIteration {
+                            iter: self.iter,
+                            k: 0,
+                        },
+                    );
+                    self.iter += 1;
+                    self.state = RcState::IterBegin;
+                } else {
+                    self.scratch.sizes.clear();
+                    self.scratch.sizes.resize(self.k, 0);
+                    for v in 0..n_owned {
+                        let c = self.colors.colors[v];
+                        if c != UNCOLORED {
+                            self.scratch.sizes[c as usize] += 1;
+                        }
+                    }
+                    self.coll_seq = ep.coll_send_vec_u64(&self.scratch.sizes);
+                    self.state = RcState::SizesReduce;
+                }
+            }
+            RcState::SizesReduce => {
+                if ep.rank == 0 {
+                    ep.coll_reduce_vec_u64(self.coll_seq, &mut self.scratch.sizes);
+                }
+                self.state = RcState::SizesFinish;
+            }
+            RcState::SizesFinish => {
+                ep.coll_finish_vec_u64(self.coll_seq, &mut self.scratch.sizes);
+                let k = self.k;
+                self.scratch.sizes_usize.clear();
+                self.scratch
+                    .sizes_usize
+                    .extend(self.scratch.sizes.iter().map(|&s| s as usize));
+                let perm = self.cfg.schedule.permutation_at(self.iter);
+                let mut prng = perm_rng(self.cfg.seed, self.iter);
+                self.class_order = perm.permute_classes(&self.scratch.sizes_usize, &mut prng);
+                self.scratch.step_of_class.clear();
+                self.scratch.step_of_class.resize(k, 0);
+                for (t, &c) in self.class_order.iter().enumerate() {
+                    self.scratch.step_of_class[c as usize] = t as u32;
+                }
+
+                // owned members per class, ascending local id, counting sort
+                self.scratch.class_start.clear();
+                self.scratch.class_start.resize(k + 1, 0);
+                for v in 0..n_owned {
+                    let c = self.colors.colors[v];
+                    if c != UNCOLORED {
+                        self.scratch.class_start[c as usize + 1] += 1;
+                    }
+                }
+                for c in 0..k {
+                    self.scratch.class_start[c + 1] += self.scratch.class_start[c];
+                }
+                self.scratch.members.clear();
+                self.scratch.members.resize(self.scratch.class_start[k], 0);
+                self.scratch.cursor.clear();
+                self.scratch
+                    .cursor
+                    .extend_from_slice(&self.scratch.class_start);
+                for v in 0..n_owned {
+                    let c = self.colors.colors[v];
+                    if c != UNCOLORED {
+                        self.scratch.members[self.scratch.cursor[c as usize]] = v as u32;
+                        self.scratch.cursor[c as usize] += 1;
+                    }
+                }
+                ep.clock += self.cost.color_cost(n_owned as u64, 0);
+
+                // per-pair, per-step update lists from the old classes
+                for buckets in self.scratch.pair_sched.iter_mut() {
+                    for b in buckets.iter_mut() {
+                        b.clear();
+                    }
+                    if buckets.len() < k {
+                        buckets.resize_with(k, Vec::new);
+                    }
+                }
+                for (qi, list) in lg.send_lists.iter().enumerate() {
+                    for &v in list {
+                        let c = self.colors.colors[v as usize];
+                        if c != UNCOLORED {
+                            let t = self.scratch.step_of_class[c as usize] as usize;
+                            self.scratch.pair_sched[qi][t].push(v);
+                        }
+                    }
+                }
+                if self.cfg.scheme == CommScheme::Piggyback {
+                    self.state = RcState::PlanSend;
+                } else {
+                    self.scratch.newc.fill(UNCOLORED);
+                    self.state = RcState::ClassColor(0);
+                }
+            }
+            RcState::PlanSend => {
+                self.tp0 = ep.clock;
+                let planned_entries: u64 =
+                    lg.send_lists.iter().map(|l| l.len() as u64).sum::<u64>() + self.k as u64;
+                ep.clock += self.cost.color_cost(planned_entries, 0);
+                for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
+                    let mut payload = ep.take_buf();
+                    for (t, b) in self.scratch.pair_sched[qi][..self.k].iter().enumerate() {
+                        if !b.is_empty() {
+                            payload.extend_from_slice(&(t as u32).to_le_bytes());
+                        }
+                    }
+                    ep.clock += self.cost.pack_cost(payload.len() as u64);
+                    ep.send(q, MsgKind::Plan, self.iter, 0, payload);
+                }
+                self.state = RcState::PlanRecv;
+            }
+            RcState::PlanRecv => {
+                for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
+                    ep.try_recv_into(q, MsgKind::Plan, self.iter, 0, &mut self.scratch.dec);
+                    ep.clock += self.cost.pack_cost(self.scratch.dec.len() as u64);
+                    let flags = &mut self.scratch.plans_in[qi];
+                    flags.clear();
+                    flags.resize(self.k, false);
+                    for t in comm::decode_u32s_iter(&self.scratch.dec) {
+                        flags[t as usize] = true;
+                    }
+                }
+                self.plan_dt = ep.clock - self.tp0;
+                self.m.phases.add("plan", self.plan_dt);
+                self.scratch.newc.fill(UNCOLORED);
+                self.state = RcState::ClassColor(0);
+            }
+            RcState::ClassColor(t) => {
+                let c = self.class_order[t] as usize;
+                let lo = self.scratch.class_start[c];
+                let hi = self.scratch.class_start[c + 1];
+                let mut scans: u64 = 0;
+                for &v in &self.scratch.members[lo..hi] {
+                    self.marker.next_epoch();
+                    let s = lg.csr.xadj[v as usize] as usize;
+                    let e = lg.csr.xadj[v as usize + 1] as usize;
+                    scans += (e - s) as u64;
+                    for &u in &lg.csr.adjncy[s..e] {
+                        let cu = self.scratch.newc[u as usize];
+                        if cu != UNCOLORED {
+                            self.marker.mark(cu);
+                        }
+                    }
+                    self.scratch.newc[v as usize] = self.marker.first_unmarked();
+                }
+                ep.clock += self.cost.color_cost((hi - lo) as u64, scans);
+
+                for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
+                    let vs = &self.scratch.pair_sched[qi][t];
+                    if self.cfg.scheme == CommScheme::Piggyback && vs.is_empty() {
+                        continue; // the plan told the receiver to skip this step
+                    }
+                    let mut payload = ep.take_buf();
+                    for &v in vs {
+                        comm::push_pair(
+                            &mut payload,
+                            lg.global_ids[v as usize],
+                            self.scratch.newc[v as usize],
+                        );
+                    }
+                    ep.clock += self.cost.pack_cost(payload.len() as u64);
+                    ep.send(q, MsgKind::Recolor, self.iter, t as u32, payload);
+                }
+                self.state = RcState::ClassRecv(t);
+            }
+            RcState::ClassRecv(t) => {
+                for (qi, &q) in lg.neighbor_procs.iter().enumerate() {
+                    let expected = match self.cfg.scheme {
+                        CommScheme::Base => true,
+                        CommScheme::Piggyback => self.scratch.plans_in[qi][t],
+                    };
+                    if !expected {
+                        continue;
+                    }
+                    let (iter, dec) = (self.iter, &mut self.scratch.dec);
+                    ep.try_recv_into(q, MsgKind::Recolor, iter, t as u32, dec);
+                    ep.clock += self.cost.pack_cost(self.scratch.dec.len() as u64);
+                    for (gid, c) in comm::decode_pairs_iter(&self.scratch.dec) {
+                        self.scratch.newc[lg.local_of(gid) as usize] = c;
+                    }
+                }
+                let next = t + 1;
+                self.state = if next < self.class_order.len() {
+                    RcState::ClassColor(next)
+                } else {
+                    RcState::IterEnd
+                };
+            }
+            RcState::IterEnd => {
+                self.colors.colors.copy_from_slice(&self.scratch.newc);
+                let local_new_k = (0..n_owned)
+                    .map(|v| self.colors.colors[v])
+                    .filter(|&c| c != UNCOLORED)
+                    .map(|c| c as u64 + 1)
+                    .max()
+                    .unwrap_or(0);
+                self.coll_acc = local_new_k;
+                self.coll_seq = ep.coll_send_u64(local_new_k);
+                self.state = RcState::NewKReduce;
+            }
+            RcState::NewKReduce => {
+                if ep.rank == 0 {
+                    self.coll_acc = ep.coll_reduce_u64(self.coll_seq, self.coll_acc, u64::max);
+                }
+                self.state = RcState::NewKFinish;
+            }
+            RcState::NewKFinish => {
+                let kk = ep.coll_finish_u64(self.coll_seq, self.coll_acc);
+                self.trace.push(kk as usize);
+                self.m
+                    .phases
+                    .add("recolor", (ep.clock - self.t0) - self.plan_dt);
+                emit_rank0(
+                    self.obs,
+                    ep.rank,
+                    Event::RecolorIteration {
+                        iter: self.iter,
+                        k: kk as usize,
+                    },
+                );
+                let mut stop = false;
+                if let Some(eps) = self.cfg.early_stop {
+                    let improvement = (self.k as f64 - kk as f64) / (self.k as f64).max(1.0);
+                    if improvement < eps {
+                        stop = true;
+                    }
+                }
+                if stop {
+                    self.state = RcState::Finished;
+                } else {
+                    self.iter += 1;
+                    self.state = RcState::IterBegin;
+                }
+            }
+            RcState::Finished => {}
+        }
+        self.is_finished()
+    }
+}
+
+impl crate::dist::engine::StepProcess for SyncRcStep<'_> {
+    /// Standalone use on the engine: once finished, the result carries the
+    /// endpoint's cumulative accounting and the trace (in
+    /// `metrics.recolor_trace`), as a thread-runner closure wrapping
+    /// [`recolor_process_sync`] would report.
+    fn step(&mut self, ep: &mut Endpoint) -> crate::dist::engine::StepOutcome {
+        use crate::dist::engine::StepOutcome;
+        if !self.step_once(ep) {
+            return StepOutcome::Running;
+        }
+        let colors = std::mem::replace(&mut self.colors, ColorState { colors: Vec::new() });
+        let mut metrics = std::mem::take(&mut self.m);
+        metrics.recolor_trace = std::mem::take(&mut self.trace);
+        metrics.vtime = ep.clock;
+        metrics.sent_msgs = ep.sent_msgs;
+        metrics.sent_bytes = ep.sent_bytes;
+        metrics.recv_msgs = ep.recv_msgs;
+        metrics.dropped_msgs = ep.dropped_msgs;
+        StepOutcome::Done(crate::dist::ProcResult {
+            colors: colors.owned_pairs(self.lg),
+            metrics,
+        })
+    }
+}
+
 /// One asynchronous recoloring iteration (aRC): rerun the speculative
 /// framework with the class-permutation-induced visit order.
 #[allow(clippy::too_many_arguments)]
@@ -677,6 +1085,63 @@ mod tests {
         assert_eq!(results[0].0.colors, results[1].0.colors);
         assert_eq!(results[0].1, results[1].1);
         results[0].0.validate(&g).unwrap();
+    }
+
+    /// The step-machine port must match `recolor_process_sync` bit for
+    /// bit on both schemes: colors, traces, per-proc counters and clocks.
+    #[test]
+    fn sync_rc_step_machine_matches_thread_runner_bit_for_bit() {
+        use crate::dist::{engine, runner};
+        let (g, init) = workload();
+        for (procs, scheme, iters, early_stop) in [
+            (1usize, CommScheme::Piggyback, 2u32, None),
+            (4, CommScheme::Base, 3, None),
+            (5, CommScheme::Piggyback, 3, None),
+            (3, CommScheme::Piggyback, 6, Some(0.02)),
+        ] {
+            let part = partition::partition(&g, Partitioner::Block, procs, 1);
+            let (_, locals) = build_local_graphs(&g, &part);
+            let cost = CostModel::fixed();
+            let net = NetworkModel::default();
+            let cfg = RecolorConfig {
+                iterations: iters,
+                scheme,
+                early_stop,
+                ..Default::default()
+            };
+            let by_threads = runner::run_distributed_with(&g, &locals, net, |ep, lg| {
+                let mut state = ColorState::from_global(lg, &init);
+                let mut trace = Vec::new();
+                let mut m =
+                    recolor_process_sync(ep, lg, &cost, &cfg, &mut state, &mut trace, None);
+                m.recolor_trace = trace;
+                crate::dist::ProcResult {
+                    colors: state.owned_pairs(lg),
+                    metrics: m,
+                }
+            });
+            let by_engine = engine::run_steps(g.num_vertices(), &locals, net, |lg| {
+                SyncRcStep::new(lg, &cost, cfg, ColorState::from_global(lg, &init), None)
+            });
+            assert_eq!(
+                by_threads.coloring.colors, by_engine.coloring.colors,
+                "colors diverged (procs={procs} scheme={scheme:?})"
+            );
+            for (a, b) in by_threads.per_proc.iter().zip(by_engine.per_proc.iter()) {
+                assert_eq!(a.recolor_trace, b.recolor_trace, "p{} trace", a.rank);
+                assert_eq!(a.sent_msgs, b.sent_msgs, "p{} msgs", a.rank);
+                assert_eq!(a.sent_bytes, b.sent_bytes, "p{} bytes", a.rank);
+                assert_eq!(a.recv_msgs, b.recv_msgs, "p{} recvs", a.rank);
+                assert_eq!(
+                    a.vtime.to_bits(),
+                    b.vtime.to_bits(),
+                    "p{} virtual clock diverged (procs={procs} scheme={scheme:?})",
+                    a.rank
+                );
+                assert_eq!(a.dropped_msgs, 0);
+                assert_eq!(b.dropped_msgs, 0);
+            }
+        }
     }
 
     #[test]

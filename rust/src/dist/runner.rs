@@ -31,17 +31,34 @@ pub struct DistOutcome {
 }
 
 /// Run `f` once per partition part on its own thread and merge the results.
+/// Builds the local graphs itself; callers holding cached locals (a
+/// [`Session`](crate::coordinator::Session)) use [`run_distributed_with`].
 pub fn run_distributed<F>(g: &CsrGraph, part: &Partition, net: NetworkModel, f: F) -> DistOutcome
 where
     F: Fn(&mut Endpoint, &LocalGraph) -> ProcResult + Sync,
 {
-    let wall = Timer::start();
     let (_, locals) = build_local_graphs(g, part);
-    let eps = comm::network(part.num_parts, net);
-    let mut slots: Vec<Option<ProcResult>> = (0..part.num_parts).map(|_| None).collect();
+    run_distributed_with(g, &locals, net, f)
+}
+
+/// [`run_distributed`] over pre-built local graphs (one thread per local
+/// graph); `g` only sizes the merged coloring.
+pub fn run_distributed_with<F>(
+    g: &CsrGraph,
+    locals: &[LocalGraph],
+    net: NetworkModel,
+    f: F,
+) -> DistOutcome
+where
+    F: Fn(&mut Endpoint, &LocalGraph) -> ProcResult + Sync,
+{
+    let wall = Timer::start();
+    let procs = locals.len();
+    let eps = comm::network(procs, net);
+    let mut slots: Vec<Option<ProcResult>> = (0..procs).map(|_| None).collect();
     std::thread::scope(|s| {
         let fref = &f;
-        let mut handles = Vec::with_capacity(part.num_parts);
+        let mut handles = Vec::with_capacity(procs);
         for (ep, lg) in eps.into_iter().zip(locals.iter()) {
             handles.push(s.spawn(move || {
                 let mut ep = ep;
@@ -55,7 +72,7 @@ where
         }
     });
     let mut coloring = Coloring::uncolored(g.num_vertices());
-    let mut per_proc = Vec::with_capacity(part.num_parts);
+    let mut per_proc = Vec::with_capacity(procs);
     for r in slots.into_iter().map(|r| r.unwrap()) {
         for (gid, c) in r.colors {
             coloring.set(gid, c);

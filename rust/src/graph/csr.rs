@@ -71,7 +71,10 @@ impl CsrGraph {
     }
 
     /// Structural sanity: offsets monotone, neighbor ids in range, no
-    /// self-loops, symmetric adjacency. O(|E| log d) due to binary search.
+    /// self-loops, symmetric adjacency. The reverse-edge check
+    /// binary-searches the neighbor's (sorted) adjacency list — O(|E| log
+    /// d), as the builders guarantee sorted lists; a hand-built CSR with
+    /// unsorted lists falls back to a linear probe (O(|E|·d)).
     pub fn validate(&self) -> Result<(), String> {
         let n = self.num_vertices();
         for i in 0..n {
@@ -79,6 +82,7 @@ impl CsrGraph {
                 return Err(format!("xadj not monotone at {i}"));
             }
         }
+        let sorted = self.is_sorted();
         for u in 0..n as VertexId {
             for &v in self.neighbors(u) {
                 if v as usize >= n {
@@ -87,7 +91,12 @@ impl CsrGraph {
                 if v == u {
                     return Err(format!("self-loop at {u}"));
                 }
-                if !self.neighbors(v).contains(&u) {
+                let reverse_present = if sorted {
+                    self.neighbors(v).binary_search(&u).is_ok()
+                } else {
+                    self.neighbors(v).contains(&u)
+                };
+                if !reverse_present {
                     return Err(format!("asymmetric edge ({u},{v})"));
                 }
             }
@@ -168,5 +177,18 @@ mod tests {
     fn validate_catches_asymmetry() {
         let g = CsrGraph::new(vec![0, 1, 1], vec![1], "bad");
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_falls_back_for_unsorted_adjacency() {
+        // hand-built CSR with a descending list: symmetric but unsorted,
+        // so the reverse-edge check must use the linear probe
+        let g = CsrGraph::new(vec![0, 2, 3, 4], vec![2, 1, 0, 0], "unsorted");
+        assert!(!g.is_sorted());
+        g.validate().unwrap();
+        // and asymmetry is still caught on unsorted lists
+        let bad = CsrGraph::new(vec![0, 2, 2, 3], vec![2, 1, 0], "unsorted-bad");
+        assert!(!bad.is_sorted());
+        assert!(bad.validate().is_err());
     }
 }

@@ -100,11 +100,14 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
              \u{20}                    [--superstep N] [--async] [--recolor N] [--arc]\n\
              \u{20}                    [--schedule nd|ni|rv|rand|ND-RAND%x] [--scheme base|piggyback]\n\
              \u{20}                    [--stop-eps F] [--partitioner block|bfs] [--seed S]\n\
-             \u{20}                    [--ideal-net] [--json]\n\
+             \u{20}                    [--ideal-net] [--engine auto|threads|bsp] [--json]\n\
              \n\
              Distributed coloring with optional iterative recoloring.\n\
              --stop-eps F  stop recoloring once an iteration improves the color\n\
              \u{20}             count by less than the relative fraction F\n\
+             --engine E    execution path: bsp step engine (default via auto) or\n\
+             \u{20}             one OS thread per simulated process; results are\n\
+             \u{20}             bit-for-bit identical, only wallclock differs\n\
              --json        stream one JSON event per phase/superstep/iteration\n\
              \u{20}             (plus a final result record) instead of the table",
         ),
@@ -131,7 +134,8 @@ fn print_help() {
          color options: --procs P --ordering nat|lf|sl|if|bf --selection ff|sff|lu|r<X>\n\
          \u{20}              --superstep N --async --recolor N --schedule nd|ni|rv|rand|ND-RAND%x\n\
          \u{20}              --scheme base|piggyback --arc --partitioner block|bfs --seed S\n\
-         \u{20}              --stop-eps F (early-stop recoloring) --json (stream events)"
+         \u{20}              --stop-eps F (early-stop recoloring) --engine auto|threads|bsp\n\
+         \u{20}              --json (stream events)"
     );
 }
 

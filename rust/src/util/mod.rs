@@ -6,6 +6,7 @@ pub mod args;
 pub mod bench;
 pub mod bitset;
 pub mod error;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,246 @@
+//! A persistent worker-thread pool with *scoped* execution.
+//!
+//! The BSP step engine (`dist::engine`) runs thousands of simulated
+//! processes per job; spawning an OS thread per process — or even per run —
+//! is exactly the oversubscription the engine exists to avoid. This pool
+//! spawns `W` worker threads once per OS process ([`global`]) and reuses
+//! them for every run: [`WorkerPool::scoped_run`] hands shard indices
+//! `0..shards` to distinct workers, blocks until every shard finished, and
+//! propagates the first panic. Because the caller blocks, the shard
+//! closure may borrow stack data — the same contract as
+//! `std::thread::scope`, without the per-call thread spawns.
+//!
+//! Rules of use:
+//!
+//! * `shards` must not exceed [`WorkerPool::workers`]; shards are placed on
+//!   distinct workers so closures that synchronize with each other (the
+//!   engine's per-step barrier) cannot self-deadlock.
+//! * Runs are serialized: a second `scoped_run` (from another thread)
+//!   waits for the first to finish. Never call `scoped_run` from inside a
+//!   shard closure — that would wait on the pool from the pool.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// `&(dyn Fn(usize) + Sync)` with its lifetime erased so it can cross the
+/// worker channels. Sound because [`WorkerPool::scoped_run`] blocks on the
+/// completion latch before returning, keeping the referent alive for as
+/// long as any worker may touch it.
+struct ErasedFn(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the referent is `Sync` (shared calls from many threads are fine)
+// and outlives every use (see `ErasedFn` docs), so sending the pointer to
+// a worker thread is safe.
+unsafe impl Send for ErasedFn {}
+
+struct Job {
+    f: ErasedFn,
+    shard: usize,
+    latch: Arc<Latch>,
+}
+
+/// Countdown latch that also carries the first panic payload.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState {
+                remaining: n,
+                panic: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        if st.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<Box<dyn Any + Send>> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.panic.take()
+    }
+}
+
+/// A fixed set of persistent worker threads. See the module docs.
+pub struct WorkerPool {
+    workers: Vec<Sender<Job>>,
+    run_lock: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads.max(1)` named, detached worker threads.
+    pub fn new(threads: usize) -> WorkerPool {
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let (tx, rx) = channel::<Job>();
+                std::thread::Builder::new()
+                    .name(format!("bsp-worker-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            // SAFETY: see `ErasedFn` — the referent is alive
+                            // until `complete` below releases the caller.
+                            let f = unsafe { &*job.f.0 };
+                            let r = catch_unwind(AssertUnwindSafe(|| f(job.shard)));
+                            job.latch.complete(r.err());
+                        }
+                    })
+                    .expect("failed to spawn pool worker");
+                tx
+            })
+            .collect();
+        WorkerPool {
+            workers,
+            run_lock: Mutex::new(()),
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `f(shard)` for every `shard` in `0..shards`, each on its own
+    /// worker thread, and block until all finished. Panics in `f` are
+    /// re-raised here (after every shard completed, so no worker is left
+    /// touching caller data).
+    pub fn scoped_run(&self, shards: usize, f: &(dyn Fn(usize) + Sync)) {
+        assert!(
+            shards >= 1 && shards <= self.workers.len(),
+            "scoped_run wants {shards} shards but the pool has {} workers",
+            self.workers.len()
+        );
+        let _serial = self.run_lock.lock().unwrap_or_else(|e| e.into_inner());
+        let latch = Arc::new(Latch::new(shards));
+        // SAFETY: lifetime erasure only — the latch wait below outlives
+        // every worker-side use of the reference.
+        let erased: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        for (shard, tx) in self.workers[..shards].iter().enumerate() {
+            tx.send(Job {
+                f: ErasedFn(erased),
+                shard,
+                latch: Arc::clone(&latch),
+            })
+            .expect("pool worker thread died");
+        }
+        if let Some(p) = latch.wait() {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// The process-wide pool, sized to the host's available parallelism and
+/// created on first use. Every engine run and parallel local-graph build
+/// shares these threads — nothing is spawned per run.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        WorkerPool::new(n)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn shards_run_concurrently_and_complete() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        // a barrier across all shards proves they run on distinct threads
+        // at the same time (a sequential pool would deadlock here)
+        let barrier = Barrier::new(4);
+        pool.scoped_run(4, &|shard| {
+            barrier.wait();
+            hits.fetch_add(shard + 1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1 + 2 + 3 + 4);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_runs() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.scoped_run(2, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn borrows_of_caller_data_work() {
+        let pool = WorkerPool::new(3);
+        let data: Vec<usize> = (0..300).collect();
+        let slots: Vec<Mutex<usize>> = (0..3).map(|_| Mutex::new(0)).collect();
+        pool.scoped_run(3, &|shard| {
+            let mut sum = 0;
+            let mut i = shard;
+            while i < data.len() {
+                sum += data[i];
+                i += 3;
+            }
+            *slots[shard].lock().unwrap() = sum;
+        });
+        let total: usize = slots.iter().map(|m| *m.lock().unwrap()).sum();
+        assert_eq!(total, 300 * 299 / 2);
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_run(2, &|shard| {
+                if shard == 1 {
+                    panic!("shard boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must reach the caller");
+        // the pool is still usable afterwards
+        let ok = AtomicUsize::new(0);
+        pool.scoped_run(2, &|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "shards")]
+    fn too_many_shards_is_an_error() {
+        let pool = WorkerPool::new(2);
+        pool.scoped_run(3, &|_| {});
+    }
+
+    #[test]
+    fn global_pool_has_at_least_one_worker() {
+        assert!(global().workers() >= 1);
+    }
+}

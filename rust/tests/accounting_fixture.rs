@@ -1,9 +1,13 @@
 //! Accounting-invariance fixture: the pooled transport, dense ghost
-//! indexing, and scratch hoisting must not change any *modeled* quantity.
-//! For two fixed jobs (framework coloring + 2 RC iterations, Base and
-//! Piggyback) this pins — bit-for-bit — the final coloring, every
-//! process's `sent_msgs` / `sent_bytes` / `recv_msgs`, and every virtual
-//! clock (as `f64::to_bits`), against a committed fixture file.
+//! indexing, scratch hoisting — and now the BSP step engine — must not
+//! change any *modeled* quantity. For two fixed jobs (framework coloring +
+//! 2 RC iterations, Base and Piggyback) this pins — bit-for-bit — the
+//! final coloring, every process's `sent_msgs` / `sent_bytes` /
+//! `recv_msgs`, and every virtual clock (as `f64::to_bits`), against a
+//! committed fixture file. Every fixture case runs on **both execution
+//! paths** — the thread-per-process runner and the BSP step engine — and
+//! the two serializations must agree exactly before either is compared to
+//! the pin.
 //!
 //! Bless protocol: if `tests/fixtures/accounting_v1.txt` is absent (first
 //! run in a fresh environment) or `DGCOLOR_BLESS=1` is set, the observed
@@ -21,10 +25,12 @@ use dgcolor::color::recolor::{Permutation, RecolorSchedule};
 use dgcolor::color::{Coloring, Ordering, Selection};
 use dgcolor::dist::comm;
 use dgcolor::dist::cost::{CostModel, NetworkModel};
-use dgcolor::dist::framework::{self, FrameworkConfig};
-use dgcolor::dist::proc::{build_local_graphs, ColorState};
-use dgcolor::dist::recolor::{recolor_process_sync, CommScheme, RecolorConfig};
-use dgcolor::graph::synth;
+use dgcolor::dist::engine::{self, StepOutcome, StepProcess};
+use dgcolor::dist::framework::{self, FrameworkConfig, FrameworkStep};
+use dgcolor::dist::proc::{build_local_graphs, ColorState, LocalGraph};
+use dgcolor::dist::recolor::{recolor_process_sync, CommScheme, RecolorConfig, SyncRcStep};
+use dgcolor::dist::{Endpoint, ProcMetrics, ProcResult};
+use dgcolor::graph::{synth, CsrGraph};
 use dgcolor::partition::{self, Partitioner};
 use std::path::Path;
 
@@ -40,30 +46,71 @@ fn fnv1a(bytes: impl Iterator<Item = u8>) -> u64 {
     h
 }
 
-/// Run the fixed job and serialize every modeled quantity, one line each.
-fn run_fixture(scheme: CommScheme) -> Vec<String> {
-    let g = synth::fem_like(600, 10.0, 26, 0.01, 5, "fixture");
-    let part = partition::partition(&g, Partitioner::Block, PROCS, 1);
-    let (_, locals) = build_local_graphs(&g, &part);
-    let eps = comm::network(PROCS, NetworkModel::default());
-    let cost = CostModel::fixed();
-    let fw = FrameworkConfig {
+fn fixture_graph() -> CsrGraph {
+    synth::fem_like(600, 10.0, 26, 0.01, 5, "fixture")
+}
+
+fn fixture_fw() -> FrameworkConfig {
+    FrameworkConfig {
         ordering: Ordering::InternalFirst,
         selection: Selection::RandomX(8),
         superstep_size: 64,
         sync: true,
         seed: 42,
         max_rounds: 200,
-    };
-    let rc = RecolorConfig {
+    }
+}
+
+fn fixture_rc(scheme: CommScheme) -> RecolorConfig {
+    RecolorConfig {
         schedule: RecolorSchedule::Fixed(Permutation::NonDecreasing),
         iterations: 2,
         scheme,
         seed: 7,
         early_stop: None,
-    };
+    }
+}
 
-    let mut outs: Vec<Option<(Vec<(u32, u32)>, Vec<String>)>> = (0..PROCS).map(|_| None).collect();
+/// Serialize one process's modeled quantities, one line.
+fn proc_line(m: &ProcMetrics) -> String {
+    format!(
+        "proc {} msgs={} bytes={} recv={} dropped={} clock={:016x} trace={:?}",
+        m.rank,
+        m.sent_msgs,
+        m.sent_bytes,
+        m.recv_msgs,
+        m.dropped_msgs,
+        m.vtime.to_bits(),
+        m.recolor_trace,
+    )
+}
+
+fn merge_and_hash(g: &CsrGraph, pairs: Vec<Vec<(u32, u32)>>, lines: &mut Vec<String>) {
+    let mut coloring = Coloring::uncolored(g.num_vertices());
+    for ps in pairs {
+        for (gid, c) in ps {
+            coloring.set(gid, c);
+        }
+    }
+    coloring.validate(g).unwrap();
+    let hash = fnv1a(coloring.colors.iter().flat_map(|c| c.to_le_bytes()));
+    lines.push(format!(
+        "coloring colors={} hash={hash:016x}",
+        coloring.num_colors()
+    ));
+}
+
+/// The fixed job on the thread-per-process runner (the reference oracle).
+fn run_fixture_threads(scheme: CommScheme) -> Vec<String> {
+    let g = fixture_graph();
+    let part = partition::partition(&g, Partitioner::Block, PROCS, 1);
+    let (_, locals) = build_local_graphs(&g, &part);
+    let eps = comm::network(PROCS, NetworkModel::default());
+    let cost = CostModel::fixed();
+    let fw = fixture_fw();
+    let rc = fixture_rc(scheme);
+
+    let mut outs: Vec<Option<(Vec<(u32, u32)>, String)>> = (0..PROCS).map(|_| None).collect();
     std::thread::scope(|s| {
         let hs: Vec<_> = eps
             .into_iter()
@@ -79,18 +126,18 @@ fn run_fixture(scheme: CommScheme) -> Vec<String> {
                     framework::color_process(&mut ep, lg, fw, cost, &mut state, to, None, None);
                     let mut trace = Vec::new();
                     recolor_process_sync(&mut ep, lg, cost, rc, &mut state, &mut trace, None);
-                    let line = format!(
-                        "proc {} msgs={} bytes={} recv={} dropped={} clock={:016x} trace={:?}",
-                        ep.rank,
-                        ep.sent_msgs,
-                        ep.sent_bytes,
-                        ep.recv_msgs,
-                        ep.dropped_msgs,
-                        ep.clock.to_bits(),
-                        trace,
-                    );
                     assert_eq!(ep.dropped_msgs, 0, "transport dropped messages");
-                    (state.owned_pairs(lg), vec![line])
+                    let m = ProcMetrics {
+                        rank: ep.rank,
+                        vtime: ep.clock,
+                        sent_msgs: ep.sent_msgs,
+                        sent_bytes: ep.sent_bytes,
+                        recv_msgs: ep.recv_msgs,
+                        dropped_msgs: ep.dropped_msgs,
+                        recolor_trace: trace,
+                        ..Default::default()
+                    };
+                    (state.owned_pairs(lg), proc_line(&m))
                 })
             })
             .collect();
@@ -99,19 +146,91 @@ fn run_fixture(scheme: CommScheme) -> Vec<String> {
         }
     });
 
-    let mut coloring = Coloring::uncolored(g.num_vertices());
+    let mut pairs = Vec::new();
     let mut lines = Vec::new();
-    for (pairs, ls) in outs.into_iter().map(|o| o.unwrap()) {
-        for (gid, c) in pairs {
-            coloring.set(gid, c);
-        }
-        lines.extend(ls);
+    for (ps, line) in outs.into_iter().map(|o| o.unwrap()) {
+        pairs.push(ps);
+        lines.push(line);
     }
-    coloring.validate(&g).unwrap();
-    let hash = fnv1a(coloring.colors.iter().flat_map(|c| c.to_le_bytes()));
+    merge_and_hash(&g, pairs, &mut lines);
+    lines
+}
+
+/// The same fixed job as a step machine: framework port chained into the
+/// sync-RC port, with the fixture's accounting read off the endpoint.
+struct FixtureMachine<'a> {
+    lg: &'a LocalGraph,
+    cost: CostModel,
+    rc_cfg: RecolorConfig,
+    fw: Option<FrameworkStep<'a>>,
+    rc: Option<SyncRcStep<'a>>,
+}
+
+impl StepProcess for FixtureMachine<'_> {
+    fn step(&mut self, ep: &mut Endpoint) -> StepOutcome {
+        if let Some(fw) = self.fw.as_mut() {
+            if fw.step_once(ep) {
+                let (colors, _m) = self.fw.take().unwrap().into_parts();
+                self.rc = Some(SyncRcStep::new(self.lg, &self.cost, self.rc_cfg, colors, None));
+            }
+            return StepOutcome::Running;
+        }
+        if self.rc.as_mut().expect("rc machine").step_once(ep) {
+            let (colors, trace, _m) = self.rc.take().unwrap().into_parts();
+            assert_eq!(ep.dropped_msgs, 0, "transport dropped messages");
+            let metrics = ProcMetrics {
+                rank: ep.rank,
+                vtime: ep.clock,
+                sent_msgs: ep.sent_msgs,
+                sent_bytes: ep.sent_bytes,
+                recv_msgs: ep.recv_msgs,
+                dropped_msgs: ep.dropped_msgs,
+                recolor_trace: trace,
+                ..Default::default()
+            };
+            return StepOutcome::Done(ProcResult {
+                colors: colors.owned_pairs(self.lg),
+                metrics,
+            });
+        }
+        StepOutcome::Running
+    }
+}
+
+/// The fixed job on the BSP step engine.
+fn run_fixture_engine(scheme: CommScheme) -> Vec<String> {
+    let g = fixture_graph();
+    let part = partition::partition(&g, Partitioner::Block, PROCS, 1);
+    let (_, locals) = build_local_graphs(&g, &part);
+    let cost = CostModel::fixed();
+    let fw = fixture_fw();
+    let rc_cfg = fixture_rc(scheme);
+
+    let out = engine::run_steps(g.num_vertices(), &locals, NetworkModel::default(), |lg| {
+        let to: Vec<u32> = (0..lg.n_owned() as u32).collect();
+        FixtureMachine {
+            lg,
+            cost,
+            rc_cfg,
+            fw: Some(FrameworkStep::new(
+                lg,
+                &fw,
+                &cost,
+                ColorState::uncolored(lg),
+                to,
+                None,
+                None,
+            )),
+            rc: None,
+        }
+    });
+
+    let mut lines: Vec<String> = out.per_proc.iter().map(proc_line).collect();
+    let hash = fnv1a(out.coloring.colors.iter().flat_map(|c| c.to_le_bytes()));
+    out.coloring.validate(&g).unwrap();
     lines.push(format!(
         "coloring colors={} hash={hash:016x}",
-        coloring.num_colors()
+        out.coloring.num_colors()
     ));
     lines
 }
@@ -119,8 +238,14 @@ fn run_fixture(scheme: CommScheme) -> Vec<String> {
 fn observed() -> String {
     let mut all = vec![format!("# accounting fixture v1, {PROCS} procs")];
     for (label, scheme) in [("base", CommScheme::Base), ("piggyback", CommScheme::Piggyback)] {
+        let threads = run_fixture_threads(scheme);
+        let engine = run_fixture_engine(scheme);
+        assert_eq!(
+            threads, engine,
+            "[{label}] BSP step engine diverged from the thread runner"
+        );
         all.push(format!("[{label}]"));
-        all.extend(run_fixture(scheme));
+        all.extend(threads);
     }
     let mut s = all.join("\n");
     s.push('\n');
@@ -131,6 +256,7 @@ fn observed() -> String {
 fn accounting_is_bit_for_bit_stable() {
     let now = observed();
     // determinism within this build — two runs, identical serialization
+    // (and `observed` itself asserts thread-runner == step-engine)
     assert_eq!(now, observed(), "accounting not deterministic across runs");
 
     let path = Path::new(FIXTURE);

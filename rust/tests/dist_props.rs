@@ -9,7 +9,7 @@ use dgcolor::coordinator::{ColoringConfig, Job, RecolorMode, RunResult, Session}
 use dgcolor::dist::cost::CostModel;
 use dgcolor::dist::proc::build_local_graphs;
 use dgcolor::dist::recolor::{CommScheme, RecolorConfig};
-use dgcolor::dist::NetworkModel;
+use dgcolor::dist::{Engine, NetworkModel};
 use dgcolor::graph::{CsrGraph, GraphBuilder};
 use dgcolor::partition::{self, Partitioner};
 use dgcolor::util::prop::{check, PropConfig};
@@ -172,6 +172,51 @@ fn prop_sync_recolor_trace_is_monotone() {
             }
             if *r.recolor_trace.last().unwrap() != r.num_colors {
                 return Err("trace tail != final colors".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The BSP step engine and the thread-per-process runner must be
+/// bit-for-bit interchangeable across random graphs, partitions and
+/// configs (every sync recolor mode, both comm schemes, both superstep
+/// communication modes, random superstep sizes and process counts).
+#[test]
+fn prop_step_engine_matches_thread_runner() {
+    check(
+        "BSP step engine == thread runner",
+        PropConfig { cases: 25, seed: 0xD15C },
+        |rng, _| {
+            let s = Session::new(random_graph(rng));
+            let mut cfg = random_config(rng);
+            if matches!(cfg.recolor, RecolorMode::Async { .. }) {
+                // aRC runs on threads under either setting; exercise the
+                // engine-relevant modes instead
+                cfg.recolor = RecolorMode::Sync(RecolorConfig::default());
+            }
+            cfg.engine = Engine::Threads;
+            let t = run(&s, cfg)?;
+            cfg.engine = Engine::Bsp;
+            let e = run(&s, cfg)?;
+            if t.coloring.colors != e.coloring.colors {
+                return Err(format!("colors diverged for {}", cfg.label()));
+            }
+            if t.recolor_trace != e.recolor_trace {
+                return Err(format!("traces diverged for {}", cfg.label()));
+            }
+            if t.metrics.total_msgs != e.metrics.total_msgs
+                || t.metrics.total_bytes != e.metrics.total_bytes
+                || t.metrics.total_conflicts != e.metrics.total_conflicts
+                || t.metrics.rounds != e.metrics.rounds
+            {
+                return Err(format!("accounting diverged for {}", cfg.label()));
+            }
+            if t.metrics.makespan.to_bits() != e.metrics.makespan.to_bits() {
+                return Err(format!("makespan bits diverged for {}", cfg.label()));
+            }
+            if t.metrics.total_dropped != 0 || e.metrics.total_dropped != 0 {
+                return Err(format!("dropped messages for {}", cfg.label()));
             }
             Ok(())
         },
