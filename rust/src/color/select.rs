@@ -69,6 +69,7 @@ impl Selection {
 /// per-vertex clearing) and the palette scan reads 64 colors per word, so
 /// a whole coloring sweep performs zero heap allocations after the marker
 /// reaches the palette size.
+#[derive(Clone)]
 pub struct SelectState {
     pub strategy: Selection,
     pub marker: ColorMarker,

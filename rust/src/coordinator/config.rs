@@ -5,7 +5,7 @@ use crate::color::recolor::{Permutation, RecolorSchedule};
 use crate::color::{Ordering, Selection};
 use crate::dist::cost::CostModel;
 use crate::dist::recolor::{CommScheme, RecolorConfig};
-use crate::dist::{Engine, NetworkModel};
+use crate::dist::{Engine, FaultPlan, NetworkModel};
 use crate::partition::Partitioner;
 use crate::util::args::Args;
 use crate::util::error::{Context, Error, Result};
@@ -55,6 +55,10 @@ pub struct ColoringConfig {
     /// modeled quantity (colors, messages, bytes, clocks) — only the
     /// simulator's wallclock — so it is not encoded in the label.
     pub engine: Engine,
+    /// Seeded transport/crash faults to inject ([`FaultPlan::none`] by
+    /// default). An active plan requires the supervised BSP engine; the
+    /// job validator enforces that.
+    pub faults: FaultPlan,
 }
 
 impl Default for ColoringConfig {
@@ -72,6 +76,7 @@ impl Default for ColoringConfig {
             fixed_cost: None,
             early_stop: None,
             engine: Engine::Auto,
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -114,7 +119,8 @@ impl ColoringConfig {
     /// Parse from CLI arguments (`--procs`, `--ordering`, `--selection`,
     /// `--superstep`, `--async`, `--recolor <n>`, `--arc`, `--schedule`,
     /// `--scheme`, `--partitioner`, `--seed`, `--ideal-net`,
-    /// `--stop-eps <f>`, `--engine auto|threads|bsp`). Parse-only:
+    /// `--stop-eps <f>`, `--engine auto|threads|bsp`,
+    /// `--faults <spec>` — see [`FaultPlan::parse`]). Parse-only:
     /// validation happens when the config becomes a [`Job`](super::Job).
     pub fn from_args(a: &Args) -> Result<Self> {
         let mut cfg = ColoringConfig {
@@ -138,6 +144,9 @@ impl ColoringConfig {
         }
         if let Some(s) = a.get_str("engine") {
             cfg.engine = s.parse().map_err(Error::msg)?;
+        }
+        if let Some(s) = a.get_str("faults") {
+            cfg.faults = FaultPlan::parse(s)?;
         }
         if let Some(s) = a.get_str("stop-eps") {
             let eps: f64 = s
@@ -195,7 +204,7 @@ impl ColoringConfig {
             RecolorMode::Sync(c) => format!("{}{}", c.schedule.label(), c.iterations),
             RecolorMode::Async { iterations, .. } => format!("aRC{iterations}"),
         };
-        format!("{sel}{ord}{}{comm}-{rc}", self.superstep_size)
+        format!("{sel}{ord}{}{comm}-{rc}{}", self.superstep_size, self.faults.label())
     }
 }
 
@@ -256,6 +265,16 @@ mod tests {
         let cfg = ColoringConfig::from_args(&parse("--engine bsp")).unwrap();
         assert_eq!(cfg.engine, Engine::Bsp);
         assert!(ColoringConfig::from_args(&parse("--engine warp")).is_err());
+    }
+
+    #[test]
+    fn faults_parse_and_label() {
+        let cfg = ColoringConfig::from_args(&parse("--faults seed=3,crash=1@4")).unwrap();
+        assert!(cfg.faults.is_active());
+        assert!(cfg.label().ends_with("+faults[seed=3,crash=1@4]"));
+        assert!(ColoringConfig::from_args(&parse("--faults seed=3")).is_err());
+        // inert plans leave fault-free labels byte-identical
+        assert_eq!(ColoringConfig::default().label(), "FI1000s-0");
     }
 
     #[test]

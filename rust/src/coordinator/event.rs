@@ -59,7 +59,7 @@ impl Phase {
 }
 
 /// One observable step of a coordinator run.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Event {
     /// A pipeline phase begins.
     PhaseStarted { phase: Phase },
@@ -72,8 +72,18 @@ pub enum Event {
     /// A recoloring iteration finished; `k` is the global color count
     /// after it — the same value appended to `RunResult::recolor_trace`.
     RecolorIteration { iter: u32, k: usize },
-    /// The run finished and validated with `colors` colors.
-    Done { colors: usize },
+    /// The supervising engine injected a crash-stop: `rank` went down at
+    /// engine step `step` (delays/reorders are counted in `DistMetrics`).
+    FaultInjected { rank: u32, step: u64 },
+    /// The supervising engine restarted `rank` from its checkpoint at
+    /// engine step `step`.
+    ProcRestarted { rank: u32, step: u64 },
+    /// A post-validation repair pass ran over `conflicts` conflicting
+    /// vertices (only after an active fault plan left conflicts behind).
+    RepairPass { pass: u32, conflicts: usize },
+    /// The run finished: `Ok(colors)` after validation, or the job's
+    /// typed error rendered as a string.
+    Done { result: Result<usize, String> },
 }
 
 /// Receives the event stream of a run. Implementations must be `Sync`:
@@ -120,7 +130,10 @@ impl EventLog {
 
 impl Observer for EventLog {
     fn on_event(&self, event: &Event) {
-        self.events.lock().unwrap().push(*event);
+        self.events
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(event.clone());
     }
 }
 
@@ -151,10 +164,40 @@ pub fn event_json(event: &Event) -> String {
         Event::RecolorIteration { iter, k } => {
             format!("{{\"event\":\"recolor_iteration\",\"iter\":{iter},\"k\":{k}}}")
         }
-        Event::Done { colors } => {
+        Event::FaultInjected { rank, step } => {
+            format!("{{\"event\":\"fault_injected\",\"rank\":{rank},\"step\":{step}}}")
+        }
+        Event::ProcRestarted { rank, step } => {
+            format!("{{\"event\":\"proc_restarted\",\"rank\":{rank},\"step\":{step}}}")
+        }
+        Event::RepairPass { pass, conflicts } => {
+            format!("{{\"event\":\"repair_pass\",\"pass\":{pass},\"conflicts\":{conflicts}}}")
+        }
+        Event::Done { result: Ok(colors) } => {
             format!("{{\"event\":\"done\",\"colors\":{colors}}}")
         }
+        Event::Done { result: Err(msg) } => {
+            format!("{{\"event\":\"done\",\"error\":\"{}\"}}", json_escape(msg))
+        }
     }
+}
+
+/// Minimal JSON string escaping for error messages (quotes, backslashes
+/// and control characters — everything our errors can contain).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -165,12 +208,12 @@ mod tests {
     fn event_log_records_in_order() {
         let log = EventLog::new();
         log.on_event(&Event::PhaseStarted { phase: Phase::Partition });
-        log.on_event(&Event::Done { colors: 3 });
+        log.on_event(&Event::Done { result: Ok(3) });
         assert_eq!(
             log.events(),
             vec![
                 Event::PhaseStarted { phase: Phase::Partition },
-                Event::Done { colors: 3 },
+                Event::Done { result: Ok(3) },
             ]
         );
         assert_eq!(log.take().len(), 2);
@@ -180,12 +223,12 @@ mod tests {
     #[test]
     fn emit_rank0_only_rank_zero_forwards() {
         let log = EventLog::new();
-        emit_rank0(Some(&log), 1, Event::Done { colors: 1 });
-        emit_rank0(Some(&log), 3, Event::Done { colors: 1 });
+        emit_rank0(Some(&log), 1, Event::Done { result: Ok(1) });
+        emit_rank0(Some(&log), 3, Event::Done { result: Ok(1) });
         assert!(log.events().is_empty());
-        emit_rank0(Some(&log), 0, Event::Done { colors: 1 });
+        emit_rank0(Some(&log), 0, Event::Done { result: Ok(1) });
         assert_eq!(log.events().len(), 1);
-        emit_rank0(None, 0, Event::Done { colors: 1 }); // no observer: no-op
+        emit_rank0(None, 0, Event::Done { result: Ok(1) }); // no observer: no-op
     }
 
     #[test]
@@ -206,7 +249,26 @@ mod tests {
             event_json(&Event::RecolorIteration { iter: 1, k: 12 }),
             "{\"event\":\"recolor_iteration\",\"iter\":1,\"k\":12}"
         );
-        assert_eq!(event_json(&Event::Done { colors: 9 }), "{\"event\":\"done\",\"colors\":9}");
+        assert_eq!(
+            event_json(&Event::Done { result: Ok(9) }),
+            "{\"event\":\"done\",\"colors\":9}"
+        );
+        assert_eq!(
+            event_json(&Event::FaultInjected { rank: 1, step: 4 }),
+            "{\"event\":\"fault_injected\",\"rank\":1,\"step\":4}"
+        );
+        assert_eq!(
+            event_json(&Event::ProcRestarted { rank: 1, step: 6 }),
+            "{\"event\":\"proc_restarted\",\"rank\":1,\"step\":6}"
+        );
+        assert_eq!(
+            event_json(&Event::RepairPass { pass: 1, conflicts: 2 }),
+            "{\"event\":\"repair_pass\",\"pass\":1,\"conflicts\":2}"
+        );
+        assert_eq!(
+            event_json(&Event::Done { result: Err("bad \"x\"\n".into()) }),
+            "{\"event\":\"done\",\"error\":\"bad \\\"x\\\"\\n\"}"
+        );
     }
 
     #[test]

@@ -31,7 +31,7 @@ use crate::color::recolor::{Permutation, RecolorSchedule};
 use crate::color::{Ordering, Selection};
 use crate::dist::cost::{CostModel, NetworkModel};
 use crate::dist::recolor::{CommScheme, RecolorConfig};
-use crate::dist::Engine;
+use crate::dist::{Engine, FaultPlan};
 use crate::partition::Partitioner;
 use crate::util::error::Result;
 use crate::{bail, ensure};
@@ -118,6 +118,26 @@ fn validate(cfg: &ColoringConfig) -> Result<()> {
             "the BSP step engine does not run aRC — use Engine::Auto (falls back to \
              threads) or Engine::Threads for async recoloring"
         );
+    }
+    if cfg.faults.is_active() {
+        ensure!(
+            cfg.engine != Engine::Threads,
+            "fault injection requires the supervised BSP engine — drop the explicit \
+             Engine::Threads (Auto routes faulted jobs to Bsp)"
+        );
+        ensure!(
+            !matches!(cfg.recolor, RecolorMode::Async { .. }),
+            "fault injection does not run aRC (aRC runs on the thread path) — use \
+             synchronous recoloring or none"
+        );
+        if let Some(c) = cfg.faults.crash {
+            ensure!(
+                (c.rank as usize) < cfg.num_procs,
+                "fault plan crashes rank {} but the job has only {} process(es)",
+                c.rank,
+                cfg.num_procs
+            );
+        }
     }
     Ok(())
 }
@@ -246,6 +266,14 @@ impl<'s> JobBuilder<'s> {
 
     pub fn no_recolor(mut self) -> Self {
         self.cfg.recolor = RecolorMode::None;
+        self
+    }
+
+    /// Inject seeded transport/crash faults ([`FaultPlan`]) — routes the
+    /// run through the supervised BSP engine, which checkpoints, restarts
+    /// and repairs. Incompatible with [`Engine::Threads`] and aRC.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.cfg.faults = plan;
         self
     }
 
@@ -411,6 +439,37 @@ mod tests {
                 .is_ok());
         }
         assert!(Job::builder().engine(Engine::Bsp).sync_recolor(nd(2)).build().is_ok());
+    }
+
+    #[test]
+    fn faulted_jobs_require_the_supervised_bsp_path() {
+        let plan = FaultPlan::parse("seed=1,delay=0.1").unwrap();
+        assert!(Job::builder().faults(plan).build().is_ok());
+        assert!(Job::builder().faults(plan).engine(Engine::Bsp).build().is_ok());
+        assert!(
+            Job::builder().faults(plan).engine(Engine::Threads).build().is_err(),
+            "explicit thread engine + faults must be rejected"
+        );
+        assert!(
+            Job::builder()
+                .faults(plan)
+                .async_recolor(Permutation::NonDecreasing, 1)
+                .build()
+                .is_err(),
+            "aRC + faults must be rejected"
+        );
+        let crash = FaultPlan::parse("seed=1,crash=7@2").unwrap();
+        assert!(
+            Job::builder().procs(4).faults(crash).build().is_err(),
+            "crash rank beyond the process count must be rejected"
+        );
+        assert!(Job::builder().procs(8).faults(crash).build().is_ok());
+        // the inert plan changes nothing
+        assert!(Job::builder()
+            .faults(FaultPlan::none())
+            .engine(Engine::Threads)
+            .build()
+            .is_ok());
     }
 
     #[test]

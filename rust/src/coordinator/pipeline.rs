@@ -16,8 +16,8 @@ use crate::dist::engine::{self, Engine, StepOutcome, StepProcess};
 use crate::dist::framework::{self, FrameworkConfig, FrameworkStep};
 use crate::dist::proc::{build_local_graphs, ColorState, LocalGraph};
 use crate::dist::recolor::{self, RecolorConfig, SyncRcStep};
-use crate::dist::runner::{run_distributed_with, ProcResult};
-use crate::dist::{CostModel, DistMetrics, Endpoint, ProcMetrics};
+use crate::dist::runner::{try_run_distributed_with, ProcResult};
+use crate::dist::{CostModel, DistMetrics, Endpoint, MsgKind, ProcMetrics};
 use crate::err;
 use crate::graph::CsrGraph;
 use crate::partition::{self, PartitionMetrics};
@@ -120,13 +120,27 @@ pub(crate) fn execute(
             RecolorMode::Sync(rc) => Some(*rc),
             _ => None,
         };
-        let outcome = engine::run_steps(g.num_vertices(), locals, cfg.network, |lg| {
-            JobMachine::new(lg, &fw, &cost, rc_cfg, obs)
-        });
+        // an active fault plan needs the supervising engine (checkpoints,
+        // stall-instead-of-panic, recovery); fault-free jobs keep the
+        // lockstep worker-pool engine bit-for-bit unchanged
+        let outcome = if cfg.faults.is_active() {
+            engine::run_steps_supervised(
+                g.num_vertices(),
+                locals,
+                cfg.network,
+                cfg.faults,
+                obs,
+                |lg| JobMachine::new(lg, &fw, &cost, rc_cfg, obs),
+            )?
+        } else {
+            engine::run_steps(g.num_vertices(), locals, cfg.network, |lg| {
+                JobMachine::new(lg, &fw, &cost, rc_cfg, obs)
+            })
+        };
         return finalize(g, part_metrics, cfg, outcome, obs);
     }
 
-    let outcome = run_distributed_with(g, locals, cfg.network, |ep, lg| {
+    let outcome = try_run_distributed_with(g, locals, cfg.network, |ep, lg| {
         let mut state = ColorState::uncolored(lg);
         let to_color: Vec<u32> = (0..lg.n_owned() as u32).collect();
         let mut metrics =
@@ -204,11 +218,12 @@ pub(crate) fn execute(
         metrics.sent_bytes = ep.sent_bytes;
         metrics.recv_msgs = ep.recv_msgs;
         metrics.dropped_msgs = ep.dropped_msgs;
+        metrics.non_teardown_drops = ep.non_teardown_drops;
         ProcResult {
             colors: state.owned_pairs(lg),
             metrics,
         }
-    });
+    })?;
     finalize(g, part_metrics, cfg, outcome, obs)
 }
 
@@ -226,10 +241,28 @@ fn finalize(
             phase: Phase::Validation,
         });
     }
-    outcome
-        .coloring
-        .validate(g)
-        .map_err(|e| err!("invalid coloring from {}: {e}", cfg.label()))?;
+    // fault-free mode: a drop outside acknowledged teardown is a protocol
+    // bug, surfaced as a typed error (debug builds assert at the drop site)
+    if !cfg.faults.is_active() && outcome.metrics.total_non_teardown_drops > 0 {
+        return Err(err!(
+            "transport dropped {} message(s) outside teardown in fault-free mode \
+             (teardown report by rank: {:?})",
+            outcome.metrics.total_non_teardown_drops,
+            outcome.metrics.dropped_by_rank
+        ));
+    }
+    if let Err(e) = outcome.coloring.validate(g) {
+        if cfg.faults.is_active() {
+            // graceful degradation: injected faults left conflicts — run
+            // the localized repair pass before giving up
+            repair_coloring(g, &mut outcome.coloring, cfg.seed, obs)?;
+            outcome.coloring.validate(g).map_err(|e| {
+                err!("invalid coloring from {} after repair: {e}", cfg.label())
+            })?;
+        } else {
+            return Err(err!("invalid coloring from {}: {e}", cfg.label()));
+        }
+    }
 
     // every process derives the trace from the same allreduced counts —
     // take rank 0's instead of cloning it
@@ -243,7 +276,9 @@ fn finalize(
     let trace = std::mem::take(&mut outcome.per_proc[0].recolor_trace);
     let num_colors = outcome.coloring.num_colors();
     if let Some(o) = obs {
-        o.on_event(&Event::Done { colors: num_colors });
+        o.on_event(&Event::Done {
+            result: Ok(num_colors),
+        });
     }
     Ok(RunResult {
         num_colors,
@@ -256,11 +291,72 @@ fn finalize(
     })
 }
 
+/// Localized post-validation repair, reusing the framework's conflict
+/// tie-break: every conflicting edge contributes its [`framework::loses`]
+/// loser, and losers are sequentially first-fit recolored against the
+/// *current* coloring — a sequential repair can therefore not introduce a
+/// new conflict, so one pass normally suffices; the loop is bounded for
+/// defense in depth. Each pass is reported as [`Event::RepairPass`].
+/// Returns the number of repair passes that ran.
+pub fn repair_coloring(
+    g: &CsrGraph,
+    coloring: &mut Coloring,
+    seed: u64,
+    obs: Option<&dyn Observer>,
+) -> Result<u32> {
+    const MAX_PASSES: u32 = 3;
+    let mut used: Vec<u32> = Vec::new();
+    for pass in 1..=MAX_PASSES {
+        let mut losers: Vec<u32> = Vec::new();
+        for u in 0..g.num_vertices() as u32 {
+            let cu = coloring.colors[u as usize];
+            for &v in g.neighbors(u) {
+                if v > u && coloring.colors[v as usize] == cu {
+                    losers.push(if framework::loses(u, v, seed) { u } else { v });
+                }
+            }
+        }
+        losers.sort_unstable();
+        losers.dedup();
+        if losers.is_empty() {
+            return Ok(pass - 1);
+        }
+        if let Some(o) = obs {
+            o.on_event(&Event::RepairPass {
+                pass,
+                conflicts: losers.len(),
+            });
+        }
+        for &v in &losers {
+            used.clear();
+            used.extend(g.neighbors(v).iter().map(|&u| coloring.colors[u as usize]));
+            used.sort_unstable();
+            let mut c = 0u32;
+            for &uc in &used {
+                if uc == c {
+                    c += 1;
+                } else if uc > c {
+                    break;
+                }
+            }
+            coloring.colors[v as usize] = c;
+        }
+    }
+    coloring
+        .validate(g)
+        .map_err(|e| err!("coloring still conflicted after {MAX_PASSES} repair passes: {e}"))?;
+    Ok(MAX_PASSES)
+}
+
 /// The pipeline closure above as a step machine for the BSP engine: the
 /// framework port, the initial-count allreduce (booked under "comm"), the
 /// recoloring phase event, the sync-RC port, and the final cumulative
 /// accounting — in exactly the thread closure's order, so both execution
 /// paths are bit-for-bit interchangeable.
+///
+/// `Clone` snapshots the whole machine — the supervising engine's crash
+/// checkpoint.
+#[derive(Clone)]
 struct JobMachine<'a> {
     lg: &'a LocalGraph,
     cost: CostModel,
@@ -276,6 +372,7 @@ struct JobMachine<'a> {
     state: JobState,
 }
 
+#[derive(Clone, Copy)]
 enum JobState {
     Framework,
     InitKSend,
@@ -313,6 +410,22 @@ impl<'a> JobMachine<'a> {
 }
 
 impl StepProcess for JobMachine<'_> {
+    fn poll_ready(&mut self, ep: &mut Endpoint) -> bool {
+        match self.state {
+            JobState::Framework => self.fw.as_mut().expect("framework machine").ready(ep),
+            JobState::InitKReduce => {
+                ep.rank != 0
+                    || (1..self.lg.nprocs)
+                        .all(|p| ep.have_msg(p, MsgKind::Collective, self.coll_seq, 0))
+            }
+            JobState::InitKFinish => {
+                ep.rank == 0 || ep.have_msg(0, MsgKind::Collective, self.coll_seq, 1)
+            }
+            JobState::Recolor => self.rc.as_mut().expect("rc machine").ready(ep),
+            JobState::InitKSend | JobState::Finalize => true,
+        }
+    }
+
     fn step(&mut self, ep: &mut Endpoint) -> StepOutcome {
         match self.state {
             JobState::Framework => {
@@ -379,6 +492,7 @@ impl StepProcess for JobMachine<'_> {
                 self.metrics.sent_bytes = ep.sent_bytes;
                 self.metrics.recv_msgs = ep.recv_msgs;
                 self.metrics.dropped_msgs = ep.dropped_msgs;
+                self.metrics.non_teardown_drops = ep.non_teardown_drops;
                 let colors = self.colors.take().unwrap();
                 return StepOutcome::Done(ProcResult {
                     colors: colors.owned_pairs(self.lg),

@@ -43,7 +43,15 @@ use crate::partition::{self, Partition, PartitionMetrics, Partitioner};
 use crate::util::error::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// Lock a session mutex, tolerating poison: a panicking job thread must
+/// not wedge every later job on the shared session (the protected state
+/// is only a cache plus a calibrated cost model, both valid at every
+/// point the lock is held).
+fn lock_tolerant<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Default bound on cached partition keys per session.
 pub const DEFAULT_PARTITION_CACHE_CAP: usize = 32;
@@ -135,7 +143,7 @@ impl Session {
     /// on first use. Jobs with their own `fixed_cost` still take
     /// precedence.
     pub fn with_cost_model(self, cost: CostModel) -> Session {
-        *self.cost.lock().unwrap() = Some(cost);
+        *lock_tolerant(&self.cost) = Some(cost);
         self
     }
 
@@ -155,7 +163,7 @@ impl Session {
     /// lock is held through calibration so concurrent callers wait
     /// instead of recalibrating).
     pub fn cost_model(&self) -> CostModel {
-        let mut cost = self.cost.lock().unwrap();
+        let mut cost = lock_tolerant(&self.cost);
         *cost.get_or_insert_with(CostModel::calibrated)
     }
 
@@ -168,7 +176,7 @@ impl Session {
         seed: u64,
     ) -> Arc<PartitionHandle> {
         let key = (partitioner, num_procs, seed);
-        let mut cache = self.partitions.lock().unwrap();
+        let mut cache = lock_tolerant(&self.partitions);
         cache.tick += 1;
         let tick = cache.tick;
         if let Some(e) = cache.map.get_mut(&key) {
@@ -217,14 +225,14 @@ impl Session {
 
     /// How many distinct partition keys are cached.
     pub fn cached_partitions(&self) -> usize {
-        self.partitions.lock().unwrap().map.len()
+        lock_tolerant(&self.partitions).map.len()
     }
 
     /// Drop every cached partition (the miss counter keeps counting).
     /// Useful mid-session when sweeping keys that are never revisited —
     /// e.g. one job per process count on a huge graph.
     pub fn clear_cached_partitions(&self) {
-        self.partitions.lock().unwrap().map.clear();
+        lock_tolerant(&self.partitions).map.clear();
     }
 
     /// Run one job against the session's cached artifacts.
@@ -254,7 +262,15 @@ impl Session {
         let part = self.partition(cfg.partitioner, cfg.num_procs, cfg.seed);
         let cost = cfg.fixed_cost.unwrap_or_else(|| self.cost_model());
         let arts = part.locals(&self.graph);
-        pipeline::execute(&self.graph, &part.metrics, &arts.locals, &cost, job, obs)
+        let res = pipeline::execute(&self.graph, &part.metrics, &arts.locals, &cost, job, obs);
+        if let (Some(o), Err(e)) = (obs, &res) {
+            // A failed job still terminates its event stream: observers
+            // watching for `Done` never hang on an error path.
+            o.on_event(&Event::Done {
+                result: Err(e.to_string()),
+            });
+        }
+        res
     }
 }
 

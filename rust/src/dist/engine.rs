@@ -36,11 +36,15 @@
 //! that use it fall back to the thread runner (see [`Engine`]).
 
 use crate::color::Coloring;
+use crate::coordinator::event::{Event, Observer};
 use crate::dist::comm::{self, Endpoint};
 use crate::dist::cost::NetworkModel;
+use crate::dist::fault::FaultPlan;
 use crate::dist::proc::LocalGraph;
 use crate::dist::runner::ProcResult;
 use crate::dist::{DistMetrics, DistOutcome};
+use crate::err;
+use crate::util::error::{Error, Result};
 use crate::util::pool;
 use crate::util::timer::Timer;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -67,6 +71,19 @@ pub enum StepOutcome {
 ///   counts and round continuation are all allreduced).
 pub trait StepProcess: Send {
     fn step(&mut self, ep: &mut Endpoint) -> StepOutcome;
+
+    /// Whether the next [`step`](StepProcess::step) can run without
+    /// violating the delivery contract — i.e. every message that step
+    /// will consume is already available on `ep`. The supervising engine
+    /// ([`run_steps_supervised`]) polls this to *stall* a process whose
+    /// inputs were delayed or held back by a [`FaultPlan`] instead of
+    /// letting its `try_recv` panic; the lockstep engine ([`run_steps`])
+    /// never calls it. The default is "always ready", which is correct
+    /// for any machine whose receives are protected by the BSP delivery
+    /// invariant alone.
+    fn poll_ready(&mut self, _ep: &mut Endpoint) -> bool {
+        true
+    }
 }
 
 /// Which execution path runs a job's distributed section.
@@ -198,6 +215,175 @@ where
     }
 }
 
+/// Runaway guard for the supervised loop: orders of magnitude above any
+/// legitimate engine-step count, so hitting it means livelock.
+const MAX_SUPERVISED_STEPS: u64 = 10_000_000;
+
+/// [`run_steps`] under supervision: a single-threaded engine that weaves a
+/// [`FaultPlan`] into the transport and *recovers* from the faults it
+/// injects, instead of trusting the BSP delivery invariant.
+///
+/// Per engine step, machines are stepped **in rank order on the calling
+/// thread** — full determinism is the point here (same plan, same graph,
+/// same seed ⇒ the same recovery trace, twice), and chaos runs are not on
+/// any performance path. The supervisor:
+///
+/// * **checkpoints** the crash rank's machine at the top of every engine
+///   step (a `Clone` of its full state: colors, RNG, scratch, state tag);
+/// * at the plan's crash step, the live machine is destroyed *before*
+///   executing that step and the rank goes down for `down_steps` engine
+///   steps (peers stall via [`StepProcess::poll_ready`] when they need its
+///   messages), emitting [`Event::FaultInjected`];
+/// * on revival the machine is **replayed from the checkpoint** — because
+///   the crash lands on a step boundary the checkpoint is exactly the
+///   pre-crash state, so no message is consumed or sent twice — emitting
+///   [`Event::ProcRestarted`];
+/// * a step on which *no* live machine is ready releases held (reordered)
+///   messages via [`Endpoint::flush_held`]; if nothing was released and no
+///   process is down, the run is deadlocked and returns a typed error;
+/// * a machine panic (including a fault-starved receive) becomes
+///   [`Error::proc_failed`] instead of unwinding through the caller.
+///
+/// With `FaultPlan::none()` the schedule is the lockstep engine's and every
+/// modeled quantity is bit-for-bit identical to [`run_steps`]
+/// (`tests/fault_injection.rs` pins this).
+pub fn run_steps_supervised<'a, M, F>(
+    num_vertices: usize,
+    locals: &'a [LocalGraph],
+    net: NetworkModel,
+    plan: FaultPlan,
+    obs: Option<&dyn Observer>,
+    make: F,
+) -> Result<DistOutcome>
+where
+    M: StepProcess + Clone + 'a,
+    F: Fn(&'a LocalGraph) -> M,
+{
+    let wall = Timer::start();
+    let procs = locals.len();
+    let mut eps = comm::network_faulted(procs, net, plan);
+    let mut machines: Vec<M> = locals.iter().map(&make).collect();
+    let mut outs: Vec<Option<ProcResult>> = (0..procs).map(|_| None).collect();
+
+    let crash = plan.crash.filter(|c| (c.rank as usize) < procs);
+    let mut crashed = false;
+    let mut down_until: Option<u64> = None;
+    let mut checkpoint: Option<M> = None;
+    let mut restarts: u64 = 0;
+    let mut n_done = 0usize;
+    let mut step: u64 = 0;
+
+    let emit = |ev: Event| {
+        if let Some(o) = obs {
+            o.on_event(&ev);
+        }
+    };
+
+    while n_done < procs {
+        if step >= MAX_SUPERVISED_STEPS {
+            return Err(err!(
+                "supervised engine exceeded {MAX_SUPERVISED_STEPS} steps ({} of {procs} \
+                 processes finished) — livelock",
+                n_done
+            ));
+        }
+        let mut progressed = false;
+        for r in 0..procs {
+            if outs[r].is_some() {
+                continue;
+            }
+            let is_crash_rank = crash.is_some_and(|c| c.rank as usize == r);
+            if is_crash_rank && !crashed {
+                // per-step checkpoint: the recovery image is the state at
+                // the top of the step, i.e. exactly between two steps
+                checkpoint = Some(machines[r].clone());
+                if crash.is_some_and(|c| c.step == step) {
+                    crashed = true;
+                    down_until = Some(step + crash.map(|c| c.down_steps).unwrap_or(1));
+                    emit(Event::FaultInjected { rank: r as u32, step });
+                    continue;
+                }
+            }
+            if is_crash_rank && crashed {
+                match down_until {
+                    Some(until) if step < until => continue, // still down
+                    Some(_) => {
+                        // revive: deterministic replay from the checkpoint
+                        machines[r] = checkpoint.take().expect("crash checkpoint missing");
+                        restarts += 1;
+                        down_until = None;
+                        emit(Event::ProcRestarted { rank: r as u32, step });
+                    }
+                    None => {} // already revived
+                }
+            }
+            if !machines[r].poll_ready(&mut eps[r]) {
+                continue; // stalled on a delayed/held message
+            }
+            let (m, ep) = (&mut machines[r], &mut eps[r]);
+            match catch_unwind(AssertUnwindSafe(|| m.step(ep))) {
+                Ok(StepOutcome::Running) => progressed = true,
+                Ok(StepOutcome::Done(out)) => {
+                    progressed = true;
+                    outs[r] = Some(out);
+                    n_done += 1;
+                }
+                Err(p) => {
+                    let detail = p
+                        .downcast_ref::<String>()
+                        .map(|s| s.as_str())
+                        .or_else(|| p.downcast_ref::<&str>().copied())
+                        .unwrap_or("machine panicked");
+                    return Err(Error::proc_failed(r as u32, step, detail));
+                }
+            }
+        }
+        if !progressed && n_done < procs {
+            let down_now = down_until.is_some_and(|until| step < until);
+            if !down_now {
+                let released: usize = eps.iter_mut().map(|ep| ep.flush_held()).sum();
+                if released == 0 {
+                    return Err(err!(
+                        "supervised engine deadlocked at step {step}: every live process \
+                         is stalled, no process is down, and no held message remains"
+                    ));
+                }
+            }
+        }
+        step += 1;
+    }
+
+    // deliver any messages still held at finished senders, then tear down
+    for ep in eps.iter_mut() {
+        ep.flush_held();
+        ep.teardown = true;
+    }
+
+    let mut coloring = Coloring::uncolored(num_vertices);
+    let mut per_proc = Vec::with_capacity(procs);
+    for (r, (out, ep)) in outs.into_iter().zip(eps.into_iter()).enumerate() {
+        let mut res = out.expect("supervised machine ended without finishing");
+        res.metrics.rank = r;
+        res.metrics.dropped_msgs = ep.dropped_msgs;
+        res.metrics.non_teardown_drops = ep.non_teardown_drops;
+        res.metrics.injected_delays = ep.injected_delays;
+        res.metrics.injected_reorders = ep.injected_reorders;
+        if crash.is_some_and(|c| c.rank as usize == r) {
+            res.metrics.restarts = restarts;
+        }
+        for (gid, c) in std::mem::take(&mut res.colors) {
+            coloring.set(gid, c);
+        }
+        per_proc.push(res.metrics);
+    }
+    let metrics = DistMetrics::aggregate(&per_proc, wall.secs());
+    Ok(DistOutcome {
+        coloring,
+        metrics,
+        per_proc,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +394,7 @@ mod tests {
 
     /// A toy machine exercising the engine contract: one split collective,
     /// then a message to the next rank received one step later.
+    #[derive(Clone)]
     struct Toy {
         rank: usize,
         nprocs: usize,
@@ -218,6 +405,23 @@ mod tests {
     }
 
     impl StepProcess for Toy {
+        fn poll_ready(&mut self, ep: &mut Endpoint) -> bool {
+            use crate::dist::comm::MsgKind;
+            match self.state {
+                1 => {
+                    ep.rank != 0
+                        || (1..self.nprocs)
+                            .all(|p| ep.have_msg(p, MsgKind::Collective, self.seq, 0))
+                }
+                2 => ep.rank == 0 || ep.have_msg(0, MsgKind::Collective, self.seq, 1),
+                4 => {
+                    let from = (self.rank + self.nprocs - 1) % self.nprocs;
+                    ep.have_msg(from, MsgKind::Colors, 0, 0)
+                }
+                _ => true,
+            }
+        }
+
         fn step(&mut self, ep: &mut Endpoint) -> StepOutcome {
             use crate::dist::comm::MsgKind;
             match self.state {
@@ -301,6 +505,134 @@ mod tests {
             run_steps(g.num_vertices(), &locals, NetworkModel::ideal(), |_| Boom)
         }));
         assert!(r.is_err(), "a machine panic must fail the run loudly");
+    }
+
+    fn toy_fleet(procs: usize) -> (crate::graph::CsrGraph, Vec<LocalGraph>) {
+        let g = synth::path(procs.max(2));
+        let part = partition::partition(&g, Partitioner::Block, procs, 1);
+        let (_, locals) = build_local_graphs(&g, &part);
+        (g, locals)
+    }
+
+    fn toy_of(lg: &LocalGraph, nprocs: usize) -> Toy {
+        Toy {
+            rank: lg.rank as usize,
+            nprocs,
+            seq: 0,
+            acc: 0,
+            sum: 0,
+            state: 0,
+        }
+    }
+
+    #[test]
+    fn supervised_with_inert_plan_matches_run_steps() {
+        for procs in [1usize, 3, 8] {
+            let (g, locals) = toy_fleet(procs);
+            let base = run_steps(g.num_vertices(), &locals, NetworkModel::default(), |lg| {
+                toy_of(lg, procs)
+            });
+            let sup = run_steps_supervised(
+                g.num_vertices(),
+                &locals,
+                NetworkModel::default(),
+                FaultPlan::none(),
+                None,
+                |lg| toy_of(lg, procs),
+            )
+            .unwrap();
+            for (a, b) in base.per_proc.iter().zip(sup.per_proc.iter()) {
+                assert_eq!(a.rank, b.rank);
+                assert_eq!(a.sent_msgs, b.sent_msgs, "p{} msgs", a.rank);
+                assert_eq!(a.vtime.to_bits(), b.vtime.to_bits(), "p{} clock", a.rank);
+            }
+            assert_eq!(sup.metrics.total_restarts, 0);
+            assert_eq!(sup.metrics.total_injected_delays, 0);
+            assert_eq!(sup.metrics.total_non_teardown_drops, 0);
+        }
+    }
+
+    #[test]
+    fn supervised_machine_panic_is_a_typed_error() {
+        use crate::util::error::ErrorKind;
+        #[derive(Clone)]
+        struct Boom;
+        impl StepProcess for Boom {
+            fn step(&mut self, ep: &mut Endpoint) -> StepOutcome {
+                if ep.rank == 1 {
+                    panic!("machine boom");
+                }
+                StepOutcome::Running
+            }
+        }
+        let (g, locals) = toy_fleet(4);
+        // active plan so the panic path is exercised under supervision
+        let plan = FaultPlan {
+            delay_prob: 1e-9,
+            delay_secs: 1e-6,
+            ..FaultPlan::none()
+        };
+        let err = run_steps_supervised(
+            g.num_vertices(),
+            &locals,
+            NetworkModel::ideal(),
+            plan,
+            None,
+            |_| Boom,
+        )
+        .expect_err("a machine panic must become a typed error");
+        assert_eq!(err.kind(), ErrorKind::ProcFailed { rank: 1, step: 0 });
+        assert!(err.to_string().contains("machine boom"), "{err}");
+    }
+
+    #[test]
+    fn supervised_crash_recovery_is_deterministic() {
+        use crate::coordinator::event::EventLog;
+        use crate::dist::fault::Crash;
+        let procs = 4usize;
+        let plan = FaultPlan {
+            seed: 5,
+            crash: Some(Crash {
+                rank: 1,
+                step: 2,
+                down_steps: 2,
+            }),
+            ..FaultPlan::none()
+        };
+        let run = || {
+            let (g, locals) = toy_fleet(procs);
+            let log = EventLog::new();
+            let out = run_steps_supervised(
+                g.num_vertices(),
+                &locals,
+                NetworkModel::default(),
+                plan,
+                Some(&log),
+                |lg| toy_of(lg, procs),
+            )
+            .unwrap();
+            (out, log.take())
+        };
+        let (a, ev_a) = run();
+        let (b, ev_b) = run();
+        assert_eq!(ev_a, ev_b, "recovery trace must replay identically");
+        assert_eq!(
+            ev_a,
+            vec![
+                Event::FaultInjected { rank: 1, step: 2 },
+                Event::ProcRestarted { rank: 1, step: 4 },
+            ]
+        );
+        assert_eq!(a.metrics.total_restarts, 1);
+        assert_eq!(a.per_proc[1].restarts, 1);
+        let expect = (procs * (procs + 1) / 2) as f64;
+        for m in &a.per_proc {
+            assert_eq!(m.vtime, expect, "p{} allreduce sum survives the crash", m.rank);
+        }
+        for (x, y) in a.per_proc.iter().zip(b.per_proc.iter()) {
+            assert_eq!(x.sent_msgs, y.sent_msgs);
+            assert_eq!(x.vtime.to_bits(), y.vtime.to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! Seeded, deterministic fault injection for the simulated transport.
+//!
+//! A [`FaultPlan`] describes which faults to inject into a run: per-message
+//! delivery delays, per-message reordering (sender-side hold-back until the
+//! supervisor flushes), and at most one crash-stop of a process at an
+//! engine superstep. Every decision is a **pure function of the plan seed
+//! and the message identity** `(from, to, kind, round, seq)` — never of
+//! wall-clock time, scheduling, or any mutable RNG state — so the same
+//! plan injects the same faults into the same run twice, regardless of
+//! thread interleaving. That is what makes recovery traces replayable and
+//! the chaos property tests (`rust/tests/fault_injection.rs`) meaningful.
+//!
+//! `FaultPlan::none()` is the default everywhere; every consumer gates its
+//! fault branches on [`FaultPlan::is_active`], so a fault-free run takes
+//! bit-for-bit the same path it took before this module existed (pinned by
+//! the accounting fixture).
+
+use crate::dist::comm::MsgKind;
+use crate::util::error::Result;
+use crate::util::rng::mix64;
+use crate::{bail, err};
+
+/// Crash-stop of one process: at the start of engine superstep `step` the
+/// process goes down (it does not execute that step) and stays down for
+/// `down_steps` supersteps before the supervisor restarts it from its last
+/// checkpoint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Crash {
+    pub rank: u32,
+    pub step: u64,
+    /// Supersteps the process stays down before restarting (≥ 1).
+    pub down_steps: u64,
+}
+
+/// Default downtime of a `crash=r@s` spec without an explicit `+d` suffix.
+pub const DEFAULT_DOWN_STEPS: u64 = 2;
+
+/// A seeded, deterministic plan of transport faults. See the module docs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Seeds the per-message delay/reorder coins.
+    pub seed: u64,
+    /// Probability that a message's arrival is delayed by `delay_secs`.
+    pub delay_prob: f64,
+    /// Virtual seconds added to a delayed message's arrival time.
+    pub delay_secs: f64,
+    /// Probability that a message is held back at the sender until the
+    /// supervisor flushes (delivered out of program order).
+    pub reorder_prob: f64,
+    /// At most one crash-stop per run.
+    pub crash: Option<Crash>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The inert plan: no faults, zero behavior change anywhere.
+    pub const fn none() -> Self {
+        FaultPlan {
+            seed: 0,
+            delay_prob: 0.0,
+            delay_secs: 0.0,
+            reorder_prob: 0.0,
+            crash: None,
+        }
+    }
+
+    /// Whether any fault can fire. Every fault branch in the runtime is
+    /// gated on this, keeping the fault-free fast path untouched.
+    pub fn is_active(&self) -> bool {
+        self.delay_prob > 0.0 || self.reorder_prob > 0.0 || self.crash.is_some()
+    }
+
+    /// A uniform coin in `[0, 1)` for one (fault-kind, message) pair —
+    /// stateless, so decisions are independent of delivery interleaving.
+    fn coin(&self, salt: u64, from: usize, to: usize, kind: MsgKind, round: u32, seq: u32) -> f64 {
+        let mut h = mix64(self.seed, salt);
+        h = mix64(h, ((from as u64) << 32) | to as u64);
+        h = mix64(h, ((kind as u64) << 48) | ((round as u64) << 16) | seq as u64);
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Virtual-time delay to add to this message's arrival, if any.
+    pub fn delay_of(
+        &self,
+        from: usize,
+        to: usize,
+        kind: MsgKind,
+        round: u32,
+        seq: u32,
+    ) -> Option<f64> {
+        if self.delay_prob > 0.0 && self.coin(0xDE1A, from, to, kind, round, seq) < self.delay_prob
+        {
+            Some(self.delay_secs)
+        } else {
+            None
+        }
+    }
+
+    /// Whether this message is held back at the sender (reordered).
+    pub fn reorders(&self, from: usize, to: usize, kind: MsgKind, round: u32, seq: u32) -> bool {
+        self.reorder_prob > 0.0 && self.coin(0x2E0D, from, to, kind, round, seq) < self.reorder_prob
+    }
+
+    /// Parse a `--faults` spec: comma-separated `key=value` pairs.
+    ///
+    /// * `seed=N` — coin seed (default 1)
+    /// * `delay=P` — delay probability in `[0, 1]`
+    /// * `delay-secs=S` — delay magnitude in virtual seconds (default 1e-4)
+    /// * `reorder=P` — hold-back probability in `[0, 1]`
+    /// * `crash=R@S` or `crash=R@S+D` — crash rank R at engine step S,
+    ///   down for D steps (default [`DEFAULT_DOWN_STEPS`])
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan {
+            seed: 1,
+            delay_secs: 1e-4,
+            ..FaultPlan::none()
+        };
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| err!("--faults: expected key=value, got {part:?}"))?;
+            match key {
+                "seed" => plan.seed = val.parse().map_err(|e| err!("--faults seed: {e}"))?,
+                "delay" => {
+                    plan.delay_prob = parse_prob("delay", val)?;
+                }
+                "delay-secs" | "delay_secs" => {
+                    plan.delay_secs = val.parse().map_err(|e| err!("--faults delay-secs: {e}"))?;
+                }
+                "reorder" => {
+                    plan.reorder_prob = parse_prob("reorder", val)?;
+                }
+                "crash" => {
+                    let (rank, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| err!("--faults crash: expected R@S, got {val:?}"))?;
+                    let (step, down) = match rest.split_once('+') {
+                        Some((s, d)) => (
+                            s.parse().map_err(|e| err!("--faults crash step: {e}"))?,
+                            d.parse().map_err(|e| err!("--faults crash downtime: {e}"))?,
+                        ),
+                        None => (
+                            rest.parse().map_err(|e| err!("--faults crash step: {e}"))?,
+                            DEFAULT_DOWN_STEPS,
+                        ),
+                    };
+                    if down == 0 {
+                        bail!("--faults crash: downtime must be >= 1 step");
+                    }
+                    plan.crash = Some(Crash {
+                        rank: rank.parse().map_err(|e| err!("--faults crash rank: {e}"))?,
+                        step,
+                        down_steps: down,
+                    });
+                }
+                other => bail!("--faults: unknown key {other:?} (seed|delay|delay-secs|reorder|crash)"),
+            }
+        }
+        if !plan.is_active() {
+            bail!("--faults: spec {spec:?} enables no fault (set delay=, reorder= or crash=)");
+        }
+        Ok(plan)
+    }
+
+    /// Short label fragment for config labels and logs; empty when inert
+    /// so fault-free labels are unchanged.
+    pub fn label(&self) -> String {
+        if !self.is_active() {
+            return String::new();
+        }
+        let mut parts = vec![format!("seed={}", self.seed)];
+        if self.delay_prob > 0.0 {
+            parts.push(format!("delay={}", self.delay_prob));
+        }
+        if self.reorder_prob > 0.0 {
+            parts.push(format!("reorder={}", self.reorder_prob));
+        }
+        if let Some(c) = self.crash {
+            parts.push(format!("crash={}@{}", c.rank, c.step));
+        }
+        format!("+faults[{}]", parts.join(","))
+    }
+}
+
+fn parse_prob(key: &str, val: &str) -> Result<f64> {
+    let p: f64 = val.parse().map_err(|e| err!("--faults {key}: {e}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("--faults {key}: probability {p} outside [0, 1]");
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_inert_and_default() {
+        let p = FaultPlan::none();
+        assert!(!p.is_active());
+        assert_eq!(p, FaultPlan::default());
+        assert_eq!(p.label(), "");
+        assert_eq!(p.delay_of(0, 1, MsgKind::Colors, 3, 4), None);
+        assert!(!p.reorders(0, 1, MsgKind::Colors, 3, 4));
+    }
+
+    #[test]
+    fn coins_are_deterministic_and_message_dependent() {
+        let p = FaultPlan {
+            seed: 7,
+            delay_prob: 0.5,
+            delay_secs: 1e-3,
+            reorder_prob: 0.5,
+            crash: None,
+        };
+        // pure: same message, same answer
+        for kind in [MsgKind::Colors, MsgKind::Recolor, MsgKind::Plan] {
+            for round in 0..8 {
+                assert_eq!(
+                    p.delay_of(0, 1, kind, round, 0),
+                    p.delay_of(0, 1, kind, round, 0)
+                );
+                assert_eq!(
+                    p.reorders(1, 0, kind, round, 2),
+                    p.reorders(1, 0, kind, round, 2)
+                );
+            }
+        }
+        // with p=0.5, some messages are hit and some are not
+        let hits = (0..64)
+            .filter(|&r| p.delay_of(0, 1, MsgKind::Colors, r, 0).is_some())
+            .count();
+        assert!(hits > 0 && hits < 64, "degenerate coin: {hits}/64");
+        // a different seed flips some decisions
+        let q = FaultPlan { seed: 8, ..p };
+        assert!(
+            (0..64).any(|r| p.reorders(0, 1, MsgKind::Colors, r, 0)
+                != q.reorders(0, 1, MsgKind::Colors, r, 0)),
+            "seed does not influence the coins"
+        );
+    }
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse("seed=9,delay=0.25,delay-secs=0.002,reorder=0.1,crash=2@5+3")
+            .unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.delay_prob, 0.25);
+        assert_eq!(p.delay_secs, 0.002);
+        assert_eq!(p.reorder_prob, 0.1);
+        assert_eq!(
+            p.crash,
+            Some(Crash {
+                rank: 2,
+                step: 5,
+                down_steps: 3
+            })
+        );
+        assert!(p.is_active());
+        assert!(p.label().contains("crash=2@5"));
+    }
+
+    #[test]
+    fn parse_defaults_and_rejects() {
+        let p = FaultPlan::parse("seed=3,crash=1@4").unwrap();
+        assert_eq!(p.crash.unwrap().down_steps, DEFAULT_DOWN_STEPS);
+        assert!(FaultPlan::parse("seed=3").is_err(), "no fault enabled");
+        assert!(FaultPlan::parse("delay=1.5").is_err(), "prob out of range");
+        assert!(FaultPlan::parse("crash=1").is_err(), "missing @step");
+        assert!(FaultPlan::parse("crash=1@2+0").is_err(), "zero downtime");
+        assert!(FaultPlan::parse("bogus=1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("delay").is_err(), "missing value");
+    }
+}

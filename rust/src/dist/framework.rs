@@ -94,6 +94,7 @@ fn epoch(round: u32, step: u64) -> u64 {
 /// "Memory discipline on hot paths"): boundary updates are staged in
 /// per-neighbor buffers, encoded into pooled transport buffers, and
 /// decoded from a single receive scratch.
+#[derive(Clone)]
 struct ExchangeScratch {
     /// Per-neighbor `(global id, color)` staging, aligned with
     /// `neighbor_procs`.
@@ -401,6 +402,10 @@ fn serial_cleanup(
 /// `color_process`, so every modeled quantity (colors, messages, bytes,
 /// conflicts, virtual clocks) is bit-for-bit identical; keep the two in
 /// lockstep when either changes.
+///
+/// `Clone` snapshots the whole machine (colors, scratch, collective
+/// cursors) — the supervising engine's checkpoint for crash recovery.
+#[derive(Clone)]
 pub struct FrameworkStep<'a> {
     lg: &'a LocalGraph,
     fw: FrameworkConfig,
@@ -425,6 +430,7 @@ pub struct FrameworkStep<'a> {
 }
 
 /// Which slice of `color_process` the next `step_once` call executes.
+#[derive(Clone, Copy)]
 enum FwState {
     /// Visit order + its cost charge (the code before the round loop).
     Init,
@@ -519,6 +525,35 @@ impl<'a> FrameworkStep<'a> {
         self.metrics.rounds += self.round;
         self.metrics.phases.add("color", ep.clock - self.t_start);
         self.state = FwState::Finished;
+    }
+
+    /// Whether the next [`step_once`](Self::step_once) slice can run
+    /// without a blocking-receive miss: every message it consumes has
+    /// already arrived. The supervising engine polls this to park
+    /// machines while a crashed peer's messages are outstanding; states
+    /// that receive nothing are always ready.
+    pub fn ready(&mut self, ep: &mut Endpoint) -> bool {
+        let lg = self.lg;
+        match self.state {
+            FwState::RoundReduce | FwState::SweepReduce => {
+                ep.rank != 0
+                    || (1..lg.nprocs)
+                        .all(|p| ep.have_msg(p, MsgKind::Collective, self.coll_seq, 0))
+            }
+            FwState::RoundFinish | FwState::SweepFinish => {
+                ep.rank == 0 || ep.have_msg(0, MsgKind::Collective, self.coll_seq, 1)
+            }
+            FwState::ExchangeStep(step) => lg.neighbor_procs.iter().all(|&q| {
+                step >= self.scratch.steps_of[q]
+                    || ep.have_msg(q, MsgKind::Colors, self.round, step as u32)
+            }),
+            FwState::CleanupRecv(r) => {
+                ep.rank == r
+                    || lg.neighbor_procs.binary_search(&r).is_err()
+                    || ep.have_msg(r, MsgKind::Colors, self.round + 1, r as u32)
+            }
+            _ => true,
+        }
     }
 
     /// Run one engine step; `true` once the machine reached `Finished`.
@@ -793,6 +828,10 @@ impl<'a> FrameworkStep<'a> {
 }
 
 impl crate::dist::engine::StepProcess for FrameworkStep<'_> {
+    fn poll_ready(&mut self, ep: &mut Endpoint) -> bool {
+        self.ready(ep)
+    }
+
     /// Standalone use of the framework on the engine: once finished, the
     /// result carries the endpoint's cumulative accounting, exactly as a
     /// thread-runner closure wrapping [`color_process`] would report.
@@ -808,6 +847,7 @@ impl crate::dist::engine::StepProcess for FrameworkStep<'_> {
         metrics.sent_bytes = ep.sent_bytes;
         metrics.recv_msgs = ep.recv_msgs;
         metrics.dropped_msgs = ep.dropped_msgs;
+        metrics.non_teardown_drops = ep.non_teardown_drops;
         StepOutcome::Done(crate::dist::ProcResult {
             colors: colors.owned_pairs(self.lg),
             metrics,

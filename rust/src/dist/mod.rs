@@ -20,14 +20,16 @@
 pub mod comm;
 pub mod cost;
 pub mod engine;
+pub mod fault;
 pub mod framework;
 pub mod proc;
 pub mod recolor;
 pub mod runner;
 
-pub use comm::{network, Endpoint, MsgKind};
+pub use comm::{network, network_faulted, Endpoint, MsgKind};
 pub use cost::{CostModel, NetworkModel};
-pub use engine::{run_steps, Engine, StepOutcome, StepProcess};
+pub use engine::{run_steps, run_steps_supervised, Engine, StepOutcome, StepProcess};
+pub use fault::{Crash, FaultPlan};
 pub use runner::{run_distributed, run_distributed_with, DistOutcome, ProcResult};
 
 use crate::util::timer::PhaseTimes;
@@ -55,6 +57,16 @@ pub struct ProcMetrics {
     /// [`Endpoint::dropped_msgs`]); nonzero only during acknowledged
     /// teardown, and always zero for a completed job.
     pub dropped_msgs: u64,
+    /// Drops outside an acknowledged teardown — always a protocol bug; the
+    /// pipeline turns a nonzero count into a typed error in fault-free mode.
+    pub non_teardown_drops: u64,
+    /// Fault injection: messages whose arrival the plan delayed.
+    pub injected_delays: u64,
+    /// Fault injection: messages the plan held back at the sender.
+    pub injected_reorders: u64,
+    /// Supervised recovery: times this process was restarted from a
+    /// checkpoint after an injected crash.
+    pub restarts: u64,
 }
 
 /// Job-level aggregation over all processes.
@@ -69,6 +81,17 @@ pub struct DistMetrics {
     pub total_conflicts: u64,
     /// Sum of teardown-dropped messages (zero for any completed job).
     pub total_dropped: u64,
+    /// Structured teardown report: `(rank, dropped)` for every process
+    /// that dropped at least one message, in rank order.
+    pub dropped_by_rank: Vec<(usize, u64)>,
+    /// Sum of drops outside an acknowledged teardown (protocol bugs).
+    pub total_non_teardown_drops: u64,
+    /// Sum of fault-injected message delays.
+    pub total_injected_delays: u64,
+    /// Sum of fault-injected message reorders (sender hold-backs).
+    pub total_injected_reorders: u64,
+    /// Sum of checkpoint restarts performed by the supervising engine.
+    pub total_restarts: u64,
     /// Max conflict-resolution rounds over processes.
     pub rounds: u32,
     /// Virtual makespan: max final clock over processes.
@@ -98,6 +121,13 @@ impl DistMetrics {
             m.total_bytes += p.sent_bytes;
             m.total_conflicts += p.conflicts;
             m.total_dropped += p.dropped_msgs;
+            if p.dropped_msgs > 0 {
+                m.dropped_by_rank.push((p.rank, p.dropped_msgs));
+            }
+            m.total_non_teardown_drops += p.non_teardown_drops;
+            m.total_injected_delays += p.injected_delays;
+            m.total_injected_reorders += p.injected_reorders;
+            m.total_restarts += p.restarts;
             m.rounds = m.rounds.max(p.rounds);
             if p.vtime > m.makespan {
                 m.makespan = p.vtime;
@@ -155,6 +185,27 @@ mod tests {
         assert!((m.phase_sums.get("plan") - 0.25).abs() < 1e-15);
         assert!((m.phase_max.get("plan") - 0.25).abs() < 1e-15);
         assert_eq!(m.phase_sums.get("absent"), 0.0);
+    }
+
+    #[test]
+    fn aggregate_tracks_fault_and_drop_reports() {
+        let mut a = proc(1.0, 1, 10, 0, 1);
+        a.rank = 0;
+        a.dropped_msgs = 2;
+        a.injected_delays = 3;
+        let mut b = proc(2.0, 1, 10, 0, 1);
+        b.rank = 1;
+        b.dropped_msgs = 5;
+        b.non_teardown_drops = 5;
+        b.injected_reorders = 4;
+        b.restarts = 1;
+        let m = DistMetrics::aggregate(&[a, b], 0.0);
+        assert_eq!(m.dropped_by_rank, vec![(0, 2), (1, 5)]);
+        assert_eq!(m.total_dropped, 7);
+        assert_eq!(m.total_non_teardown_drops, 5);
+        assert_eq!(m.total_injected_delays, 3);
+        assert_eq!(m.total_injected_reorders, 4);
+        assert_eq!(m.total_restarts, 1);
     }
 
     #[test]

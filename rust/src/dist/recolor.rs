@@ -117,6 +117,7 @@ pub fn build_plans(
 /// iterations so the per-class supersteps are allocation-free in steady
 /// state. Class-indexed vectors are resized per iteration (k changes as
 /// recoloring shrinks the palette) but keep their capacity.
+#[derive(Clone)]
 struct SyncScratch {
     /// Global class sizes (allreduced).
     sizes: Vec<u64>,
@@ -399,6 +400,10 @@ pub fn recolor_process_sync(
 /// function, so colorings, traces, message/byte counts and virtual clocks
 /// are bit-for-bit identical; keep the two in lockstep when either
 /// changes. Works for both [`CommScheme`]s.
+///
+/// `Clone` snapshots the whole machine (colors, scratch, collective
+/// cursors) — the supervising engine's checkpoint for crash recovery.
+#[derive(Clone)]
 pub struct SyncRcStep<'a> {
     lg: &'a LocalGraph,
     cost: CostModel,
@@ -422,6 +427,7 @@ pub struct SyncRcStep<'a> {
 }
 
 /// Which slice of `recolor_process_sync` the next `step_once` executes.
+#[derive(Clone, Copy)]
 enum RcState {
     /// Iteration entry: palette-size collective phase 1 (or finish).
     IterBegin,
@@ -495,6 +501,37 @@ impl<'a> SyncRcStep<'a> {
     pub fn into_parts(self) -> (ColorState, Vec<usize>, ProcMetrics) {
         assert!(self.is_finished(), "sync RC step machine still running");
         (self.colors, self.trace, self.m)
+    }
+
+    /// Whether the next [`step_once`](Self::step_once) slice can run
+    /// without a blocking-receive miss (see
+    /// [`FrameworkStep::ready`](crate::dist::framework::FrameworkStep::ready)).
+    pub fn ready(&mut self, ep: &mut Endpoint) -> bool {
+        let lg = self.lg;
+        match self.state {
+            RcState::KReduce | RcState::SizesReduce | RcState::NewKReduce => {
+                ep.rank != 0
+                    || (1..lg.nprocs)
+                        .all(|p| ep.have_msg(p, MsgKind::Collective, self.coll_seq, 0))
+            }
+            RcState::KFinish | RcState::SizesFinish | RcState::NewKFinish => {
+                ep.rank == 0 || ep.have_msg(0, MsgKind::Collective, self.coll_seq, 1)
+            }
+            RcState::PlanRecv => lg
+                .neighbor_procs
+                .iter()
+                .all(|&q| ep.have_msg(q, MsgKind::Plan, self.iter, 0)),
+            RcState::ClassRecv(t) => {
+                lg.neighbor_procs.iter().enumerate().all(|(qi, &q)| {
+                    let expected = match self.cfg.scheme {
+                        CommScheme::Base => true,
+                        CommScheme::Piggyback => self.scratch.plans_in[qi][t],
+                    };
+                    !expected || ep.have_msg(q, MsgKind::Recolor, self.iter, t as u32)
+                })
+            }
+            _ => true,
+        }
     }
 
     /// Run one engine step; `true` once the machine reached `Finished`.
@@ -774,6 +811,10 @@ impl<'a> SyncRcStep<'a> {
 }
 
 impl crate::dist::engine::StepProcess for SyncRcStep<'_> {
+    fn poll_ready(&mut self, ep: &mut Endpoint) -> bool {
+        self.ready(ep)
+    }
+
     /// Standalone use on the engine: once finished, the result carries the
     /// endpoint's cumulative accounting and the trace (in
     /// `metrics.recolor_trace`), as a thread-runner closure wrapping
@@ -791,6 +832,7 @@ impl crate::dist::engine::StepProcess for SyncRcStep<'_> {
         metrics.sent_bytes = ep.sent_bytes;
         metrics.recv_msgs = ep.recv_msgs;
         metrics.dropped_msgs = ep.dropped_msgs;
+        metrics.non_teardown_drops = ep.non_teardown_drops;
         StepOutcome::Done(crate::dist::ProcResult {
             colors: colors.owned_pairs(self.lg),
             metrics,

@@ -14,6 +14,7 @@ use crate::dist::proc::{build_local_graphs, LocalGraph};
 use crate::dist::{DistMetrics, ProcMetrics};
 use crate::graph::CsrGraph;
 use crate::partition::Partition;
+use crate::util::error::{Error, Result};
 use crate::util::timer::Timer;
 
 /// What one process function returns.
@@ -52,10 +53,30 @@ pub fn run_distributed_with<F>(
 where
     F: Fn(&mut Endpoint, &LocalGraph) -> ProcResult + Sync,
 {
+    match try_run_distributed_with(g, locals, net, f) {
+        Ok(out) => out,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`run_distributed_with`] with a panicking process thread reported as
+/// [`ErrorKind::ProcFailed`](crate::util::error::ErrorKind) instead of
+/// re-panicking the caller. All threads are joined either way, so no
+/// worker is left touching caller data.
+pub fn try_run_distributed_with<F>(
+    g: &CsrGraph,
+    locals: &[LocalGraph],
+    net: NetworkModel,
+    f: F,
+) -> Result<DistOutcome>
+where
+    F: Fn(&mut Endpoint, &LocalGraph) -> ProcResult + Sync,
+{
     let wall = Timer::start();
     let procs = locals.len();
     let eps = comm::network(procs, net);
     let mut slots: Vec<Option<ProcResult>> = (0..procs).map(|_| None).collect();
+    let mut failed: Option<Error> = None;
     std::thread::scope(|s| {
         let fref = &f;
         let mut handles = Vec::with_capacity(procs);
@@ -68,9 +89,20 @@ where
             }));
         }
         for (i, h) in handles.into_iter().enumerate() {
-            slots[i] = Some(h.join().expect("process thread panicked"));
+            match h.join() {
+                Ok(r) => slots[i] = Some(r),
+                Err(p) => {
+                    let detail = panic_detail(&p);
+                    if failed.is_none() {
+                        failed = Some(Error::proc_failed(i as u32, 0, &detail));
+                    }
+                }
+            }
         }
     });
+    if let Some(e) = failed {
+        return Err(e);
+    }
     let mut coloring = Coloring::uncolored(g.num_vertices());
     let mut per_proc = Vec::with_capacity(procs);
     for r in slots.into_iter().map(|r| r.unwrap()) {
@@ -80,10 +112,21 @@ where
         per_proc.push(r.metrics);
     }
     let metrics = DistMetrics::aggregate(&per_proc, wall.secs());
-    DistOutcome {
+    Ok(DistOutcome {
         coloring,
         metrics,
         per_proc,
+    })
+}
+
+/// Best-effort human-readable payload of a caught panic.
+pub(crate) fn panic_detail(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "process thread panicked".to_string()
     }
 }
 

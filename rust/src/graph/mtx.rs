@@ -6,8 +6,8 @@
 //! (values ignored, diagonal dropped, general matrices symmetrized).
 
 use super::{CsrGraph, GraphBuilder, VertexId};
-use crate::bail;
-use crate::util::error::{Context, Result};
+use crate::util::error::{Context, Error, Result};
+use std::fmt::Display;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
@@ -21,11 +21,19 @@ pub fn read_mtx(path: &Path) -> Result<CsrGraph> {
     read_mtx_from(BufReader::new(f), &name)
 }
 
+/// Parse the coordinate format with every failure reported as
+/// [`ErrorKind::Parse`](crate::util::error::ErrorKind) at its 1-based
+/// input line, so a malformed multi-GB collection file points at the
+/// offending line instead of a bare parse error.
 pub fn read_mtx_from<R: BufRead>(mut r: R, name: &str) -> Result<CsrGraph> {
+    let mut lineno: u32 = 1;
     let mut line = String::new();
     r.read_line(&mut line)?;
     if !line.starts_with("%%MatrixMarket") {
-        bail!("not a MatrixMarket file (missing %%MatrixMarket header)");
+        return Err(Error::parse_at(
+            lineno,
+            "not a MatrixMarket file (missing %%MatrixMarket header)",
+        ));
     }
     let header: Vec<String> = line
         .trim()
@@ -33,11 +41,14 @@ pub fn read_mtx_from<R: BufRead>(mut r: R, name: &str) -> Result<CsrGraph> {
         .map(|s| s.to_ascii_lowercase())
         .collect();
     if header.len() < 5 || header[1] != "matrix" || header[2] != "coordinate" {
-        bail!("unsupported MatrixMarket header: {}", line.trim());
+        return Err(Error::parse_at(
+            lineno,
+            format!("unsupported MatrixMarket header: {}", line.trim()),
+        ));
     }
     let field = header[3].as_str(); // real | integer | pattern | complex
     if field == "complex" {
-        bail!("complex matrices unsupported");
+        return Err(Error::parse_at(lineno, "complex matrices unsupported"));
     }
     let _symmetric = header[4] == "symmetric"; // both handled identically:
                                                // builder symmetrizes anyway
@@ -46,44 +57,74 @@ pub fn read_mtx_from<R: BufRead>(mut r: R, name: &str) -> Result<CsrGraph> {
     let mut dims = String::new();
     loop {
         dims.clear();
+        lineno += 1;
         if r.read_line(&mut dims)? == 0 {
-            bail!("unexpected EOF before dimensions");
+            return Err(Error::parse_at(
+                lineno,
+                "unexpected end of file before the dimension line",
+            ));
         }
         if !dims.trim_start().starts_with('%') && !dims.trim().is_empty() {
             break;
         }
     }
     let mut it = dims.split_whitespace();
-    let rows: usize = it.next().context("missing rows")?.parse()?;
-    let cols: usize = it.next().context("missing cols")?.parse()?;
-    let nnz: usize = it.next().context("missing nnz")?.parse()?;
+    let rows: usize = parse_field(lineno, "row count", it.next())?;
+    let cols: usize = parse_field(lineno, "column count", it.next())?;
+    let nnz: usize = parse_field(lineno, "entry count", it.next())?;
     if rows != cols {
-        bail!("adjacency matrix must be square ({rows}x{cols})");
+        return Err(Error::parse_at(
+            lineno,
+            format!("adjacency matrix must be square, got {rows}x{cols}"),
+        ));
     }
 
     let mut b = GraphBuilder::with_capacity(rows, nnz);
-    let mut line = String::new();
     let mut seen = 0usize;
     while seen < nnz {
         line.clear();
+        lineno += 1;
         if r.read_line(&mut line)? == 0 {
-            bail!("unexpected EOF: saw {seen} of {nnz} entries");
+            return Err(Error::parse_at(
+                lineno,
+                format!("unexpected end of file: saw {seen} of {nnz} entries"),
+            ));
         }
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
         }
         let mut it = t.split_whitespace();
-        let i: u64 = it.next().context("missing row index")?.parse()?;
-        let j: u64 = it.next().context("missing col index")?.parse()?;
-        if i == 0 || j == 0 || i as usize > rows || j as usize > rows {
-            bail!("index out of range at entry {seen}: {t}");
+        let i: u64 = parse_field(lineno, "row index", it.next())?;
+        let j: u64 = parse_field(lineno, "column index", it.next())?;
+        if i == 0 || j == 0 {
+            return Err(Error::parse_at(
+                lineno,
+                format!("zero index in 1-based entry {t:?}"),
+            ));
+        }
+        if i as usize > rows || j as usize > rows {
+            return Err(Error::parse_at(
+                lineno,
+                format!("index out of range in entry {t:?} (matrix is {rows}x{rows})"),
+            ));
         }
         // 1-based → 0-based; self-edges (diagonal) dropped by the builder.
         b.add_edge((i - 1) as VertexId, (j - 1) as VertexId);
         seen += 1;
     }
     Ok(b.build(name))
+}
+
+/// One whitespace-separated numeric field, with a missing or non-numeric
+/// token reported at its 1-based line.
+fn parse_field<T: std::str::FromStr>(lineno: u32, what: &str, tok: Option<&str>) -> Result<T>
+where
+    T::Err: Display,
+{
+    let tok = tok.ok_or_else(|| Error::parse_at(lineno, format!("missing {what}")))?;
+    tok.parse()
+        .map_err(|e| Error::parse_at(lineno, format!("invalid {what} {tok:?}: {e}")))
 }
 
 /// Write the graph as `pattern symmetric` coordinate MatrixMarket.
@@ -145,6 +186,59 @@ mod tests {
         assert!(read_mtx_from(Cursor::new(bad), "x").is_err(), "non-square");
         let oob = "%%MatrixMarket matrix coordinate pattern symmetric\n2 2 1\n3 1\n";
         assert!(read_mtx_from(Cursor::new(oob), "x").is_err(), "out of range");
+    }
+
+    #[test]
+    fn malformed_inputs_fail_with_line_numbers() {
+        use crate::util::error::ErrorKind;
+        let fail = |s: &str| read_mtx_from(Cursor::new(s), "x").unwrap_err();
+
+        let e = fail("hello\n1 1 0\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 1 });
+        assert!(e.to_string().contains("%%MatrixMarket"));
+
+        let e = fail("%%MatrixMarket matrix array real general\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 1 });
+        assert!(e.to_string().contains("unsupported"));
+
+        let e = fail("%%MatrixMarket matrix coordinate complex general\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 1 });
+
+        let e = fail("%%MatrixMarket matrix coordinate pattern symmetric\n% only comments\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 3 });
+        assert!(e.to_string().contains("dimension line"));
+
+        let e = fail("%%MatrixMarket matrix coordinate pattern symmetric\n4 4\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 2 });
+        assert!(e.to_string().contains("missing entry count"));
+
+        let e = fail("%%MatrixMarket matrix coordinate pattern symmetric\n4 4 x\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 2 });
+        assert!(e.to_string().contains("invalid entry count"));
+
+        let e = fail("%%MatrixMarket matrix coordinate real general\n2 3 1\n1 2 1.0\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 2 });
+        assert!(e.to_string().contains("square"));
+
+        let e = fail("%%MatrixMarket matrix coordinate pattern symmetric\n% c\n2 2 1\n0 1\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 4 });
+        assert!(e.to_string().contains("zero index"));
+
+        let e = fail("%%MatrixMarket matrix coordinate pattern symmetric\n2 2 1\n3 1\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 3 });
+        assert!(e.to_string().contains("out of range"));
+
+        let e = fail("%%MatrixMarket matrix coordinate pattern symmetric\n2 2 1\n1\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 3 });
+        assert!(e.to_string().contains("missing column index"));
+
+        let e = fail("%%MatrixMarket matrix coordinate pattern symmetric\n2 2 1\n1 two\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 3 });
+        assert!(e.to_string().contains("invalid column index"));
+
+        let e = fail("%%MatrixMarket matrix coordinate pattern symmetric\n3 3 2\n1 2\n");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 4 });
+        assert!(e.to_string().contains("saw 1 of 2"));
     }
 
     #[test]

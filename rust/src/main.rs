@@ -101,6 +101,7 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
              \u{20}                    [--schedule nd|ni|rv|rand|ND-RAND%x] [--scheme base|piggyback]\n\
              \u{20}                    [--stop-eps F] [--partitioner block|bfs] [--seed S]\n\
              \u{20}                    [--ideal-net] [--engine auto|threads|bsp] [--json]\n\
+             \u{20}                    [--faults seed=S[,delay=P][,reorder=P][,crash=R@S[+D]]]\n\
              \n\
              Distributed coloring with optional iterative recoloring.\n\
              --stop-eps F  stop recoloring once an iteration improves the color\n\
@@ -108,6 +109,10 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
              --engine E    execution path: bsp step engine (default via auto) or\n\
              \u{20}             one OS thread per simulated process; results are\n\
              \u{20}             bit-for-bit identical, only wallclock differs\n\
+             --faults SPEC inject seeded transport faults (message delay and\n\
+             \u{20}             reorder probabilities, one crash-stop of rank R at\n\
+             \u{20}             step S for D steps) on the supervised bsp engine;\n\
+             \u{20}             conflicts left by faults are repaired after Done\n\
              --json        stream one JSON event per phase/superstep/iteration\n\
              \u{20}             (plus a final result record) instead of the table",
         ),
@@ -135,7 +140,7 @@ fn print_help() {
          \u{20}              --superstep N --async --recolor N --schedule nd|ni|rv|rand|ND-RAND%x\n\
          \u{20}              --scheme base|piggyback --arc --partitioner block|bfs --seed S\n\
          \u{20}              --stop-eps F (early-stop recoloring) --engine auto|threads|bsp\n\
-         \u{20}              --json (stream events)"
+         \u{20}              --faults SPEC (seeded fault injection) --json (stream events)"
     );
 }
 
@@ -395,5 +400,7 @@ mod tests {
         let u = usage_for("color").unwrap();
         assert!(u.contains("--stop-eps"));
         assert!(u.contains("--json"));
+        assert!(u.contains("--faults"));
+        assert!(u.contains("crash=R@S"));
     }
 }

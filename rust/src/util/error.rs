@@ -10,17 +10,57 @@
 
 use std::fmt;
 
+/// Classification of an [`Error`] for callers that need to react
+/// programmatically (the supervisor, tests); the message remains the only
+/// display surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Uncategorized failure — everything built via [`Error::msg`].
+    Generic,
+    /// A simulated process died (panic or injected crash that could not be
+    /// recovered) at the given engine step.
+    ProcFailed { rank: u32, step: u64 },
+    /// Input parsing failed at a 1-based line number.
+    Parse { line: u32 },
+}
+
 /// String-backed error. Does **not** implement `std::error::Error` itself —
 /// exactly like `anyhow::Error`, this is what allows the blanket
 /// `From<E: std::error::Error>` impl to coexist with `From<String>`.
 pub struct Error {
     msg: String,
+    kind: ErrorKind,
 }
 
 impl Error {
     /// Build an error from anything displayable (mirrors `anyhow::Error::msg`).
     pub fn msg<M: fmt::Display>(m: M) -> Self {
-        Error { msg: m.to_string() }
+        Error {
+            msg: m.to_string(),
+            kind: ErrorKind::Generic,
+        }
+    }
+
+    /// A simulated process failed at an engine step (worker panic or an
+    /// unrecoverable injected crash).
+    pub fn proc_failed<M: fmt::Display>(rank: u32, step: u64, detail: M) -> Self {
+        Error {
+            msg: format!("process {rank} failed at engine step {step}: {detail}"),
+            kind: ErrorKind::ProcFailed { rank, step },
+        }
+    }
+
+    /// A parse failure at a 1-based input line.
+    pub fn parse_at<M: fmt::Display>(line: u32, detail: M) -> Self {
+        Error {
+            msg: format!("line {line}: {detail}"),
+            kind: ErrorKind::Parse { line },
+        }
+    }
+
+    /// The error's classification.
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
     }
 }
 
@@ -142,6 +182,20 @@ mod tests {
         }
         assert_eq!(parse("7").unwrap(), 7);
         assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn kinds_classify_without_changing_display() {
+        assert_eq!(Error::msg("x").kind(), ErrorKind::Generic);
+        let e = Error::proc_failed(3, 17, "machine panicked");
+        assert_eq!(e.kind(), ErrorKind::ProcFailed { rank: 3, step: 17 });
+        assert_eq!(
+            e.to_string(),
+            "process 3 failed at engine step 17: machine panicked"
+        );
+        let e = Error::parse_at(9, "missing column index");
+        assert_eq!(e.kind(), ErrorKind::Parse { line: 9 });
+        assert_eq!(e.to_string(), "line 9: missing column index");
     }
 
     #[test]

@@ -126,6 +126,20 @@ impl WorkerPool {
     /// re-raised here (after every shard completed, so no worker is left
     /// touching caller data).
     pub fn scoped_run(&self, shards: usize, f: &(dyn Fn(usize) + Sync)) {
+        if let Err(p) = self.try_scoped_run(shards, f) {
+            resume_unwind(p);
+        }
+    }
+
+    /// [`scoped_run`](Self::scoped_run) with the first shard panic handed
+    /// back as an `Err` payload instead of re-raised: a worker panic never
+    /// poisons the pool (the latch is always counted down), so the caller
+    /// can turn it into a typed error and keep going.
+    pub fn try_scoped_run(
+        &self,
+        shards: usize,
+        f: &(dyn Fn(usize) + Sync),
+    ) -> std::result::Result<(), Box<dyn Any + Send>> {
         assert!(
             shards >= 1 && shards <= self.workers.len(),
             "scoped_run wants {shards} shards but the pool has {} workers",
@@ -144,8 +158,9 @@ impl WorkerPool {
             })
             .expect("pool worker thread died");
         }
-        if let Some(p) = latch.wait() {
-            resume_unwind(p);
+        match latch.wait() {
+            Some(p) => Err(p),
+            None => Ok(()),
         }
     }
 }
@@ -229,6 +244,29 @@ mod tests {
         pool.scoped_run(2, &|_| {
             ok.fetch_add(1, Ordering::SeqCst);
         });
+        assert_eq!(ok.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn try_scoped_run_returns_the_panic_payload() {
+        let pool = WorkerPool::new(2);
+        let r = pool.try_scoped_run(2, &|shard| {
+            if shard == 0 {
+                panic!("shard zero boom");
+            }
+        });
+        let payload = r.expect_err("shard panic must surface as Err");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .expect("literal panic carries a &str payload");
+        assert_eq!(msg, "shard zero boom");
+        // the pool is not poisoned: a clean run still works
+        let ok = AtomicUsize::new(0);
+        pool.try_scoped_run(2, &|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        })
+        .expect("clean run");
         assert_eq!(ok.load(Ordering::SeqCst), 2);
     }
 

@@ -1,0 +1,225 @@
+//! Chaos tests for the seeded fault-injection harness and the supervised
+//! recovery engine (PR 6). CI's `chaos` job reruns the property tests in
+//! release mode over a seed matrix via `DGCOLOR_PROP_SEED`.
+
+use dgcolor::color::Selection;
+use dgcolor::coordinator::job::nd;
+use dgcolor::coordinator::{pipeline, Event, EventLog, Job, Session};
+use dgcolor::dist::cost::CostModel;
+use dgcolor::dist::{Crash, FaultPlan};
+use dgcolor::graph::synth;
+use dgcolor::prop_assert;
+use dgcolor::util::prop;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+fn session(g: dgcolor::graph::CsrGraph) -> Session {
+    Session::new(g).with_cost_model(CostModel::fixed())
+}
+
+/// `FaultPlan::none()` is the default of every job: attaching it
+/// explicitly changes nothing — not the label, not a single modeled bit.
+/// (The accounting fixture pins the fault-free numbers themselves; this
+/// pins that the fault plumbing stays inert without a plan.)
+#[test]
+fn inert_plan_job_is_bitwise_identical_to_default() {
+    let s = session(synth::fem_like(900, 9.0, 24, 0.004, 3, "fem"));
+    let base = Job::on(&s).procs(5).quality().build().unwrap();
+    let inert = Job::on(&s)
+        .procs(5)
+        .quality()
+        .faults(FaultPlan::none())
+        .build()
+        .unwrap();
+    assert_eq!(base.label(), inert.label(), "none() must not touch the label");
+    let a = s.run(&base).unwrap();
+    let b = s.run(&inert).unwrap();
+    assert_eq!(a.coloring.colors, b.coloring.colors);
+    assert_eq!(a.recolor_trace, b.recolor_trace);
+    assert_eq!(a.metrics.total_msgs, b.metrics.total_msgs);
+    assert_eq!(a.metrics.total_bytes, b.metrics.total_bytes);
+    assert_eq!(a.metrics.makespan.to_bits(), b.metrics.makespan.to_bits());
+    assert_eq!(a.metrics.total_injected_delays, 0);
+    assert_eq!(a.metrics.total_restarts, 0);
+}
+
+/// A plan that delays *every* message by zero virtual seconds exercises
+/// the whole supervised path — the single-threaded engine, the fault
+/// branches in the transport, the retry-based receives — without changing
+/// any modeled quantity, so the result must match the fault-free run bit
+/// for bit while the injection counters prove the machinery ran.
+#[test]
+fn zero_secs_delay_plan_keeps_modeled_quantities_bitwise() {
+    let s = session(synth::fem_like(1000, 10.0, 24, 0.004, 5, "fem"));
+    let plain = s.run(&Job::on(&s).procs(5).quality().build().unwrap()).unwrap();
+    let plan = FaultPlan {
+        seed: 11,
+        delay_prob: 1.0,
+        delay_secs: 0.0,
+        ..FaultPlan::none()
+    };
+    let faulted = s
+        .run(&Job::on(&s).procs(5).quality().faults(plan).build().unwrap())
+        .unwrap();
+    assert_eq!(plain.coloring.colors, faulted.coloring.colors);
+    assert_eq!(plain.recolor_trace, faulted.recolor_trace);
+    assert_eq!(plain.metrics.total_msgs, faulted.metrics.total_msgs);
+    assert_eq!(plain.metrics.total_bytes, faulted.metrics.total_bytes);
+    assert_eq!(
+        plain.metrics.makespan.to_bits(),
+        faulted.metrics.makespan.to_bits(),
+        "zero-second delays must not move the virtual clocks"
+    );
+    assert_eq!(plain.metrics.total_injected_delays, 0);
+    assert!(
+        faulted.metrics.total_injected_delays > 0,
+        "the supervised path must actually have injected delays"
+    );
+}
+
+/// Same plan, same job ⇒ the same recovery trace, twice: identical event
+/// streams (including `FaultInjected`/`ProcRestarted`), identical
+/// colorings, and the restart accounted on the crash rank.
+#[test]
+fn same_seed_crash_recovery_trace_is_reproducible() {
+    let s = session(synth::fem_like(800, 9.0, 22, 0.004, 7, "fem"));
+    let plan = FaultPlan {
+        seed: 7,
+        delay_prob: 0.05,
+        delay_secs: 1e-4,
+        reorder_prob: 0.05,
+        crash: Some(Crash {
+            rank: 1,
+            step: 2,
+            down_steps: 2,
+        }),
+    };
+    let job = Job::on(&s)
+        .procs(4)
+        .selection(Selection::RandomX(5))
+        .sync_recolor(nd(1))
+        .faults(plan)
+        .build()
+        .unwrap();
+    let run = || {
+        let log = EventLog::new();
+        let r = s.run_observed(&job, &log).unwrap();
+        (log.take(), r)
+    };
+    let (ev1, r1) = run();
+    let (ev2, r2) = run();
+    assert_eq!(ev1, ev2, "recovery traces diverged across identical runs");
+    assert_eq!(r1.coloring.colors, r2.coloring.colors);
+    assert_eq!(r1.metrics.makespan.to_bits(), r2.metrics.makespan.to_bits());
+    assert!(ev1
+        .iter()
+        .any(|e| *e == Event::FaultInjected { rank: 1, step: 2 }));
+    assert!(ev1
+        .iter()
+        .any(|e| matches!(e, Event::ProcRestarted { rank: 1, .. })));
+    assert_eq!(r1.metrics.total_restarts, 1);
+    r1.coloring.validate(s.graph()).unwrap();
+}
+
+/// A job the supervisor cannot finish (the crash rank stays down past the
+/// livelock guard) fails as a typed error AND terminates its event stream
+/// with `Done { result: Err(..) }` — observers never hang on a failed job.
+#[test]
+fn failed_job_surfaces_done_err_event() {
+    let s = session(synth::grid2d(3, 3));
+    let plan = FaultPlan {
+        seed: 1,
+        crash: Some(Crash {
+            rank: 0,
+            step: 0,
+            down_steps: u64::MAX / 2,
+        }),
+        ..FaultPlan::none()
+    };
+    let log = EventLog::new();
+    let res = Job::on(&s).procs(1).faults(plan).run_observed(&log);
+    let err = res.unwrap_err().to_string();
+    assert!(err.contains("livelock"), "unexpected error: {err}");
+    match log.take().last() {
+        Some(Event::Done { result: Err(msg) }) => {
+            assert!(msg.contains("livelock"), "unexpected Done error: {msg}")
+        }
+        other => panic!("expected a Done(Err) event, got {other:?}"),
+    }
+}
+
+/// The localized repair pass fixes a deliberately corrupted coloring,
+/// reports each pass as `RepairPass`, and converges in one pass (a
+/// sequential first-fit repair against the current coloring cannot
+/// introduce new conflicts).
+#[test]
+fn repair_pass_fixes_corrupted_coloring() {
+    use dgcolor::color::{greedy_color, Ordering};
+    let g = synth::grid2d(12, 12);
+    let mut c = greedy_color(&g, Ordering::Natural, Selection::FirstFit, 1);
+    c.validate(&g).unwrap();
+    // corrupt: copy a neighbor's color onto a handful of vertices
+    for v in [5u32, 40, 77, 100] {
+        let u = g.neighbors(v)[0];
+        c.colors[v as usize] = c.colors[u as usize];
+    }
+    assert!(c.validate(&g).is_err(), "corruption must create conflicts");
+    let log = EventLog::new();
+    let passes = pipeline::repair_coloring(&g, &mut c, 1, Some(&log)).unwrap();
+    assert_eq!(passes, 1, "sequential repair must converge in one pass");
+    c.validate(&g).unwrap();
+    let events = log.take();
+    match &events[..] {
+        [Event::RepairPass { pass: 1, conflicts }] => assert!(*conflicts > 0),
+        other => panic!("expected exactly one RepairPass event, got {other:?}"),
+    }
+}
+
+/// The chaos property: random graphs under random fault plans (delays,
+/// reorders, one crash) always end in a valid coloring or a typed error —
+/// never a panic, never a silently-conflicted result. CI's `chaos` job
+/// sweeps `DGCOLOR_PROP_SEED` 1..8 over this in release mode.
+#[test]
+fn prop_faulted_runs_end_valid() {
+    prop::quickcheck("faulted_runs_end_valid", |rng, _case| {
+        let n = 120 + rng.below(280) as usize;
+        let g = synth::fem_like(n, 7.0, 18, 0.004, rng.next_u64(), "fem");
+        let procs = 2 + rng.below(4) as usize;
+        let plan = FaultPlan {
+            seed: rng.next_u64(),
+            delay_prob: 0.05 + 0.25 * rng.f64(),
+            delay_secs: 1e-4,
+            reorder_prob: 0.25 * rng.f64(),
+            crash: rng.chance(0.5).then(|| Crash {
+                rank: rng.below(procs as u64) as u32,
+                step: rng.below(15),
+                down_steps: 1 + rng.below(3),
+            }),
+        };
+        let s = session(g);
+        let mut b = Job::on(&s).procs(procs).seed(rng.next_u64()).faults(plan);
+        if rng.chance(0.5) {
+            b = b.selection(Selection::RandomX(5)).sync_recolor(nd(1));
+        }
+        let job = b.build().map_err(|e| format!("build failed: {e}"))?;
+        let label = job.label();
+        match catch_unwind(AssertUnwindSafe(|| s.run(&job))) {
+            Err(p) => {
+                let msg = p
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "non-string panic".into());
+                Err(format!("{label}: faulted run panicked: {msg}"))
+            }
+            Ok(Err(_typed)) => Ok(()), // typed error is an acceptable ending
+            Ok(Ok(r)) => {
+                prop_assert!(
+                    r.coloring.validate(s.graph()).is_ok(),
+                    "{label}: run reported success with a conflicted coloring"
+                );
+                prop_assert!(r.num_colors >= 1, "{label}: empty coloring");
+                Ok(())
+            }
+        }
+    });
+}

@@ -162,7 +162,7 @@ fn observer_event_stream_is_well_ordered() {
     assert_eq!(phase_indices[0], 0, "stream opens with PhaseStarted(Partition)");
     assert!(matches!(events.last(), Some(Event::Done { .. })));
     match events.last() {
-        Some(Event::Done { colors }) => assert_eq!(*colors, r.num_colors),
+        Some(Event::Done { result }) => assert_eq!(*result, Ok(r.num_colors)),
         _ => unreachable!(),
     }
 
