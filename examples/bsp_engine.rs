@@ -3,11 +3,14 @@
 //! step engine at growing process counts, re-run p=64 on the
 //! thread-per-process reference runner, and **assert** the two paths agree
 //! bit-for-bit on every modeled quantity while reporting both simulator
-//! wallclocks. A regression that re-introduces blocking/oversubscription
-//! in the engine shows up as a wallclock blowup or an assert here.
+//! wallclocks; then repeat the p=64 cross-check for aRC (2× aRC-ND), the
+//! job shape that used to fall back to threads. A regression that
+//! re-introduces blocking/oversubscription in the engine shows up as a
+//! wallclock blowup or an assert here.
 //!
 //! Run: `cargo run --release --example bsp_engine`
 
+use dgcolor::color::recolor::Permutation;
 use dgcolor::coordinator::job::nd;
 use dgcolor::coordinator::{Job, Session};
 use dgcolor::dist::{CostModel, Engine};
@@ -70,6 +73,35 @@ fn main() -> dgcolor::util::error::Result<()> {
          (sim wall {} vs {})",
         fmt_secs(by_engine.metrics.wall_secs),
         fmt_secs(by_threads.metrics.wall_secs),
+    );
+
+    // same cross-check for aRC — the job shape the engine split used to
+    // route to threads unconditionally
+    let arc_job = |engine| {
+        Job::on(&session)
+            .procs(64)
+            .async_recolor(Permutation::NonDecreasing, 2)
+            .engine(engine)
+            .build()
+            .unwrap()
+    };
+    let arc_engine = session.run(&arc_job(Engine::Bsp))?;
+    let arc_threads = session.run(&arc_job(Engine::Threads))?;
+    assert_eq!(arc_engine.coloring.colors, arc_threads.coloring.colors);
+    assert_eq!(arc_engine.recolor_trace, arc_threads.recolor_trace);
+    assert_eq!(arc_engine.metrics.total_msgs, arc_threads.metrics.total_msgs);
+    assert_eq!(arc_engine.metrics.total_bytes, arc_threads.metrics.total_bytes);
+    assert_eq!(
+        arc_engine.metrics.makespan.to_bits(),
+        arc_threads.metrics.makespan.to_bits()
+    );
+    assert_eq!(arc_engine.metrics.total_dropped, 0);
+    assert_eq!(arc_engine.engine, Engine::Bsp);
+    println!(
+        "p=64 aRC-ND2 engine vs thread runner: identical results ✓  \
+         (sim wall {} vs {})",
+        fmt_secs(arc_engine.metrics.wall_secs),
+        fmt_secs(arc_threads.metrics.wall_secs),
     );
     Ok(())
 }

@@ -205,6 +205,38 @@ fn main() {
         );
     }
 
+    // L3.10b: the same engine-vs-threads series for aRC — the job shape
+    // the engine split used to route to threads unconditionally. The aRC
+    // machine embeds a full framework rerun per iteration, so this also
+    // exercises the engine's deepest nested-machine path.
+    for procs in [4usize, 16, 64, 256] {
+        let job = |engine: Engine| {
+            Job::on(&session)
+                .procs(procs)
+                .async_recolor(Permutation::NonDecreasing, 2)
+                .engine(engine)
+                .build()
+                .unwrap()
+        };
+        session.run(&job(Engine::Bsp)).expect("warmup run");
+        let rt = b(
+            &mut rep,
+            &cfg,
+            &format!("dist aRC-ND2 p={procs} (thread runner, er14)"),
+            |_| session.run(&job(Engine::Threads)).unwrap().num_colors,
+        );
+        let re = b(
+            &mut rep,
+            &cfg,
+            &format!("dist aRC-ND2 p={procs} (step engine, er14)"),
+            |_| session.run(&job(Engine::Bsp)).unwrap().num_colors,
+        );
+        println!(
+            "    → step engine {:.2}× vs thread runner at p={procs} (aRC)",
+            rt.min() / re.min()
+        );
+    }
+
     // L3.11: local-graph artifacts — fresh serial build vs the pooled
     // parallel build vs a session cache hit (Arc clone, effectively free)
     let part64 = partition::partition(session.graph(), Partitioner::BfsGrow, 64, 1);

@@ -202,7 +202,12 @@ impl ColoringConfig {
         let rc = match &self.recolor {
             RecolorMode::None => "0".to_string(),
             RecolorMode::Sync(c) => format!("{}{}", c.schedule.label(), c.iterations),
-            RecolorMode::Async { iterations, .. } => format!("aRC{iterations}"),
+            // the permutation schedule is part of the config: two aRC
+            // jobs differing only in `perm` must not collide in sweep
+            // rows keyed by the label
+            RecolorMode::Async { perm, iterations } => {
+                format!("aRC-{}{iterations}", perm.short_name())
+            }
         };
         format!("{sel}{ord}{}{comm}-{rc}{}", self.superstep_size, self.faults.label())
     }
@@ -247,6 +252,18 @@ mod tests {
     fn arc_parse() {
         let cfg = ColoringConfig::from_args(&parse("--recolor 1 --arc")).unwrap();
         assert!(matches!(cfg.recolor, RecolorMode::Async { iterations: 1, .. }));
+        // the label encodes the permutation schedule (default ND)
+        assert_eq!(cfg.label(), "FI1000s-aRC-ND1");
+        let cfg =
+            ColoringConfig::from_args(&parse("--recolor 2 --arc --schedule ni")).unwrap();
+        assert!(matches!(
+            cfg.recolor,
+            RecolorMode::Async {
+                perm: Permutation::NonIncreasing,
+                iterations: 2,
+            }
+        ));
+        assert_eq!(cfg.label(), "FI1000s-aRC-NI2");
     }
 
     #[test]
@@ -281,6 +298,19 @@ mod tests {
     fn labels() {
         assert_eq!(ColoringConfig::speed(32).label(), "FI1000s-0");
         assert!(ColoringConfig::quality(32).label().starts_with("R5I1000s-ND1"));
+        // aRC labels differing only in the permutation stay distinct
+        let arc = |perm| ColoringConfig {
+            recolor: RecolorMode::Async {
+                perm,
+                iterations: 2,
+            },
+            ..Default::default()
+        };
+        assert_eq!(arc(Permutation::NonDecreasing).label(), "FI1000s-aRC-ND2");
+        assert_ne!(
+            arc(Permutation::NonDecreasing).label(),
+            arc(Permutation::Random).label()
+        );
     }
 
     #[test]

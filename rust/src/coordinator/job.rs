@@ -112,23 +112,11 @@ fn validate(cfg: &ColoringConfig) -> Result<()> {
         );
         validate_eps(cfg.early_stop)?;
     }
-    if cfg.engine == Engine::Bsp {
-        ensure!(
-            !matches!(cfg.recolor, RecolorMode::Async { .. }),
-            "the BSP step engine does not run aRC — use Engine::Auto (falls back to \
-             threads) or Engine::Threads for async recoloring"
-        );
-    }
     if cfg.faults.is_active() {
         ensure!(
             cfg.engine != Engine::Threads,
             "fault injection requires the supervised BSP engine — drop the explicit \
              Engine::Threads (Auto routes faulted jobs to Bsp)"
-        );
-        ensure!(
-            !matches!(cfg.recolor, RecolorMode::Async { .. }),
-            "fault injection does not run aRC (aRC runs on the thread path) — use \
-             synchronous recoloring or none"
         );
         if let Some(c) = cfg.faults.crash {
             ensure!(
@@ -224,9 +212,10 @@ impl<'s> JobBuilder<'s> {
     }
 
     /// Which execution path simulates the processes ([`Engine::Auto`] by
-    /// default: the BSP step engine, with a thread-runner fallback for
-    /// aRC). Never changes a modeled quantity — only the simulator's
-    /// wallclock.
+    /// default: the BSP step engine for every job shape, aRC included).
+    /// Never changes a modeled quantity — only the simulator's wallclock.
+    /// The path that actually ran is recorded on
+    /// [`RunResult::engine`](super::pipeline::RunResult::engine).
     pub fn engine(mut self, engine: Engine) -> Self {
         self.cfg.engine = engine;
         self
@@ -271,7 +260,8 @@ impl<'s> JobBuilder<'s> {
 
     /// Inject seeded transport/crash faults ([`FaultPlan`]) — routes the
     /// run through the supervised BSP engine, which checkpoints, restarts
-    /// and repairs. Incompatible with [`Engine::Threads`] and aRC.
+    /// and repairs; every recoloring mode (including aRC) is supervisable.
+    /// Incompatible with [`Engine::Threads`].
     pub fn faults(mut self, plan: FaultPlan) -> Self {
         self.cfg.faults = plan;
         self
@@ -425,18 +415,17 @@ mod tests {
     }
 
     #[test]
-    fn bsp_engine_rejects_arc_but_auto_accepts_it() {
-        let arc = Job::builder()
-            .async_recolor(Permutation::NonDecreasing, 1)
-            .engine(Engine::Bsp)
-            .build();
-        assert!(arc.is_err(), "explicit Bsp + aRC must be rejected");
-        for engine in [Engine::Auto, Engine::Threads] {
-            assert!(Job::builder()
-                .async_recolor(Permutation::NonDecreasing, 1)
-                .engine(engine)
-                .build()
-                .is_ok());
+    fn every_engine_accepts_arc() {
+        // the Bsp+aRC rejection is gone: aRC runs on the step engine
+        for engine in [Engine::Auto, Engine::Threads, Engine::Bsp] {
+            assert!(
+                Job::builder()
+                    .async_recolor(Permutation::NonDecreasing, 1)
+                    .engine(engine)
+                    .build()
+                    .is_ok(),
+                "{engine:?} + aRC must validate"
+            );
         }
         assert!(Job::builder().engine(Engine::Bsp).sync_recolor(nd(2)).build().is_ok());
     }
@@ -455,8 +444,8 @@ mod tests {
                 .faults(plan)
                 .async_recolor(Permutation::NonDecreasing, 1)
                 .build()
-                .is_err(),
-            "aRC + faults must be rejected"
+                .is_ok(),
+            "aRC + faults is supervisable (the aRC rejection is gone)"
         );
         let crash = FaultPlan::parse("seed=1,crash=7@2").unwrap();
         assert!(

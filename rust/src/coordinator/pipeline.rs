@@ -11,11 +11,12 @@
 use super::config::{ColoringConfig, RecolorMode};
 use super::event::{emit_rank0, Event, Observer, Phase};
 use super::job::Job;
+use crate::color::recolor::Permutation;
 use crate::color::Coloring;
 use crate::dist::engine::{self, Engine, StepOutcome, StepProcess};
 use crate::dist::framework::{self, FrameworkConfig, FrameworkStep};
 use crate::dist::proc::{build_local_graphs, ColorState, LocalGraph};
-use crate::dist::recolor::{self, RecolorConfig, SyncRcStep};
+use crate::dist::recolor::{self, AsyncRcStep, RecolorConfig, SyncRcStep};
 use crate::dist::runner::{try_run_distributed_with, ProcResult};
 use crate::dist::{CostModel, DistMetrics, Endpoint, MsgKind, ProcMetrics};
 use crate::err;
@@ -37,6 +38,10 @@ pub struct RunResult {
     /// than `1 + iterations`).
     pub recolor_trace: Vec<usize>,
     pub config_label: String,
+    /// The execution path that actually ran ([`Engine::Auto`] resolved) —
+    /// always [`Engine::Bsp`] or [`Engine::Threads`], never `Auto` — so
+    /// benchmark rows and bug reports are attributable.
+    pub engine: Engine,
 }
 
 impl RunResult {
@@ -44,10 +49,11 @@ impl RunResult {
     pub fn summary_json(&self) -> String {
         let trace: Vec<String> = self.recolor_trace.iter().map(|k| k.to_string()).collect();
         format!(
-            "{{\"result\":\"coloring\",\"config\":\"{}\",\"colors\":{},\"initial_colors\":{},\
-             \"recolor_trace\":[{}],\"makespan\":{:e},\"messages\":{},\"bytes\":{},\
-             \"conflicts\":{},\"rounds\":{}}}",
+            "{{\"result\":\"coloring\",\"config\":\"{}\",\"engine\":\"{}\",\"colors\":{},\
+             \"initial_colors\":{},\"recolor_trace\":[{}],\"makespan\":{:e},\"messages\":{},\
+             \"bytes\":{},\"conflicts\":{},\"rounds\":{}}}",
             self.config_label,
+            self.engine.name(),
             self.num_colors,
             self.initial_colors,
             trace.join(","),
@@ -60,15 +66,13 @@ impl RunResult {
     }
 }
 
-/// Which execution path runs the distributed section of a job. aRC owns
-/// data-dependent blocking structure, so it stays on the thread runner;
-/// everything else is bulk-synchronous and defaults to the step engine.
-fn resolve_engine(engine: Engine, recolor: &RecolorMode) -> Engine {
-    let arc = matches!(recolor, RecolorMode::Async { .. });
+/// Which execution path runs the distributed section of a job. Every job
+/// shape — framework, sync RC and aRC alike — is bulk-synchronous, so
+/// `Auto` always resolves to the step engine; only an explicit
+/// [`Engine::Threads`] picks the thread-per-process reference oracle.
+fn resolve_engine(engine: Engine) -> Engine {
     match engine {
         Engine::Threads => Engine::Threads,
-        // validation rejects Bsp+aRC; Auto falls back
-        Engine::Auto | Engine::Bsp if arc => Engine::Threads,
         Engine::Auto | Engine::Bsp => Engine::Bsp,
     }
 }
@@ -114,11 +118,18 @@ pub(crate) fn execute(
     };
     let early_stop = cfg.early_stop;
     let cost = *cost;
+    let engine_used = resolve_engine(cfg.engine);
 
-    if resolve_engine(cfg.engine, &recolor_mode) == Engine::Bsp {
-        let rc_cfg = match &recolor_mode {
-            RecolorMode::Sync(rc) => Some(*rc),
-            _ => None,
+    if engine_used == Engine::Bsp {
+        let rc_plan = match &recolor_mode {
+            RecolorMode::None => RcPlan::None,
+            RecolorMode::Sync(rc) => RcPlan::Sync(*rc),
+            RecolorMode::Async { perm, iterations } => RcPlan::Async {
+                perm: *perm,
+                iterations: *iterations,
+                seed: cfg.seed,
+                early_stop,
+            },
         };
         // an active fault plan needs the supervising engine (checkpoints,
         // stall-instead-of-panic, recovery); fault-free jobs keep the
@@ -130,14 +141,14 @@ pub(crate) fn execute(
                 cfg.network,
                 cfg.faults,
                 obs,
-                |lg| JobMachine::new(lg, &fw, &cost, rc_cfg, obs),
+                |lg| JobMachine::new(lg, &fw, &cost, rc_plan, obs),
             )?
         } else {
             engine::run_steps(g.num_vertices(), locals, cfg.network, |lg| {
-                JobMachine::new(lg, &fw, &cost, rc_cfg, obs)
+                JobMachine::new(lg, &fw, &cost, rc_plan, obs)
             })
         };
-        return finalize(g, part_metrics, cfg, outcome, obs);
+        return finalize(g, part_metrics, cfg, outcome, engine_used, obs);
     }
 
     let outcome = try_run_distributed_with(g, locals, cfg.network, |ep, lg| {
@@ -224,7 +235,7 @@ pub(crate) fn execute(
             metrics,
         }
     })?;
-    finalize(g, part_metrics, cfg, outcome, obs)
+    finalize(g, part_metrics, cfg, outcome, engine_used, obs)
 }
 
 /// The engine-independent tail of a run: validate, take the trace, emit
@@ -234,6 +245,7 @@ fn finalize(
     part_metrics: &PartitionMetrics,
     cfg: &ColoringConfig,
     mut outcome: crate::dist::DistOutcome,
+    engine_used: Engine,
     obs: Option<&dyn Observer>,
 ) -> Result<RunResult> {
     if let Some(o) = obs {
@@ -288,6 +300,7 @@ fn finalize(
         metrics: outcome.metrics,
         partition_metrics: part_metrics.clone(),
         config_label: cfg.label(),
+        engine: engine_used,
     })
 }
 
@@ -348,11 +361,26 @@ pub fn repair_coloring(
     Ok(MAX_PASSES)
 }
 
+/// The recoloring section a [`JobMachine`] runs after the framework —
+/// [`RecolorMode`] flattened to what the step machines need (aRC carries
+/// the job seed and the job-level early-stop policy).
+#[derive(Clone, Copy)]
+enum RcPlan {
+    None,
+    Sync(RecolorConfig),
+    Async {
+        perm: Permutation,
+        iterations: u32,
+        seed: u64,
+        early_stop: Option<f64>,
+    },
+}
+
 /// The pipeline closure above as a step machine for the BSP engine: the
 /// framework port, the initial-count allreduce (booked under "comm"), the
-/// recoloring phase event, the sync-RC port, and the final cumulative
-/// accounting — in exactly the thread closure's order, so both execution
-/// paths are bit-for-bit interchangeable.
+/// recoloring phase event, the sync-RC or aRC port, and the final
+/// cumulative accounting — in exactly the thread closure's order, so both
+/// execution paths are bit-for-bit interchangeable.
 ///
 /// `Clone` snapshots the whole machine — the supervising engine's crash
 /// checkpoint.
@@ -360,10 +388,13 @@ pub fn repair_coloring(
 struct JobMachine<'a> {
     lg: &'a LocalGraph,
     cost: CostModel,
+    /// Kept for constructing the aRC rerun machine after the framework.
+    fw_cfg: FrameworkConfig,
     obs: Option<&'a dyn Observer>,
-    rc_cfg: Option<RecolorConfig>,
+    rc_plan: RcPlan,
     fw: Option<FrameworkStep<'a>>,
     rc: Option<SyncRcStep<'a>>,
+    arc: Option<AsyncRcStep<'a>>,
     metrics: ProcMetrics,
     colors: Option<ColorState>,
     comm_t0: f64,
@@ -379,6 +410,7 @@ enum JobState {
     InitKReduce,
     InitKFinish,
     Recolor,
+    RecolorAsync,
     Finalize,
 }
 
@@ -387,7 +419,7 @@ impl<'a> JobMachine<'a> {
         lg: &'a LocalGraph,
         fw: &FrameworkConfig,
         cost: &CostModel,
-        rc_cfg: Option<RecolorConfig>,
+        rc_plan: RcPlan,
         obs: Option<&'a dyn Observer>,
     ) -> Self {
         let to_color: Vec<u32> = (0..lg.n_owned() as u32).collect();
@@ -395,10 +427,12 @@ impl<'a> JobMachine<'a> {
         JobMachine {
             lg,
             cost: *cost,
+            fw_cfg: *fw,
             obs,
-            rc_cfg,
+            rc_plan,
             fw: Some(FrameworkStep::new(lg, fw, cost, colors, to_color, None, obs)),
             rc: None,
+            arc: None,
             metrics: ProcMetrics::default(),
             colors: None,
             comm_t0: 0.0,
@@ -422,6 +456,7 @@ impl StepProcess for JobMachine<'_> {
                 ep.rank == 0 || ep.have_msg(0, MsgKind::Collective, self.coll_seq, 1)
             }
             JobState::Recolor => self.rc.as_mut().expect("rc machine").ready(ep),
+            JobState::RecolorAsync => self.arc.as_mut().expect("arc machine").ready(ep),
             JobState::InitKSend | JobState::Finalize => true,
         }
     }
@@ -459,20 +494,43 @@ impl StepProcess for JobMachine<'_> {
                 let initial_k = ep.coll_finish_u64(self.coll_seq, self.coll_acc);
                 self.metrics.phases.add("comm", ep.clock - self.comm_t0);
                 self.metrics.recolor_trace.push(initial_k as usize);
-                match self.rc_cfg {
-                    Some(rc) => {
-                        emit_rank0(
-                            self.obs,
-                            ep.rank,
-                            Event::PhaseStarted {
-                                phase: Phase::Recoloring,
-                            },
-                        );
+                if !matches!(self.rc_plan, RcPlan::None) {
+                    emit_rank0(
+                        self.obs,
+                        ep.rank,
+                        Event::PhaseStarted {
+                            phase: Phase::Recoloring,
+                        },
+                    );
+                }
+                match self.rc_plan {
+                    RcPlan::Sync(rc) => {
                         let colors = self.colors.take().unwrap();
                         self.rc = Some(SyncRcStep::new(self.lg, &self.cost, rc, colors, self.obs));
                         self.state = JobState::Recolor;
                     }
-                    None => self.state = JobState::Finalize,
+                    RcPlan::Async {
+                        perm,
+                        iterations,
+                        seed,
+                        early_stop,
+                    } => {
+                        let colors = self.colors.take().unwrap();
+                        self.arc = Some(AsyncRcStep::new(
+                            self.lg,
+                            &self.cost,
+                            &self.fw_cfg,
+                            perm,
+                            iterations,
+                            seed,
+                            early_stop,
+                            initial_k as usize,
+                            colors,
+                            self.obs,
+                        ));
+                        self.state = JobState::RecolorAsync;
+                    }
+                    RcPlan::None => self.state = JobState::Finalize,
                 }
             }
             JobState::Recolor => {
@@ -481,6 +539,17 @@ impl StepProcess for JobMachine<'_> {
                     self.colors = Some(colors);
                     self.metrics.phases.merge(&m.phases);
                     self.metrics.conflicts += m.conflicts;
+                    self.metrics.recolor_trace.extend(trace);
+                    self.state = JobState::Finalize;
+                }
+            }
+            JobState::RecolorAsync => {
+                if self.arc.as_mut().expect("arc machine").step_once(ep) {
+                    let (colors, trace, m) = self.arc.take().unwrap().into_parts();
+                    self.colors = Some(colors);
+                    self.metrics.phases.merge(&m.phases);
+                    self.metrics.conflicts += m.conflicts;
+                    self.metrics.rounds += m.rounds;
                     self.metrics.recolor_trace.extend(trace);
                     self.state = JobState::Finalize;
                 }
@@ -616,6 +685,18 @@ mod tests {
                 .unwrap(),
             Job::on(&s).procs(3).async_comm().build().unwrap(),
             Job::on(&s).procs(1).quality().build().unwrap(),
+            Job::on(&s)
+                .procs(4)
+                .selection(Selection::RandomX(7))
+                .async_recolor(Permutation::NonDecreasing, 2)
+                .build()
+                .unwrap(),
+            Job::on(&s)
+                .procs(3)
+                .async_recolor(Permutation::NonIncreasing, 3)
+                .stop_when_improvement_below(0.05)
+                .build()
+                .unwrap(),
         ];
         for job in builders {
             let mut cfg = *job.config();
@@ -648,8 +729,9 @@ mod tests {
     }
 
     #[test]
-    fn arc_jobs_fall_back_to_threads_under_auto() {
-        // aRC under the default Auto engine must keep working (thread path)
+    fn arc_jobs_run_on_the_engine_under_auto() {
+        // aRC under the default Auto engine resolves to the step engine
+        // (the thread fallback is gone), and the result records it
         let s = session(synth::grid2d(16, 16));
         let r = Job::on(&s)
             .procs(4)
@@ -657,6 +739,23 @@ mod tests {
             .run()
             .unwrap();
         assert_eq!(r.recolor_trace.len(), 3);
+        assert_eq!(r.engine, Engine::Bsp, "Auto must resolve aRC to the engine");
+        // explicit engines resolve to themselves
+        let b = Job::on(&s)
+            .procs(4)
+            .async_recolor(Permutation::NonDecreasing, 1)
+            .engine(Engine::Bsp)
+            .run()
+            .unwrap();
+        assert_eq!(b.engine, Engine::Bsp);
+        let t = Job::on(&s)
+            .procs(4)
+            .async_recolor(Permutation::NonDecreasing, 1)
+            .engine(Engine::Threads)
+            .run()
+            .unwrap();
+        assert_eq!(t.engine, Engine::Threads);
+        assert_eq!(b.coloring.colors, t.coloring.colors);
     }
 
     #[test]
@@ -666,6 +765,7 @@ mod tests {
         let j = r.summary_json();
         assert!(j.starts_with("{\"result\":\"coloring\""));
         assert!(j.contains(&format!("\"colors\":{}", r.num_colors)));
+        assert!(j.contains("\"engine\":\"bsp\""), "summary must name the engine: {j}");
         assert!(j.ends_with('}'));
     }
 }

@@ -31,9 +31,12 @@
 //! conflict counts and virtual clocks are bit-for-bit identical to the
 //! thread runner (`tests/accounting_fixture.rs` and
 //! `tests/dist_props.rs::prop_step_engine_matches_thread_runner` pin
-//! this). Asynchronous *recoloring* (aRC) reruns the speculative framework
-//! with data-dependent blocking structure owned by the thread path — jobs
-//! that use it fall back to the thread runner (see [`Engine`]).
+//! this). Asynchronous *recoloring* (aRC) is a speculative framework rerun
+//! per iteration — bulk-synchronous like everything else — and runs here
+//! too ([`AsyncRcStep`](crate::dist::recolor::AsyncRcStep) embeds a
+//! [`FrameworkStep`](crate::dist::framework::FrameworkStep) between its
+//! split collectives), so every job shape shares one engine (see
+//! [`Engine`]).
 
 use crate::color::Coloring;
 use crate::coordinator::event::{Event, Observer};
@@ -89,14 +92,26 @@ pub trait StepProcess: Send {
 /// Which execution path runs a job's distributed section.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Engine {
-    /// BSP step engine for the framework and sync RC; thread runner for
-    /// aRC. The default.
+    /// The BSP step engine, for every job shape (framework, sync RC and
+    /// aRC alike). The default.
     #[default]
     Auto,
     /// Always one OS thread per simulated process (the reference oracle).
     Threads,
-    /// Always the BSP step engine; jobs with aRC are rejected at build.
+    /// The BSP step engine, explicitly.
     Bsp,
+}
+
+impl Engine {
+    /// The CLI/JSON spelling ("auto" | "threads" | "bsp") — also what
+    /// [`FromStr`](std::str::FromStr) parses back.
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Auto => "auto",
+            Engine::Threads => "threads",
+            Engine::Bsp => "bsp",
+        }
+    }
 }
 
 impl std::str::FromStr for Engine {

@@ -29,7 +29,7 @@ use crate::color::{Color, UNCOLORED};
 use crate::coordinator::event::{emit_rank0, Event, Observer};
 use crate::dist::comm::{self, Endpoint, MsgKind};
 use crate::dist::cost::CostModel;
-use crate::dist::framework::{self, FrameworkConfig};
+use crate::dist::framework::{self, FrameworkConfig, FrameworkStep};
 use crate::dist::proc::{ColorState, LocalGraph};
 use crate::dist::ProcMetrics;
 use crate::util::bitset::ColorMarker;
@@ -921,8 +921,375 @@ pub fn recolor_process_async(
     let fm = framework::color_process(ep, lg, &fw2, cost, state, Vec::new(), Some(order), obs);
     m.conflicts = fm.conflicts;
     m.rounds = fm.rounds;
+    // keep the rerun's per-phase breakdown (its "color" bucket) so aRC
+    // phase accounting is comparable with sync RC, then book the whole
+    // iteration under "recolor" as before
+    m.phases.merge(&fm.phases);
     m.phases.add("recolor", ep.clock - t0);
     m
+}
+
+/// The aRC pipeline section as an explicit step state machine for the BSP
+/// step engine ([`dist::engine`](crate::dist::engine)): the multi-iteration
+/// loop around [`recolor_process_async`] — the palette/class-size
+/// allreduces as split `coll_*` phases, the permuted visit-order build, an
+/// embedded [`FrameworkStep`] rerun, and the pipeline's post-iteration
+/// allreduce (booked under "comm"), trace entry,
+/// [`Event::RecolorIteration`] and early-stop decision. The machine
+/// performs the same endpoint operations in the same per-process order as
+/// the blocking loop, so colorings, traces, message/byte counts and
+/// virtual clocks are bit-for-bit identical; keep the two in lockstep when
+/// either changes.
+///
+/// `Clone` snapshots the whole machine (colors, the embedded rerun, the
+/// collective cursors) — the supervising engine's checkpoint for crash
+/// recovery.
+#[derive(Clone)]
+pub struct AsyncRcStep<'a> {
+    lg: &'a LocalGraph,
+    cost: CostModel,
+    fw: FrameworkConfig,
+    perm: Permutation,
+    iterations: u32,
+    seed: u64,
+    early_stop: Option<f64>,
+    obs: Option<&'a dyn Observer>,
+    /// Held here between reruns; inside the embedded [`FrameworkStep`]
+    /// while one is running.
+    colors: Option<ColorState>,
+    inner: Option<FrameworkStep<'a>>,
+    trace: Vec<usize>,
+    m: ProcMetrics,
+    /// Current iteration, 1-based (as the blocking loop counts).
+    iter: u32,
+    t0: f64,
+    comm_t0: f64,
+    /// The color count before the first iteration (the caller's last trace
+    /// entry) — the early-stop baseline until `trace` has entries.
+    prev_k: usize,
+    k: usize,
+    sizes: Vec<u64>,
+    coll_seq: u32,
+    coll_acc: u64,
+    state: ArcState,
+}
+
+/// Which slice of the aRC loop the next `step_once` executes.
+#[derive(Clone, Copy)]
+enum ArcState {
+    /// Iteration entry: palette-size collective phase 1 (or finish).
+    IterBegin,
+    /// Palette-size collective phase 2 (rank 0).
+    KReduce,
+    /// Palette-size phase 3; class-size vector collective phase 1 (or, on
+    /// an empty palette, skip straight to the post-iteration allreduce).
+    KFinish,
+    /// Class-size vector collective phase 2 (rank 0).
+    SizesReduce,
+    /// Class-size phase 3: permutation, visit-order build, color reset,
+    /// embedded framework construction.
+    SizesFinish,
+    /// One step of the embedded speculative [`FrameworkStep`] rerun.
+    Rerun,
+    /// Post-iteration palette allreduce phase 1 (booked under "comm").
+    PostKSend,
+    /// Post-iteration allreduce phase 2 (rank 0).
+    PostKReduce,
+    /// Post-iteration phase 3: trace, event, early stop, next iteration.
+    PostKFinish,
+    Finished,
+}
+
+impl<'a> AsyncRcStep<'a> {
+    /// `colors` is the recoloring entry state (a finished framework
+    /// machine's, or [`ColorState::from_global`]); `prev_k` is the global
+    /// color count it encodes (the caller's last trace entry — the first
+    /// iteration's early-stop baseline). `fw` is rerun with first-fit
+    /// selection and a per-iteration seed, exactly as
+    /// [`recolor_process_async`] does.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        lg: &'a LocalGraph,
+        cost: &CostModel,
+        fw: &FrameworkConfig,
+        perm: Permutation,
+        iterations: u32,
+        seed: u64,
+        early_stop: Option<f64>,
+        prev_k: usize,
+        colors: ColorState,
+        obs: Option<&'a dyn Observer>,
+    ) -> Self {
+        AsyncRcStep {
+            lg,
+            cost: *cost,
+            fw: *fw,
+            perm,
+            iterations,
+            seed,
+            early_stop,
+            obs,
+            colors: Some(colors),
+            inner: None,
+            trace: Vec::new(),
+            m: ProcMetrics {
+                rank: lg.rank as usize,
+                ..Default::default()
+            },
+            iter: 1,
+            t0: 0.0,
+            comm_t0: 0.0,
+            prev_k,
+            k: 0,
+            sizes: Vec::new(),
+            coll_seq: 0,
+            coll_acc: 0,
+            state: ArcState::IterBegin,
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, ArcState::Finished)
+    }
+
+    /// The finished machine's colors, per-iteration trace, and metrics
+    /// (phase times, conflicts and rounds accumulated over every rerun;
+    /// the endpoint's cumulative accounting is the caller's to read).
+    pub fn into_parts(self) -> (ColorState, Vec<usize>, ProcMetrics) {
+        assert!(self.is_finished(), "async RC step machine still running");
+        (
+            self.colors.expect("colors held outside reruns"),
+            self.trace,
+            self.m,
+        )
+    }
+
+    /// Whether the next [`step_once`](Self::step_once) slice can run
+    /// without a blocking-receive miss (see
+    /// [`FrameworkStep::ready`]).
+    pub fn ready(&mut self, ep: &mut Endpoint) -> bool {
+        match self.state {
+            ArcState::KReduce | ArcState::SizesReduce | ArcState::PostKReduce => {
+                ep.rank != 0
+                    || (1..self.lg.nprocs)
+                        .all(|p| ep.have_msg(p, MsgKind::Collective, self.coll_seq, 0))
+            }
+            ArcState::KFinish | ArcState::SizesFinish | ArcState::PostKFinish => {
+                ep.rank == 0 || ep.have_msg(0, MsgKind::Collective, self.coll_seq, 1)
+            }
+            ArcState::Rerun => self.inner.as_mut().expect("framework rerun").ready(ep),
+            _ => true,
+        }
+    }
+
+    /// Run one engine step; `true` once the machine reached `Finished`.
+    pub fn step_once(&mut self, ep: &mut Endpoint) -> bool {
+        let lg = self.lg;
+        let n_owned = lg.n_owned();
+        match self.state {
+            ArcState::IterBegin => {
+                if self.iter > self.iterations {
+                    self.state = ArcState::Finished;
+                } else {
+                    self.t0 = ep.clock;
+                    let colors = self.colors.as_ref().expect("colors held outside reruns");
+                    let local_k = (0..n_owned)
+                        .map(|v| colors.colors[v])
+                        .filter(|&c| c != UNCOLORED)
+                        .map(|c| c as u64 + 1)
+                        .max()
+                        .unwrap_or(0);
+                    self.coll_acc = local_k;
+                    self.coll_seq = ep.coll_send_u64(local_k);
+                    self.state = ArcState::KReduce;
+                }
+            }
+            ArcState::KReduce => {
+                if ep.rank == 0 {
+                    self.coll_acc = ep.coll_reduce_u64(self.coll_seq, self.coll_acc, u64::max);
+                }
+                self.state = ArcState::KFinish;
+            }
+            ArcState::KFinish => {
+                self.k = ep.coll_finish_u64(self.coll_seq, self.coll_acc) as usize;
+                if self.k == 0 {
+                    // the blocking helper returns early on an empty
+                    // palette; the pipeline loop still runs its
+                    // post-iteration allreduce, trace entry and event
+                    self.state = ArcState::PostKSend;
+                } else {
+                    let colors = self.colors.as_ref().expect("colors held outside reruns");
+                    self.sizes.clear();
+                    self.sizes.resize(self.k, 0);
+                    for v in 0..n_owned {
+                        let c = colors.colors[v];
+                        if c != UNCOLORED {
+                            self.sizes[c as usize] += 1;
+                        }
+                    }
+                    self.coll_seq = ep.coll_send_vec_u64(&self.sizes);
+                    self.state = ArcState::SizesReduce;
+                }
+            }
+            ArcState::SizesReduce => {
+                if ep.rank == 0 {
+                    ep.coll_reduce_vec_u64(self.coll_seq, &mut self.sizes);
+                }
+                self.state = ArcState::SizesFinish;
+            }
+            ArcState::SizesFinish => {
+                ep.coll_finish_vec_u64(self.coll_seq, &mut self.sizes);
+                let k = self.k;
+                let sizes_usize: Vec<usize> = self.sizes.iter().map(|&s| s as usize).collect();
+                let mut prng = perm_rng(self.seed, self.iter);
+                let class_order = self.perm.permute_classes(&sizes_usize, &mut prng);
+
+                // owned visit order: classes in permuted order, ascending
+                // ids within — as the blocking helper builds it
+                let colors = self.colors.as_mut().expect("colors held outside reruns");
+                let mut local_counts = vec![0usize; k];
+                let mut n_colored = 0usize;
+                for v in 0..n_owned {
+                    let c = colors.colors[v];
+                    if c != UNCOLORED {
+                        local_counts[c as usize] += 1;
+                        n_colored += 1;
+                    }
+                }
+                let mut start = vec![0usize; k];
+                let mut a = 0usize;
+                for &c in &class_order {
+                    start[c as usize] = a;
+                    a += local_counts[c as usize];
+                }
+                let mut order = vec![0u32; n_colored];
+                let mut cur = start;
+                for v in 0..n_owned {
+                    let c = colors.colors[v];
+                    if c != UNCOLORED {
+                        order[cur[c as usize]] = v as u32;
+                        cur[c as usize] += 1;
+                    }
+                }
+                ep.clock += self.cost.color_cost(n_owned as u64, 0);
+
+                // speculative rerun from scratch with first-fit
+                for c in colors.colors.iter_mut() {
+                    *c = UNCOLORED;
+                }
+                let mut fw2 = self.fw;
+                fw2.selection = Selection::FirstFit;
+                fw2.seed = mix64(self.seed, 0xA12C ^ self.iter as u64);
+                let colors = self.colors.take().expect("colors held outside reruns");
+                self.inner = Some(FrameworkStep::new(
+                    lg,
+                    &fw2,
+                    &self.cost,
+                    colors,
+                    Vec::new(),
+                    Some(order),
+                    self.obs,
+                ));
+                self.state = ArcState::Rerun;
+            }
+            ArcState::Rerun => {
+                if self.inner.as_mut().expect("framework rerun").step_once(ep) {
+                    let (colors, fm) = self.inner.take().expect("framework rerun").into_parts();
+                    self.colors = Some(colors);
+                    self.m.conflicts += fm.conflicts;
+                    self.m.rounds += fm.rounds;
+                    // same bookkeeping as recolor_process_async: keep the
+                    // rerun's phase breakdown, then the "recolor" bucket
+                    self.m.phases.merge(&fm.phases);
+                    self.m.phases.add("recolor", ep.clock - self.t0);
+                    self.state = ArcState::PostKSend;
+                }
+            }
+            ArcState::PostKSend => {
+                // the pipeline's post-iteration allreduce, booked under
+                // "comm" (framework::comm_timed in the thread path)
+                self.comm_t0 = ep.clock;
+                let colors = self.colors.as_ref().expect("colors held outside reruns");
+                let local_kmax = (0..n_owned)
+                    .map(|v| colors.colors[v] as u64 + 1)
+                    .max()
+                    .unwrap_or(0);
+                self.coll_acc = local_kmax;
+                self.coll_seq = ep.coll_send_u64(local_kmax);
+                self.state = ArcState::PostKReduce;
+            }
+            ArcState::PostKReduce => {
+                if ep.rank == 0 {
+                    self.coll_acc = ep.coll_reduce_u64(self.coll_seq, self.coll_acc, u64::max);
+                }
+                self.state = ArcState::PostKFinish;
+            }
+            ArcState::PostKFinish => {
+                let kk = ep.coll_finish_u64(self.coll_seq, self.coll_acc) as usize;
+                self.m.phases.add("comm", ep.clock - self.comm_t0);
+                let prev = *self.trace.last().unwrap_or(&self.prev_k);
+                self.trace.push(kk);
+                emit_rank0(
+                    self.obs,
+                    ep.rank,
+                    Event::RecolorIteration {
+                        iter: self.iter,
+                        k: kk,
+                    },
+                );
+                let mut stop = false;
+                if let Some(eps) = self.early_stop {
+                    // prev and kk come from allreduces: every process
+                    // stops at the same iteration
+                    let improvement = (prev as f64 - kk as f64) / (prev as f64).max(1.0);
+                    if improvement < eps {
+                        stop = true;
+                    }
+                }
+                if stop {
+                    self.state = ArcState::Finished;
+                } else {
+                    self.iter += 1;
+                    self.state = ArcState::IterBegin;
+                }
+            }
+            ArcState::Finished => {}
+        }
+        self.is_finished()
+    }
+}
+
+impl crate::dist::engine::StepProcess for AsyncRcStep<'_> {
+    fn poll_ready(&mut self, ep: &mut Endpoint) -> bool {
+        self.ready(ep)
+    }
+
+    /// Standalone use on the engine: once finished, the result carries the
+    /// endpoint's cumulative accounting and the trace (in
+    /// `metrics.recolor_trace`), as a thread-runner closure wrapping the
+    /// pipeline's aRC loop would report.
+    fn step(&mut self, ep: &mut Endpoint) -> crate::dist::engine::StepOutcome {
+        use crate::dist::engine::StepOutcome;
+        if !self.step_once(ep) {
+            return StepOutcome::Running;
+        }
+        let colors = self
+            .colors
+            .take()
+            .expect("colors held outside reruns");
+        let mut metrics = std::mem::take(&mut self.m);
+        metrics.recolor_trace = std::mem::take(&mut self.trace);
+        metrics.vtime = ep.clock;
+        metrics.sent_msgs = ep.sent_msgs;
+        metrics.sent_bytes = ep.sent_bytes;
+        metrics.recv_msgs = ep.recv_msgs;
+        metrics.dropped_msgs = ep.dropped_msgs;
+        metrics.non_teardown_drops = ep.non_teardown_drops;
+        StepOutcome::Done(crate::dist::ProcResult {
+            colors: colors.owned_pairs(self.lg),
+            metrics,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -1178,6 +1545,115 @@ mod tests {
                     a.vtime.to_bits(),
                     b.vtime.to_bits(),
                     "p{} virtual clock diverged (procs={procs} scheme={scheme:?})",
+                    a.rank
+                );
+                assert_eq!(a.dropped_msgs, 0);
+                assert_eq!(b.dropped_msgs, 0);
+            }
+        }
+    }
+
+    /// The aRC step-machine port must match the pipeline's thread-path
+    /// loop (recolor_process_async + post-iteration allreduce) bit for
+    /// bit: colors, traces, per-proc counters and clocks — across
+    /// permutation schedules, iteration counts and the early-stop knob.
+    #[test]
+    fn async_rc_step_machine_matches_thread_runner_bit_for_bit() {
+        use crate::dist::{engine, runner};
+        let (g, init) = workload();
+        let seed = 42u64;
+        // the early-stop baseline the pipeline would pass (its initial
+        // trace entry)
+        let init_k = init.num_colors();
+        for (procs, perm, iters, early_stop) in [
+            (1usize, Permutation::NonDecreasing, 2u32, None),
+            (4, Permutation::NonDecreasing, 3, None),
+            (5, Permutation::NonIncreasing, 2, None),
+            (3, Permutation::Reverse, 4, Some(0.05)),
+        ] {
+            let part = partition::partition(&g, Partitioner::Block, procs, 1);
+            let (_, locals) = build_local_graphs(&g, &part);
+            let cost = CostModel::fixed();
+            let net = NetworkModel::default();
+            let fw = FrameworkConfig {
+                ordering: crate::color::Ordering::InternalFirst,
+                selection: Selection::RandomX(8),
+                superstep_size: 64,
+                sync: true,
+                seed,
+                max_rounds: 200,
+            };
+            let by_threads = runner::run_distributed_with(&g, &locals, net, |ep, lg| {
+                let mut state = ColorState::from_global(lg, &init);
+                let mut m = ProcMetrics {
+                    rank: ep.rank,
+                    ..Default::default()
+                };
+                let mut trace = Vec::new();
+                for iter in 1..=iters {
+                    let im = recolor_process_async(
+                        ep, lg, &cost, &fw, perm, iter, seed, &mut state, None,
+                    );
+                    m.phases.merge(&im.phases);
+                    m.conflicts += im.conflicts;
+                    m.rounds += im.rounds;
+                    let local_kmax = (0..lg.n_owned())
+                        .map(|v| state.colors[v] as u64 + 1)
+                        .max()
+                        .unwrap_or(0);
+                    let k = framework::comm_timed(ep, &mut m, |ep| {
+                        ep.allreduce_max_u64(local_kmax)
+                    });
+                    let prev = *trace.last().unwrap_or(&init_k);
+                    trace.push(k as usize);
+                    if let Some(eps) = early_stop {
+                        let improvement = (prev as f64 - k as f64) / (prev as f64).max(1.0);
+                        if improvement < eps {
+                            break;
+                        }
+                    }
+                }
+                m.recolor_trace = trace;
+                m.vtime = ep.clock;
+                m.sent_msgs = ep.sent_msgs;
+                m.sent_bytes = ep.sent_bytes;
+                m.recv_msgs = ep.recv_msgs;
+                m.dropped_msgs = ep.dropped_msgs;
+                m.non_teardown_drops = ep.non_teardown_drops;
+                crate::dist::ProcResult {
+                    colors: state.owned_pairs(lg),
+                    metrics: m,
+                }
+            });
+            let by_engine = engine::run_steps(g.num_vertices(), &locals, net, |lg| {
+                AsyncRcStep::new(
+                    lg,
+                    &cost,
+                    &fw,
+                    perm,
+                    iters,
+                    seed,
+                    early_stop,
+                    init_k,
+                    ColorState::from_global(lg, &init),
+                    None,
+                )
+            });
+            assert_eq!(
+                by_threads.coloring.colors, by_engine.coloring.colors,
+                "colors diverged (procs={procs} perm={perm:?})"
+            );
+            for (a, b) in by_threads.per_proc.iter().zip(by_engine.per_proc.iter()) {
+                assert_eq!(a.recolor_trace, b.recolor_trace, "p{} trace", a.rank);
+                assert_eq!(a.conflicts, b.conflicts, "p{} conflicts", a.rank);
+                assert_eq!(a.rounds, b.rounds, "p{} rounds", a.rank);
+                assert_eq!(a.sent_msgs, b.sent_msgs, "p{} msgs", a.rank);
+                assert_eq!(a.sent_bytes, b.sent_bytes, "p{} bytes", a.rank);
+                assert_eq!(a.recv_msgs, b.recv_msgs, "p{} recvs", a.rank);
+                assert_eq!(
+                    a.vtime.to_bits(),
+                    b.vtime.to_bits(),
+                    "p{} virtual clock diverged (procs={procs} perm={perm:?})",
                     a.rank
                 );
                 assert_eq!(a.dropped_msgs, 0);

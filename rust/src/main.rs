@@ -107,12 +107,16 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
              --stop-eps F  stop recoloring once an iteration improves the color\n\
              \u{20}             count by less than the relative fraction F\n\
              --engine E    execution path: bsp step engine (default via auto) or\n\
-             \u{20}             one OS thread per simulated process; results are\n\
-             \u{20}             bit-for-bit identical, only wallclock differs\n\
+             \u{20}             one OS thread per simulated process; every job shape\n\
+             \u{20}             (no recoloring, RC and aRC) runs on either engine\n\
+             \u{20}             with bit-for-bit identical results, only wallclock\n\
+             \u{20}             differs; the effective engine is reported in --json\n\
              --faults SPEC inject seeded transport faults (message delay and\n\
              \u{20}             reorder probabilities, one crash-stop of rank R at\n\
              \u{20}             step S for D steps) on the supervised bsp engine;\n\
-             \u{20}             conflicts left by faults are repaired after Done\n\
+             \u{20}             works with every recoloring mode (aRC included) but\n\
+             \u{20}             not with --engine threads; conflicts left by faults\n\
+             \u{20}             are repaired after Done\n\
              --json        stream one JSON event per phase/superstep/iteration\n\
              \u{20}             (plus a final result record) instead of the table",
         ),
@@ -328,6 +332,7 @@ fn cmd_color(args: &Args) -> Result<()> {
         &["metric", "value"],
     );
     tab.row(&["processes", &cfg.num_procs.to_string()]);
+    tab.row(&["engine", r.engine.name()]);
     tab.row(&["colors", &r.num_colors.to_string()]);
     tab.row(&["initial colors", &r.initial_colors.to_string()]);
     tab.row(&["recolor trace", &format!("{:?}", r.recolor_trace)]);
@@ -402,5 +407,8 @@ mod tests {
         assert!(u.contains("--json"));
         assert!(u.contains("--faults"));
         assert!(u.contains("crash=R@S"));
+        // the validation matrix: aRC runs everywhere, faults exclude threads
+        assert!(u.contains("aRC included"));
+        assert!(u.contains("not with --engine threads"));
     }
 }

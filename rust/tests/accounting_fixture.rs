@@ -1,10 +1,11 @@
 //! Accounting-invariance fixture: the pooled transport, dense ghost
 //! indexing, scratch hoisting — and now the BSP step engine — must not
-//! change any *modeled* quantity. For two fixed jobs (framework coloring +
-//! 2 RC iterations, Base and Piggyback) this pins — bit-for-bit — the
-//! final coloring, every process's `sent_msgs` / `sent_bytes` /
-//! `recv_msgs`, and every virtual clock (as `f64::to_bits`), against a
-//! committed fixture file. Every fixture case runs on **both execution
+//! change any *modeled* quantity. For four fixed jobs (framework coloring
+//! + 2 RC iterations with Base and Piggyback, and framework coloring +
+//! 2 aRC iterations with the ND and NI permutations) this pins —
+//! bit-for-bit — the final coloring, every process's `sent_msgs` /
+//! `sent_bytes` / `recv_msgs`, and every virtual clock (as
+//! `f64::to_bits`), against a committed fixture file. Every fixture case runs on **both execution
 //! paths** — the thread-per-process runner and the BSP step engine — and
 //! the two serializations must agree exactly before either is compared to
 //! the pin.
@@ -28,7 +29,10 @@ use dgcolor::dist::cost::{CostModel, NetworkModel};
 use dgcolor::dist::engine::{self, StepOutcome, StepProcess};
 use dgcolor::dist::framework::{self, FrameworkConfig, FrameworkStep};
 use dgcolor::dist::proc::{build_local_graphs, ColorState, LocalGraph};
-use dgcolor::dist::recolor::{recolor_process_sync, CommScheme, RecolorConfig, SyncRcStep};
+use dgcolor::dist::recolor::{
+    recolor_process_async, recolor_process_sync, AsyncRcStep, CommScheme, RecolorConfig,
+    SyncRcStep,
+};
 use dgcolor::dist::{Endpoint, ProcMetrics, ProcResult};
 use dgcolor::graph::{synth, CsrGraph};
 use dgcolor::partition::{self, Partitioner};
@@ -235,11 +239,190 @@ fn run_fixture_engine(scheme: CommScheme) -> Vec<String> {
     lines
 }
 
+/// aRC iterations for the fixed aRC jobs. Early-stop stays off so the
+/// trace length is pinned.
+const ARC_ITERS: u32 = 2;
+
+/// The fixed aRC job on the thread-per-process runner: framework coloring
+/// followed by the pipeline's per-iteration aRC loop (speculative rerun +
+/// post-iteration `k` allreduce).
+fn run_arc_threads(perm: Permutation) -> Vec<String> {
+    let g = fixture_graph();
+    let part = partition::partition(&g, Partitioner::Block, PROCS, 1);
+    let (_, locals) = build_local_graphs(&g, &part);
+    let eps = comm::network(PROCS, NetworkModel::default());
+    let cost = CostModel::fixed();
+    let fw = fixture_fw();
+
+    let mut outs: Vec<Option<(Vec<(u32, u32)>, String)>> = (0..PROCS).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let hs: Vec<_> = eps
+            .into_iter()
+            .zip(locals.iter())
+            .map(|(ep, lg)| {
+                let fw = &fw;
+                let cost = &cost;
+                s.spawn(move || {
+                    let mut ep = ep;
+                    let mut state = ColorState::uncolored(lg);
+                    let to: Vec<u32> = (0..lg.n_owned() as u32).collect();
+                    framework::color_process(&mut ep, lg, fw, cost, &mut state, to, None, None);
+                    let mut m = ProcMetrics::default();
+                    let mut trace = Vec::new();
+                    for iter in 1..=ARC_ITERS {
+                        let im = recolor_process_async(
+                            &mut ep, lg, cost, fw, perm, iter, fw.seed, &mut state, None,
+                        );
+                        m.phases.merge(&im.phases);
+                        let local_kmax = (0..lg.n_owned())
+                            .map(|v| state.colors[v] as u64 + 1)
+                            .max()
+                            .unwrap_or(0);
+                        let k = framework::comm_timed(&mut ep, &mut m, |ep| {
+                            ep.allreduce_max_u64(local_kmax)
+                        });
+                        trace.push(k as usize);
+                    }
+                    assert_eq!(ep.dropped_msgs, 0, "transport dropped messages");
+                    let m = ProcMetrics {
+                        rank: ep.rank,
+                        vtime: ep.clock,
+                        sent_msgs: ep.sent_msgs,
+                        sent_bytes: ep.sent_bytes,
+                        recv_msgs: ep.recv_msgs,
+                        dropped_msgs: ep.dropped_msgs,
+                        recolor_trace: trace,
+                        ..Default::default()
+                    };
+                    (state.owned_pairs(lg), proc_line(&m))
+                })
+            })
+            .collect();
+        for (i, h) in hs.into_iter().enumerate() {
+            outs[i] = Some(h.join().unwrap());
+        }
+    });
+
+    let mut pairs = Vec::new();
+    let mut lines = Vec::new();
+    for (ps, line) in outs.into_iter().map(|o| o.unwrap()) {
+        pairs.push(ps);
+        lines.push(line);
+    }
+    merge_and_hash(&g, pairs, &mut lines);
+    lines
+}
+
+/// The same fixed aRC job as a step machine: framework port chained into
+/// the aRC port, the shape [`JobMachine`] runs on the BSP engine.
+struct ArcFixtureMachine<'a> {
+    lg: &'a LocalGraph,
+    cost: CostModel,
+    fw_cfg: FrameworkConfig,
+    perm: Permutation,
+    fw: Option<FrameworkStep<'a>>,
+    arc: Option<AsyncRcStep<'a>>,
+}
+
+impl StepProcess for ArcFixtureMachine<'_> {
+    fn step(&mut self, ep: &mut Endpoint) -> StepOutcome {
+        if let Some(fw) = self.fw.as_mut() {
+            if fw.step_once(ep) {
+                let (colors, _m) = self.fw.take().unwrap().into_parts();
+                // early-stop is off, so the `prev_k` baseline is inert
+                self.arc = Some(AsyncRcStep::new(
+                    self.lg,
+                    &self.cost,
+                    &self.fw_cfg,
+                    self.perm,
+                    ARC_ITERS,
+                    self.fw_cfg.seed,
+                    None,
+                    0,
+                    colors,
+                    None,
+                ));
+            }
+            return StepOutcome::Running;
+        }
+        if self.arc.as_mut().expect("arc machine").step_once(ep) {
+            let (colors, trace, _m) = self.arc.take().unwrap().into_parts();
+            assert_eq!(ep.dropped_msgs, 0, "transport dropped messages");
+            let metrics = ProcMetrics {
+                rank: ep.rank,
+                vtime: ep.clock,
+                sent_msgs: ep.sent_msgs,
+                sent_bytes: ep.sent_bytes,
+                recv_msgs: ep.recv_msgs,
+                dropped_msgs: ep.dropped_msgs,
+                recolor_trace: trace,
+                ..Default::default()
+            };
+            return StepOutcome::Done(ProcResult {
+                colors: colors.owned_pairs(self.lg),
+                metrics,
+            });
+        }
+        StepOutcome::Running
+    }
+}
+
+/// The fixed aRC job on the BSP step engine.
+fn run_arc_engine(perm: Permutation) -> Vec<String> {
+    let g = fixture_graph();
+    let part = partition::partition(&g, Partitioner::Block, PROCS, 1);
+    let (_, locals) = build_local_graphs(&g, &part);
+    let cost = CostModel::fixed();
+    let fw = fixture_fw();
+
+    let out = engine::run_steps(g.num_vertices(), &locals, NetworkModel::default(), |lg| {
+        let to: Vec<u32> = (0..lg.n_owned() as u32).collect();
+        ArcFixtureMachine {
+            lg,
+            cost,
+            fw_cfg: fw,
+            perm,
+            fw: Some(FrameworkStep::new(
+                lg,
+                &fw,
+                &cost,
+                ColorState::uncolored(lg),
+                to,
+                None,
+                None,
+            )),
+            arc: None,
+        }
+    });
+
+    let mut lines: Vec<String> = out.per_proc.iter().map(proc_line).collect();
+    let hash = fnv1a(out.coloring.colors.iter().flat_map(|c| c.to_le_bytes()));
+    out.coloring.validate(&g).unwrap();
+    lines.push(format!(
+        "coloring colors={} hash={hash:016x}",
+        out.coloring.num_colors()
+    ));
+    lines
+}
+
 fn observed() -> String {
     let mut all = vec![format!("# accounting fixture v1, {PROCS} procs")];
     for (label, scheme) in [("base", CommScheme::Base), ("piggyback", CommScheme::Piggyback)] {
         let threads = run_fixture_threads(scheme);
         let engine = run_fixture_engine(scheme);
+        assert_eq!(
+            threads, engine,
+            "[{label}] BSP step engine diverged from the thread runner"
+        );
+        all.push(format!("[{label}]"));
+        all.extend(threads);
+    }
+    for (label, perm) in [
+        ("arc-nd", Permutation::NonDecreasing),
+        ("arc-ni", Permutation::NonIncreasing),
+    ] {
+        let threads = run_arc_threads(perm);
+        let engine = run_arc_engine(perm);
         assert_eq!(
             threads, engine,
             "[{label}] BSP step engine diverged from the thread runner"

@@ -58,8 +58,13 @@ fn random_config(rng: &mut Rng) -> ColoringConfig {
             ..Default::default()
         }),
         2 => RecolorMode::Async {
-            perm: Permutation::NonDecreasing,
-            iterations: rng.range(1, 3) as u32,
+            perm: *rng.choose(&[
+                Permutation::NonDecreasing,
+                Permutation::NonIncreasing,
+                Permutation::Reverse,
+                Permutation::Random,
+            ]),
+            iterations: rng.range(1, 4) as u32,
         },
         _ => RecolorMode::Sync(RecolorConfig::default()),
     };
@@ -180,8 +185,9 @@ fn prop_sync_recolor_trace_is_monotone() {
 
 /// The BSP step engine and the thread-per-process runner must be
 /// bit-for-bit interchangeable across random graphs, partitions and
-/// configs (every sync recolor mode, both comm schemes, both superstep
-/// communication modes, random superstep sizes and process counts).
+/// configs (every sync recolor mode and aRC permutation, both comm
+/// schemes, both superstep communication modes, random superstep sizes
+/// and process counts).
 #[test]
 fn prop_step_engine_matches_thread_runner() {
     check(
@@ -190,11 +196,6 @@ fn prop_step_engine_matches_thread_runner() {
         |rng, _| {
             let s = Session::new(random_graph(rng));
             let mut cfg = random_config(rng);
-            if matches!(cfg.recolor, RecolorMode::Async { .. }) {
-                // aRC runs on threads under either setting; exercise the
-                // engine-relevant modes instead
-                cfg.recolor = RecolorMode::Sync(RecolorConfig::default());
-            }
             cfg.engine = Engine::Threads;
             let t = run(&s, cfg)?;
             cfg.engine = Engine::Bsp;

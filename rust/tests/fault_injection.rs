@@ -2,6 +2,7 @@
 //! recovery engine (PR 6). CI's `chaos` job reruns the property tests in
 //! release mode over a seed matrix via `DGCOLOR_PROP_SEED`.
 
+use dgcolor::color::recolor::Permutation;
 use dgcolor::color::Selection;
 use dgcolor::coordinator::job::nd;
 use dgcolor::coordinator::{pipeline, Event, EventLog, Job, Session};
@@ -120,6 +121,68 @@ fn same_seed_crash_recovery_trace_is_reproducible() {
     r1.coloring.validate(s.graph()).unwrap();
 }
 
+/// aRC is supervisable too (the engine-split rejection is gone): a crash
+/// landing *inside* a recoloring iteration must either recover to a valid
+/// coloring or end in a typed error — and the whole recovery trace must
+/// replay bit-for-bit under the same seed.
+#[test]
+fn faulted_arc_crash_during_recoloring_is_reproducible() {
+    let s = session(synth::fem_like(800, 9.0, 22, 0.004, 7, "fem"));
+    // the framework phase on this job finishes in well under 25 engine
+    // steps, so a step-25 crash lands inside the aRC iterations
+    let plan = FaultPlan {
+        seed: 13,
+        delay_prob: 0.05,
+        delay_secs: 1e-4,
+        reorder_prob: 0.05,
+        crash: Some(Crash {
+            rank: 1,
+            step: 25,
+            down_steps: 2,
+        }),
+    };
+    let job = Job::on(&s)
+        .procs(4)
+        .selection(Selection::RandomX(5))
+        .async_recolor(Permutation::NonDecreasing, 2)
+        .faults(plan)
+        .build()
+        .expect("aRC + faults must validate now that the rejection is gone");
+    let run = || {
+        let log = EventLog::new();
+        let r = s.run_observed(&job, &log);
+        (log.take(), r)
+    };
+    let (ev1, r1) = run();
+    let (ev2, r2) = run();
+    assert_eq!(ev1, ev2, "recovery traces diverged across identical runs");
+    assert!(
+        ev1.iter()
+            .any(|e| *e == Event::FaultInjected { rank: 1, step: 25 }),
+        "crash was not injected"
+    );
+    assert!(
+        ev1.iter()
+            .any(|e| matches!(e, Event::RecolorIteration { .. })),
+        "job never reached a recoloring iteration"
+    );
+    match (&r1, &r2) {
+        (Ok(a), Ok(b)) => {
+            assert_eq!(a.coloring.colors, b.coloring.colors);
+            assert_eq!(a.recolor_trace, b.recolor_trace);
+            assert_eq!(a.metrics.makespan.to_bits(), b.metrics.makespan.to_bits());
+            assert!(a.metrics.total_restarts >= 1, "no restart was accounted");
+            a.coloring.validate(s.graph()).unwrap();
+        }
+        (Err(a), Err(b)) => {
+            // a typed error is an acceptable ending, but it too must be
+            // reproducible
+            assert_eq!(a.to_string(), b.to_string());
+        }
+        _ => panic!("identical faulted runs disagreed on success"),
+    }
+}
+
 /// A job the supervisor cannot finish (the crash rank stays down past the
 /// livelock guard) fails as a typed error AND terminates its event stream
 /// with `Done { result: Err(..) }` — observers never hang on a failed job.
@@ -198,7 +261,12 @@ fn prop_faulted_runs_end_valid() {
         let s = session(g);
         let mut b = Job::on(&s).procs(procs).seed(rng.next_u64()).faults(plan);
         if rng.chance(0.5) {
-            b = b.selection(Selection::RandomX(5)).sync_recolor(nd(1));
+            b = b.selection(Selection::RandomX(5));
+            b = if rng.chance(0.5) {
+                b.sync_recolor(nd(1))
+            } else {
+                b.async_recolor(Permutation::NonDecreasing, 1 + rng.below(2) as u32)
+            };
         }
         let job = b.build().map_err(|e| format!("build failed: {e}"))?;
         let label = job.label();
