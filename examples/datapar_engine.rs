@@ -1,0 +1,87 @@
+//! DataPar engine end-to-end check (the CI shared-memory leg): color an
+//! RMAT graph through the Job/Session API with `--engine datapar`,
+//! **assert** the coloring is valid and bit-for-bit reproducible, then
+//! rerun the raw `shm` core across pool sizes {1, 2, 8} and assert the
+//! worker-count-independence guarantee the engine is built on. Finishes
+//! with a wallclock comparison against the BSP step engine on the same
+//! graph — the raw-speed story this engine exists for.
+//!
+//! Run: `cargo run --release --example datapar_engine`
+
+use dgcolor::color::Selection;
+use dgcolor::coordinator::{Job, Session};
+use dgcolor::dist::{CostModel, Engine};
+use dgcolor::graph::rmat::{self, RmatParams};
+use dgcolor::shm::{self, DataParConfig};
+use dgcolor::util::pool::WorkerPool;
+use dgcolor::util::table::{fmt_secs, Table};
+
+fn main() -> dgcolor::util::error::Result<()> {
+    let g = rmat::generate(&RmatParams::er(13, 8), 7, "er13");
+    println!(
+        "RMAT-ER scale 13: |V|={} |E|={} Δ={}\n",
+        g.num_vertices(),
+        g.num_edges(),
+        g.max_degree(),
+    );
+    let session = Session::new(g).with_cost_model(CostModel::fixed());
+
+    // end-to-end through the Job/Session API
+    let job = || {
+        Job::on(&session)
+            .engine(Engine::DataPar)
+            .selection(Selection::RandomX(5))
+            .seed(7)
+            .build()
+            .unwrap()
+    };
+    let r = session.run(&job())?;
+    r.coloring.validate(session.graph()).unwrap();
+    assert_eq!(r.engine, Engine::DataPar);
+    let dp = r.datapar.as_ref().expect("datapar metrics");
+    let mut t = Table::new("--engine datapar on the Job/Session API", &["metric", "value"]);
+    t.row(&["colors", &r.num_colors.to_string()]);
+    t.row(&["rounds", &dp.rounds.to_string()]);
+    t.row(&["speculated", &dp.speculated.to_string()]);
+    t.row(&["conflicted", &dp.conflicted.to_string()]);
+    t.row(&["chunks", &dp.chunks.to_string()]);
+    t.row(&["workers", &dp.workers.to_string()]);
+    t.row(&["wall", &fmt_secs(dp.wall_secs)]);
+    t.print();
+
+    let again = session.run(&job())?;
+    assert_eq!(r.coloring.colors, again.coloring.colors);
+    println!("\nsame job twice: identical coloring ✓");
+
+    // the engine's core guarantee: the coloring is a function of
+    // (graph, config), never of the pool size
+    let cfg = DataParConfig {
+        selection: Selection::RandomX(5),
+        seed: 7,
+        ..DataParConfig::default()
+    };
+    let (c1, m1) = shm::color_graph_on(&WorkerPool::new(1), session.graph(), &cfg)?;
+    c1.validate(session.graph()).unwrap();
+    for workers in [2usize, 8] {
+        let (cw, mw) = shm::color_graph_on(&WorkerPool::new(workers), session.graph(), &cfg)?;
+        assert_eq!(c1.colors, cw.colors, "colors diverged at {workers} workers");
+        assert_eq!(m1.rounds, mw.rounds, "rounds diverged at {workers} workers");
+    }
+    println!("pool sizes 1/2/8: bit-for-bit identical colorings ✓");
+
+    // the raw-speed story: same graph, same selection, BSP vs DataPar
+    let bsp = Job::on(&session)
+        .procs(8)
+        .selection(Selection::RandomX(5))
+        .seed(7)
+        .engine(Engine::Bsp)
+        .run()?;
+    println!(
+        "\nwallclock, RMAT-ER 13: datapar {} ({} colors) vs bsp p=8 {} ({} colors)",
+        fmt_secs(dp.wall_secs),
+        r.num_colors,
+        fmt_secs(bsp.metrics.wall_secs),
+        bsp.num_colors,
+    );
+    Ok(())
+}

@@ -256,6 +256,54 @@ fn main() {
         rc.min() * 1e6
     );
 
+    // L3.12: the DataPar shared-memory engine vs both transport engines
+    // at growing scale — the raw-speed claim. These are *different
+    // algorithms* (datapar colorings legitimately differ), so the
+    // comparison is wallclock, not modeled quantities. Warmups populate
+    // the partition + local-graph caches first, so the transport engines
+    // measure only the distributed run itself.
+    for scale in [17u32, 20] {
+        let name = format!("er{scale}");
+        let dp_g = rmat::generate(&RmatParams::er(scale, 8), 21, &name);
+        println!(
+            "    datapar vs transport on {name}: |V|={} |E|={}",
+            dp_g.num_vertices(),
+            dp_g.num_edges()
+        );
+        let s = Session::new(dp_g).with_cost_model(CostModel::fixed());
+        let dp_job = || {
+            Job::on(&s)
+                .engine(Engine::DataPar)
+                .seed(21)
+                .build()
+                .unwrap()
+        };
+        let tr_job = |engine: Engine| {
+            Job::on(&s)
+                .procs(8)
+                .engine(engine)
+                .seed(21)
+                .build()
+                .unwrap()
+        };
+        s.run(&dp_job()).expect("warmup run");
+        s.run(&tr_job(Engine::Bsp)).expect("warmup run");
+        let rd = b(&mut rep, &cfg, &format!("datapar run ({name})"), |_| {
+            s.run(&dp_job()).unwrap().num_colors
+        });
+        let re = b(&mut rep, &cfg, &format!("bsp p=8 run ({name})"), |_| {
+            s.run(&tr_job(Engine::Bsp)).unwrap().num_colors
+        });
+        let rt = b(&mut rep, &cfg, &format!("threads p=8 run ({name})"), |_| {
+            s.run(&tr_job(Engine::Threads)).unwrap().num_colors
+        });
+        println!(
+            "    → datapar {:.2}× vs bsp, {:.2}× vs threads ({name})",
+            re.min() / rd.min(),
+            rt.min() / rd.min()
+        );
+    }
+
     // L1/L2: PJRT kernel batch latency (when artifacts are built)
     if dgcolor::runtime::KernelRuntime::artifacts_present() {
         let rt =

@@ -1,6 +1,8 @@
 //! Coloring storage, validation and quality metrics.
 
 use crate::graph::{CsrGraph, VertexId};
+use crate::util::pool;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Colors are 0-based `u32`s; the paper reports `num_colors = max + 1`.
 pub type Color = u32;
@@ -108,14 +110,51 @@ impl Coloring {
         Ok(())
     }
 
-    /// Count conflicting edges (diagnostics for speculative phases).
+    /// Count conflicting edges (diagnostics for speculative phases; the
+    /// DataPar engine's validity checker and the pipeline's post-job
+    /// validation fast path).
+    ///
+    /// Large graphs fan the sweep out over the process-wide worker pool
+    /// (chunked vertex ranges, per-worker partial counts reduced at the
+    /// end) — so this must not be called from inside a pool shard closure
+    /// (see `util::pool`). Each undirected edge is counted exactly once,
+    /// at its smaller endpoint.
     pub fn count_conflicts(&self, g: &CsrGraph) -> usize {
-        g.edges()
-            .filter(|&(u, v)| {
-                let cu = self.get(u);
-                cu != UNCOLORED && cu == self.get(v)
-            })
-            .count()
+        const PARALLEL_MIN_VERTICES: usize = 1 << 14;
+        let n = g.num_vertices();
+        let pool = pool::global();
+        if n < PARALLEL_MIN_VERTICES || pool.workers() == 1 {
+            return self.count_conflicts_in(g, 0, n);
+        }
+        let shards = pool.workers();
+        let chunk = n.div_ceil(shards);
+        let partials: Vec<AtomicUsize> = (0..shards).map(|_| AtomicUsize::new(0)).collect();
+        pool.scoped_run(shards, &|shard| {
+            let lo = shard * chunk;
+            let hi = ((shard + 1) * chunk).min(n);
+            if lo < hi {
+                partials[shard].store(self.count_conflicts_in(g, lo, hi), Ordering::Relaxed);
+            }
+        });
+        partials.iter().map(|p| p.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Serial kernel of [`count_conflicts`](Self::count_conflicts):
+    /// conflicts among edges whose smaller endpoint lies in `lo..hi`.
+    fn count_conflicts_in(&self, g: &CsrGraph, lo: usize, hi: usize) -> usize {
+        let mut count = 0;
+        for u in lo..hi {
+            let cu = self.colors[u];
+            if cu == UNCOLORED {
+                continue;
+            }
+            for &v in g.neighbors(u as VertexId) {
+                if v as usize > u && cu == self.colors[v as usize] {
+                    count += 1;
+                }
+            }
+        }
+        count
     }
 
     /// Balance of the color distribution: max class size / avg class size.
@@ -198,6 +237,21 @@ mod tests {
         assert_eq!(c.class_sizes(), vec![3, 1, 1]);
         assert_eq!(c.classes()[0], vec![0, 2, 4]);
         assert!((c.balance() - 3.0 / (5.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_conflict_count_matches_serial() {
+        // large enough to take the pooled path (PARALLEL_MIN_VERTICES)
+        let n = 1 << 15;
+        let g = synth::path(n);
+        let mut colors: Vec<Color> = (0..n as Color).map(|v| v % 2).collect();
+        let c = Coloring::from_vec(colors.clone());
+        assert_eq!(c.count_conflicts(&g), 0);
+        // plant one monochromatic stretch: edges (100,101) and (101,102)
+        colors[101] = 0;
+        let c = Coloring::from_vec(colors);
+        assert_eq!(c.count_conflicts(&g), 2);
+        assert_eq!(c.count_conflicts_in(&g, 0, n), 2, "serial kernel agrees");
     }
 
     #[test]

@@ -51,9 +51,13 @@ pub struct ColoringConfig {
     /// `stop_when_improvement_below`. Requires a recoloring mode; not
     /// encoded in [`ColoringConfig::label`].
     pub early_stop: Option<f64>,
-    /// Which execution path simulates the processes. Never changes a
-    /// modeled quantity (colors, messages, bytes, clocks) — only the
-    /// simulator's wallclock — so it is not encoded in the label.
+    /// Which execution path runs the job. The transport engines
+    /// (`Threads`/`Bsp`) never change a modeled quantity (colors,
+    /// messages, bytes, clocks) — only the simulator's wallclock — so the
+    /// engine is not encoded in the label. [`Engine::DataPar`] is the
+    /// exception: it is a different (shared-memory speculative) algorithm
+    /// whose colorings legitimately differ from the transport engines',
+    /// though they stay deterministic per seed. `Auto` never selects it.
     pub engine: Engine,
     /// Seeded transport/crash faults to inject ([`FaultPlan::none`] by
     /// default). An active plan requires the supervised BSP engine; the
@@ -119,7 +123,7 @@ impl ColoringConfig {
     /// Parse from CLI arguments (`--procs`, `--ordering`, `--selection`,
     /// `--superstep`, `--async`, `--recolor <n>`, `--arc`, `--schedule`,
     /// `--scheme`, `--partitioner`, `--seed`, `--ideal-net`,
-    /// `--stop-eps <f>`, `--engine auto|threads|bsp`,
+    /// `--stop-eps <f>`, `--engine auto|threads|bsp|datapar`,
     /// `--faults <spec>` — see [`FaultPlan::parse`]). Parse-only:
     /// validation happens when the config becomes a [`Job`](super::Job).
     pub fn from_args(a: &Args) -> Result<Self> {
@@ -281,6 +285,8 @@ mod tests {
         assert_eq!(cfg.engine, Engine::Threads);
         let cfg = ColoringConfig::from_args(&parse("--engine bsp")).unwrap();
         assert_eq!(cfg.engine, Engine::Bsp);
+        let cfg = ColoringConfig::from_args(&parse("--engine datapar")).unwrap();
+        assert_eq!(cfg.engine, Engine::DataPar);
         assert!(ColoringConfig::from_args(&parse("--engine warp")).is_err());
     }
 

@@ -112,6 +112,19 @@ fn validate(cfg: &ColoringConfig) -> Result<()> {
         );
         validate_eps(cfg.early_stop)?;
     }
+    if cfg.engine == Engine::DataPar {
+        ensure!(
+            matches!(cfg.recolor, RecolorMode::None),
+            "the datapar engine has no simulated transport — multi-process recolor \
+             schemes (RC/aRC) require threads|bsp; datapar's speculate/resolve loop \
+             already iterates to a conflict-free coloring"
+        );
+        ensure!(
+            !cfg.faults.is_active(),
+            "fault injection assumes the supervised BSP transport, which the datapar \
+             engine does not have — use engine bsp (or auto) for faulted jobs"
+        );
+    }
     if cfg.faults.is_active() {
         ensure!(
             cfg.engine != Engine::Threads,
@@ -211,10 +224,14 @@ impl<'s> JobBuilder<'s> {
         self
     }
 
-    /// Which execution path simulates the processes ([`Engine::Auto`] by
-    /// default: the BSP step engine for every job shape, aRC included).
-    /// Never changes a modeled quantity — only the simulator's wallclock.
-    /// The path that actually ran is recorded on
+    /// Which execution path runs the job ([`Engine::Auto`] by default:
+    /// the BSP step engine for every job shape, aRC included). The
+    /// transport engines (threads|bsp) never change a modeled quantity —
+    /// only the simulator's wallclock. [`Engine::DataPar`] is different in
+    /// kind: it skips the simulated transport (and the partition) and
+    /// produces its own deterministic coloring — no messages, bytes or
+    /// virtual clocks, and no recoloring/fault support (rejected at
+    /// build). The path that actually ran is recorded on
     /// [`RunResult::engine`](super::pipeline::RunResult::engine).
     pub fn engine(mut self, engine: Engine) -> Self {
         self.cfg.engine = engine;
@@ -428,6 +445,42 @@ mod tests {
             );
         }
         assert!(Job::builder().engine(Engine::Bsp).sync_recolor(nd(2)).build().is_ok());
+    }
+
+    #[test]
+    fn datapar_rejects_transport_shaped_jobs() {
+        // plain datapar validates — procs/ordering/selection are fine
+        assert!(Job::builder().engine(Engine::DataPar).build().is_ok());
+        assert!(Job::builder()
+            .engine(Engine::DataPar)
+            .procs(8)
+            .selection(Selection::RandomX(5))
+            .build()
+            .is_ok());
+        // multi-process recolor schemes assume a transport
+        assert!(
+            Job::builder().engine(Engine::DataPar).sync_recolor(nd(1)).build().is_err(),
+            "datapar + sync RC must be rejected"
+        );
+        assert!(
+            Job::builder()
+                .engine(Engine::DataPar)
+                .async_recolor(Permutation::NonDecreasing, 1)
+                .build()
+                .is_err(),
+            "datapar + aRC must be rejected"
+        );
+        // so does fault injection (supervised BSP only); the inert plan is fine
+        let plan = FaultPlan::parse("seed=1,delay=0.1").unwrap();
+        assert!(
+            Job::builder().engine(Engine::DataPar).faults(plan).build().is_err(),
+            "datapar + faults must be rejected"
+        );
+        assert!(Job::builder()
+            .engine(Engine::DataPar)
+            .faults(FaultPlan::none())
+            .build()
+            .is_ok());
     }
 
     #[test]

@@ -17,12 +17,14 @@ use crate::dist::engine::{self, Engine, StepOutcome, StepProcess};
 use crate::dist::framework::{self, FrameworkConfig, FrameworkStep};
 use crate::dist::proc::{build_local_graphs, ColorState, LocalGraph};
 use crate::dist::recolor::{self, AsyncRcStep, RecolorConfig, SyncRcStep};
-use crate::dist::runner::{try_run_distributed_with, ProcResult};
+use crate::dist::runner::{try_run_distributed_with, DistOutcome, ProcResult};
 use crate::dist::{CostModel, DistMetrics, Endpoint, MsgKind, ProcMetrics};
 use crate::err;
 use crate::graph::CsrGraph;
 use crate::partition::{self, PartitionMetrics};
+use crate::shm::{self, DataParMetrics};
 use crate::util::error::Result;
+use crate::util::pool;
 
 /// Everything a run produces.
 #[derive(Debug, Clone)]
@@ -39,19 +41,33 @@ pub struct RunResult {
     pub recolor_trace: Vec<usize>,
     pub config_label: String,
     /// The execution path that actually ran ([`Engine::Auto`] resolved) —
-    /// always [`Engine::Bsp`] or [`Engine::Threads`], never `Auto` — so
-    /// benchmark rows and bug reports are attributable.
+    /// [`Engine::Bsp`], [`Engine::Threads`] or [`Engine::DataPar`], never
+    /// `Auto` — so benchmark rows and bug reports are attributable.
     pub engine: Engine,
+    /// DataPar's own accounting (rounds, speculated/conflicted vertices,
+    /// per-round wall time) — `Some` iff the job ran on
+    /// [`Engine::DataPar`]; the transport engines report through
+    /// [`RunResult::metrics`] instead.
+    pub datapar: Option<DataParMetrics>,
 }
 
 impl RunResult {
-    /// One-line JSON summary (the CLI's `--json` result record).
+    /// One-line JSON summary (the CLI's `--json` result record). DataPar
+    /// runs append a `"datapar"` object with the engine's own counters.
     pub fn summary_json(&self) -> String {
         let trace: Vec<String> = self.recolor_trace.iter().map(|k| k.to_string()).collect();
+        let datapar = match &self.datapar {
+            Some(dp) => format!(
+                ",\"datapar\":{{\"rounds\":{},\"speculated\":{},\"conflicted\":{},\
+                 \"chunks\":{},\"workers\":{},\"wall_secs\":{:e}}}",
+                dp.rounds, dp.speculated, dp.conflicted, dp.chunks, dp.workers, dp.wall_secs,
+            ),
+            None => String::new(),
+        };
         format!(
             "{{\"result\":\"coloring\",\"config\":\"{}\",\"engine\":\"{}\",\"colors\":{},\
              \"initial_colors\":{},\"recolor_trace\":[{}],\"makespan\":{:e},\"messages\":{},\
-             \"bytes\":{},\"conflicts\":{},\"rounds\":{}}}",
+             \"bytes\":{},\"conflicts\":{},\"rounds\":{}{}}}",
             self.config_label,
             self.engine.name(),
             self.num_colors,
@@ -62,6 +78,7 @@ impl RunResult {
             self.metrics.total_bytes,
             self.metrics.total_conflicts,
             self.metrics.rounds,
+            datapar,
         )
     }
 }
@@ -69,11 +86,15 @@ impl RunResult {
 /// Which execution path runs the distributed section of a job. Every job
 /// shape — framework, sync RC and aRC alike — is bulk-synchronous, so
 /// `Auto` always resolves to the step engine; only an explicit
-/// [`Engine::Threads`] picks the thread-per-process reference oracle.
+/// [`Engine::Threads`] picks the thread-per-process reference oracle, and
+/// only an explicit [`Engine::DataPar`] takes the shared-memory
+/// speculative path (it is a different algorithm, not a faster simulation
+/// of the same one, so `Auto` never routes there).
 fn resolve_engine(engine: Engine) -> Engine {
     match engine {
         Engine::Threads => Engine::Threads,
         Engine::Auto | Engine::Bsp => Engine::Bsp,
+        Engine::DataPar => Engine::DataPar,
     }
 }
 
@@ -119,6 +140,10 @@ pub(crate) fn execute(
     let early_stop = cfg.early_stop;
     let cost = *cost;
     let engine_used = resolve_engine(cfg.engine);
+
+    if engine_used == Engine::DataPar {
+        return execute_datapar(g, part_metrics, cfg, obs);
+    }
 
     if engine_used == Engine::Bsp {
         let rc_plan = match &recolor_mode {
@@ -238,6 +263,49 @@ pub(crate) fn execute(
     finalize(g, part_metrics, cfg, outcome, engine_used, obs)
 }
 
+/// The [`Engine::DataPar`] path: no transport, no partition, no cost
+/// model — the shared-memory speculate/detect/resolve core runs over the
+/// raw graph on the global worker pool, with each detection sweep
+/// surfaced as [`Event::ConflictRound`]. The outcome is wrapped as a
+/// single-proc [`DistOutcome`] (wall time standing in for the virtual
+/// clock; zero messages/bytes) so [`finalize`] and the [`RunResult`]
+/// surface stay uniform across engines.
+fn execute_datapar(
+    g: &CsrGraph,
+    part_metrics: &PartitionMetrics,
+    cfg: &ColoringConfig,
+    obs: Option<&dyn Observer>,
+) -> Result<RunResult> {
+    let dp_cfg = shm::DataParConfig {
+        ordering: cfg.ordering,
+        selection: cfg.selection,
+        seed: cfg.seed,
+        ..shm::DataParConfig::default()
+    };
+    let (coloring, dp) =
+        shm::datapar::color_graph_with(pool::global(), g, &dp_cfg, &mut |round, conflicts| {
+            if let Some(o) = obs {
+                o.on_event(&Event::ConflictRound { round, conflicts });
+            }
+        })?;
+    let num_colors = coloring.num_colors();
+    let per_proc = vec![ProcMetrics {
+        conflicts: dp.conflicted,
+        rounds: dp.rounds,
+        recolor_trace: vec![num_colors],
+        vtime: dp.wall_secs,
+        ..ProcMetrics::default()
+    }];
+    let outcome = DistOutcome {
+        coloring,
+        metrics: DistMetrics::aggregate(&per_proc, dp.wall_secs),
+        per_proc,
+    };
+    let mut res = finalize(g, part_metrics, cfg, outcome, Engine::DataPar, obs)?;
+    res.datapar = Some(dp);
+    Ok(res)
+}
+
 /// The engine-independent tail of a run: validate, take the trace, emit
 /// the closing events, assemble the [`RunResult`].
 fn finalize(
@@ -263,16 +331,24 @@ fn finalize(
             outcome.metrics.dropped_by_rank
         ));
     }
-    if let Err(e) = outcome.coloring.validate(g) {
-        if cfg.faults.is_active() {
-            // graceful degradation: injected faults left conflicts — run
-            // the localized repair pass before giving up
-            repair_coloring(g, &mut outcome.coloring, cfg.seed, obs)?;
-            outcome.coloring.validate(g).map_err(|e| {
-                err!("invalid coloring from {} after repair: {e}", cfg.label())
-            })?;
-        } else {
-            return Err(err!("invalid coloring from {}: {e}", cfg.label()));
+    // post-job validation fast path: the pool-parallel conflict count
+    // covers the common (valid) case; the serial `validate` — which names
+    // the offending edge in its typed error — only runs when it fails
+    let fast_valid = outcome.coloring.len() == g.num_vertices()
+        && outcome.coloring.is_complete()
+        && outcome.coloring.count_conflicts(g) == 0;
+    if !fast_valid {
+        if let Err(e) = outcome.coloring.validate(g) {
+            if cfg.faults.is_active() {
+                // graceful degradation: injected faults left conflicts —
+                // run the localized repair pass before giving up
+                repair_coloring(g, &mut outcome.coloring, cfg.seed, obs)?;
+                outcome.coloring.validate(g).map_err(|e| {
+                    err!("invalid coloring from {} after repair: {e}", cfg.label())
+                })?;
+            } else {
+                return Err(err!("invalid coloring from {}: {e}", cfg.label()));
+            }
         }
     }
 
@@ -301,6 +377,7 @@ fn finalize(
         partition_metrics: part_metrics.clone(),
         config_label: cfg.label(),
         engine: engine_used,
+        datapar: None,
     })
 }
 
@@ -587,11 +664,25 @@ impl StepProcess for JobMachine<'_> {
 )]
 pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
     let job = Job::from_config(*cfg)?;
+    if cfg.engine == Engine::DataPar {
+        // no transport, no partition: the datapar path only needs the graph
+        return execute(g, &datapar_partition_metrics(), &[], &CostModel::fixed(), &job, None);
+    }
     let part = partition::partition(g, cfg.partitioner, cfg.num_procs, cfg.seed);
     let part_metrics = partition::metrics(g, &part);
     let (_, locals) = build_local_graphs(g, &part);
     let cost = cfg.cost_model();
     execute(g, &part_metrics, &locals, &cost, &job, None)
+}
+
+/// The synthetic (empty) partition record a DataPar run carries —
+/// there is one address space, so no cut, no boundary, perfect balance.
+pub(crate) fn datapar_partition_metrics() -> PartitionMetrics {
+    PartitionMetrics {
+        edge_cut: 0,
+        boundary_vertices: 0,
+        imbalance: 1.0,
+    }
 }
 
 #[cfg(test)]
@@ -756,6 +847,55 @@ mod tests {
             .unwrap();
         assert_eq!(t.engine, Engine::Threads);
         assert_eq!(b.coloring.colors, t.coloring.colors);
+    }
+
+    #[test]
+    fn datapar_engine_end_to_end() {
+        use crate::coordinator::EventLog;
+        use crate::dist::Engine;
+        let s = session(synth::fem_like(2000, 10.0, 26, 0.01, 4, "dp"));
+        let log = EventLog::new();
+        let r = Job::on(&s)
+            .engine(Engine::DataPar)
+            .selection(Selection::RandomX(5))
+            .run_observed(&log)
+            .unwrap();
+        r.coloring.validate(s.graph()).unwrap();
+        assert_eq!(r.engine, Engine::DataPar);
+        let dp = r.datapar.as_ref().expect("datapar metrics must be recorded");
+        assert!(dp.rounds >= 1);
+        assert_eq!(dp.per_round.len() as u32, dp.rounds);
+        assert_eq!(dp.speculated, 2000 + dp.conflicted, "round 1 is n, the rest losers");
+        assert_eq!(r.metrics.rounds, dp.rounds);
+        assert_eq!(r.metrics.total_conflicts, dp.conflicted);
+        assert_eq!(r.metrics.total_msgs, 0, "no transport, no messages");
+        assert_eq!(r.recolor_trace, vec![r.num_colors], "no recoloring: trace is one entry");
+        assert_eq!(r.initial_colors, r.num_colors);
+        // events: normal phase stream, one ConflictRound per datapar round
+        let events = log.take();
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, Event::PhaseStarted { phase: Phase::InitialColoring })));
+        let rounds_seen = events
+            .iter()
+            .filter(|e| matches!(e, Event::ConflictRound { .. }))
+            .count() as u32;
+        assert_eq!(rounds_seen, dp.rounds);
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, Event::Done { result: Ok(k) } if *k == r.num_colors)));
+        // deterministic: a re-run through the same session is bit-identical
+        let r2 = Job::on(&s)
+            .engine(Engine::DataPar)
+            .selection(Selection::RandomX(5))
+            .run()
+            .unwrap();
+        assert_eq!(r.coloring.colors, r2.coloring.colors);
+        // and the summary names both the engine and the datapar block
+        let j = r.summary_json();
+        assert!(j.contains("\"engine\":\"datapar\""), "{j}");
+        assert!(j.contains("\"datapar\":{\"rounds\":"), "{j}");
+        assert!(j.ends_with('}'));
     }
 
     #[test]

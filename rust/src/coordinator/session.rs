@@ -38,6 +38,7 @@ use super::job::Job;
 use super::pipeline::{self, RunResult};
 use crate::dist::cost::CostModel;
 use crate::dist::proc::{build_local_graphs_parallel, GlobalMap, LocalGraph};
+use crate::dist::Engine;
 use crate::graph::CsrGraph;
 use crate::partition::{self, Partition, PartitionMetrics, Partitioner};
 use crate::util::error::Result;
@@ -254,15 +255,23 @@ impl Session {
 
     fn run_inner(&self, job: &Job, obs: Option<&dyn Observer>) -> Result<RunResult> {
         let cfg = job.config();
-        if let Some(o) = obs {
-            o.on_event(&Event::PhaseStarted {
-                phase: Phase::Partition,
-            });
-        }
-        let part = self.partition(cfg.partitioner, cfg.num_procs, cfg.seed);
-        let cost = cfg.fixed_cost.unwrap_or_else(|| self.cost_model());
-        let arts = part.locals(&self.graph);
-        let res = pipeline::execute(&self.graph, &part.metrics, &arts.locals, &cost, job, obs);
+        let res = if cfg.engine == Engine::DataPar {
+            // the shared-memory engine has no transport: skip the
+            // partition phase (and its cache) and the cost model entirely —
+            // a DataPar job must not trigger host calibration
+            let part_metrics = pipeline::datapar_partition_metrics();
+            pipeline::execute(&self.graph, &part_metrics, &[], &CostModel::fixed(), job, obs)
+        } else {
+            if let Some(o) = obs {
+                o.on_event(&Event::PhaseStarted {
+                    phase: Phase::Partition,
+                });
+            }
+            let part = self.partition(cfg.partitioner, cfg.num_procs, cfg.seed);
+            let cost = cfg.fixed_cost.unwrap_or_else(|| self.cost_model());
+            let arts = part.locals(&self.graph);
+            pipeline::execute(&self.graph, &part.metrics, &arts.locals, &cost, job, obs)
+        };
         if let (Some(o), Err(e)) = (obs, &res) {
             // A failed job still terminates its event stream: observers
             // watching for `Done` never hang on an error path.
@@ -352,6 +361,29 @@ mod tests {
     fn pinned_cost_model_is_returned_verbatim() {
         let s = Session::new(synth::grid2d(4, 4)).with_cost_model(CostModel::fixed());
         assert_eq!(s.cost_model(), CostModel::fixed());
+    }
+
+    #[test]
+    fn datapar_jobs_skip_partitioning_and_calibration() {
+        use crate::coordinator::EventLog;
+        // no pinned cost model: a DataPar run must not trigger calibration
+        let s = Session::new(synth::grid2d(20, 20));
+        let log = EventLog::new();
+        let job = Job::on(&s).engine(Engine::DataPar).build().unwrap();
+        let r = s.run_observed(&job, &log).unwrap();
+        r.coloring.validate(s.graph()).unwrap();
+        assert_eq!(s.partition_calls(), 0, "datapar must not partition");
+        assert_eq!(s.cached_partitions(), 0);
+        assert_eq!(r.partition_metrics.edge_cut, 0);
+        assert!(
+            !log.take().iter().any(|e| matches!(
+                e,
+                Event::PhaseStarted {
+                    phase: Phase::Partition
+                }
+            )),
+            "no partition phase for datapar"
+        );
     }
 
     #[test]

@@ -132,7 +132,9 @@ pub fn pareto(points: &[SweepPoint]) -> Vec<SweepPoint> {
             front.push(p.clone());
         }
     }
-    front.sort_by(|a, b| a.norm_time.partial_cmp(&b.norm_time).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): a degenerate baseline (zero
+    // time) yields NaN norm_time, which must sort (last) instead of panic.
+    front.sort_by(|a, b| a.norm_time.total_cmp(&b.norm_time));
     front
 }
 
@@ -208,5 +210,24 @@ mod tests {
         let pts = vec![mk(1.0, 1.0), mk(0.8, 2.0), mk(1.2, 1.5), mk(0.9, 0.9)];
         let front = pareto(&pts);
         assert_eq!(front.len(), 2); // (0.9,0.9) and (0.8,2.0)
+    }
+
+    #[test]
+    fn pareto_survives_nan_from_degenerate_baseline() {
+        // A zero-time baseline normalizes to NaN norm_time; the old
+        // partial_cmp(..).unwrap() sort panicked here. NaN compares false
+        // against everything, so such a point is never dominated — it must
+        // come back (sorted last under total_cmp), not take the sweep down.
+        let mk = |c: f64, t: f64| SweepPoint {
+            label: String::new(),
+            norm_colors: c,
+            norm_time: t,
+            recolor_iters: 0,
+        };
+        let pts = vec![mk(1.0, f64::NAN), mk(0.9, 0.9), mk(0.8, 2.0)];
+        let front = pareto(&pts);
+        assert_eq!(front.len(), 3);
+        assert!(front.last().unwrap().norm_time.is_nan(), "NaN sorts last");
+        assert!(front[..2].windows(2).all(|w| w[0].norm_time <= w[1].norm_time));
     }
 }

@@ -100,16 +100,23 @@ pub enum Engine {
     Threads,
     /// The BSP step engine, explicitly.
     Bsp,
+    /// The shared-memory data-parallel speculative engine
+    /// (`shm::datapar`): no simulated transport, no partition — chunked
+    /// speculate/detect/resolve over the worker pool. The raw-speed path;
+    /// its colorings differ from the transport engines' but are
+    /// deterministic and worker-count independent.
+    DataPar,
 }
 
 impl Engine {
-    /// The CLI/JSON spelling ("auto" | "threads" | "bsp") — also what
-    /// [`FromStr`](std::str::FromStr) parses back.
+    /// The CLI/JSON spelling ("auto" | "threads" | "bsp" | "datapar") —
+    /// also what [`FromStr`](std::str::FromStr) parses back.
     pub fn name(self) -> &'static str {
         match self {
             Engine::Auto => "auto",
             Engine::Threads => "threads",
             Engine::Bsp => "bsp",
+            Engine::DataPar => "datapar",
         }
     }
 }
@@ -121,7 +128,8 @@ impl std::str::FromStr for Engine {
             "auto" => Ok(Engine::Auto),
             "threads" | "thread" => Ok(Engine::Threads),
             "bsp" | "steps" | "engine" => Ok(Engine::Bsp),
-            other => Err(format!("unknown engine {other:?} (auto|threads|bsp)")),
+            "datapar" | "dp" => Ok(Engine::DataPar),
+            other => Err(format!("unknown engine {other:?} (auto|threads|bsp|datapar)")),
         }
     }
 }
@@ -655,6 +663,9 @@ mod tests {
         assert_eq!("auto".parse::<Engine>().unwrap(), Engine::Auto);
         assert_eq!("threads".parse::<Engine>().unwrap(), Engine::Threads);
         assert_eq!("bsp".parse::<Engine>().unwrap(), Engine::Bsp);
+        assert_eq!("datapar".parse::<Engine>().unwrap(), Engine::DataPar);
+        assert_eq!("dp".parse::<Engine>().unwrap(), Engine::DataPar);
+        assert_eq!(Engine::DataPar.name(), "datapar");
         assert!("x".parse::<Engine>().is_err());
         assert_eq!(Engine::default(), Engine::Auto);
     }

@@ -19,6 +19,11 @@
 //!   virtual clocks, the Bozdağ superstep framework (sync/async) with
 //!   conflict-resolution rounds, distributed synchronous recoloring with the
 //!   paper's piggybacked communication scheme, and asynchronous recoloring.
+//! * [`shm`] — the shared-memory execution layer: the data-parallel
+//!   speculative engine (`Engine::DataPar`) that skips the simulated
+//!   transport entirely and colors flat arrays over the worker pool with
+//!   a speculate/detect/resolve loop — the raw-speed path for graphs that
+//!   fit one address space.
 //! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO artifacts
 //!   produced by `python/compile/aot.py` and exposes batched kernel-backed
 //!   color selection to the coordinator.
@@ -40,4 +45,5 @@ pub mod dist;
 pub mod graph;
 pub mod partition;
 pub mod runtime;
+pub mod shm;
 pub mod util;

@@ -100,7 +100,7 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
              \u{20}                    [--superstep N] [--async] [--recolor N] [--arc]\n\
              \u{20}                    [--schedule nd|ni|rv|rand|ND-RAND%x] [--scheme base|piggyback]\n\
              \u{20}                    [--stop-eps F] [--partitioner block|bfs] [--seed S]\n\
-             \u{20}                    [--ideal-net] [--engine auto|threads|bsp] [--json]\n\
+             \u{20}                    [--ideal-net] [--engine auto|threads|bsp|datapar] [--json]\n\
              \u{20}                    [--faults seed=S[,delay=P][,reorder=P][,crash=R@S[+D]]]\n\
              \n\
              Distributed coloring with optional iterative recoloring.\n\
@@ -110,13 +110,19 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
              \u{20}             one OS thread per simulated process; every job shape\n\
              \u{20}             (no recoloring, RC and aRC) runs on either engine\n\
              \u{20}             with bit-for-bit identical results, only wallclock\n\
-             \u{20}             differs; the effective engine is reported in --json\n\
+             \u{20}             differs; the effective engine is reported in --json.\n\
+             \u{20}             datapar instead runs a shared-memory speculative\n\
+             \u{20}             coloring loop (no simulated transport): colorings\n\
+             \u{20}             differ from the transport engines' but stay\n\
+             \u{20}             deterministic per seed regardless of worker count;\n\
+             \u{20}             it rejects --recolor/--arc and --faults, and auto\n\
+             \u{20}             never selects it\n\
              --faults SPEC inject seeded transport faults (message delay and\n\
              \u{20}             reorder probabilities, one crash-stop of rank R at\n\
              \u{20}             step S for D steps) on the supervised bsp engine;\n\
              \u{20}             works with every recoloring mode (aRC included) but\n\
-             \u{20}             not with --engine threads; conflicts left by faults\n\
-             \u{20}             are repaired after Done\n\
+             \u{20}             not with --engine threads or datapar; conflicts left\n\
+             \u{20}             by faults are repaired after Done\n\
              --json        stream one JSON event per phase/superstep/iteration\n\
              \u{20}             (plus a final result record) instead of the table",
         ),
@@ -143,7 +149,7 @@ fn print_help() {
          color options: --procs P --ordering nat|lf|sl|if|bf --selection ff|sff|lu|r<X>\n\
          \u{20}              --superstep N --async --recolor N --schedule nd|ni|rv|rand|ND-RAND%x\n\
          \u{20}              --scheme base|piggyback --arc --partitioner block|bfs --seed S\n\
-         \u{20}              --stop-eps F (early-stop recoloring) --engine auto|threads|bsp\n\
+         \u{20}              --stop-eps F (early-stop recoloring) --engine auto|threads|bsp|datapar\n\
          \u{20}              --faults SPEC (seeded fault injection) --json (stream events)"
     );
 }
@@ -343,6 +349,12 @@ fn cmd_color(args: &Args) -> Result<()> {
     tab.row(&["rounds", &r.metrics.rounds.to_string()]);
     tab.row(&["edge cut", &r.partition_metrics.edge_cut.to_string()]);
     tab.row(&["sim wallclock", &fmt_secs(r.metrics.wall_secs)]);
+    if let Some(dp) = &r.datapar {
+        tab.row(&["datapar speculated", &dp.speculated.to_string()]);
+        tab.row(&["datapar conflicted", &dp.conflicted.to_string()]);
+        tab.row(&["datapar chunks", &dp.chunks.to_string()]);
+        tab.row(&["datapar workers", &dp.workers.to_string()]);
+    }
     tab.print();
     Ok(())
 }
@@ -407,8 +419,11 @@ mod tests {
         assert!(u.contains("--json"));
         assert!(u.contains("--faults"));
         assert!(u.contains("crash=R@S"));
-        // the validation matrix: aRC runs everywhere, faults exclude threads
+        // the validation matrix: aRC runs on both transport engines,
+        // faults exclude threads and datapar, datapar rejects recoloring
         assert!(u.contains("aRC included"));
-        assert!(u.contains("not with --engine threads"));
+        assert!(u.contains("not with --engine threads or datapar"));
+        assert!(u.contains("--engine auto|threads|bsp|datapar"));
+        assert!(u.contains("rejects --recolor/--arc and --faults"));
     }
 }

@@ -1,0 +1,455 @@
+//! Data-parallel speculative coloring (`Engine::DataPar`).
+//!
+//! The algorithm is the classic optimistic three-step loop over flat
+//! arrays (Gebremedhin-Manne speculation as refined by Rokos et al. and
+//! Taş et al.), with the paper's iterated-recoloring structure as the
+//! resolve loop:
+//!
+//! 1. **Speculate** — the active vertices (initially all of them) are
+//!    colored in parallel. The vertex range `0..n` is cut into a fixed
+//!    grid of chunks; workers claim chunks round-robin and color each
+//!    chunk's active vertices sequentially with the ordinary
+//!    ordering/selection machinery ([`compute_order`] + [`SelectState`]
+//!    with its epoch-stamped `ColorMarker` palette scan). Within a chunk,
+//!    reads see live writes (the chunk is exclusive to one worker); across
+//!    chunks, reads see a frozen snapshot of the previous round — so no
+//!    write is ever observed racily.
+//! 2. **Detect** — a parallel sweep over the active vertices finds
+//!    defectively-colored ones: `v` is a *loser* iff some neighbor carries
+//!    the same color and `v` loses the seeded priority tie-break
+//!    ([`loses`]). Exactly one endpoint of every conflicting edge keeps
+//!    its color.
+//! 3. **Resolve** — only the losers re-enter the next round; iterate
+//!    until no conflicts remain.
+//!
+//! # Determinism, independent of worker count
+//!
+//! The chunk grid is fixed by `n` and [`DataParConfig::chunk_size`] —
+//! never by the number of workers. Each chunk's round output is a pure
+//! function of (graph, config, round, chunk, previous-round snapshot): the
+//! per-chunk RNG and [`SelectState`] are re-seeded from
+//! `mix64(seed, round ‖ chunk)` every round, and cross-chunk reads go
+//! through the snapshot. Which *worker* happens to process a chunk
+//! therefore cannot affect any color, so a pinned fixture holds across
+//! machines and `--threads 1` equals `--threads 8` bit-for-bit.
+//!
+//! # Termination
+//!
+//! Fixed (non-active) neighbors can never conflict with a speculated
+//! vertex: same-chunk fixed colors are read live and forbidden, and
+//! cross-chunk fixed colors equal their snapshot value (the invariant
+//! restored after every round), so they were forbidden too. Conflicts are
+//! thus always between two active vertices — and the active vertex with
+//! the globally maximal seeded priority never loses, so the active set
+//! shrinks strictly every round and the loop terminates in at most `n`
+//! rounds (in practice a handful; round 1 colors everything and later
+//! rounds only touch chunk-boundary losers).
+
+use std::sync::Mutex;
+
+use crate::color::order::compute_order;
+use crate::color::select::SelectState;
+use crate::color::{Color, Coloring, Ordering, Selection, UNCOLORED};
+use crate::dist::framework::loses;
+use crate::graph::{CsrGraph, VertexId};
+use crate::util::error::Result;
+use crate::util::pool::{self, WorkerPool};
+use crate::util::rng::mix64;
+use crate::util::timer::Timer;
+use crate::util::Rng;
+
+/// Default chunk width in vertices. Small enough to load-balance irregular
+/// degree distributions over the pool, large enough to amortize the
+/// per-chunk ordering/selection setup.
+pub const DEFAULT_CHUNK_SIZE: usize = 4096;
+
+/// Configuration for a data-parallel speculative coloring run.
+#[derive(Debug, Clone)]
+pub struct DataParConfig {
+    /// Vertex-visit order *within a chunk*. Partition-aware orders
+    /// (Internal/Boundary-first) have no partition here and degrade to
+    /// natural order.
+    pub ordering: Ordering,
+    /// Color-selection strategy (per-chunk [`SelectState`], re-seeded each
+    /// round, so every strategy — including RandomX — stays deterministic).
+    pub selection: Selection,
+    /// Seeds the chunk RNGs and the conflict tie-break priorities.
+    pub seed: u64,
+    /// Chunk width in vertices; part of the deterministic result (the
+    /// chunk grid is fixed by `n` and this, never by worker count).
+    pub chunk_size: usize,
+    /// Defensive cap on resolve rounds; `0` means unlimited (the
+    /// strict-shrink invariant already bounds rounds by `n`).
+    pub max_rounds: u32,
+}
+
+impl Default for DataParConfig {
+    fn default() -> Self {
+        DataParConfig {
+            ordering: Ordering::Natural,
+            selection: Selection::FirstFit,
+            seed: 1,
+            chunk_size: DEFAULT_CHUNK_SIZE,
+            max_rounds: 0,
+        }
+    }
+}
+
+/// Per-round accounting for [`DataParMetrics`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DataParRound {
+    /// Vertices speculatively (re)colored this round.
+    pub speculated: u64,
+    /// Vertices found defectively colored (they re-enter the next round).
+    pub conflicted: u64,
+    /// Wall-clock seconds for the round (speculate + detect).
+    pub secs: f64,
+}
+
+/// What a DataPar run measures — the shared-memory analogue of
+/// `DistMetrics` (there is no transport, so no messages/bytes/clocks:
+/// rounds and vertex counts are the whole story).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DataParMetrics {
+    /// Resolve rounds until conflict-free (round 1 colors everything).
+    pub rounds: u32,
+    /// Total speculative colorings across all rounds (first round
+    /// contributes `n`; the rest is re-coloring work).
+    pub speculated: u64,
+    /// Total defectively-colored vertices detected across all rounds.
+    pub conflicted: u64,
+    /// Per-round breakdown, `per_round.len() == rounds`.
+    pub per_round: Vec<DataParRound>,
+    /// End-to-end wall-clock seconds.
+    pub wall_secs: f64,
+    /// Pool workers the run fanned out over (never affects the colors).
+    pub workers: usize,
+    /// Chunks in the fixed grid, `ceil(n / chunk_size)`.
+    pub chunks: usize,
+}
+
+/// Color `g` on the process-wide worker pool. See [`color_graph_on`].
+pub fn color_graph(g: &CsrGraph, cfg: &DataParConfig) -> Result<(Coloring, DataParMetrics)> {
+    color_graph_on(pool::global(), g, cfg)
+}
+
+/// Color `g` on an explicit pool (tests pin worker counts this way).
+/// The coloring is bit-for-bit identical for every pool size.
+pub fn color_graph_on(
+    pool: &WorkerPool,
+    g: &CsrGraph,
+    cfg: &DataParConfig,
+) -> Result<(Coloring, DataParMetrics)> {
+    color_graph_with(pool, g, cfg, &mut |_, _| {})
+}
+
+/// [`color_graph_on`] with a per-round observer: `on_round(round,
+/// conflicts)` fires after each detection sweep (the pipeline forwards it
+/// as `Event::ConflictRound`).
+///
+/// Must not be called from inside a pool shard closure (it runs
+/// `scoped_run` itself — see `util::pool`).
+pub fn color_graph_with(
+    pool: &WorkerPool,
+    g: &CsrGraph,
+    cfg: &DataParConfig,
+    on_round: &mut dyn FnMut(u32, u64),
+) -> Result<(Coloring, DataParMetrics)> {
+    let n = g.num_vertices();
+    let cs = cfg.chunk_size.max(1);
+    let nchunks = n.div_ceil(cs);
+    let mut metrics = DataParMetrics {
+        workers: pool.workers(),
+        chunks: nchunks,
+        ..DataParMetrics::default()
+    };
+    if n == 0 {
+        return Ok((Coloring::uncolored(0), metrics));
+    }
+    let wall = Timer::start();
+    let shards = pool.workers().min(nchunks).max(1);
+    let estimate = (g.max_degree() + 1) as u32;
+
+    let mut colors: Vec<Color> = vec![UNCOLORED; n];
+    // Frozen previous-round snapshot for cross-chunk reads. Invariant at
+    // the top of every round: `prev[v] == colors[v]` for every vertex not
+    // in the active set (restored after each round).
+    let mut prev: Vec<Color> = vec![UNCOLORED; n];
+    // Active vertices per chunk, ascending; chunk c owns [c*cs, (c+1)*cs).
+    let mut active: Vec<Vec<VertexId>> = (0..nchunks)
+        .map(|c| {
+            let lo = c * cs;
+            let hi = ((c + 1) * cs).min(n);
+            (lo as VertexId..hi as VertexId).collect()
+        })
+        .collect();
+    let mut active_count = n as u64;
+
+    let mut round: u32 = 0;
+    loop {
+        round += 1;
+        if cfg.max_rounds > 0 && round > cfg.max_rounds {
+            crate::bail!(
+                "datapar did not converge within {} rounds ({} vertices still conflicted)",
+                cfg.max_rounds,
+                active_count
+            );
+        }
+        let rt = Timer::start();
+
+        // --- speculate: color every active vertex ---
+        {
+            // Exclusive per-chunk windows into the live color array. Each
+            // chunk's mutex is locked once, by the one worker that owns the
+            // chunk this round — the locks are never contended, they only
+            // make the disjoint &mut windows safe to hand across threads.
+            let slices: Vec<Mutex<&mut [Color]>> = colors.chunks_mut(cs).map(Mutex::new).collect();
+            let prev_ref = &prev;
+            let active_ref = &active;
+            pool.scoped_run(shards, &|shard| {
+                let mut c = shard;
+                while c < nchunks {
+                    let verts = &active_ref[c];
+                    if !verts.is_empty() {
+                        let base = c * cs;
+                        // Pure function of (seed, round, chunk): worker
+                        // assignment cannot influence the outcome.
+                        let chunk_seed = mix64(cfg.seed, ((round as u64) << 32) ^ c as u64);
+                        let mut rng = Rng::new(chunk_seed);
+                        let order = compute_order(g, verts, cfg.ordering, |_| false, &mut rng);
+                        let mut st = SelectState::new(cfg.selection, estimate, chunk_seed);
+                        let mut slice = slices[c].lock().unwrap();
+                        for &v in &order {
+                            st.begin_vertex();
+                            for &u in g.neighbors(v) {
+                                let cu = if u as usize / cs == c {
+                                    slice[u as usize - base] // same chunk: live
+                                } else {
+                                    prev_ref[u as usize] // other chunk: snapshot
+                                };
+                                if cu != UNCOLORED {
+                                    st.forbid(cu);
+                                }
+                            }
+                            slice[v as usize - base] = st.pick();
+                        }
+                    }
+                    c += shards;
+                }
+            });
+        }
+
+        // --- detect: find the losers of every conflicting edge ---
+        let loser_slots: Vec<Mutex<Vec<VertexId>>> =
+            (0..nchunks).map(|_| Mutex::new(Vec::new())).collect();
+        {
+            let colors_ref = &colors;
+            let active_ref = &active;
+            pool.scoped_run(shards, &|shard| {
+                let mut c = shard;
+                while c < nchunks {
+                    let verts = &active_ref[c];
+                    if !verts.is_empty() {
+                        let mut lost: Vec<VertexId> = Vec::new();
+                        for &v in verts {
+                            let cv = colors_ref[v as usize];
+                            if g.neighbors(v).iter().any(|&u| {
+                                colors_ref[u as usize] == cv && loses(v, u, cfg.seed)
+                            }) {
+                                lost.push(v);
+                            }
+                        }
+                        if !lost.is_empty() {
+                            *loser_slots[c].lock().unwrap() = lost;
+                        }
+                    }
+                    c += shards;
+                }
+            });
+        }
+
+        // --- resolve: losers (in deterministic chunk order) re-enter ---
+        let mut conflicted = 0u64;
+        let mut next_active: Vec<Vec<VertexId>> = Vec::with_capacity(nchunks);
+        for slot in loser_slots {
+            let lost = slot.into_inner().unwrap();
+            conflicted += lost.len() as u64;
+            next_active.push(lost);
+        }
+
+        metrics.per_round.push(DataParRound {
+            speculated: active_count,
+            conflicted,
+            secs: rt.secs(),
+        });
+        metrics.speculated += active_count;
+        metrics.conflicted += conflicted;
+        on_round(round, conflicted);
+
+        if conflicted == 0 {
+            break;
+        }
+        crate::ensure!(
+            conflicted < active_count,
+            "datapar made no progress in round {round}: {conflicted} of {active_count} \
+             active vertices conflicted (speculation invariant violated)"
+        );
+
+        // Restore the snapshot invariant for everything this round touched
+        // (losers included — their stale snapshot value only over-forbids).
+        for verts in &active {
+            for &v in verts {
+                prev[v as usize] = colors[v as usize];
+            }
+        }
+        active = next_active;
+        active_count = conflicted;
+    }
+
+    metrics.rounds = round;
+    metrics.wall_secs = wall.secs();
+    Ok((Coloring::from_vec(colors), metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+
+    fn small_cfg(seed: u64, chunk_size: usize) -> DataParConfig {
+        DataParConfig {
+            seed,
+            chunk_size,
+            ..DataParConfig::default()
+        }
+    }
+
+    #[test]
+    fn colors_a_path_validly() {
+        let g = synth::path(64);
+        let (c, m) = color_graph(&g, &DataParConfig::default()).unwrap();
+        c.validate(&g).unwrap();
+        assert!(m.rounds >= 1);
+        assert_eq!(m.per_round.len() as u32, m.rounds);
+        assert_eq!(m.per_round[0].speculated, 64);
+    }
+
+    #[test]
+    fn empty_graph_is_a_noop() {
+        let g = synth::path(0);
+        let (c, m) = color_graph(&g, &DataParConfig::default()).unwrap();
+        assert!(c.is_empty());
+        assert_eq!(m.rounds, 0);
+        assert_eq!(m.chunks, 0);
+    }
+
+    #[test]
+    fn cross_chunk_conflicts_resolve_via_priority() {
+        // chunk_size 1 puts the path(2) endpoints in different chunks: round
+        // 1 speculates both to color 0 (the snapshot is all-UNCOLORED), the
+        // detect sweep picks exactly one loser, round 2 recolors it.
+        let g = synth::path(2);
+        let (c, m) = color_graph(&g, &small_cfg(7, 1)).unwrap();
+        c.validate(&g).unwrap();
+        assert_eq!(m.rounds, 2);
+        assert_eq!(m.per_round[0].conflicted, 1);
+        assert_eq!(m.speculated, 3); // 2 + the single loser
+        let mut sorted = c.colors.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1]);
+    }
+
+    #[test]
+    fn max_rounds_cap_is_a_typed_error() {
+        let g = synth::path(2);
+        let cfg = DataParConfig {
+            max_rounds: 1,
+            ..small_cfg(7, 1)
+        };
+        let err = color_graph(&g, &cfg).unwrap_err();
+        assert!(err.to_string().contains("did not converge"), "{err}");
+    }
+
+    #[test]
+    fn identical_across_worker_counts() {
+        // Small chunks force many cross-chunk edges (the racy part); the
+        // colors and the full per-round conflict trace must not depend on
+        // how many workers the chunks landed on.
+        let g = synth::fem_like(1500, 8.0, 24, 0.05, 3, "dp-det");
+        let cfg = small_cfg(42, 64);
+        let (c1, m1) = color_graph_on(&WorkerPool::new(1), &g, &cfg).unwrap();
+        c1.validate(&g).unwrap();
+        for workers in [2, 8] {
+            let (cw, mw) = color_graph_on(&WorkerPool::new(workers), &g, &cfg).unwrap();
+            assert_eq!(c1.colors, cw.colors, "colors diverged at {workers} workers");
+            assert_eq!(m1.rounds, mw.rounds);
+            assert_eq!(
+                m1.per_round
+                    .iter()
+                    .map(|r| (r.speculated, r.conflicted))
+                    .collect::<Vec<_>>(),
+                mw.per_round
+                    .iter()
+                    .map(|r| (r.speculated, r.conflicted))
+                    .collect::<Vec<_>>(),
+                "round trace diverged at {workers} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn every_strategy_and_ordering_is_deterministic_and_valid() {
+        let g = synth::erdos_renyi(800, 4800, 11);
+        for selection in [
+            Selection::FirstFit,
+            Selection::StaggeredFirstFit,
+            Selection::LeastUsed,
+            Selection::RandomX(3),
+        ] {
+            for ordering in [Ordering::Natural, Ordering::LargestFirst, Ordering::Random] {
+                let cfg = DataParConfig {
+                    ordering,
+                    selection,
+                    ..small_cfg(9, 128)
+                };
+                let (c1, _) = color_graph_on(&WorkerPool::new(1), &g, &cfg).unwrap();
+                let (c4, _) = color_graph_on(&WorkerPool::new(4), &g, &cfg).unwrap();
+                c1.validate(&g).unwrap();
+                assert_eq!(
+                    c1.colors, c4.colors,
+                    "{selection:?}/{ordering:?} not worker-count independent"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn first_fit_stays_within_max_degree_plus_one() {
+        let g = synth::erdos_renyi(500, 3000, 5);
+        let (c, _) = color_graph(&g, &small_cfg(13, 32)).unwrap();
+        c.validate(&g).unwrap();
+        assert!(
+            c.num_colors() <= g.max_degree() + 1,
+            "{} colors > Δ+1 = {}",
+            c.num_colors(),
+            g.max_degree() + 1
+        );
+    }
+
+    #[test]
+    fn observer_sees_every_round() {
+        let g = synth::fem_like(600, 8.0, 20, 0.05, 1, "dp-obs");
+        let mut trace: Vec<(u32, u64)> = Vec::new();
+        let cfg = small_cfg(21, 64);
+        let (_, m) = color_graph_with(pool::global(), &g, &cfg, &mut |r, k| {
+            trace.push((r, k));
+        })
+        .unwrap();
+        assert_eq!(trace.len() as u32, m.rounds);
+        assert_eq!(trace.last().unwrap().1, 0, "last round must be clean");
+        for (i, (r, k)) in trace.iter().enumerate() {
+            assert_eq!(*r, i as u32 + 1);
+            assert_eq!(*k, m.per_round[i].conflicted);
+        }
+    }
+}

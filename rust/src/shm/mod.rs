@@ -1,0 +1,24 @@
+//! Shared-memory execution layer: engines that skip the simulated
+//! transport entirely and work on flat arrays over the process-wide
+//! [`WorkerPool`](crate::util::pool::WorkerPool).
+//!
+//! The distributed runtime (`dist`) *models* a message-passing machine —
+//! every superstep pays for encoded messages, collectives and virtual
+//! clocks even though all p simulated processes share one address space.
+//! That is the point when the object of study is the paper's communication
+//! behavior, and pure overhead when the object is raw coloring speed on
+//! one box. Rokos et al. (arXiv:1505.04086) and Taş et al. "Greed is
+//! Good" (arXiv:1701.02628) show the optimistic speculate-then-resolve
+//! formulation on shared arrays wins by orders of magnitude there.
+//!
+//! [`datapar`] is that formulation: chunked vertex ranges fan out over the
+//! pool, each worker speculatively colors its chunks against a frozen
+//! snapshot of the color array, a parallel sweep detects
+//! defectively-colored vertices, and only those re-enter the next round —
+//! the paper's iterated-recoloring structure reused as the conflict-resolve
+//! loop. It is surfaced through the coordinator as
+//! [`Engine::DataPar`](crate::dist::Engine::DataPar).
+
+pub mod datapar;
+
+pub use datapar::{color_graph, color_graph_on, DataParConfig, DataParMetrics, DataParRound};

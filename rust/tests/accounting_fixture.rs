@@ -1,14 +1,17 @@
 //! Accounting-invariance fixture: the pooled transport, dense ghost
 //! indexing, scratch hoisting — and now the BSP step engine — must not
-//! change any *modeled* quantity. For four fixed jobs (framework coloring
-//! + 2 RC iterations with Base and Piggyback, and framework coloring +
-//! 2 aRC iterations with the ND and NI permutations) this pins —
-//! bit-for-bit — the final coloring, every process's `sent_msgs` /
+//! change any *modeled* quantity. For four fixed transport jobs (framework
+//! coloring + 2 RC iterations with Base and Piggyback, and framework
+//! coloring + 2 aRC iterations with the ND and NI permutations) this pins
+//! — bit-for-bit — the final coloring, every process's `sent_msgs` /
 //! `sent_bytes` / `recv_msgs`, and every virtual clock (as
 //! `f64::to_bits`), against a committed fixture file. Every fixture case runs on **both execution
 //! paths** — the thread-per-process runner and the BSP step engine — and
 //! the two serializations must agree exactly before either is compared to
-//! the pin.
+//! the pin. A fifth `[datapar]` job pins the shared-memory speculative
+//! engine the same way: its coloring hash, rounds and speculated/conflicted
+//! counts must agree bit-for-bit across pool sizes {1, 2, 8} before the
+//! common serialization is compared to the pin.
 //!
 //! Bless protocol: if `tests/fixtures/accounting_v1.txt` is absent (first
 //! run in a fresh environment) or `DGCOLOR_BLESS=1` is set, the observed
@@ -36,6 +39,8 @@ use dgcolor::dist::recolor::{
 use dgcolor::dist::{Endpoint, ProcMetrics, ProcResult};
 use dgcolor::graph::{synth, CsrGraph};
 use dgcolor::partition::{self, Partitioner};
+use dgcolor::shm;
+use dgcolor::util::pool::WorkerPool;
 use std::path::Path;
 
 const FIXTURE: &str = "tests/fixtures/accounting_v1.txt";
@@ -405,6 +410,32 @@ fn run_arc_engine(perm: Permutation) -> Vec<String> {
     lines
 }
 
+/// The fixed DataPar job: the shared-memory speculative engine on the
+/// fixture graph at one pool size. No transport, so the modeled quantities
+/// are the coloring itself plus the round/speculation accounting.
+fn run_datapar(workers: usize) -> Vec<String> {
+    let g = fixture_graph();
+    let cfg = shm::DataParConfig {
+        ordering: Ordering::Natural,
+        selection: Selection::RandomX(8),
+        seed: 42,
+        // small chunks force plenty of cross-chunk speculation on 600
+        // vertices — the part that could plausibly go racy
+        chunk_size: 64,
+        max_rounds: 200,
+    };
+    let (c, m) = shm::color_graph_on(&WorkerPool::new(workers), &g, &cfg).unwrap();
+    c.validate(&g).unwrap();
+    let hash = fnv1a(c.colors.iter().flat_map(|c| c.to_le_bytes()));
+    vec![format!(
+        "datapar colors={} hash={hash:016x} rounds={} speculated={} conflicted={}",
+        c.num_colors(),
+        m.rounds,
+        m.speculated,
+        m.conflicted,
+    )]
+}
+
 fn observed() -> String {
     let mut all = vec![format!("# accounting fixture v1, {PROCS} procs")];
     for (label, scheme) in [("base", CommScheme::Base), ("piggyback", CommScheme::Piggyback)] {
@@ -429,6 +460,18 @@ fn observed() -> String {
         );
         all.push(format!("[{label}]"));
         all.extend(threads);
+    }
+    {
+        let one = run_datapar(1);
+        for workers in [2, 8] {
+            assert_eq!(
+                one,
+                run_datapar(workers),
+                "[datapar] {workers}-worker run diverged from the 1-worker run"
+            );
+        }
+        all.push("[datapar]".to_string());
+        all.extend(one);
     }
     let mut s = all.join("\n");
     s.push('\n');

@@ -1,0 +1,187 @@
+//! Property tests for the DataPar engine (`util::prop` harness): the
+//! shared-memory speculative coloring must stay valid across random
+//! graphs and configurations, bit-for-bit identical across pool sizes
+//! {1, 2, 8}, and within the greedy Δ+1 bound of the sequential
+//! first-fit baseline — plus the Session/Job end-to-end shapes for
+//! `--engine datapar`.
+
+use dgcolor::color::{greedy_color, Ordering, Selection};
+use dgcolor::coordinator::{Event, EventLog, Job, Phase, Session};
+use dgcolor::dist::Engine;
+use dgcolor::graph::{CsrGraph, GraphBuilder};
+use dgcolor::shm::{self, DataParConfig};
+use dgcolor::util::pool::WorkerPool;
+use dgcolor::util::prop::{check, PropConfig};
+use dgcolor::util::Rng;
+
+fn random_graph(rng: &mut Rng) -> CsrGraph {
+    let n = rng.range(2, 600);
+    let m = rng.range(1, 5 * n);
+    let mut b = GraphBuilder::new(n);
+    for _ in 0..m {
+        b.add_edge(rng.range(0, n) as u32, rng.range(0, n) as u32);
+    }
+    b.build(format!("dp-prop-{n}-{m}"))
+}
+
+fn random_config(rng: &mut Rng) -> DataParConfig {
+    DataParConfig {
+        ordering: *rng.choose(&[
+            Ordering::Natural,
+            Ordering::LargestFirst,
+            Ordering::SmallestLast,
+            Ordering::Random,
+        ]),
+        selection: *rng.choose(&[
+            Selection::FirstFit,
+            Selection::StaggeredFirstFit,
+            Selection::LeastUsed,
+            Selection::RandomX(rng.range(1, 20) as u32),
+        ]),
+        seed: rng.next_u64(),
+        // down to chunk_size 1, where *every* edge crosses chunks — the
+        // maximally speculative grid
+        chunk_size: rng.range(1, 256),
+        max_rounds: 0,
+    }
+}
+
+#[test]
+fn prop_datapar_valid_and_worker_count_invariant() {
+    check(
+        "datapar valid + identical across pools {1,2,8}",
+        PropConfig { cases: 40, seed: 0xDA7A },
+        |rng, _| {
+            let g = random_graph(rng);
+            let cfg = random_config(rng);
+            let (c1, m1) =
+                shm::color_graph_on(&WorkerPool::new(1), &g, &cfg).map_err(|e| e.to_string())?;
+            c1.validate(&g).map_err(|e| format!("{}: {e}", g.name))?;
+            for workers in [2usize, 8] {
+                let (cw, mw) = shm::color_graph_on(&WorkerPool::new(workers), &g, &cfg)
+                    .map_err(|e| e.to_string())?;
+                if c1.colors != cw.colors {
+                    return Err(format!("{}: colors diverged at {workers} workers", g.name));
+                }
+                if m1.rounds != mw.rounds || m1.speculated != mw.speculated {
+                    return Err(format!(
+                        "{}: round trace diverged at {workers} workers",
+                        g.name
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_first_fit_stays_within_greedy_bound() {
+    check(
+        "datapar first-fit within Δ+1 of the sequential baseline",
+        PropConfig { cases: 30, seed: 0xDA7B },
+        |rng, _| {
+            let g = random_graph(rng);
+            let cfg = DataParConfig {
+                ordering: Ordering::Natural,
+                selection: Selection::FirstFit,
+                chunk_size: rng.range(1, 128),
+                seed: rng.next_u64(),
+                max_rounds: 0,
+            };
+            let (c, _) = shm::color_graph(&g, &cfg).map_err(|e| e.to_string())?;
+            c.validate(&g).map_err(|e| e.to_string())?;
+            let bound = g.max_degree() + 1;
+            if c.num_colors() > bound {
+                return Err(format!(
+                    "{}: {} colors exceeds Δ+1 = {bound}",
+                    g.name,
+                    c.num_colors()
+                ));
+            }
+            // the sequential first-fit baseline obeys the same fixed bound,
+            // so the two can never be more than Δ apart
+            let seq = greedy_color(&g, Ordering::Natural, Selection::FirstFit, 1);
+            if c.num_colors() > seq.num_colors() + g.max_degree() {
+                return Err(format!(
+                    "{}: datapar {} vs sequential {} breaks the Δ gap bound",
+                    g.name,
+                    c.num_colors(),
+                    seq.num_colors()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_session_datapar_jobs_always_valid() {
+    check(
+        "session --engine datapar runs valid and deterministic",
+        PropConfig { cases: 15, seed: 0xDA7C },
+        |rng, _| {
+            let s = Session::new(random_graph(rng));
+            let seed = rng.next_u64();
+            let selection = *rng.choose(&[Selection::FirstFit, Selection::RandomX(5)]);
+            let run = || {
+                Job::on(&s)
+                    .engine(Engine::DataPar)
+                    .selection(selection)
+                    .seed(seed)
+                    .run()
+                    .map_err(|e| e.to_string())
+            };
+            let a = run()?;
+            a.coloring.validate(s.graph()).map_err(|e| e.to_string())?;
+            if a.engine != Engine::DataPar {
+                return Err(format!("ran on {:?} instead of DataPar", a.engine));
+            }
+            let dp = a.datapar.as_ref().ok_or("RunResult.datapar missing")?;
+            if dp.per_round.len() as u32 != dp.rounds {
+                return Err("per_round length disagrees with rounds".into());
+            }
+            let b = run()?;
+            if a.coloring.colors != b.coloring.colors {
+                return Err("datapar session runs not deterministic".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn datapar_event_stream_has_the_engine_shape() {
+    // no Partition phase (the engine skips partitioning entirely), one
+    // ConflictRound per resolve round, and a Done carrying the color count
+    let g = dgcolor::graph::synth::fem_like(1200, 9.0, 24, 0.02, 6, "dp-e2e");
+    let s = Session::new(g);
+    let log = EventLog::default();
+    let r = Job::on(&s)
+        .engine(Engine::DataPar)
+        .selection(Selection::RandomX(4))
+        .run_observed(&log)
+        .unwrap();
+    let events = log.events();
+    assert!(
+        !events
+            .iter()
+            .any(|e| matches!(e, Event::PhaseStarted { phase: Phase::Partition })),
+        "datapar must not partition"
+    );
+    let dp = r.datapar.as_ref().unwrap();
+    let rounds = events
+        .iter()
+        .filter(|e| matches!(e, Event::ConflictRound { .. }))
+        .count();
+    assert_eq!(rounds as u32, dp.rounds);
+    assert!(events.iter().any(
+        |e| matches!(e, Event::Done { result: Ok(k) } if *k == r.num_colors)
+    ));
+    // transport-shaped jobs stay rejected at the session boundary too
+    assert!(Job::on(&s)
+        .engine(Engine::DataPar)
+        .quality() // quality() implies a sync RC iteration
+        .run()
+        .is_err());
+}
