@@ -1,0 +1,162 @@
+//! Scheduler soak (CI's `soak` job): eight seeded rounds of mixed
+//! interactive/sweep traffic against a deliberately small-capacity
+//! [`Scheduler`], asserting the service-layer invariants end to end:
+//!
+//! * admission control sheds overload with the typed `Overloaded` error
+//!   (and sheds *something* — a burst larger than the queue must reject);
+//! * every admitted job completes — a successful result (possibly
+//!   `degraded` under a budget stop), a typed stop error, or nothing
+//!   else: no panics, no hung `wait()`, no silently dropped handles;
+//! * the fairness rule's provable max-wait bound holds: an interactive
+//!   job admitted at queue position `p` is passed by at most
+//!   `p / quantum + 1` sweep jobs, so the observed maximum never exceeds
+//!   `queue_cap / quantum + 1`;
+//! * the books balance: every admitted job is accounted completed or
+//!   failed once all handles are drained.
+//!
+//! Run: `cargo run --release --example scheduler_soak`
+
+use dgcolor::color::Selection;
+use dgcolor::coordinator::job::nd;
+use dgcolor::coordinator::{Job, Priority, Scheduler, SchedulerConfig, Session};
+use dgcolor::dist::CostModel;
+use dgcolor::graph::synth;
+use dgcolor::util::error::ErrorKind;
+use dgcolor::util::rng::Rng;
+use dgcolor::util::table::Table;
+
+const SEEDS: u64 = 8;
+const QUEUE_CAP: usize = 6;
+const QUANTUM: u32 = 2;
+const SUBMITS: usize = 24;
+
+#[derive(Default)]
+struct Totals {
+    admitted: u64,
+    rejected: u64,
+    ok: u64,
+    ok_degraded: u64,
+    stopped: u64,
+    max_overtakes: u64,
+}
+
+fn main() {
+    let mut totals = Totals::default();
+    for seed in 1..=SEEDS {
+        soak_round(seed, &mut totals);
+    }
+
+    let mut t = Table::new(
+        &format!("scheduler soak: {SEEDS} seeds × {SUBMITS} submissions"),
+        &["metric", "value"],
+    );
+    t.row(&["admitted", &totals.admitted.to_string()]);
+    t.row(&["overload-rejected", &totals.rejected.to_string()]);
+    t.row(&["completed ok", &totals.ok.to_string()]);
+    t.row(&["  of which degraded", &totals.ok_degraded.to_string()]);
+    t.row(&["typed stops", &totals.stopped.to_string()]);
+    t.row(&["max sweeps past an interactive", &totals.max_overtakes.to_string()]);
+    t.print();
+
+    // the burst is 4× the queue: admission control must have shed load
+    assert!(
+        totals.rejected > 0,
+        "no submission was ever rejected — admission control untested"
+    );
+    assert!(totals.ok > 0, "no job ever completed");
+    println!("\nsoak passed: every ending typed, fairness bound held ✓");
+}
+
+fn soak_round(seed: u64, totals: &mut Totals) {
+    let sched = Scheduler::new(SchedulerConfig {
+        queue_cap: QUEUE_CAP,
+        interactive_quantum: QUANTUM,
+        start_paused: false,
+    });
+    let grid = sched.add_tenant(
+        Session::new(synth::grid2d(20, 20)).with_cost_model(CostModel::fixed()),
+    );
+    let fem = sched.add_tenant(
+        Session::new(synth::fem_like(500, 8.0, 20, 0.004, seed, "fem"))
+            .with_cost_model(CostModel::fixed()),
+    );
+
+    let mut rng = Rng::new(seed);
+    let mut handles = Vec::new();
+    for _ in 0..SUBMITS {
+        let tenant = if rng.chance(0.5) { grid } else { fem };
+        let interactive = rng.chance(0.7);
+        let mut b = Job::builder().seed(rng.next_u64());
+        b = if interactive {
+            b.procs(2).priority(Priority::Interactive)
+        } else {
+            b.procs(4)
+                .selection(Selection::RandomX(5))
+                .sync_recolor(nd(1))
+                .priority(Priority::Sweep)
+        };
+        if rng.chance(0.3) {
+            b = b.vclock_budget(1e-6 * (1.0 + rng.below(100) as f64));
+            if rng.chance(0.5) {
+                b = b.degrade();
+            }
+        }
+        let job = b.build().expect("soak job must validate");
+        match sched.submit(tenant, job) {
+            Ok(h) => {
+                if rng.chance(0.15) {
+                    h.cancel(); // client gives up — queued or mid-run
+                }
+                handles.push(h);
+            }
+            Err(e) => {
+                assert_eq!(
+                    e.kind(),
+                    ErrorKind::Overloaded,
+                    "seed {seed}: submit failed with a non-overload error: {e}"
+                );
+                totals.rejected += 1;
+            }
+        }
+    }
+
+    totals.admitted += handles.len() as u64;
+    for h in handles {
+        // a live scheduler completes every admitted job: wait() must
+        // return, and only with a success or a typed stop
+        match h.wait() {
+            Ok(r) => {
+                assert!(r.num_colors >= 1, "seed {seed}: empty coloring");
+                totals.ok += 1;
+                if r.degraded {
+                    totals.ok_degraded += 1;
+                }
+            }
+            Err(e) => {
+                assert!(
+                    e.is_stop(),
+                    "seed {seed}: job failed with a non-stop error: {e}"
+                );
+                totals.stopped += 1;
+            }
+        }
+    }
+
+    let stats = sched.shutdown();
+    let bound = (QUEUE_CAP as u64) / (QUANTUM as u64) + 1;
+    assert!(
+        stats.max_sweeps_before_interactive <= bound,
+        "seed {seed}: fairness bound violated — {} sweeps passed an \
+         interactive job (bound {bound})",
+        stats.max_sweeps_before_interactive
+    );
+    assert_eq!(
+        stats.submitted,
+        stats.completed + stats.failed,
+        "seed {seed}: accounting leak — {} admitted vs {} completed + {} failed",
+        stats.submitted,
+        stats.completed,
+        stats.failed
+    );
+    totals.max_overtakes = totals.max_overtakes.max(stats.max_sweeps_before_interactive);
+}

@@ -15,7 +15,7 @@ mod common;
 
 use dgcolor::color::recolor::{recolor_once, Permutation};
 use dgcolor::color::{greedy_color, Ordering, Selection};
-use dgcolor::coordinator::{Job, Session};
+use dgcolor::coordinator::{Job, Priority, Scheduler, SchedulerConfig, Session};
 use dgcolor::dist::comm::{network, MsgKind};
 use dgcolor::dist::cost::CostModel;
 use dgcolor::dist::proc::{build_local_graphs, build_local_graphs_parallel};
@@ -303,6 +303,52 @@ fn main() {
             rt.min() / rd.min()
         );
     }
+
+    // L3.13: scheduler overhead — the same job run directly on a session
+    // vs submitted through the Scheduler (admission + token creation +
+    // queue + dispatcher handoff + handle delivery). The delta is the
+    // per-job service-layer tax; it must stay microseconds against
+    // millisecond jobs. Then a mixed interactive/sweep batch through the
+    // dispatcher — the fairness rule's steady-state throughput shape.
+    let sched_g = rmat::generate(&RmatParams::er(13, 8), 31, "er13");
+    let direct = Session::new(sched_g.clone()).with_cost_model(CostModel::fixed());
+    let sj = Job::builder().procs(4).seed(31).build().unwrap();
+    direct.run(&sj).expect("warmup run");
+    let rd = b(&mut rep, &cfg, "job direct p=4 (er13)", |_| {
+        direct.run(&sj).unwrap().num_colors
+    });
+    let sched = Scheduler::new(SchedulerConfig::default());
+    let tenant = sched.add_tenant(Session::new(sched_g).with_cost_model(CostModel::fixed()));
+    sched.submit(tenant, sj).unwrap().wait().expect("warmup run");
+    let rs = b(&mut rep, &cfg, "job via scheduler p=4 (er13)", |_| {
+        sched.submit(tenant, sj).unwrap().wait().unwrap().num_colors
+    });
+    println!(
+        "    → scheduler overhead {:.1}µs per job ({:.3}× direct)",
+        (rs.min() - rd.min()) * 1e6,
+        rs.min() / rd.min()
+    );
+    let inter = Job::builder().procs(2).seed(31).build().unwrap();
+    let sweep = Job::builder()
+        .procs(4)
+        .seed(31)
+        .selection(Selection::RandomX(5))
+        .priority(Priority::Sweep)
+        .build()
+        .unwrap();
+    let rm = b(&mut rep, &cfg, "scheduler mixed batch 6i+3s (er13)", |_| {
+        let handles: Vec<_> = (0..9)
+            .map(|i| {
+                let job = if i % 3 == 2 { sweep } else { inter };
+                sched.submit(tenant, job).unwrap()
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.wait().unwrap().num_colors)
+            .sum::<usize>()
+    });
+    println!("    → {:.2}ms per 9-job mixed batch", rm.min() * 1e3);
 
     // L1/L2: PJRT kernel batch latency (when artifacts are built)
     if dgcolor::runtime::KernelRuntime::artifacts_present() {

@@ -1,6 +1,7 @@
 //! The configuration system: one struct capturing every knob of the paper's
 //! parameter space, parseable from CLI arguments.
 
+use super::scheduler::Priority;
 use crate::color::recolor::{Permutation, RecolorSchedule};
 use crate::color::{Ordering, Selection};
 use crate::dist::cost::CostModel;
@@ -63,6 +64,24 @@ pub struct ColoringConfig {
     /// default). An active plan requires the supervised BSP engine; the
     /// job validator enforces that.
     pub faults: FaultPlan,
+    /// Wall-clock deadline in seconds, measured from run (or queue-admit)
+    /// start. Expiry stops the run at its next engine checkpoint. Not
+    /// encoded in [`ColoringConfig::label`] — none of the control knobs
+    /// change what an uninterrupted run computes.
+    pub deadline_secs: Option<f64>,
+    /// Modeled virtual-clock budget in virtual seconds. Deterministic:
+    /// the same job stops at the same checkpoint on every run. Requires a
+    /// transport engine (DataPar has no virtual clock).
+    pub vclock_budget: Option<f64>,
+    /// What a stop (cancel/deadline/budget) returns: `false` → the typed
+    /// error ([`StopPolicy::Fail`](crate::util::cancel::StopPolicy)),
+    /// `true` → the best-so-far coloring repaired to validity and flagged
+    /// `degraded` ([`StopPolicy::Degrade`](crate::util::cancel::StopPolicy)).
+    pub degrade: bool,
+    /// Scheduling class when the job is submitted through
+    /// [`Scheduler`](super::scheduler::Scheduler); direct `Session::run`
+    /// calls ignore it.
+    pub priority: Priority,
 }
 
 impl Default for ColoringConfig {
@@ -81,6 +100,10 @@ impl Default for ColoringConfig {
             early_stop: None,
             engine: Engine::Auto,
             faults: FaultPlan::none(),
+            deadline_secs: None,
+            vclock_budget: None,
+            degrade: false,
+            priority: Priority::default(),
         }
     }
 }
@@ -124,8 +147,10 @@ impl ColoringConfig {
     /// `--superstep`, `--async`, `--recolor <n>`, `--arc`, `--schedule`,
     /// `--scheme`, `--partitioner`, `--seed`, `--ideal-net`,
     /// `--stop-eps <f>`, `--engine auto|threads|bsp|datapar`,
-    /// `--faults <spec>` — see [`FaultPlan::parse`]). Parse-only:
-    /// validation happens when the config becomes a [`Job`](super::Job).
+    /// `--faults <spec>` — see [`FaultPlan::parse`] — plus the service
+    /// knobs `--deadline <secs>`, `--vbudget <vsecs>`, `--degrade` and
+    /// `--priority interactive|sweep`). Parse-only: validation happens
+    /// when the config becomes a [`Job`](super::Job).
     pub fn from_args(a: &Args) -> Result<Self> {
         let mut cfg = ColoringConfig {
             num_procs: a.get_or("procs", 4usize)?,
@@ -157,6 +182,22 @@ impl ColoringConfig {
                 .parse()
                 .with_context(|| format!("invalid value {s:?} for --stop-eps"))?;
             cfg.early_stop = Some(eps);
+        }
+        if let Some(s) = a.get_str("deadline") {
+            let secs: f64 = s
+                .parse()
+                .with_context(|| format!("invalid value {s:?} for --deadline"))?;
+            cfg.deadline_secs = Some(secs);
+        }
+        if let Some(s) = a.get_str("vbudget") {
+            let vs: f64 = s
+                .parse()
+                .with_context(|| format!("invalid value {s:?} for --vbudget"))?;
+            cfg.vclock_budget = Some(vs);
+        }
+        cfg.degrade = a.has_flag("degrade");
+        if let Some(s) = a.get_str("priority") {
+            cfg.priority = s.parse().map_err(Error::msg)?;
         }
         let iters: u32 = a.get_or("recolor", 0u32)?;
         if iters > 0 {
@@ -276,6 +317,29 @@ mod tests {
         assert_eq!(cfg.early_stop, Some(0.05));
         assert!(ColoringConfig::from_args(&parse("--stop-eps nope")).is_err());
         assert_eq!(ColoringConfig::from_args(&parse("")).unwrap().early_stop, None);
+    }
+
+    #[test]
+    fn service_knobs_parse_without_touching_the_label() {
+        let cfg = ColoringConfig::from_args(&parse(
+            "--deadline 2.5 --vbudget 100 --degrade --priority sweep",
+        ))
+        .unwrap();
+        assert_eq!(cfg.deadline_secs, Some(2.5));
+        assert_eq!(cfg.vclock_budget, Some(100.0));
+        assert!(cfg.degrade);
+        assert_eq!(cfg.priority, Priority::Sweep);
+        // none of the control knobs change what the run computes, so the
+        // label — the sweep/bench row key — stays byte-identical
+        assert_eq!(cfg.label(), ColoringConfig::default().label());
+        let cfg = ColoringConfig::from_args(&parse("")).unwrap();
+        assert_eq!(cfg.deadline_secs, None);
+        assert_eq!(cfg.vclock_budget, None);
+        assert!(!cfg.degrade);
+        assert_eq!(cfg.priority, Priority::Interactive);
+        assert!(ColoringConfig::from_args(&parse("--deadline soon")).is_err());
+        assert!(ColoringConfig::from_args(&parse("--vbudget lots")).is_err());
+        assert!(ColoringConfig::from_args(&parse("--priority urgent")).is_err());
     }
 
     #[test]

@@ -32,6 +32,7 @@
 //! dist-level one. If `dist` ever needs to stand alone, move the enum down
 //! and re-export it here.
 
+use crate::util::error::{Error, ErrorKind};
 use std::sync::Mutex;
 
 /// The pipeline phases, in execution order.
@@ -82,8 +83,36 @@ pub enum Event {
     /// vertices (only after an active fault plan left conflicts behind).
     RepairPass { pass: u32, conflicts: usize },
     /// The run finished: `Ok(colors)` after validation, or the job's
-    /// typed error rendered as a string.
-    Done { result: Result<usize, String> },
+    /// typed error as a structured [`DoneError`] (kind + message), so
+    /// observers can react to overload/cancellation/deadline without
+    /// string matching.
+    Done { result: Result<usize, DoneError> },
+}
+
+/// The failure payload of [`Event::Done`]: the job error's classification
+/// plus its rendered message. The JSON encoding keeps the legacy
+/// `"error"` message field and adds `"kind"` with the stable
+/// [`ErrorKind::code`], so existing consumers keep parsing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DoneError {
+    pub kind: ErrorKind,
+    pub msg: String,
+}
+
+impl DoneError {
+    /// Capture a job error as the `Done` payload.
+    pub fn of(e: &Error) -> Self {
+        DoneError {
+            kind: e.kind(),
+            msg: e.to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for DoneError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
 }
 
 /// Receives the event stream of a run. Implementations must be `Sync`:
@@ -176,8 +205,12 @@ pub fn event_json(event: &Event) -> String {
         Event::Done { result: Ok(colors) } => {
             format!("{{\"event\":\"done\",\"colors\":{colors}}}")
         }
-        Event::Done { result: Err(msg) } => {
-            format!("{{\"event\":\"done\",\"error\":\"{}\"}}", json_escape(msg))
+        Event::Done { result: Err(e) } => {
+            format!(
+                "{{\"event\":\"done\",\"error\":\"{}\",\"kind\":\"{}\"}}",
+                json_escape(&e.msg),
+                e.kind.code()
+            )
         }
     }
 }
@@ -265,9 +298,18 @@ mod tests {
             event_json(&Event::RepairPass { pass: 1, conflicts: 2 }),
             "{\"event\":\"repair_pass\",\"pass\":1,\"conflicts\":2}"
         );
+        let err = DoneError {
+            kind: ErrorKind::ProcFailed { rank: 2, step: 5 },
+            msg: "bad \"x\"\n".into(),
+        };
         assert_eq!(
-            event_json(&Event::Done { result: Err("bad \"x\"\n".into()) }),
-            "{\"event\":\"done\",\"error\":\"bad \\\"x\\\"\\n\"}"
+            event_json(&Event::Done { result: Err(err) }),
+            "{\"event\":\"done\",\"error\":\"bad \\\"x\\\"\\n\",\"kind\":\"proc-failed\"}"
+        );
+        let cancelled = DoneError::of(&Error::cancelled("job 3 stopped"));
+        assert_eq!(
+            event_json(&Event::Done { result: Err(cancelled) }),
+            "{\"event\":\"done\",\"error\":\"cancelled: job 3 stopped\",\"kind\":\"cancelled\"}"
         );
     }
 

@@ -33,8 +33,10 @@ use crate::dist::cost::{CostModel, NetworkModel};
 use crate::dist::recolor::{CommScheme, RecolorConfig};
 use crate::dist::{Engine, FaultPlan};
 use crate::partition::Partitioner;
+use crate::util::cancel::{CancelToken, RunControl, StopPolicy};
 use crate::util::error::Result;
 use crate::{bail, ensure};
+use std::time::Duration;
 
 /// A validated distributed-coloring job.
 #[derive(Debug, Clone, Copy)]
@@ -75,6 +77,32 @@ impl Job {
     /// [`ColoringConfig::label`]).
     pub fn label(&self) -> String {
         self.cfg.label()
+    }
+
+    /// The [`RunControl`] this job's own deadline/budget knobs imply:
+    /// `Some` iff a limit is set (a fresh token each call — the deadline
+    /// countdown starts now), `None` for plain jobs, which keep the
+    /// token-free bit-for-bit-pinned execution path. The scheduler builds
+    /// its own control instead so queue wait counts against the deadline
+    /// and the client can cancel.
+    pub fn control(&self) -> Option<RunControl> {
+        if self.cfg.deadline_secs.is_none() && self.cfg.vclock_budget.is_none() {
+            return None;
+        }
+        let token = CancelToken::with_limits(
+            self.cfg.deadline_secs.map(Duration::from_secs_f64),
+            self.cfg.vclock_budget,
+        );
+        Some(RunControl::new(token, self.stop_policy()))
+    }
+
+    /// The stop policy the `degrade` knob selects.
+    pub fn stop_policy(&self) -> StopPolicy {
+        if self.cfg.degrade {
+            StopPolicy::Degrade
+        } else {
+            StopPolicy::Fail
+        }
     }
 }
 
@@ -139,6 +167,23 @@ fn validate(cfg: &ColoringConfig) -> Result<()> {
                 cfg.num_procs
             );
         }
+    }
+    if let Some(d) = cfg.deadline_secs {
+        ensure!(
+            d.is_finite() && d > 0.0,
+            "deadline must be a positive number of seconds, got {d}"
+        );
+    }
+    if let Some(b) = cfg.vclock_budget {
+        ensure!(
+            b.is_finite() && b > 0.0,
+            "virtual-clock budget must be a positive number of virtual seconds, got {b}"
+        );
+        ensure!(
+            cfg.engine != Engine::DataPar,
+            "the datapar engine has no virtual clock — a vclock budget can never fire \
+             there; use a wall-clock deadline or a transport engine"
+        );
     }
     Ok(())
 }
@@ -293,6 +338,38 @@ impl<'s> JobBuilder<'s> {
         self
     }
 
+    /// Wall-clock deadline in seconds: the run stops at its next engine
+    /// checkpoint once it expires (typed error, or a degraded result
+    /// under [`JobBuilder::degrade`]). The countdown starts when the job
+    /// starts running (or is admitted, under the scheduler).
+    pub fn deadline_secs(mut self, secs: f64) -> Self {
+        self.cfg.deadline_secs = Some(secs);
+        self
+    }
+
+    /// Modeled virtual-clock budget in virtual seconds — the
+    /// deterministic stop knob: the same job stops at the same checkpoint
+    /// on every run. Transport engines only.
+    pub fn vclock_budget(mut self, vsecs: f64) -> Self {
+        self.cfg.vclock_budget = Some(vsecs);
+        self
+    }
+
+    /// On a stop (cancel/deadline/budget), return the best-so-far
+    /// coloring completed and repaired to validity — flagged
+    /// `degraded: true` — instead of the typed error.
+    pub fn degrade(mut self) -> Self {
+        self.cfg.degrade = true;
+        self
+    }
+
+    /// Scheduling class under [`Scheduler`](super::scheduler::Scheduler)
+    /// submission (ignored by direct `Session::run`).
+    pub fn priority(mut self, p: super::scheduler::Priority) -> Self {
+        self.cfg.priority = p;
+        self
+    }
+
     /// Validate and produce the [`Job`].
     pub fn build(mut self) -> Result<Job> {
         // one seed knob: an explicit .seed() call drives the recoloring
@@ -429,6 +506,39 @@ mod tests {
     #[test]
     fn unbound_builder_cannot_run() {
         assert!(Job::builder().run().is_err());
+    }
+
+    #[test]
+    fn control_knobs_validate_and_derive_a_run_control() {
+        use crate::util::cancel::StopPolicy;
+        // plain jobs derive no control: the pinned token-free path
+        let plain = Job::builder().build().unwrap();
+        assert!(plain.control().is_none());
+        assert_eq!(plain.stop_policy(), StopPolicy::Fail);
+        // a limit derives a control carrying the degrade policy
+        let j = Job::builder().vclock_budget(50.0).degrade().build().unwrap();
+        let ctl = j.control().expect("budget implies a control");
+        assert_eq!(ctl.policy, StopPolicy::Degrade);
+        assert!(ctl.token.has_limits());
+        assert_eq!(ctl.token.stopped(), None);
+        assert!(Job::builder().deadline_secs(10.0).build().unwrap().control().is_some());
+        // bad limits are rejected at build
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(Job::builder().deadline_secs(bad).build().is_err(), "deadline {bad}");
+            assert!(Job::builder().vclock_budget(bad).build().is_err(), "budget {bad}");
+        }
+        // datapar has no virtual clock: a vbudget could never fire
+        assert!(Job::builder()
+            .engine(Engine::DataPar)
+            .vclock_budget(1.0)
+            .build()
+            .is_err());
+        // ... but wall-clock deadlines work there
+        assert!(Job::builder()
+            .engine(Engine::DataPar)
+            .deadline_secs(5.0)
+            .build()
+            .is_ok());
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //!   recoloring → validation → metrics) producing a [`RunResult`].
 //! * [`sweep`] — the Fig 8-10 parameter sweeps, running every job through
 //!   per-graph [`Session`]s (one partition per key per sweep).
+//! * [`scheduler`] — the multi-tenant service layer: admission control
+//!   over a bounded queue, interactive/sweep priority classes with a
+//!   starvation-free fairness rule, per-job deadlines and cooperative
+//!   cancellation, typed overload shedding.
 //!
 //! Typical use:
 //!
@@ -30,13 +34,15 @@ pub mod config;
 pub mod event;
 pub mod job;
 pub mod pipeline;
+pub mod scheduler;
 pub mod session;
 pub mod sweep;
 
 pub use config::{ColoringConfig, RecolorMode};
-pub use event::{Event, EventLog, JsonLines, Observer, Phase};
+pub use event::{DoneError, Event, EventLog, JsonLines, Observer, Phase};
 pub use job::{Job, JobBuilder};
 pub use pipeline::RunResult;
+pub use scheduler::{JobHandle, Priority, SchedStats, Scheduler, SchedulerConfig, TenantId};
 pub use session::Session;
 #[allow(deprecated)]
 pub use pipeline::run_job;

@@ -9,10 +9,10 @@
 //! every call.
 
 use super::config::{ColoringConfig, RecolorMode};
-use super::event::{emit_rank0, Event, Observer, Phase};
+use super::event::{emit_rank0, DoneError, Event, Observer, Phase};
 use super::job::Job;
 use crate::color::recolor::Permutation;
-use crate::color::Coloring;
+use crate::color::{Coloring, UNCOLORED};
 use crate::dist::engine::{self, Engine, StepOutcome, StepProcess};
 use crate::dist::framework::{self, FrameworkConfig, FrameworkStep};
 use crate::dist::proc::{build_local_graphs, ColorState, LocalGraph};
@@ -23,6 +23,7 @@ use crate::err;
 use crate::graph::CsrGraph;
 use crate::partition::{self, PartitionMetrics};
 use crate::shm::{self, DataParMetrics};
+use crate::util::cancel::{RunControl, StopPolicy};
 use crate::util::error::Result;
 use crate::util::pool;
 
@@ -49,6 +50,11 @@ pub struct RunResult {
     /// [`Engine::DataPar`]; the transport engines report through
     /// [`RunResult::metrics`] instead.
     pub datapar: Option<DataParMetrics>,
+    /// `true` iff the run was stopped early (cancel/deadline/budget) under
+    /// [`StopPolicy::Degrade`] and this result is the best-so-far coloring
+    /// completed and repaired to validity — valid, but not what an
+    /// uninterrupted run would have produced.
+    pub degraded: bool,
 }
 
 impl RunResult {
@@ -64,10 +70,13 @@ impl RunResult {
             ),
             None => String::new(),
         };
+        // appended only when set, so undisturbed runs keep a byte-identical
+        // summary line
+        let degraded = if self.degraded { ",\"degraded\":true" } else { "" };
         format!(
             "{{\"result\":\"coloring\",\"config\":\"{}\",\"engine\":\"{}\",\"colors\":{},\
              \"initial_colors\":{},\"recolor_trace\":[{}],\"makespan\":{:e},\"messages\":{},\
-             \"bytes\":{},\"conflicts\":{},\"rounds\":{}{}}}",
+             \"bytes\":{},\"conflicts\":{},\"rounds\":{}{}{}}}",
             self.config_label,
             self.engine.name(),
             self.num_colors,
@@ -79,6 +88,7 @@ impl RunResult {
             self.metrics.total_conflicts,
             self.metrics.rounds,
             datapar,
+            degraded,
         )
     }
 }
@@ -108,6 +118,7 @@ pub(crate) fn execute(
     locals: &[LocalGraph],
     cost: &CostModel,
     job: &Job,
+    ctl: Option<&RunControl>,
     obs: Option<&dyn Observer>,
 ) -> Result<RunResult> {
     let cfg = job.config();
@@ -142,7 +153,7 @@ pub(crate) fn execute(
     let engine_used = resolve_engine(cfg.engine);
 
     if engine_used == Engine::DataPar {
-        return execute_datapar(g, part_metrics, cfg, obs);
+        return execute_datapar(g, part_metrics, cfg, ctl, obs);
     }
 
     if engine_used == Engine::Bsp {
@@ -159,93 +170,135 @@ pub(crate) fn execute(
         // an active fault plan needs the supervising engine (checkpoints,
         // stall-instead-of-panic, recovery); fault-free jobs keep the
         // lockstep worker-pool engine bit-for-bit unchanged
+        let token = ctl.map(|c| &c.token);
         let outcome = if cfg.faults.is_active() {
-            engine::run_steps_supervised(
+            engine::run_steps_supervised_cancellable(
                 g.num_vertices(),
                 locals,
                 cfg.network,
                 cfg.faults,
                 obs,
+                token,
                 |lg| JobMachine::new(lg, &fw, &cost, rc_plan, obs),
             )?
         } else {
-            engine::run_steps(g.num_vertices(), locals, cfg.network, |lg| {
+            engine::run_steps_cancellable(g.num_vertices(), locals, cfg.network, token, |lg| {
                 JobMachine::new(lg, &fw, &cost, rc_plan, obs)
             })
         };
-        return finalize(g, part_metrics, cfg, outcome, engine_used, obs);
+        return finalize(g, part_metrics, cfg, outcome, engine_used, ctl, obs);
     }
 
+    // The thread runner's cancellation protocol is consensus-by-allreduce:
+    // every process votes its token poll at each checkpoint (framework
+    // round tops inside `color_process_cancellable`, the recolor phase
+    // boundary, and each aRC iteration top), so all ranks take the same
+    // stop decision and nobody stops sending while a peer still waits.
+    // The votes are extra collectives, so modeled quantities shift — but
+    // only when a token is attached; the `ctl: None` path below is the
+    // exact pre-cancellation closure, bit for bit.
+    let token = ctl.map(|c| &c.token);
+    let aborted = std::sync::atomic::AtomicBool::new(false);
     let outcome = try_run_distributed_with(g, locals, cfg.network, |ep, lg| {
         let mut state = ColorState::uncolored(lg);
         let to_color: Vec<u32> = (0..lg.n_owned() as u32).collect();
-        let mut metrics =
-            framework::color_process(ep, lg, &fw, &cost, &mut state, to_color, None, obs);
+        let (mut metrics, mut stop) = framework::color_process_cancellable(
+            ep, lg, &fw, &cost, &mut state, to_color, None, token, obs,
+        );
 
-        // the initial color count is the first trace entry
         let n_owned = lg.n_owned();
-        let local_kmax = (0..n_owned)
-            .map(|v| state.colors[v] as u64 + 1)
-            .max()
-            .unwrap_or(0);
-        let initial_k =
-            framework::comm_timed(ep, &mut metrics, |ep| ep.allreduce_max_u64(local_kmax));
-        metrics.recolor_trace.push(initial_k as usize);
+        if stop.is_none() {
+            // the initial color count is the first trace entry
+            let local_kmax = (0..n_owned)
+                .map(|v| state.colors[v] as u64 + 1)
+                .max()
+                .unwrap_or(0);
+            let initial_k =
+                framework::comm_timed(ep, &mut metrics, |ep| ep.allreduce_max_u64(local_kmax));
+            metrics.recolor_trace.push(initial_k as usize);
 
-        if !matches!(recolor_mode, RecolorMode::None) {
-            emit_rank0(
-                obs,
-                ep.rank,
-                Event::PhaseStarted {
-                    phase: Phase::Recoloring,
-                },
-            );
-        }
-        match &recolor_mode {
-            RecolorMode::None => {}
-            RecolorMode::Sync(rc) => {
-                let mut trace = Vec::new();
-                let m =
-                    recolor::recolor_process_sync(ep, lg, &cost, rc, &mut state, &mut trace, obs);
-                metrics.phases.merge(&m.phases);
-                metrics.conflicts += m.conflicts;
-                metrics.recolor_trace.extend(trace);
+            // consensus stop check at the recolor phase boundary
+            if let Some(tok) = token {
+                let vote = tok.check(ep.clock).is_some() as u64;
+                let agreed =
+                    framework::comm_timed(ep, &mut metrics, |ep| ep.allreduce_max_u64(vote));
+                if agreed != 0 {
+                    stop = tok.stopped();
+                }
             }
-            RecolorMode::Async { perm, iterations } => {
-                for iter in 1..=*iterations {
-                    let m = recolor::recolor_process_async(
-                        ep, lg, &cost, &fw, *perm, iter, cfg.seed, &mut state, obs,
+            if stop.is_none() && !matches!(recolor_mode, RecolorMode::None) {
+                emit_rank0(
+                    obs,
+                    ep.rank,
+                    Event::PhaseStarted {
+                        phase: Phase::Recoloring,
+                    },
+                );
+            }
+            match &recolor_mode {
+                _ if stop.is_some() => {}
+                RecolorMode::None => {}
+                RecolorMode::Sync(rc) => {
+                    // sync RC is bounded (one superstep per color class)
+                    // and runs to completion once entered
+                    let mut trace = Vec::new();
+                    let m = recolor::recolor_process_sync(
+                        ep, lg, &cost, rc, &mut state, &mut trace, obs,
                     );
                     metrics.phases.merge(&m.phases);
                     metrics.conflicts += m.conflicts;
-                    metrics.rounds += m.rounds;
-                    let local_kmax = (0..n_owned)
-                        .map(|v| state.colors[v] as u64 + 1)
-                        .max()
-                        .unwrap_or(0);
-                    let k = framework::comm_timed(ep, &mut metrics, |ep| {
-                        ep.allreduce_max_u64(local_kmax)
-                    });
-                    let prev = *metrics.recolor_trace.last().unwrap_or(&0);
-                    metrics.recolor_trace.push(k as usize);
-                    emit_rank0(
-                        obs,
-                        ep.rank,
-                        Event::RecolorIteration {
-                            iter,
-                            k: k as usize,
-                        },
-                    );
-                    if let Some(eps) = early_stop {
-                        // prev and k come from allreduces: every process
-                        // stops at the same iteration
-                        let improvement = (prev as f64 - k as f64) / (prev as f64).max(1.0);
-                        if improvement < eps {
-                            break;
+                    metrics.recolor_trace.extend(trace);
+                }
+                RecolorMode::Async { perm, iterations } => {
+                    for iter in 1..=*iterations {
+                        // consensus stop check at each aRC iteration top
+                        if let Some(tok) = token {
+                            let vote = tok.check(ep.clock).is_some() as u64;
+                            let agreed = framework::comm_timed(ep, &mut metrics, |ep| {
+                                ep.allreduce_max_u64(vote)
+                            });
+                            if agreed != 0 {
+                                stop = tok.stopped();
+                                break;
+                            }
+                        }
+                        let m = recolor::recolor_process_async(
+                            ep, lg, &cost, &fw, *perm, iter, cfg.seed, &mut state, obs,
+                        );
+                        metrics.phases.merge(&m.phases);
+                        metrics.conflicts += m.conflicts;
+                        metrics.rounds += m.rounds;
+                        let local_kmax = (0..n_owned)
+                            .map(|v| state.colors[v] as u64 + 1)
+                            .max()
+                            .unwrap_or(0);
+                        let k = framework::comm_timed(ep, &mut metrics, |ep| {
+                            ep.allreduce_max_u64(local_kmax)
+                        });
+                        let prev = *metrics.recolor_trace.last().unwrap_or(&0);
+                        metrics.recolor_trace.push(k as usize);
+                        emit_rank0(
+                            obs,
+                            ep.rank,
+                            Event::RecolorIteration {
+                                iter,
+                                k: k as usize,
+                            },
+                        );
+                        if let Some(eps) = early_stop {
+                            // prev and k come from allreduces: every process
+                            // stops at the same iteration
+                            let improvement = (prev as f64 - k as f64) / (prev as f64).max(1.0);
+                            if improvement < eps {
+                                break;
+                            }
                         }
                     }
                 }
             }
+        }
+        if stop.is_some() {
+            aborted.store(true, std::sync::atomic::Ordering::Relaxed);
         }
 
         // final accounting comes from the endpoint (cumulative)
@@ -260,7 +313,13 @@ pub(crate) fn execute(
             metrics,
         }
     })?;
-    finalize(g, part_metrics, cfg, outcome, engine_used, obs)
+    let mut outcome = outcome;
+    if aborted.load(std::sync::atomic::Ordering::Relaxed) {
+        // the verdict latched before any worker voted to stop, and the
+        // runner joined every thread: `stopped()` is Some here
+        outcome.stopped = ctl.and_then(|c| c.token.stopped());
+    }
+    finalize(g, part_metrics, cfg, outcome, engine_used, ctl, obs)
 }
 
 /// The [`Engine::DataPar`] path: no transport, no partition, no cost
@@ -274,6 +333,7 @@ fn execute_datapar(
     g: &CsrGraph,
     part_metrics: &PartitionMetrics,
     cfg: &ColoringConfig,
+    ctl: Option<&RunControl>,
     obs: Option<&dyn Observer>,
 ) -> Result<RunResult> {
     let dp_cfg = shm::DataParConfig {
@@ -282,12 +342,17 @@ fn execute_datapar(
         seed: cfg.seed,
         ..shm::DataParConfig::default()
     };
-    let (coloring, dp) =
-        shm::datapar::color_graph_with(pool::global(), g, &dp_cfg, &mut |round, conflicts| {
+    let (coloring, dp, stopped) = shm::datapar::color_graph_cancellable(
+        pool::global(),
+        g,
+        &dp_cfg,
+        ctl.map(|c| &c.token),
+        &mut |round, conflicts| {
             if let Some(o) = obs {
                 o.on_event(&Event::ConflictRound { round, conflicts });
             }
-        })?;
+        },
+    )?;
     let num_colors = coloring.num_colors();
     let per_proc = vec![ProcMetrics {
         conflicts: dp.conflicted,
@@ -300,20 +365,27 @@ fn execute_datapar(
         coloring,
         metrics: DistMetrics::aggregate(&per_proc, dp.wall_secs),
         per_proc,
+        stopped,
     };
-    let mut res = finalize(g, part_metrics, cfg, outcome, Engine::DataPar, obs)?;
+    let mut res = finalize(g, part_metrics, cfg, outcome, Engine::DataPar, ctl, obs)?;
     res.datapar = Some(dp);
     Ok(res)
 }
 
 /// The engine-independent tail of a run: validate, take the trace, emit
 /// the closing events, assemble the [`RunResult`].
+///
+/// A run the engine stopped early (`outcome.stopped`) branches on the
+/// [`StopPolicy`]: `Fail` emits `Done(Err)` and returns the cause's typed
+/// error; `Degrade` completes and repairs the best-so-far coloring through
+/// [`repair_coloring`] and returns it flagged `degraded: true`.
 fn finalize(
     g: &CsrGraph,
     part_metrics: &PartitionMetrics,
     cfg: &ColoringConfig,
     mut outcome: crate::dist::DistOutcome,
     engine_used: Engine,
+    ctl: Option<&RunControl>,
     obs: Option<&dyn Observer>,
 ) -> Result<RunResult> {
     if let Some(o) = obs {
@@ -321,44 +393,75 @@ fn finalize(
             phase: Phase::Validation,
         });
     }
-    // fault-free mode: a drop outside acknowledged teardown is a protocol
-    // bug, surfaced as a typed error (debug builds assert at the drop site)
-    if !cfg.faults.is_active() && outcome.metrics.total_non_teardown_drops > 0 {
-        return Err(err!(
-            "transport dropped {} message(s) outside teardown in fault-free mode \
-             (teardown report by rank: {:?})",
-            outcome.metrics.total_non_teardown_drops,
-            outcome.metrics.dropped_by_rank
-        ));
-    }
-    // post-job validation fast path: the pool-parallel conflict count
-    // covers the common (valid) case; the serial `validate` — which names
-    // the offending edge in its typed error — only runs when it fails
-    let fast_valid = outcome.coloring.len() == g.num_vertices()
-        && outcome.coloring.is_complete()
-        && outcome.coloring.count_conflicts(g) == 0;
-    if !fast_valid {
-        if let Err(e) = outcome.coloring.validate(g) {
-            if cfg.faults.is_active() {
-                // graceful degradation: injected faults left conflicts —
-                // run the localized repair pass before giving up
+    if let Some(cause) = outcome.stopped {
+        match ctl.map(|c| c.policy).unwrap_or_default() {
+            StopPolicy::Fail => {
+                let e = cause.to_error();
+                if let Some(o) = obs {
+                    o.on_event(&Event::Done {
+                        result: Err(DoneError::of(&e)),
+                    });
+                }
+                return Err(e);
+            }
+            StopPolicy::Degrade => {
+                // best-effort result: abort left a partial (and possibly
+                // conflicted) coloring — complete and repair it. The
+                // teardown-drop protocol check is skipped: stopping between
+                // supersteps legitimately abandons in-flight messages.
                 repair_coloring(g, &mut outcome.coloring, cfg.seed, obs)?;
                 outcome.coloring.validate(g).map_err(|e| {
-                    err!("invalid coloring from {} after repair: {e}", cfg.label())
+                    err!(
+                        "invalid degraded coloring from {} after repair: {e}",
+                        cfg.label()
+                    )
                 })?;
-            } else {
-                return Err(err!("invalid coloring from {}: {e}", cfg.label()));
+            }
+        }
+    } else {
+        // fault-free mode: a drop outside acknowledged teardown is a
+        // protocol bug, surfaced as a typed error (debug builds assert at
+        // the drop site)
+        if !cfg.faults.is_active() && outcome.metrics.total_non_teardown_drops > 0 {
+            return Err(err!(
+                "transport dropped {} message(s) outside teardown in fault-free mode \
+                 (teardown report by rank: {:?})",
+                outcome.metrics.total_non_teardown_drops,
+                outcome.metrics.dropped_by_rank
+            ));
+        }
+        // post-job validation fast path: the pool-parallel conflict count
+        // covers the common (valid) case; the serial `validate` — which
+        // names the offending edge in its typed error — only runs when it
+        // fails
+        let fast_valid = outcome.coloring.len() == g.num_vertices()
+            && outcome.coloring.is_complete()
+            && outcome.coloring.count_conflicts(g) == 0;
+        if !fast_valid {
+            if let Err(e) = outcome.coloring.validate(g) {
+                if cfg.faults.is_active() {
+                    // graceful degradation: injected faults left conflicts —
+                    // run the localized repair pass before giving up
+                    repair_coloring(g, &mut outcome.coloring, cfg.seed, obs)?;
+                    outcome.coloring.validate(g).map_err(|e| {
+                        err!("invalid coloring from {} after repair: {e}", cfg.label())
+                    })?;
+                } else {
+                    return Err(err!("invalid coloring from {}: {e}", cfg.label()));
+                }
             }
         }
     }
 
     // every process derives the trace from the same allreduced counts —
-    // take rank 0's instead of cloning it
+    // take rank 0's instead of cloning it (a stopped run's abort snapshots
+    // can legitimately diverge, e.g. a crashed rank rolled back mid-trace)
     debug_assert!(
-        outcome
-            .per_proc
-            .iter()
-            .all(|p| p.recolor_trace == outcome.per_proc[0].recolor_trace),
+        outcome.stopped.is_some()
+            || outcome
+                .per_proc
+                .iter()
+                .all(|p| p.recolor_trace == outcome.per_proc[0].recolor_trace),
         "per-process recolor traces diverged"
     );
     let trace = std::mem::take(&mut outcome.per_proc[0].recolor_trace);
@@ -378,6 +481,7 @@ fn finalize(
         config_label: cfg.label(),
         engine: engine_used,
         datapar: None,
+        degraded: outcome.stopped.is_some(),
     })
 }
 
@@ -386,8 +490,10 @@ fn finalize(
 /// loser, and losers are sequentially first-fit recolored against the
 /// *current* coloring — a sequential repair can therefore not introduce a
 /// new conflict, so one pass normally suffices; the loop is bounded for
-/// defense in depth. Each pass is reported as [`Event::RepairPass`].
-/// Returns the number of repair passes that ran.
+/// defense in depth. Uncolored vertices (an aborted run's unfinished
+/// remainder) are treated as losers and first-fit completed the same way.
+/// Each pass is reported as [`Event::RepairPass`]. Returns the number of
+/// repair passes that ran.
 pub fn repair_coloring(
     g: &CsrGraph,
     coloring: &mut Coloring,
@@ -400,6 +506,10 @@ pub fn repair_coloring(
         let mut losers: Vec<u32> = Vec::new();
         for u in 0..g.num_vertices() as u32 {
             let cu = coloring.colors[u as usize];
+            if cu == UNCOLORED {
+                losers.push(u);
+                continue;
+            }
             for &v in g.neighbors(u) {
                 if v > u && coloring.colors[v as usize] == cu {
                     losers.push(if framework::loses(u, v, seed) { u } else { v });
@@ -538,6 +648,35 @@ impl StepProcess for JobMachine<'_> {
         }
     }
 
+    /// Cancellation harvest: surrender the best-so-far colors from
+    /// whichever sub-machine currently holds them, with the endpoint's
+    /// cumulative accounting — so a stopped run's [`ProcResult`] carries a
+    /// usable partial coloring for the `Degrade` policy instead of the
+    /// engine's empty fallback.
+    fn abort(&mut self, ep: &mut Endpoint) -> Option<ProcResult> {
+        let colors = if let Some(c) = self.colors.take() {
+            c
+        } else if let Some(fw) = self.fw.take() {
+            fw.abort_colors()
+        } else if let Some(rc) = self.rc.take() {
+            rc.abort_colors()
+        } else if let Some(arc) = self.arc.take() {
+            arc.abort_colors()
+        } else {
+            ColorState::uncolored(self.lg)
+        };
+        self.metrics.vtime = ep.clock;
+        self.metrics.sent_msgs = ep.sent_msgs;
+        self.metrics.sent_bytes = ep.sent_bytes;
+        self.metrics.recv_msgs = ep.recv_msgs;
+        self.metrics.dropped_msgs = ep.dropped_msgs;
+        self.metrics.non_teardown_drops = ep.non_teardown_drops;
+        Some(ProcResult {
+            colors: colors.owned_pairs(self.lg),
+            metrics: std::mem::take(&mut self.metrics),
+        })
+    }
+
     fn step(&mut self, ep: &mut Endpoint) -> StepOutcome {
         match self.state {
             JobState::Framework => {
@@ -666,13 +805,21 @@ pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
     let job = Job::from_config(*cfg)?;
     if cfg.engine == Engine::DataPar {
         // no transport, no partition: the datapar path only needs the graph
-        return execute(g, &datapar_partition_metrics(), &[], &CostModel::fixed(), &job, None);
+        return execute(
+            g,
+            &datapar_partition_metrics(),
+            &[],
+            &CostModel::fixed(),
+            &job,
+            None,
+            None,
+        );
     }
     let part = partition::partition(g, cfg.partitioner, cfg.num_procs, cfg.seed);
     let part_metrics = partition::metrics(g, &part);
     let (_, locals) = build_local_graphs(g, &part);
     let cost = cfg.cost_model();
-    execute(g, &part_metrics, &locals, &cost, &job, None)
+    execute(g, &part_metrics, &locals, &cost, &job, None, None)
 }
 
 /// The synthetic (empty) partition record a DataPar run carries —

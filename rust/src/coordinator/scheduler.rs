@@ -1,0 +1,619 @@
+//! Multi-tenant job scheduler: admission control, two priority classes
+//! with a deficit-style fairness rule, per-job deadlines and cooperative
+//! cancellation, and overload shedding.
+//!
+//! The coordinator so far is a library: every caller owns a [`Session`]
+//! and blocks on [`Session::run`]. A *service* multiplexes many tenants
+//! over one machine — one process-wide worker pool, many sessions, jobs
+//! arriving faster than they finish. The [`Scheduler`] is that layer:
+//!
+//! * **Admission control** — a bounded queue ([`SchedulerConfig::queue_cap`]
+//!   across both classes). A full queue rejects the submission with the
+//!   typed [`Error::overloaded`] *before* any work happens; nothing is
+//!   partially run, the caller can retry or shed load.
+//! * **Two priority classes** — [`Priority::Interactive`] (latency-bound
+//!   point jobs) and [`Priority::Sweep`] (throughput batch work). The
+//!   dispatcher serves interactive first but never starves sweeps: after
+//!   [`SchedulerConfig::interactive_quantum`] consecutive interactive
+//!   dispatches it forces one sweep through. An interactive job entering
+//!   at queue position *p* is therefore passed by at most
+//!   `p / quantum + 1` sweep jobs — the provable max-wait bound
+//!   ([`SchedStats::max_sweeps_before_interactive`] tracks the observed
+//!   maximum, `examples/scheduler_soak.rs` asserts the bound).
+//! * **Deadlines and cancellation** — each submission gets a
+//!   [`CancelToken`] carrying the job's wall-clock deadline and/or
+//!   virtual-clock budget, created *at submit time* so queue wait counts
+//!   against the deadline. [`JobHandle::cancel`] latches the same token.
+//!   A job whose token fires while still queued is completed with the
+//!   typed error without ever running; a running job stops at its next
+//!   engine checkpoint (see `util::cancel`), failing typed or — under the
+//!   job's `degrade` knob — returning a best-so-far coloring flagged
+//!   `degraded`.
+//!
+//! One dispatcher thread executes jobs in admission order (within the
+//! fairness rule); each job is internally parallel on the process-wide
+//! worker pool, so serializing jobs keeps the pool unsaturated instead of
+//! thrashing it with competing fan-outs. Shutdown drains the queue: every
+//! still-queued job completes with a typed cancellation error — a waiting
+//! client never hangs.
+
+use super::job::Job;
+use super::pipeline::RunResult;
+use super::session::Session;
+use crate::util::cancel::{CancelToken, RunControl};
+use crate::util::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// The scheduling class of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-bound point jobs; served first, within the fairness rule.
+    #[default]
+    Interactive,
+    /// Throughput batch work (parameter sweeps); never starved — the
+    /// dispatcher forces one through after every quantum of interactive
+    /// dispatches.
+    Sweep,
+}
+
+impl Priority {
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Sweep => "sweep",
+        }
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "interactive" | "i" => Ok(Priority::Interactive),
+            "sweep" | "s" => Ok(Priority::Sweep),
+            other => Err(format!(
+                "unknown priority {other:?} (expected interactive|sweep)"
+            )),
+        }
+    }
+}
+
+/// Scheduler tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Bound on queued (admitted, not yet dispatched) jobs across both
+    /// classes; submissions past it are rejected with
+    /// [`Error::overloaded`].
+    pub queue_cap: usize,
+    /// Consecutive interactive dispatches before one sweep job is forced
+    /// through (values below 1 behave as 1).
+    pub interactive_quantum: u32,
+    /// Start with the dispatcher paused — jobs queue but nothing runs
+    /// until [`Scheduler::resume`]. Tests use this to stage deterministic
+    /// queue states; a service normally starts live.
+    pub start_paused: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            queue_cap: 64,
+            interactive_quantum: 4,
+            start_paused: false,
+        }
+    }
+}
+
+/// Handle to a registered tenant (an index into the scheduler's sessions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantId(usize);
+
+/// Counters the scheduler maintains under its lock; snapshot via
+/// [`Scheduler::stats`].
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    /// Jobs admitted to the queue.
+    pub submitted: u64,
+    /// Submissions rejected by admission control (queue full).
+    pub rejected: u64,
+    /// Jobs that ran to a successful result (including degraded ones).
+    pub completed: u64,
+    /// Jobs completed with an error — run failures, typed stops, and
+    /// queued-cancelled jobs alike.
+    pub failed: u64,
+    /// Jobs whose token fired while still queued — completed with the
+    /// typed error without running.
+    pub cancelled_queued: u64,
+    /// Dispatches per class.
+    pub dispatched_interactive: u64,
+    pub dispatched_sweep: u64,
+    /// The most sweep jobs that overtook any single interactive job while
+    /// it waited — observed fairness; bounded by `pos/quantum + 1`.
+    pub max_sweeps_before_interactive: u64,
+    /// Longest observed queue wait (admission to dispatch).
+    pub max_queue_wait: Duration,
+}
+
+/// One admitted job waiting for dispatch.
+struct QueuedJob {
+    id: u64,
+    tenant: usize,
+    job: Job,
+    ctl: RunControl,
+    handle: Arc<HandleInner>,
+    admitted: Instant,
+    /// Sweep dispatches that happened while this (interactive) job waited.
+    sweeps_passed: u64,
+}
+
+struct HandleInner {
+    slot: Mutex<Option<Result<RunResult>>>,
+    done: Condvar,
+}
+
+impl HandleInner {
+    fn deliver(&self, r: Result<RunResult>) {
+        *self.slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
+        self.done.notify_all();
+    }
+}
+
+/// The client's end of a submission: cancel it, wait for the result.
+pub struct JobHandle {
+    id: u64,
+    token: CancelToken,
+    inner: Arc<HandleInner>,
+}
+
+impl JobHandle {
+    /// The scheduler-assigned job id (monotone per scheduler).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation: queued jobs complete with the typed error
+    /// without running; a running job stops at its next engine checkpoint.
+    pub fn cancel(&self) {
+        self.token.cancel();
+    }
+
+    /// This submission's stop token (e.g. to share with a watchdog).
+    pub fn token(&self) -> &CancelToken {
+        &self.token
+    }
+
+    /// Whether the result is already available (never blocks).
+    pub fn is_done(&self) -> bool {
+        self.inner
+            .slot
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .is_some()
+    }
+
+    /// Block until the job completes and take its result. The scheduler
+    /// completes every admitted job — run, stopped, or drained at
+    /// shutdown — so this cannot hang on a live scheduler.
+    pub fn wait(self) -> Result<RunResult> {
+        let mut slot = self.inner.slot.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self
+                .inner
+                .done
+                .wait(slot)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+struct SchedState {
+    tenants: Vec<Arc<Session>>,
+    interactive: VecDeque<QueuedJob>,
+    sweep: VecDeque<QueuedJob>,
+    /// Consecutive interactive dispatches since the last sweep dispatch.
+    interactive_run: u32,
+    paused: bool,
+    shutdown: bool,
+    next_id: u64,
+    stats: SchedStats,
+}
+
+impl SchedState {
+    fn queued(&self) -> usize {
+        self.interactive.len() + self.sweep.len()
+    }
+}
+
+struct Shared {
+    state: Mutex<SchedState>,
+    /// Signaled on submit, resume and shutdown; the dispatcher waits here.
+    work: Condvar,
+    cfg: SchedulerConfig,
+}
+
+fn lock_state(shared: &Shared) -> MutexGuard<'_, SchedState> {
+    shared.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The multi-tenant service layer over [`Session`]s — see the module docs.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        assert!(cfg.queue_cap >= 1, "queue cap must be at least 1");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(SchedState {
+                tenants: Vec::new(),
+                interactive: VecDeque::new(),
+                sweep: VecDeque::new(),
+                interactive_run: 0,
+                paused: cfg.start_paused,
+                shutdown: false,
+                next_id: 0,
+                stats: SchedStats::default(),
+            }),
+            work: Condvar::new(),
+            cfg,
+        });
+        let worker = Arc::clone(&shared);
+        let dispatcher = std::thread::Builder::new()
+            .name("dgcolor-sched".into())
+            .spawn(move || dispatch_loop(&worker))
+            .expect("spawn scheduler dispatcher");
+        Scheduler {
+            shared,
+            dispatcher: Some(dispatcher),
+        }
+    }
+
+    /// Register a tenant's session; jobs are submitted against the id.
+    pub fn add_tenant(&self, session: Session) -> TenantId {
+        let mut st = lock_state(&self.shared);
+        st.tenants.push(Arc::new(session));
+        TenantId(st.tenants.len() - 1)
+    }
+
+    /// Submit a job for `tenant`. Admission is all-or-nothing: a full
+    /// queue (or an unknown tenant, or a shut-down scheduler) rejects
+    /// with a typed error and nothing runs. The job's deadline/budget
+    /// knobs become the submission's [`CancelToken`] limits, counting
+    /// from *now* — queue wait spends deadline.
+    pub fn submit(&self, tenant: TenantId, job: Job) -> Result<JobHandle> {
+        let mut st = lock_state(&self.shared);
+        if st.shutdown {
+            return Err(Error::cancelled("scheduler is shut down"));
+        }
+        if tenant.0 >= st.tenants.len() {
+            return Err(Error::msg(format!("unknown tenant id {}", tenant.0)));
+        }
+        if st.queued() >= self.shared.cfg.queue_cap {
+            st.stats.rejected += 1;
+            return Err(Error::overloaded(format!(
+                "scheduler queue full ({} of {} slots)",
+                st.queued(),
+                self.shared.cfg.queue_cap
+            )));
+        }
+        let cfg = *job.config();
+        let token = CancelToken::with_limits(
+            cfg.deadline_secs.map(Duration::from_secs_f64),
+            cfg.vclock_budget,
+        );
+        let ctl = RunControl::new(token.clone(), job.stop_policy());
+        let handle = Arc::new(HandleInner {
+            slot: Mutex::new(None),
+            done: Condvar::new(),
+        });
+        let id = st.next_id;
+        st.next_id += 1;
+        st.stats.submitted += 1;
+        let queued = QueuedJob {
+            id,
+            tenant: tenant.0,
+            job,
+            ctl,
+            handle: Arc::clone(&handle),
+            admitted: Instant::now(),
+            sweeps_passed: 0,
+        };
+        match cfg.priority {
+            Priority::Interactive => st.interactive.push_back(queued),
+            Priority::Sweep => st.sweep.push_back(queued),
+        }
+        drop(st);
+        self.shared.work.notify_all();
+        Ok(JobHandle {
+            id,
+            token,
+            inner: handle,
+        })
+    }
+
+    /// Jobs admitted but not yet dispatched.
+    pub fn queue_depth(&self) -> usize {
+        lock_state(&self.shared).queued()
+    }
+
+    /// Snapshot of the scheduler counters.
+    pub fn stats(&self) -> SchedStats {
+        lock_state(&self.shared).stats.clone()
+    }
+
+    /// Start dispatching (no-op unless constructed with `start_paused`).
+    pub fn resume(&self) {
+        lock_state(&self.shared).paused = false;
+        self.shared.work.notify_all();
+    }
+
+    /// Stop accepting work, drain the queue (every still-queued job
+    /// completes with a typed cancellation error), finish the running job
+    /// if any, and join the dispatcher.
+    pub fn shutdown(mut self) -> SchedStats {
+        self.begin_shutdown();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        lock_state(&self.shared).stats.clone()
+    }
+
+    fn begin_shutdown(&self) {
+        let mut st = lock_state(&self.shared);
+        st.shutdown = true;
+        st.paused = false;
+        drop(st);
+        self.shared.work.notify_all();
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.begin_shutdown();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+/// Pick the next job under the deficit rule. Interactive goes first,
+/// except that after `quantum` consecutive interactive dispatches a
+/// waiting sweep job is forced through; a sweep dispatch bumps every
+/// still-waiting interactive job's overtake count (the fairness
+/// statistic). Returns `None` when both queues are empty.
+fn pick_next(st: &mut SchedState, quantum: u32) -> Option<QueuedJob> {
+    let quantum = quantum.max(1);
+    let force_sweep = st.interactive_run >= quantum && !st.sweep.is_empty();
+    let take_interactive = !force_sweep && !st.interactive.is_empty();
+    if take_interactive {
+        let q = st.interactive.pop_front()?;
+        st.interactive_run += 1;
+        st.stats.dispatched_interactive += 1;
+        st.stats.max_sweeps_before_interactive =
+            st.stats.max_sweeps_before_interactive.max(q.sweeps_passed);
+        Some(q)
+    } else if let Some(q) = st.sweep.pop_front() {
+        st.interactive_run = 0;
+        st.stats.dispatched_sweep += 1;
+        for waiting in st.interactive.iter_mut() {
+            waiting.sweeps_passed += 1;
+        }
+        Some(q)
+    } else {
+        None
+    }
+}
+
+fn dispatch_loop(shared: &Shared) {
+    loop {
+        let mut st = lock_state(shared);
+        let next = loop {
+            if st.shutdown {
+                // drain: every still-queued job completes typed, so
+                // clients blocked in `wait` are released
+                let mut drained: Vec<QueuedJob> = st.interactive.drain(..).collect();
+                drained.extend(st.sweep.drain(..));
+                st.stats.failed += drained.len() as u64;
+                drop(st);
+                for q in drained {
+                    q.handle
+                        .deliver(Err(Error::cancelled("scheduler shut down before the job ran")));
+                }
+                return;
+            }
+            if !st.paused {
+                if let Some(q) = pick_next(&mut st, shared.cfg.interactive_quantum) {
+                    break q;
+                }
+            }
+            st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
+        };
+        let wait = next.admitted.elapsed();
+        if wait > st.stats.max_queue_wait {
+            st.stats.max_queue_wait = wait;
+        }
+        let session = Arc::clone(&st.tenants[next.tenant]);
+        drop(st);
+
+        // a token that fired while the job was queued — check(0.0) also
+        // latches a deadline the job spent entirely in the queue —
+        // completes typed without running (a queued job has no
+        // best-so-far to degrade to)
+        let result = match next.ctl.token.check(0.0) {
+            Some(cause) => {
+                let mut st = lock_state(shared);
+                st.stats.cancelled_queued += 1;
+                drop(st);
+                Err(cause.to_error())
+            }
+            None => session.run_with_control(&next.job, &next.ctl, None),
+        };
+        let mut st = lock_state(shared);
+        match &result {
+            Ok(_) => st.stats.completed += 1,
+            Err(_) => st.stats.failed += 1,
+        }
+        drop(st);
+        next.handle.deliver(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::cost::CostModel;
+    use crate::graph::synth;
+    use crate::util::error::ErrorKind;
+
+    fn session() -> Session {
+        Session::new(synth::grid2d(12, 12)).with_cost_model(CostModel::fixed())
+    }
+
+    fn sched(queue_cap: usize, quantum: u32, paused: bool) -> (Scheduler, TenantId) {
+        let s = Scheduler::new(SchedulerConfig {
+            queue_cap,
+            interactive_quantum: quantum,
+            start_paused: paused,
+        });
+        let t = s.add_tenant(session());
+        (s, t)
+    }
+
+    fn job(priority: Priority) -> Job {
+        Job::builder().procs(2).priority(priority).build().unwrap()
+    }
+
+    #[test]
+    fn runs_jobs_and_reports_results() {
+        let (s, t) = sched(8, 4, false);
+        let h1 = s.submit(t, job(Priority::Interactive)).unwrap();
+        let h2 = s.submit(t, job(Priority::Sweep)).unwrap();
+        assert!(h1.id() != h2.id());
+        let r1 = h1.wait().unwrap();
+        let r2 = h2.wait().unwrap();
+        assert_eq!(r1.coloring.colors, r2.coloring.colors, "same job, same bits");
+        assert!(!r1.degraded);
+        let stats = s.shutdown();
+        assert_eq!(stats.submitted, 2);
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn full_queue_rejects_with_typed_overload() {
+        let (s, t) = sched(2, 4, true); // paused: nothing drains
+        let h1 = s.submit(t, job(Priority::Interactive)).unwrap();
+        let h2 = s.submit(t, job(Priority::Sweep)).unwrap();
+        let err = s.submit(t, job(Priority::Interactive)).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Overloaded);
+        assert_eq!(s.queue_depth(), 2, "rejected submission was not queued");
+        assert_eq!(s.stats().rejected, 1);
+        // draining frees slots: the same scheduler accepts work again
+        s.resume();
+        h1.wait().unwrap();
+        h2.wait().unwrap();
+        let h3 = s.submit(t, job(Priority::Interactive)).unwrap();
+        h3.wait().unwrap();
+        let stats = s.shutdown();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
+    fn fairness_forces_a_sweep_after_each_quantum() {
+        let (s, t) = sched(16, 2, true);
+        let sweeps: Vec<_> = (0..2)
+            .map(|_| s.submit(t, job(Priority::Sweep)).unwrap())
+            .collect();
+        let inter: Vec<_> = (0..6)
+            .map(|_| s.submit(t, job(Priority::Interactive)).unwrap())
+            .collect();
+        s.resume();
+        for h in inter {
+            h.wait().unwrap();
+        }
+        for h in sweeps {
+            h.wait().unwrap();
+        }
+        let stats = s.shutdown();
+        assert_eq!(stats.dispatched_interactive, 6);
+        assert_eq!(stats.dispatched_sweep, 2);
+        // quantum 2: the last interactive job (position 5) can be passed
+        // by at most 5/2 + 1 = 3 sweeps; only 2 exist
+        assert!(
+            stats.max_sweeps_before_interactive <= 3,
+            "fairness bound violated: {} sweeps overtook an interactive job",
+            stats.max_sweeps_before_interactive
+        );
+        // paused admission means every job measurably waited
+        assert!(stats.max_queue_wait > Duration::ZERO);
+    }
+
+    #[test]
+    fn cancelling_a_queued_job_completes_it_typed_without_running() {
+        let (s, t) = sched(8, 4, true);
+        let h = s.submit(t, job(Priority::Interactive)).unwrap();
+        h.cancel();
+        assert!(!h.is_done(), "paused scheduler has not delivered yet");
+        s.resume();
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Cancelled);
+        let stats = s.shutdown();
+        assert_eq!(stats.cancelled_queued, 1);
+        assert_eq!(stats.completed, 0);
+    }
+
+    #[test]
+    fn deadline_spent_in_queue_fires_before_running() {
+        let (s, t) = sched(8, 4, true);
+        let j = Job::builder().procs(2).deadline_secs(1e-9).build().unwrap();
+        let h = s.submit(t, j).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        s.resume();
+        let err = h.wait().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::DeadlineExceeded);
+    }
+
+    #[test]
+    fn degrade_policy_returns_flagged_best_effort_under_budget_stop() {
+        let (s, t) = sched(8, 4, false);
+        let j = Job::builder()
+            .procs(2)
+            .vclock_budget(f64::MIN_POSITIVE)
+            .degrade()
+            .build()
+            .unwrap();
+        let h = s.submit(t, j).unwrap();
+        let r = h.wait().unwrap();
+        assert!(r.degraded, "budget stop under Degrade must flag the result");
+        assert!(r.summary_json().contains("\"degraded\":true"));
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_typed() {
+        let (s, t) = sched(8, 4, true);
+        let h1 = s.submit(t, job(Priority::Interactive)).unwrap();
+        let h2 = s.submit(t, job(Priority::Sweep)).unwrap();
+        let stats = s.shutdown(); // never resumed: both still queued
+        assert_eq!(stats.completed, 0);
+        assert_eq!(h1.wait().unwrap_err().kind(), ErrorKind::Cancelled);
+        assert_eq!(h2.wait().unwrap_err().kind(), ErrorKind::Cancelled);
+    }
+
+    #[test]
+    fn unknown_tenant_is_rejected_without_queueing() {
+        let (s, _t) = sched(8, 4, false);
+        let err = s.submit(TenantId(99), job(Priority::Interactive)).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Generic);
+        assert_eq!(s.queue_depth(), 0);
+        let stats = s.shutdown();
+        assert_eq!(stats.submitted, 0);
+        assert_eq!(stats.rejected, 0, "tenant errors are not overload shedding");
+    }
+}

@@ -33,10 +33,11 @@
 //! re-requesting an evicted key recomputes it.
 //! [`Session::clear_cached_partitions`] still drops everything at once.
 
-use super::event::{Event, Observer, Phase};
+use super::event::{DoneError, Event, Observer, Phase};
 use super::job::Job;
 use super::pipeline::{self, RunResult};
 use crate::dist::cost::CostModel;
+use crate::util::cancel::RunControl;
 use crate::dist::proc::{build_local_graphs_parallel, GlobalMap, LocalGraph};
 use crate::dist::Engine;
 use crate::graph::CsrGraph;
@@ -238,29 +239,63 @@ impl Session {
 
     /// Run one job against the session's cached artifacts.
     pub fn run(&self, job: &Job) -> Result<RunResult> {
-        self.run_inner(job, None)
+        self.run_inner(job, None, None)
     }
 
     /// Run one job, streaming [`Event`]s to `obs`.
     pub fn run_observed(&self, job: &Job, obs: &dyn Observer) -> Result<RunResult> {
-        self.run_inner(job, Some(obs))
+        self.run_inner(job, None, Some(obs))
     }
 
-    /// Run a batch of jobs in order, returning every full [`RunResult`].
+    /// Run one job under an explicit [`RunControl`] — the scheduler's
+    /// entry point: the control's token (cancel/deadline/budget) is polled
+    /// at every engine checkpoint, and its policy decides whether a stop
+    /// fails typed or degrades to a best-so-far coloring. An explicit
+    /// control overrides whatever the job's own deadline/budget knobs
+    /// would derive.
+    pub fn run_with_control(
+        &self,
+        job: &Job,
+        ctl: &RunControl,
+        obs: Option<&dyn Observer>,
+    ) -> Result<RunResult> {
+        self.run_inner(job, Some(ctl), obs)
+    }
+
+    /// Run a batch of jobs in order, returning a per-job `Result` — one
+    /// invalid or cancelled job must not discard its completed siblings.
     /// (`sweep::run_sweep` loops [`Session::run`] instead so it can reduce
     /// each result to two scalars without retaining the colorings.)
-    pub fn run_many(&self, jobs: &[Job]) -> Result<Vec<RunResult>> {
+    pub fn run_many(&self, jobs: &[Job]) -> Vec<Result<RunResult>> {
         jobs.iter().map(|j| self.run(j)).collect()
     }
 
-    fn run_inner(&self, job: &Job, obs: Option<&dyn Observer>) -> Result<RunResult> {
+    fn run_inner(
+        &self,
+        job: &Job,
+        ctl: Option<&RunControl>,
+        obs: Option<&dyn Observer>,
+    ) -> Result<RunResult> {
         let cfg = job.config();
+        // jobs carrying their own deadline/budget knobs derive a control
+        // when the caller supplied none; plain jobs keep the untouched
+        // (token-free, bit-for-bit pinned) path
+        let derived = if ctl.is_none() { job.control() } else { None };
+        let ctl = ctl.or(derived.as_ref());
         let res = if cfg.engine == Engine::DataPar {
             // the shared-memory engine has no transport: skip the
             // partition phase (and its cache) and the cost model entirely —
             // a DataPar job must not trigger host calibration
             let part_metrics = pipeline::datapar_partition_metrics();
-            pipeline::execute(&self.graph, &part_metrics, &[], &CostModel::fixed(), job, obs)
+            pipeline::execute(
+                &self.graph,
+                &part_metrics,
+                &[],
+                &CostModel::fixed(),
+                job,
+                ctl,
+                obs,
+            )
         } else {
             if let Some(o) = obs {
                 o.on_event(&Event::PhaseStarted {
@@ -270,14 +305,19 @@ impl Session {
             let part = self.partition(cfg.partitioner, cfg.num_procs, cfg.seed);
             let cost = cfg.fixed_cost.unwrap_or_else(|| self.cost_model());
             let arts = part.locals(&self.graph);
-            pipeline::execute(&self.graph, &part.metrics, &arts.locals, &cost, job, obs)
+            pipeline::execute(&self.graph, &part.metrics, &arts.locals, &cost, job, ctl, obs)
         };
         if let (Some(o), Err(e)) = (obs, &res) {
             // A failed job still terminates its event stream: observers
-            // watching for `Done` never hang on an error path.
-            o.on_event(&Event::Done {
-                result: Err(e.to_string()),
-            });
+            // watching for `Done` never hang on an error path. The
+            // pipeline's stop path already emitted its own `Done(Err)`;
+            // this covers failures before/outside `finalize` — the kinds
+            // differ, so double emission cannot occur.
+            if !e.is_stop() {
+                o.on_event(&Event::Done {
+                    result: Err(DoneError::of(e)),
+                });
+            }
         }
         res
     }
@@ -393,14 +433,45 @@ mod tests {
             Job::on(&s).procs(2).speed().build().unwrap(),
             Job::on(&s).procs(4).quality().build().unwrap(),
         ];
-        let batch = s.run_many(&jobs).unwrap();
+        let batch = s.run_many(&jobs);
         assert_eq!(batch.len(), 2);
         for (job, r) in jobs.iter().zip(&batch) {
+            let r = r.as_ref().expect("both jobs are valid");
             let single = s.run(job).unwrap();
             assert_eq!(single.coloring.colors, r.coloring.colors);
             assert_eq!(single.recolor_trace, r.recolor_trace);
         }
         // speed@2 and quality@4 use different keys; reruns hit the cache
         assert_eq!(s.partition_calls(), 2);
+    }
+
+    #[test]
+    fn run_many_keeps_siblings_of_a_stopped_job() {
+        use crate::util::cancel::{CancelToken, StopPolicy};
+        use crate::util::error::ErrorKind;
+        let s = Session::new(synth::grid2d(12, 12)).with_cost_model(CostModel::fixed());
+        let jobs = [
+            Job::on(&s).procs(2).build().unwrap(),
+            // a pre-exhausted virtual budget stops this one at its first
+            // checkpoint, deterministically
+            Job::on(&s).procs(2).vclock_budget(f64::MIN_POSITIVE).build().unwrap(),
+            Job::on(&s).procs(3).build().unwrap(),
+        ];
+        let batch = s.run_many(&jobs);
+        assert_eq!(batch.len(), 3);
+        assert!(batch[0].is_ok(), "sibling before the stopped job survives");
+        assert_eq!(
+            batch[1].as_ref().unwrap_err().kind(),
+            ErrorKind::DeadlineExceeded
+        );
+        assert!(batch[2].is_ok(), "sibling after the stopped job survives");
+        // the same stop under Degrade yields a valid flagged coloring
+        let ctl = RunControl::new(
+            CancelToken::with_limits(None, Some(f64::MIN_POSITIVE)),
+            StopPolicy::Degrade,
+        );
+        let r = s.run_with_control(&jobs[0], &ctl, None).unwrap();
+        assert!(r.degraded);
+        r.coloring.validate(s.graph()).unwrap();
     }
 }

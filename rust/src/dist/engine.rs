@@ -47,11 +47,12 @@ use crate::dist::proc::LocalGraph;
 use crate::dist::runner::ProcResult;
 use crate::dist::{DistMetrics, DistOutcome};
 use crate::err;
+use crate::util::cancel::{CancelToken, StopCause};
 use crate::util::error::{Error, Result};
 use crate::util::pool;
 use crate::util::timer::Timer;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
 
 /// What one engine step of a process produced.
@@ -86,6 +87,19 @@ pub trait StepProcess: Send {
     /// invariant alone.
     fn poll_ready(&mut self, _ep: &mut Endpoint) -> bool {
         true
+    }
+
+    /// Harvest the best-so-far result from a machine the engine is about
+    /// to abandon because its run's [`CancelToken`] fired. Called exactly
+    /// once, after the uniform stop decision, on machines that have not
+    /// reached [`StepOutcome::Done`]; the machine may be anywhere between
+    /// two steps. Return `Some` with whatever owned colors exist right now
+    /// (possibly partial or conflicted — the pipeline's repair pass
+    /// finishes the job under the `Degrade` policy), or `None` if the
+    /// machine has nothing to offer; the engine then reports the rank with
+    /// empty colors and endpoint-level accounting only.
+    fn abort(&mut self, _ep: &mut Endpoint) -> Option<ProcResult> {
+        None
     }
 }
 
@@ -140,6 +154,26 @@ struct Slot<M> {
     out: Option<ProcResult>,
 }
 
+// StopCause on an atomic: 0 = live, else cause + 1 (uniform across workers
+// because the writer stores strictly before barrier 1 of the step at which
+// readers observe it).
+fn cause_to_u8(c: StopCause) -> u8 {
+    match c {
+        StopCause::Cancelled => 1,
+        StopCause::DeadlineExceeded => 2,
+        StopCause::BudgetExhausted => 3,
+    }
+}
+
+fn cause_from_u8(v: u8) -> Option<StopCause> {
+    match v {
+        1 => Some(StopCause::Cancelled),
+        2 => Some(StopCause::DeadlineExceeded),
+        3 => Some(StopCause::BudgetExhausted),
+        _ => None,
+    }
+}
+
 /// Run one step machine per local graph to completion on the global worker
 /// pool and merge the results — the engine counterpart of
 /// [`run_distributed_with`](crate::dist::runner::run_distributed_with).
@@ -149,6 +183,37 @@ pub fn run_steps<'a, M, F>(
     num_vertices: usize,
     locals: &'a [LocalGraph],
     net: NetworkModel,
+    make: F,
+) -> DistOutcome
+where
+    M: StepProcess + 'a,
+    F: Fn(&'a LocalGraph) -> M,
+{
+    run_steps_cancellable(num_vertices, locals, net, None, make)
+}
+
+/// [`run_steps`] with an optional [`CancelToken`]. The cancellation
+/// protocol keeps the stop decision uniform without adding a barrier:
+///
+/// * while stepping (when a token is attached), every worker folds the
+///   stepped endpoints' virtual clocks into a shared monotone max;
+/// * worker 0, after stepping its shard and **before barrier 1**, polls the
+///   token against that max and stores any verdict;
+/// * in the window between the barriers — where nobody writes — all
+///   workers read the same verdict along with `done`/`failed`, so a token
+///   raised during engine step *k* is applied by every worker at step
+///   *k+1*, never by some workers earlier than others.
+///
+/// On a cancel stop, unfinished machines are drained via
+/// [`StepProcess::abort`] on the calling thread in rank order and the
+/// outcome carries `stopped: Some(cause)` with whatever colors the aborts
+/// harvested. Without a token the stepping loop is byte-for-byte the
+/// uncancellable one (the clock fold and the poll are both gated).
+pub fn run_steps_cancellable<'a, M, F>(
+    num_vertices: usize,
+    locals: &'a [LocalGraph],
+    net: NetworkModel,
+    cancel: Option<&CancelToken>,
     make: F,
 ) -> DistOutcome
 where
@@ -175,6 +240,10 @@ where
     let barrier = Barrier::new(shards);
     let done = AtomicUsize::new(0);
     let failed = AtomicBool::new(false);
+    // f64 bits of the max virtual clock seen so far — monotone max is
+    // order-preserving on the bit patterns of non-negative floats
+    let max_clock = AtomicU64::new(0);
+    let cancel_cause = AtomicU8::new(0);
     pool.scoped_run(shards, &|w| {
         loop {
             // one engine step: this worker's shard of live processes
@@ -188,6 +257,9 @@ where
                         if let StepOutcome::Done(r) = slot.machine.step(&mut slot.ep) {
                             slot.out = Some(r);
                             newly += 1;
+                        }
+                        if cancel.is_some() {
+                            max_clock.fetch_max(slot.ep.clock.to_bits(), Ordering::Relaxed);
                         }
                     }
                     i += shards;
@@ -204,9 +276,22 @@ where
                     Some(p)
                 }
             };
+            // the cancel poll: one worker, before barrier 1, so the verdict
+            // is either visible to every worker in the next window or to
+            // none — the barrier makes the store happen-before all reads
+            if w == 0 && cancel_cause.load(Ordering::Relaxed) == 0 {
+                if let Some(tok) = cancel {
+                    let vtime = f64::from_bits(max_clock.load(Ordering::Relaxed));
+                    if let Some(c) = tok.check(vtime) {
+                        cancel_cause.store(cause_to_u8(c), Ordering::Relaxed);
+                    }
+                }
+            }
             // barrier 1: this step's sends and `done` updates are visible
             barrier.wait();
-            let stop = failed.load(Ordering::SeqCst) || done.load(Ordering::SeqCst) == procs;
+            let stop = failed.load(Ordering::SeqCst)
+                || done.load(Ordering::SeqCst) == procs
+                || cancel_cause.load(Ordering::Relaxed) != 0;
             // barrier 2: everyone has read the stop decision before any
             // worker can mutate `done` again — the decision is uniform
             barrier.wait();
@@ -219,11 +304,41 @@ where
         }
     });
 
+    // a run that finished everywhere in the same step as the verdict is
+    // simply finished — cancellation only applies to unfinished machines
+    let stopped = if done.load(Ordering::SeqCst) == procs {
+        None
+    } else {
+        cause_from_u8(cancel_cause.load(Ordering::Relaxed))
+    };
+
     let mut coloring = Coloring::uncolored(num_vertices);
     let mut per_proc = Vec::with_capacity(procs);
     for slot in slots {
-        let slot = slot.into_inner().unwrap();
-        let mut r = slot.out.expect("step machine ended without finishing");
+        let mut slot = slot.into_inner().unwrap();
+        if stopped.is_some() {
+            // in-flight messages die with the run on every rank, finished
+            // or not — an aborted peer's sends must not count as drops
+            slot.ep.teardown = true;
+        }
+        let mut r = match (slot.out.take(), stopped) {
+            (Some(r), _) => r,
+            (None, Some(_)) => {
+                // deterministic rank-order drain on the calling thread
+                let harvested = slot.machine.abort(&mut slot.ep);
+                harvested.unwrap_or_else(|| ProcResult {
+                    colors: Vec::new(),
+                    metrics: crate::dist::ProcMetrics {
+                        vtime: slot.ep.clock,
+                        sent_msgs: slot.ep.sent_msgs,
+                        sent_bytes: slot.ep.sent_bytes,
+                        recv_msgs: slot.ep.recv_msgs,
+                        ..Default::default()
+                    },
+                })
+            }
+            (None, None) => panic!("step machine ended without finishing"),
+        };
         r.metrics.rank = slot.ep.rank;
         for (gid, c) in r.colors {
             coloring.set(gid, c);
@@ -235,6 +350,7 @@ where
         coloring,
         metrics,
         per_proc,
+        stopped,
     }
 }
 
@@ -282,11 +398,37 @@ where
     M: StepProcess + Clone + 'a,
     F: Fn(&'a LocalGraph) -> M,
 {
+    run_steps_supervised_cancellable(num_vertices, locals, net, plan, obs, None, make)
+}
+
+/// [`run_steps_supervised`] with an optional [`CancelToken`], polled once
+/// at the top of every engine step against the max virtual clock — the
+/// supervisor is single-threaded, so the decision is trivially uniform and
+/// (for virtual-budget tokens) fully deterministic: cancelling a faulted
+/// run, even mid-recovery, replays bit-for-bit under the same seed. On a
+/// verdict the unfinished machines (including a crashed rank's stale or
+/// checkpointed machine) are drained via [`StepProcess::abort`] in rank
+/// order and the outcome carries `stopped: Some(cause)`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_steps_supervised_cancellable<'a, M, F>(
+    num_vertices: usize,
+    locals: &'a [LocalGraph],
+    net: NetworkModel,
+    plan: FaultPlan,
+    obs: Option<&dyn Observer>,
+    cancel: Option<&CancelToken>,
+    make: F,
+) -> Result<DistOutcome>
+where
+    M: StepProcess + Clone + 'a,
+    F: Fn(&'a LocalGraph) -> M,
+{
     let wall = Timer::start();
     let procs = locals.len();
     let mut eps = comm::network_faulted(procs, net, plan);
     let mut machines: Vec<M> = locals.iter().map(&make).collect();
     let mut outs: Vec<Option<ProcResult>> = (0..procs).map(|_| None).collect();
+    let mut stopped: Option<StopCause> = None;
 
     let crash = plan.crash.filter(|c| (c.rank as usize) < procs);
     let mut crashed = false;
@@ -309,6 +451,30 @@ where
                  processes finished) — livelock",
                 n_done
             ));
+        }
+        if let Some(tok) = cancel {
+            let vtime = eps.iter().map(|e| e.clock).fold(0.0f64, f64::max);
+            if let Some(cause) = tok.check(vtime) {
+                // uniform by construction (one thread decides); drain the
+                // unfinished machines in rank order for determinism
+                stopped = Some(cause);
+                for r in 0..procs {
+                    if outs[r].is_none() {
+                        let harvested = machines[r].abort(&mut eps[r]);
+                        outs[r] = Some(harvested.unwrap_or_else(|| ProcResult {
+                            colors: Vec::new(),
+                            metrics: crate::dist::ProcMetrics {
+                                vtime: eps[r].clock,
+                                sent_msgs: eps[r].sent_msgs,
+                                sent_bytes: eps[r].sent_bytes,
+                                recv_msgs: eps[r].recv_msgs,
+                                ..Default::default()
+                            },
+                        }));
+                    }
+                }
+                break;
+            }
         }
         let mut progressed = false;
         for r in 0..procs {
@@ -404,6 +570,7 @@ where
         coloring,
         metrics,
         per_proc,
+        stopped,
     })
 }
 
@@ -656,6 +823,151 @@ mod tests {
             assert_eq!(x.sent_msgs, y.sent_msgs);
             assert_eq!(x.vtime.to_bits(), y.vtime.to_bits());
         }
+    }
+
+    /// An endless machine advancing its virtual clock by exactly 1.0 per
+    /// engine step — the cancellation-latency probe. `abort` reports how
+    /// many steps actually ran (in `metrics.rounds`).
+    #[derive(Clone)]
+    struct Ticker;
+
+    impl StepProcess for Ticker {
+        fn step(&mut self, ep: &mut Endpoint) -> StepOutcome {
+            ep.clock += 1.0;
+            StepOutcome::Running
+        }
+
+        fn abort(&mut self, ep: &mut Endpoint) -> Option<ProcResult> {
+            Some(ProcResult {
+                colors: Vec::new(),
+                metrics: ProcMetrics {
+                    rounds: ep.clock as u32,
+                    vtime: ep.clock,
+                    ..Default::default()
+                },
+            })
+        }
+    }
+
+    #[test]
+    fn lockstep_vbudget_stop_is_observed_one_step_after_crossing() {
+        use crate::util::cancel::CancelToken;
+        for procs in [1usize, 4, 9] {
+            let (g, locals) = toy_fleet(procs);
+            let tok = CancelToken::with_limits(None, Some(5.0));
+            let out = run_steps_cancellable(
+                g.num_vertices(),
+                &locals,
+                NetworkModel::ideal(),
+                Some(&tok),
+                |_| Ticker,
+            );
+            assert_eq!(out.stopped, Some(StopCause::BudgetExhausted));
+            // the clock first exceeds 5.0 during step 6; the verdict lands
+            // in that step's decision window, so exactly 6 steps ran —
+            // bounded by one engine step past the crossing
+            for m in &out.per_proc {
+                assert_eq!(m.rounds, 6, "p{} stepped past the bound", m.rank);
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_pre_cancelled_token_stops_after_one_step() {
+        let (g, locals) = toy_fleet(4);
+        let tok = crate::util::cancel::CancelToken::new();
+        tok.cancel(); // raised "at step 0"
+        let out = run_steps_cancellable(
+            g.num_vertices(),
+            &locals,
+            NetworkModel::ideal(),
+            Some(&tok),
+            |_| Ticker,
+        );
+        assert_eq!(out.stopped, Some(StopCause::Cancelled));
+        for m in &out.per_proc {
+            assert_eq!(m.rounds, 1, "observed at step 1, not later");
+        }
+    }
+
+    #[test]
+    fn lockstep_live_token_changes_nothing() {
+        let procs = 4usize;
+        let (g, locals) = toy_fleet(procs);
+        let base = run_steps(g.num_vertices(), &locals, NetworkModel::default(), |lg| {
+            toy_of(lg, procs)
+        });
+        let tok = crate::util::cancel::CancelToken::new();
+        let ctl = run_steps_cancellable(
+            g.num_vertices(),
+            &locals,
+            NetworkModel::default(),
+            Some(&tok),
+            |lg| toy_of(lg, procs),
+        );
+        assert_eq!(ctl.stopped, None);
+        for (a, b) in base.per_proc.iter().zip(ctl.per_proc.iter()) {
+            assert_eq!(a.sent_msgs, b.sent_msgs);
+            assert_eq!(a.vtime.to_bits(), b.vtime.to_bits());
+        }
+    }
+
+    #[test]
+    fn supervised_vbudget_stop_is_deterministic_and_bounded() {
+        use crate::util::cancel::CancelToken;
+        let (g, locals) = toy_fleet(4);
+        let run = || {
+            let tok = CancelToken::with_limits(None, Some(5.0));
+            run_steps_supervised_cancellable(
+                g.num_vertices(),
+                &locals,
+                NetworkModel::ideal(),
+                FaultPlan::none(),
+                None,
+                Some(&tok),
+                |_| Ticker,
+            )
+            .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.stopped, Some(StopCause::BudgetExhausted));
+        for (x, y) in a.per_proc.iter().zip(b.per_proc.iter()) {
+            // loop-top poll: clocks reach 6.0 after step 6, the 7th
+            // iteration's poll aborts — 6 steps, reproducibly
+            assert_eq!(x.rounds, 6);
+            assert_eq!(x.rounds, y.rounds);
+            assert_eq!(x.vtime.to_bits(), y.vtime.to_bits());
+        }
+    }
+
+    #[test]
+    fn supervised_cancel_mid_crash_recovery_still_drains_cleanly() {
+        use crate::dist::fault::Crash;
+        use crate::util::cancel::CancelToken;
+        let (g, locals) = toy_fleet(4);
+        let plan = FaultPlan {
+            seed: 3,
+            crash: Some(Crash {
+                rank: 1,
+                step: 2,
+                down_steps: 1_000, // still down when the budget fires
+            }),
+            ..FaultPlan::none()
+        };
+        let tok = CancelToken::with_limits(None, Some(4.0));
+        let out = run_steps_supervised_cancellable(
+            g.num_vertices(),
+            &locals,
+            NetworkModel::ideal(),
+            plan,
+            None,
+            Some(&tok),
+            |_| Ticker,
+        )
+        .unwrap();
+        assert_eq!(out.stopped, Some(StopCause::BudgetExhausted));
+        assert_eq!(out.per_proc.len(), 4, "every rank reported, downed one included");
     }
 
     #[test]

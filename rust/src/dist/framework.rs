@@ -138,6 +138,35 @@ pub fn color_process(
     order_override: Option<Vec<u32>>,
     obs: Option<&dyn Observer>,
 ) -> ProcMetrics {
+    color_process_cancellable(ep, lg, fw, cost, state, to_color, order_override, None, obs).0
+}
+
+/// [`color_process`] with the thread runner's cancellation hook: when a
+/// [`CancelToken`] is attached, every process votes at the top of each
+/// conflict-resolution round (`check` against its own virtual clock) and an
+/// `allreduce_max` of the votes makes the stop decision **uniform** — no
+/// rank ever stops sending while a peer still waits on its messages. The
+/// coloring is then left as the last completed round's state (partial on
+/// round 1, conflicted afterwards; the pipeline repairs it under the
+/// `Degrade` policy) and the latched cause is returned.
+///
+/// The consensus collective advances the virtual clock, so a token-carrying
+/// run models slightly more communication than a bare one — only the
+/// `cancel: None` path (what [`color_process`] takes) is bit-for-bit
+/// pinned against the BSP engine.
+#[allow(clippy::too_many_arguments)]
+pub fn color_process_cancellable(
+    ep: &mut Endpoint,
+    lg: &LocalGraph,
+    fw: &FrameworkConfig,
+    cost: &CostModel,
+    state: &mut ColorState,
+    to_color: Vec<u32>,
+    order_override: Option<Vec<u32>>,
+    cancel: Option<&crate::util::cancel::CancelToken>,
+    obs: Option<&dyn Observer>,
+) -> (ProcMetrics, Option<crate::util::cancel::StopCause>) {
+    let mut stopped = None;
     let mut metrics = ProcMetrics {
         rank: ep.rank,
         ..Default::default()
@@ -182,6 +211,18 @@ pub fn color_process(
     let mut losers: Vec<u32> = Vec::new();
 
     loop {
+        if let Some(tok) = cancel {
+            // per-round consensus: everyone votes, the max decides, so the
+            // break below happens on every rank at the same round boundary
+            let vote = tok.check(ep.clock).is_some() as u64;
+            let agreed = comm_timed(ep, &mut metrics, |ep| ep.allreduce_max_u64(vote));
+            if agreed != 0 {
+                // the voter latched the token before contributing, and the
+                // collective's channel sync publishes the latch to peers
+                stopped = tok.stopped();
+                break;
+            }
+        }
         round += 1;
         let my_steps = pending.len().div_ceil(ss) as u64;
         // every process learns every step count, so pairs can skip the
@@ -329,7 +370,7 @@ pub fn color_process(
 
     metrics.rounds += round;
     metrics.phases.add("color", ep.clock - t_start);
-    metrics
+    (metrics, stopped)
 }
 
 /// Worst-case safety valve: processes take turns (rank order) recoloring
@@ -519,6 +560,14 @@ impl<'a> FrameworkStep<'a> {
     pub fn into_parts(self) -> (ColorState, ProcMetrics) {
         assert!(self.is_finished(), "framework step machine still running");
         (self.colors, self.metrics)
+    }
+
+    /// Best-so-far harvest for a cancelled run: the color state exactly as
+    /// the machine last left it — complete if finished, otherwise partially
+    /// colored and possibly conflicted on cut edges (the pipeline's repair
+    /// pass finishes the job). No finished assertion, by design.
+    pub fn abort_colors(self) -> ColorState {
+        self.colors
     }
 
     fn finish(&mut self, ep: &mut Endpoint) {

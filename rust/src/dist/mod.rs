@@ -28,7 +28,10 @@ pub mod runner;
 
 pub use comm::{network, network_faulted, Endpoint, MsgKind};
 pub use cost::{CostModel, NetworkModel};
-pub use engine::{run_steps, run_steps_supervised, Engine, StepOutcome, StepProcess};
+pub use engine::{
+    run_steps, run_steps_cancellable, run_steps_supervised, run_steps_supervised_cancellable,
+    Engine, StepOutcome, StepProcess,
+};
 pub use fault::{Crash, FaultPlan};
 pub use runner::{run_distributed, run_distributed_with, DistOutcome, ProcResult};
 

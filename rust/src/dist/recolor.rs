@@ -503,6 +503,14 @@ impl<'a> SyncRcStep<'a> {
         (self.colors, self.trace, self.m)
     }
 
+    /// Best-so-far harvest for a cancelled run: the color state as the
+    /// machine last left it. Sync recoloring is conflict-free by
+    /// construction, so this is always a *valid* coloring — mid-iteration
+    /// it is simply a mix of old and new classes. No finished assertion.
+    pub fn abort_colors(self) -> ColorState {
+        self.colors
+    }
+
     /// Whether the next [`step_once`](Self::step_once) slice can run
     /// without a blocking-receive miss (see
     /// [`FrameworkStep::ready`](crate::dist::framework::FrameworkStep::ready)).
@@ -1062,6 +1070,19 @@ impl<'a> AsyncRcStep<'a> {
             self.trace,
             self.m,
         )
+    }
+
+    /// Best-so-far harvest for a cancelled run. Between reruns the colors
+    /// are held here (a valid coloring); mid-rerun they live inside the
+    /// embedded [`FrameworkStep`] and may be partially uncolored or
+    /// conflicted — the pipeline's repair pass finishes the job. No
+    /// finished assertion.
+    pub fn abort_colors(self) -> ColorState {
+        match (self.colors, self.inner) {
+            (Some(c), _) => c,
+            (None, Some(fw)) => fw.abort_colors(),
+            (None, None) => unreachable!("colors are always held here or in the rerun"),
+        }
     }
 
     /// Whether the next [`step_once`](Self::step_once) slice can run

@@ -14,6 +14,7 @@ use crate::dist::proc::{build_local_graphs, LocalGraph};
 use crate::dist::{DistMetrics, ProcMetrics};
 use crate::graph::CsrGraph;
 use crate::partition::Partition;
+use crate::util::cancel::StopCause;
 use crate::util::error::{Error, Result};
 use crate::util::timer::Timer;
 
@@ -29,6 +30,13 @@ pub struct DistOutcome {
     pub coloring: Coloring,
     pub metrics: DistMetrics,
     pub per_proc: Vec<ProcMetrics>,
+    /// `Some(cause)` when the run was stopped early by its
+    /// [`CancelToken`](crate::util::cancel::CancelToken) — the coloring is
+    /// then whatever the abort drain harvested (possibly partial or
+    /// conflicted) and the pipeline decides between failing with the
+    /// cause's typed error and repairing to a degraded-but-valid result.
+    /// `None` for every run that finished on its own.
+    pub stopped: Option<StopCause>,
 }
 
 /// Run `f` once per partition part on its own thread and merge the results.
@@ -116,6 +124,7 @@ where
         coloring,
         metrics,
         per_proc,
+        stopped: None,
     })
 }
 

@@ -102,6 +102,8 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
              \u{20}                    [--stop-eps F] [--partitioner block|bfs] [--seed S]\n\
              \u{20}                    [--ideal-net] [--engine auto|threads|bsp|datapar] [--json]\n\
              \u{20}                    [--faults seed=S[,delay=P][,reorder=P][,crash=R@S[+D]]]\n\
+             \u{20}                    [--deadline SECS] [--vbudget VSECS] [--degrade]\n\
+             \u{20}                    [--priority interactive|sweep]\n\
              \n\
              Distributed coloring with optional iterative recoloring.\n\
              --stop-eps F  stop recoloring once an iteration improves the color\n\
@@ -124,7 +126,20 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
              \u{20}             not with --engine threads or datapar; conflicts left\n\
              \u{20}             by faults are repaired after Done\n\
              --json        stream one JSON event per phase/superstep/iteration\n\
-             \u{20}             (plus a final result record) instead of the table",
+             \u{20}             (plus a final result record) instead of the table\n\
+             \n\
+             Service knobs (the scheduler uses the same four):\n\
+             --deadline S  wall-clock deadline in seconds; the run stops at its\n\
+             \u{20}             next engine checkpoint once it passes (any engine)\n\
+             --vbudget V   virtual-clock budget in modeled seconds — the\n\
+             \u{20}             deterministic stop knob: the same job stops at the\n\
+             \u{20}             same checkpoint every run; transport engines only\n\
+             \u{20}             (datapar has no virtual clock and rejects it)\n\
+             --degrade     on a stop, return the best-so-far coloring repaired\n\
+             \u{20}             to validity and flagged degraded, instead of the\n\
+             \u{20}             typed cancelled/deadline-exceeded error\n\
+             --priority C  scheduling class (interactive|sweep) under the\n\
+             \u{20}             library Scheduler; a direct CLI run ignores it",
         ),
         "kernel" => Some(
             "usage: dgcolor kernel --graph <spec> [--selection ff|r<X>] [--seed S]\n\
@@ -150,7 +165,8 @@ fn print_help() {
          \u{20}              --superstep N --async --recolor N --schedule nd|ni|rv|rand|ND-RAND%x\n\
          \u{20}              --scheme base|piggyback --arc --partitioner block|bfs --seed S\n\
          \u{20}              --stop-eps F (early-stop recoloring) --engine auto|threads|bsp|datapar\n\
-         \u{20}              --faults SPEC (seeded fault injection) --json (stream events)"
+         \u{20}              --faults SPEC (seeded fault injection) --json (stream events)\n\
+         \u{20}              --deadline S --vbudget V --degrade --priority interactive|sweep"
     );
 }
 
@@ -339,6 +355,9 @@ fn cmd_color(args: &Args) -> Result<()> {
     );
     tab.row(&["processes", &cfg.num_procs.to_string()]);
     tab.row(&["engine", r.engine.name()]);
+    if r.degraded {
+        tab.row(&["degraded", "yes (stopped early, best-so-far repaired)"]);
+    }
     tab.row(&["colors", &r.num_colors.to_string()]);
     tab.row(&["initial colors", &r.initial_colors.to_string()]);
     tab.row(&["recolor trace", &format!("{:?}", r.recolor_trace)]);
@@ -425,5 +444,20 @@ mod tests {
         assert!(u.contains("not with --engine threads or datapar"));
         assert!(u.contains("--engine auto|threads|bsp|datapar"));
         assert!(u.contains("rejects --recolor/--arc and --faults"));
+    }
+
+    #[test]
+    fn color_usage_documents_service_knobs() {
+        let u = usage_for("color").unwrap();
+        // the help matrix for the service layer: all four knobs, the
+        // engine restriction on the virtual budget, and both stop
+        // behaviors (typed error vs degraded result)
+        assert!(u.contains("--deadline SECS"));
+        assert!(u.contains("--vbudget VSECS"));
+        assert!(u.contains("--degrade"));
+        assert!(u.contains("--priority interactive|sweep"));
+        assert!(u.contains("datapar has no virtual clock"));
+        assert!(u.contains("deadline-exceeded"));
+        assert!(u.contains("flagged degraded"));
     }
 }

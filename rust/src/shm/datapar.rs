@@ -155,6 +155,27 @@ pub fn color_graph_with(
     cfg: &DataParConfig,
     on_round: &mut dyn FnMut(u32, u64),
 ) -> Result<(Coloring, DataParMetrics)> {
+    let (c, m, _) = color_graph_cancellable(pool, g, cfg, None, on_round)?;
+    Ok((c, m))
+}
+
+/// [`color_graph_with`] with an optional [`CancelToken`], polled once at
+/// the top of every speculate/detect/resolve round — DataPar's natural
+/// checkpoint, so a token raised during round *k* is observed before round
+/// *k+1* starts. There is no virtual clock here (the poll passes `0.0`, so
+/// virtual-clock budgets never fire — job validation rejects that
+/// combination); wall deadlines and external cancels do. On a stop the
+/// partial coloring is returned as-is — complete but possibly conflicted
+/// after round 1, all-uncolored if the token fired before it — together
+/// with `Some(cause)`; the pipeline repairs it under the `Degrade` policy.
+pub fn color_graph_cancellable(
+    pool: &WorkerPool,
+    g: &CsrGraph,
+    cfg: &DataParConfig,
+    cancel: Option<&crate::util::cancel::CancelToken>,
+    on_round: &mut dyn FnMut(u32, u64),
+) -> Result<(Coloring, DataParMetrics, Option<crate::util::cancel::StopCause>)> {
+    let mut stopped = None;
     let n = g.num_vertices();
     let cs = cfg.chunk_size.max(1);
     let nchunks = n.div_ceil(cs);
@@ -164,7 +185,7 @@ pub fn color_graph_with(
         ..DataParMetrics::default()
     };
     if n == 0 {
-        return Ok((Coloring::uncolored(0), metrics));
+        return Ok((Coloring::uncolored(0), metrics, None));
     }
     let wall = Timer::start();
     let shards = pool.workers().min(nchunks).max(1);
@@ -187,6 +208,15 @@ pub fn color_graph_with(
 
     let mut round: u32 = 0;
     loop {
+        if let Some(tok) = cancel {
+            // round-top checkpoint: single-threaded here (between
+            // scoped_run fan-outs), so the stop decision is trivially
+            // uniform and no worker is left mid-round
+            if let Some(cause) = tok.check(0.0) {
+                stopped = Some(cause);
+                break;
+            }
+        }
         round += 1;
         if cfg.max_rounds > 0 && round > cfg.max_rounds {
             crate::bail!(
@@ -308,7 +338,7 @@ pub fn color_graph_with(
 
     metrics.rounds = round;
     metrics.wall_secs = wall.secs();
-    Ok((Coloring::from_vec(colors), metrics))
+    Ok((Coloring::from_vec(colors), metrics, stopped))
 }
 
 #[cfg(test)]
@@ -434,6 +464,29 @@ mod tests {
             c.num_colors(),
             g.max_degree() + 1
         );
+    }
+
+    #[test]
+    fn cancelled_token_stops_at_the_round_boundary() {
+        use crate::util::cancel::{CancelToken, StopCause};
+        let g = synth::path(64);
+        let cfg = DataParConfig::default();
+        // pre-cancelled: observed before round 1, nothing speculated
+        let tok = CancelToken::new();
+        tok.cancel();
+        let (c, m, stopped) =
+            color_graph_cancellable(pool::global(), &g, &cfg, Some(&tok), &mut |_, _| {}).unwrap();
+        assert_eq!(stopped, Some(StopCause::Cancelled));
+        assert_eq!(m.rounds, 0);
+        assert!(c.colors.iter().all(|&x| x == UNCOLORED));
+        // live token: bit-for-bit the uncancellable path, stop is None
+        let live = CancelToken::new();
+        let (c2, m2, s2) =
+            color_graph_cancellable(pool::global(), &g, &cfg, Some(&live), &mut |_, _| {}).unwrap();
+        let (c3, m3) = color_graph(&g, &cfg).unwrap();
+        assert_eq!(s2, None);
+        assert_eq!(c2.colors, c3.colors);
+        assert_eq!(m2.rounds, m3.rounds);
     }
 
     #[test]

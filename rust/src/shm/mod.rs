@@ -21,4 +21,7 @@
 
 pub mod datapar;
 
-pub use datapar::{color_graph, color_graph_on, DataParConfig, DataParMetrics, DataParRound};
+pub use datapar::{
+    color_graph, color_graph_cancellable, color_graph_on, DataParConfig, DataParMetrics,
+    DataParRound,
+};

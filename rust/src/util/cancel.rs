@@ -1,0 +1,304 @@
+//! Cooperative cancellation and per-job budgets.
+//!
+//! A [`CancelToken`] is the external stop signal the ROADMAP's service
+//! direction asks for — the generalization of the
+//! `stop_when_improvement_below` early-stop plumbing from an *internal*
+//! stop rule (a pure function of allreduced quantities) to *external* ones:
+//! a client pressing cancel, a wall-clock deadline, or a modeled
+//! virtual-clock budget. Engines poll the token at their natural
+//! checkpoints — the BSP engine once per engine step inside its uniform
+//! stop-decision window, the supervised engine at the top of its
+//! single-threaded loop, the data-parallel engine at the top of each
+//! speculate round, the thread runner at its per-superstep consensus hook
+//! — so a token raised at step *k* is observed at step *k+1* and every
+//! simulated process takes the same stop decision (no rank ever stops
+//! sending while a peer still waits on it).
+//!
+//! The first cause to fire **latches**: later polls return the same
+//! [`StopCause`] forever, so a run's abort path sees one consistent
+//! verdict. A token with no deadline and no budget that is never cancelled
+//! reduces every poll to one relaxed atomic load — and jobs without a
+//! token attached skip even that, which is how the fault-free
+//! non-cancelled path stays bit-for-bit identical (the accounting fixture
+//! pins it).
+//!
+//! Determinism: the virtual-clock budget compares *modeled* time, a pure
+//! function of the run, so a budget-triggered stop is reproducible bit for
+//! bit under the same seed. Wall-clock deadlines and external
+//! [`cancel`](CancelToken::cancel) calls are inherently racy against the
+//! run; they still stop at a deterministic *kind* of point (the next
+//! checkpoint) but not a reproducible one — tests that need replayable
+//! cancellation use the virtual budget.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::error::Error;
+
+/// Why a run was stopped early. Ordered by precedence: an explicit cancel
+/// wins over a deadline observed in the same poll.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopCause {
+    /// [`CancelToken::cancel`] was called.
+    Cancelled,
+    /// The wall-clock deadline passed.
+    DeadlineExceeded,
+    /// The modeled virtual-clock budget was exhausted.
+    BudgetExhausted,
+}
+
+impl StopCause {
+    /// The typed error a run ending in this cause fails with (under the
+    /// `Fail` policy; the `Degrade` policy returns a valid coloring and
+    /// flags the result instead).
+    pub fn to_error(self) -> Error {
+        match self {
+            StopCause::Cancelled => Error::cancelled("job stopped by cancel token"),
+            StopCause::DeadlineExceeded => {
+                Error::deadline_exceeded("wall-clock deadline passed before the job finished")
+            }
+            StopCause::BudgetExhausted => {
+                Error::deadline_exceeded("virtual-clock budget exhausted before the job finished")
+            }
+        }
+    }
+
+    /// Short label for logs and result tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            StopCause::Cancelled => "cancelled",
+            StopCause::DeadlineExceeded => "deadline",
+            StopCause::BudgetExhausted => "vbudget",
+        }
+    }
+}
+
+// The latch's atomic encoding: 0 = live, else StopCause discriminant + 1.
+const LIVE: u8 = 0;
+
+fn encode(c: StopCause) -> u8 {
+    match c {
+        StopCause::Cancelled => 1,
+        StopCause::DeadlineExceeded => 2,
+        StopCause::BudgetExhausted => 3,
+    }
+}
+
+fn decode(v: u8) -> Option<StopCause> {
+    match v {
+        1 => Some(StopCause::Cancelled),
+        2 => Some(StopCause::DeadlineExceeded),
+        3 => Some(StopCause::BudgetExhausted),
+        _ => None,
+    }
+}
+
+struct Inner {
+    /// The latched verdict: `LIVE` until the first cause fires.
+    state: AtomicU8,
+    /// Wall-clock deadline, fixed at token creation.
+    deadline: Option<Instant>,
+    /// Modeled virtual-clock budget in virtual seconds.
+    vbudget: Option<f64>,
+}
+
+/// Shared, cloneable stop signal. Clones observe the same latch — hand one
+/// clone to the client (to [`cancel`](Self::cancel)) and thread another
+/// through the run.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl CancelToken {
+    /// A token with no deadline and no budget: it only ever fires via
+    /// [`cancel`](Self::cancel).
+    pub fn new() -> Self {
+        Self::with_limits(None, None)
+    }
+
+    /// A token carrying a wall-clock deadline (measured from now) and/or a
+    /// virtual-clock budget.
+    pub fn with_limits(deadline: Option<Duration>, vbudget: Option<f64>) -> Self {
+        CancelToken {
+            inner: Arc::new(Inner {
+                state: AtomicU8::new(LIVE),
+                deadline: deadline.map(|d| Instant::now() + d),
+                vbudget,
+            }),
+        }
+    }
+
+    /// Request cancellation. Idempotent; the first cause to latch wins, so
+    /// cancelling an already-expired token leaves the deadline verdict.
+    pub fn cancel(&self) {
+        let _ = self.inner.state.compare_exchange(
+            LIVE,
+            encode(StopCause::Cancelled),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// The latched verdict, without consulting any clock. One relaxed
+    /// atomic load — safe on the hottest paths.
+    pub fn stopped(&self) -> Option<StopCause> {
+        decode(self.inner.state.load(Ordering::Relaxed))
+    }
+
+    /// Poll the token at a checkpoint: returns the latched verdict, or
+    /// latches (and returns) a deadline/budget verdict if one expired.
+    /// `vtime` is the run's current modeled virtual time (pass `0.0` from
+    /// engines without a virtual clock — the budget then never fires).
+    pub fn check(&self, vtime: f64) -> Option<StopCause> {
+        if let Some(c) = self.stopped() {
+            return Some(c);
+        }
+        if let Some(d) = self.inner.deadline {
+            if Instant::now() >= d {
+                return Some(self.latch(StopCause::DeadlineExceeded));
+            }
+        }
+        if let Some(b) = self.inner.vbudget {
+            if vtime > b {
+                return Some(self.latch(StopCause::BudgetExhausted));
+            }
+        }
+        None
+    }
+
+    /// Whether this token can ever fire without an explicit cancel call.
+    pub fn has_limits(&self) -> bool {
+        self.inner.deadline.is_some() || self.inner.vbudget.is_some()
+    }
+
+    fn latch(&self, cause: StopCause) -> StopCause {
+        match self.inner.state.compare_exchange(
+            LIVE,
+            encode(cause),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => cause,
+            // lost the race to another cause — the latch wins
+            Err(prev) => decode(prev).unwrap_or(cause),
+        }
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CancelToken")
+            .field("stopped", &self.stopped())
+            .field("deadline", &self.inner.deadline.is_some())
+            .field("vbudget", &self.inner.vbudget)
+            .finish()
+    }
+}
+
+/// What a stopped run should do at its next checkpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StopPolicy {
+    /// Fail with the typed error for the [`StopCause`]
+    /// (`Error::Cancelled` / `Error::DeadlineExceeded`).
+    #[default]
+    Fail,
+    /// Finalize the best-so-far coloring — fill and repair it to validity
+    /// through the pipeline's repair pass — and return it flagged
+    /// `degraded: true`.
+    Degrade,
+}
+
+impl StopPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            StopPolicy::Fail => "fail",
+            StopPolicy::Degrade => "degrade",
+        }
+    }
+}
+
+/// External run control: a stop signal plus the policy applied when it
+/// fires. Passed by reference through the pipeline; absence (`None` at the
+/// call sites) is the guaranteed-untouched fast path.
+#[derive(Clone, Debug)]
+pub struct RunControl {
+    pub token: CancelToken,
+    pub policy: StopPolicy,
+}
+
+impl RunControl {
+    pub fn new(token: CancelToken, policy: StopPolicy) -> Self {
+        RunControl { token, policy }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_token_never_fires() {
+        let t = CancelToken::new();
+        assert_eq!(t.stopped(), None);
+        assert_eq!(t.check(1e12), None, "no budget: vtime is ignored");
+        assert!(!t.has_limits());
+    }
+
+    #[test]
+    fn cancel_latches_and_is_idempotent() {
+        let t = CancelToken::new();
+        let peer = t.clone();
+        t.cancel();
+        assert_eq!(peer.stopped(), Some(StopCause::Cancelled));
+        t.cancel();
+        assert_eq!(t.check(0.0), Some(StopCause::Cancelled));
+    }
+
+    #[test]
+    fn vbudget_fires_exactly_past_the_budget_and_latches() {
+        let t = CancelToken::with_limits(None, Some(5.0));
+        assert!(t.has_limits());
+        assert_eq!(t.check(4.9), None);
+        assert_eq!(t.check(5.0), None, "budget is inclusive");
+        assert_eq!(t.check(5.1), Some(StopCause::BudgetExhausted));
+        // latched: even a poll with a small vtime keeps the verdict
+        assert_eq!(t.check(0.0), Some(StopCause::BudgetExhausted));
+        assert_eq!(t.stopped(), Some(StopCause::BudgetExhausted));
+    }
+
+    #[test]
+    fn expired_deadline_fires_immediately() {
+        let t = CancelToken::with_limits(Some(Duration::from_secs(0)), None);
+        assert_eq!(t.check(0.0), Some(StopCause::DeadlineExceeded));
+    }
+
+    #[test]
+    fn first_cause_wins() {
+        let t = CancelToken::with_limits(None, Some(1.0));
+        assert_eq!(t.check(2.0), Some(StopCause::BudgetExhausted));
+        t.cancel(); // too late — the budget verdict is latched
+        assert_eq!(t.stopped(), Some(StopCause::BudgetExhausted));
+    }
+
+    #[test]
+    fn causes_map_to_typed_errors() {
+        use crate::util::error::ErrorKind;
+        assert_eq!(StopCause::Cancelled.to_error().kind(), ErrorKind::Cancelled);
+        assert_eq!(
+            StopCause::DeadlineExceeded.to_error().kind(),
+            ErrorKind::DeadlineExceeded
+        );
+        assert_eq!(
+            StopCause::BudgetExhausted.to_error().kind(),
+            ErrorKind::DeadlineExceeded
+        );
+    }
+}

@@ -22,6 +22,31 @@ pub enum ErrorKind {
     ProcFailed { rank: u32, step: u64 },
     /// Input parsing failed at a 1-based line number.
     Parse { line: u32 },
+    /// Admission control rejected the job: the scheduler's bounded queue
+    /// is full. Retry later or shed load — nothing was partially run.
+    Overloaded,
+    /// The job was cancelled by an external stop signal (its
+    /// [`CancelToken`](crate::util::cancel::CancelToken)) before finishing.
+    Cancelled,
+    /// A per-job budget expired: the wall-clock deadline or the modeled
+    /// virtual-clock budget.
+    DeadlineExceeded,
+}
+
+impl ErrorKind {
+    /// Stable machine-readable code for wire formats (the `"kind"` field of
+    /// the `done` event's JSON encoding). Field-carrying kinds collapse to
+    /// their family name — the fields stay in the message.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ErrorKind::Generic => "generic",
+            ErrorKind::ProcFailed { .. } => "proc-failed",
+            ErrorKind::Parse { .. } => "parse",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::Cancelled => "cancelled",
+            ErrorKind::DeadlineExceeded => "deadline-exceeded",
+        }
+    }
 }
 
 /// String-backed error. Does **not** implement `std::error::Error` itself —
@@ -58,9 +83,43 @@ impl Error {
         }
     }
 
+    /// Admission control rejected the job (bounded queue full).
+    pub fn overloaded<M: fmt::Display>(detail: M) -> Self {
+        Error {
+            msg: format!("overloaded: {detail}"),
+            kind: ErrorKind::Overloaded,
+        }
+    }
+
+    /// The job was cancelled by an external stop signal.
+    pub fn cancelled<M: fmt::Display>(detail: M) -> Self {
+        Error {
+            msg: format!("cancelled: {detail}"),
+            kind: ErrorKind::Cancelled,
+        }
+    }
+
+    /// A per-job budget (wall-clock deadline or virtual-clock budget)
+    /// expired before the job finished.
+    pub fn deadline_exceeded<M: fmt::Display>(detail: M) -> Self {
+        Error {
+            msg: format!("deadline exceeded: {detail}"),
+            kind: ErrorKind::DeadlineExceeded,
+        }
+    }
+
     /// The error's classification.
     pub fn kind(&self) -> ErrorKind {
         self.kind
+    }
+
+    /// Whether this error reports an external stop (cancellation or an
+    /// expired deadline/budget) rather than a failure of the run itself.
+    pub fn is_stop(&self) -> bool {
+        matches!(
+            self.kind,
+            ErrorKind::Cancelled | ErrorKind::DeadlineExceeded
+        )
     }
 }
 
@@ -196,6 +255,29 @@ mod tests {
         let e = Error::parse_at(9, "missing column index");
         assert_eq!(e.kind(), ErrorKind::Parse { line: 9 });
         assert_eq!(e.to_string(), "line 9: missing column index");
+        let e = Error::overloaded("queue full (8 jobs)");
+        assert_eq!(e.kind(), ErrorKind::Overloaded);
+        assert_eq!(e.to_string(), "overloaded: queue full (8 jobs)");
+        let e = Error::cancelled("stop requested");
+        assert_eq!(e.kind(), ErrorKind::Cancelled);
+        assert_eq!(e.to_string(), "cancelled: stop requested");
+        let e = Error::deadline_exceeded("wall deadline passed");
+        assert_eq!(e.kind(), ErrorKind::DeadlineExceeded);
+        assert_eq!(e.to_string(), "deadline exceeded: wall deadline passed");
+        assert!(e.is_stop());
+        assert!(Error::cancelled("x").is_stop());
+        assert!(!Error::overloaded("x").is_stop());
+        assert!(!Error::msg("x").is_stop());
+    }
+
+    #[test]
+    fn kind_codes_are_stable() {
+        assert_eq!(ErrorKind::Generic.code(), "generic");
+        assert_eq!(ErrorKind::ProcFailed { rank: 0, step: 0 }.code(), "proc-failed");
+        assert_eq!(ErrorKind::Parse { line: 1 }.code(), "parse");
+        assert_eq!(ErrorKind::Overloaded.code(), "overloaded");
+        assert_eq!(ErrorKind::Cancelled.code(), "cancelled");
+        assert_eq!(ErrorKind::DeadlineExceeded.code(), "deadline-exceeded");
     }
 
     #[test]

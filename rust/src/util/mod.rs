@@ -5,6 +5,7 @@
 pub mod args;
 pub mod bench;
 pub mod bitset;
+pub mod cancel;
 pub mod error;
 pub mod pool;
 pub mod prop;

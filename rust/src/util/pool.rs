@@ -21,8 +21,21 @@
 
 use std::any::Any;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Load counters of a [`WorkerPool`], read without locking. `runs` counts
+/// completed `scoped_run`s; `saturated_runs` counts runs that arrived while
+/// another run held the pool (the scheduler's saturation signal); `waiting`
+/// is the instantaneous number of runs queued on the run lock right now
+/// (the queue depth behind the pool).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    pub runs: u64,
+    pub saturated_runs: u64,
+    pub waiting: u64,
+}
 
 /// `&(dyn Fn(usize) + Sync)` with its lifetime erased so it can cross the
 /// worker channels. Sound because [`WorkerPool::scoped_run`] blocks on the
@@ -87,6 +100,9 @@ impl Latch {
 pub struct WorkerPool {
     workers: Vec<Sender<Job>>,
     run_lock: Mutex<()>,
+    runs: AtomicU64,
+    saturated_runs: AtomicU64,
+    waiting: AtomicU64,
 }
 
 impl WorkerPool {
@@ -113,12 +129,24 @@ impl WorkerPool {
         WorkerPool {
             workers,
             run_lock: Mutex::new(()),
+            runs: AtomicU64::new(0),
+            saturated_runs: AtomicU64::new(0),
+            waiting: AtomicU64::new(0),
         }
     }
 
     /// Number of worker threads.
     pub fn workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Current load counters (see [`PoolStats`]).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            runs: self.runs.load(AtomicOrdering::Relaxed),
+            saturated_runs: self.saturated_runs.load(AtomicOrdering::Relaxed),
+            waiting: self.waiting.load(AtomicOrdering::Relaxed),
+        }
     }
 
     /// Run `f(shard)` for every `shard` in `0..shards`, each on its own
@@ -145,7 +173,21 @@ impl WorkerPool {
             "scoped_run wants {shards} shards but the pool has {} workers",
             self.workers.len()
         );
-        let _serial = self.run_lock.lock().unwrap_or_else(|e| e.into_inner());
+        // Saturation accounting: a run that cannot take the lock at once is
+        // contending with an in-flight run. The counters feed the scheduler's
+        // overload signal; they never affect execution.
+        let _serial = match self.run_lock.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::WouldBlock) => {
+                self.saturated_runs.fetch_add(1, AtomicOrdering::Relaxed);
+                self.waiting.fetch_add(1, AtomicOrdering::Relaxed);
+                let g = self.run_lock.lock().unwrap_or_else(|e| e.into_inner());
+                self.waiting.fetch_sub(1, AtomicOrdering::Relaxed);
+                g
+            }
+            Err(std::sync::TryLockError::Poisoned(e)) => e.into_inner(),
+        };
+        self.runs.fetch_add(1, AtomicOrdering::Relaxed);
         let latch = Arc::new(Latch::new(shards));
         // SAFETY: lifetime erasure only — the latch wait below outlives
         // every worker-side use of the reference.
@@ -280,5 +322,52 @@ mod tests {
     #[test]
     fn global_pool_has_at_least_one_worker() {
         assert!(global().workers() >= 1);
+    }
+
+    #[test]
+    fn stats_count_runs_and_saturation() {
+        let pool = Arc::new(WorkerPool::new(2));
+        assert_eq!(pool.stats(), PoolStats::default());
+        pool.scoped_run(2, &|_| {});
+        let s = pool.stats();
+        assert_eq!(s.runs, 1);
+        assert_eq!(s.saturated_runs, 0, "an uncontended run is not saturation");
+        assert_eq!(s.waiting, 0);
+
+        // two threads race one pool: the loser of the run lock must be
+        // counted as a saturated run
+        let gate = Arc::new(Barrier::new(2));
+        let inner = Arc::new(Barrier::new(3));
+        let hs: Vec<_> = (0..2)
+            .map(|_| {
+                let (pool, gate, inner) = (pool.clone(), gate.clone(), inner.clone());
+                std::thread::spawn(move || {
+                    gate.wait();
+                    pool.scoped_run(2, &|_| {
+                        // both shards + the peer run's submitter rendezvous,
+                        // proving the peer arrived while this run was live
+                        inner.wait();
+                    });
+                })
+            })
+            .collect();
+        // the third participant: release the inner barrier only once both
+        // runs were submitted (one is inside, one is queued on the lock)
+        loop {
+            let s = pool.stats();
+            if s.saturated_runs >= 1 && s.waiting >= 1 {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        inner.wait();
+        inner.wait(); // second run's shards
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert_eq!(s.runs, 3);
+        assert_eq!(s.saturated_runs, 1);
+        assert_eq!(s.waiting, 0, "nobody left queued");
     }
 }

@@ -10,6 +10,7 @@ use dgcolor::dist::cost::CostModel;
 use dgcolor::dist::{Crash, FaultPlan};
 use dgcolor::graph::synth;
 use dgcolor::prop_assert;
+use dgcolor::util::error::ErrorKind;
 use dgcolor::util::prop;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
@@ -203,8 +204,9 @@ fn failed_job_surfaces_done_err_event() {
     let err = res.unwrap_err().to_string();
     assert!(err.contains("livelock"), "unexpected error: {err}");
     match log.take().last() {
-        Some(Event::Done { result: Err(msg) }) => {
-            assert!(msg.contains("livelock"), "unexpected Done error: {msg}")
+        Some(Event::Done { result: Err(e) }) => {
+            assert!(e.msg.contains("livelock"), "unexpected Done error: {e}");
+            assert_eq!(e.kind, ErrorKind::Generic, "livelock is an uncategorized failure");
         }
         other => panic!("expected a Done(Err) event, got {other:?}"),
     }
@@ -235,6 +237,94 @@ fn repair_pass_fixes_corrupted_coloring() {
         [Event::RepairPass { pass: 1, conflicts }] => assert!(*conflicts > 0),
         other => panic!("expected exactly one RepairPass event, got {other:?}"),
     }
+}
+
+/// The cancellation-chaos property: a virtual-clock budget — the
+/// deterministic stop knob — racing random fault plans, half the time
+/// under the `Degrade` policy. Every run must end in exactly one of a
+/// typed error or a valid coloring (complete or `degraded`), never a
+/// panic; the same seed must reproduce the identical ending bit for bit
+/// (budget stops compare modeled time, so they replay); and no worker is
+/// left wedged — a fault-free job on the same session still succeeds
+/// afterwards.
+#[test]
+fn prop_budget_stops_under_faults_end_typed_or_valid() {
+    prop::quickcheck("budget_stops_under_faults", |rng, _case| {
+        let n = 120 + rng.below(240) as usize;
+        let g = synth::fem_like(n, 7.0, 18, 0.004, rng.next_u64(), "fem");
+        let procs = 2 + rng.below(4) as usize;
+        let plan = FaultPlan {
+            seed: rng.next_u64(),
+            delay_prob: 0.05 + 0.25 * rng.f64(),
+            delay_secs: 1e-4,
+            reorder_prob: 0.25 * rng.f64(),
+            crash: rng.chance(0.4).then(|| Crash {
+                rank: rng.below(procs as u64) as u32,
+                step: rng.below(12),
+                down_steps: 1 + rng.below(3),
+            }),
+        };
+        // budgets straddling the fixed-cost makespan: some runs stop
+        // mid-flight, some finish inside the budget — both endings are
+        // exercised
+        let budget = 1e-6 * (1.0 + rng.below(1000) as f64);
+        let s = session(g);
+        let mut b = Job::on(&s)
+            .procs(procs)
+            .seed(rng.next_u64())
+            .faults(plan)
+            .vclock_budget(budget);
+        if rng.chance(0.5) {
+            b = b.degrade();
+        }
+        if rng.chance(0.5) {
+            b = b.selection(Selection::RandomX(5)).sync_recolor(nd(1));
+        }
+        let job = b.build().map_err(|e| format!("build failed: {e}"))?;
+        let label = job.label();
+        let mut endings: Vec<String> = Vec::new();
+        for attempt in 0..2 {
+            match catch_unwind(AssertUnwindSafe(|| s.run(&job))) {
+                Err(p) => {
+                    let msg = p
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "non-string panic".into());
+                    return Err(format!("{label}: stopped run panicked: {msg}"));
+                }
+                Ok(Err(e)) => endings.push(format!("err[{:?}]: {e}", e.kind())),
+                Ok(Ok(r)) => {
+                    prop_assert!(
+                        r.coloring.validate(s.graph()).is_ok(),
+                        "{label}: attempt {attempt} returned a conflicted coloring \
+                         (degraded={})",
+                        r.degraded
+                    );
+                    endings.push(format!(
+                        "ok: k={} degraded={} makespan={}",
+                        r.num_colors,
+                        r.degraded,
+                        r.metrics.makespan.to_bits()
+                    ));
+                }
+            }
+        }
+        prop_assert!(
+            endings[0] == endings[1],
+            "{label}: same-seed endings diverged: {} vs {}",
+            endings[0],
+            endings[1]
+        );
+        // no wedged workers: the shared engine machinery still runs a
+        // plain job to completion after the stop
+        let plain = Job::on(&s).procs(2).build().map_err(|e| e.to_string())?;
+        match catch_unwind(AssertUnwindSafe(|| s.run(&plain))) {
+            Ok(Ok(_)) => Ok(()),
+            Ok(Err(e)) => Err(format!("{label}: session wedged after a stop: {e}")),
+            Err(_) => Err(format!("{label}: panic on the follow-up plain job")),
+        }
+    });
 }
 
 /// The chaos property: random graphs under random fault plans (delays,
