@@ -6,14 +6,16 @@
 //! wallclocks; then repeat the p=64 cross-check for aRC (2× aRC-ND), the
 //! job shape that used to fall back to threads. A regression that
 //! re-introduces blocking/oversubscription in the engine shows up as a
-//! wallclock blowup or an assert here.
+//! wallclock blowup or an assert here. A final leg reruns the p=64 job
+//! over 5%-lossy links on the supervised engine and asserts the reliable
+//! layer reproduces the fault-free coloring exactly.
 //!
 //! Run: `cargo run --release --example bsp_engine`
 
 use dgcolor::color::recolor::Permutation;
 use dgcolor::coordinator::job::nd;
 use dgcolor::coordinator::{Job, Session};
-use dgcolor::dist::{CostModel, Engine};
+use dgcolor::dist::{CostModel, Engine, FaultPlan};
 use dgcolor::graph::rmat::{self, RmatParams};
 use dgcolor::util::table::{fmt_secs, Table};
 
@@ -102,6 +104,40 @@ fn main() -> dgcolor::util::error::Result<()> {
          (sim wall {} vs {})",
         fmt_secs(arc_engine.metrics.wall_secs),
         fmt_secs(arc_threads.metrics.wall_secs),
+    );
+
+    // reliable delivery at scale: the same p=64 job over 5%-lossy links
+    // must hide the loss entirely — the supervised run's coloring matches
+    // the fault-free run bit for bit, every lost transmission is
+    // re-covered by retransmission, and nothing surfaces as a drop
+    let lossy_job = Job::on(&session)
+        .procs(64)
+        .sync_recolor(nd(2))
+        .faults(FaultPlan {
+            seed: 9,
+            loss_prob: 0.05,
+            ..FaultPlan::none()
+        })
+        .build()
+        .unwrap();
+    let lossy = session.run(&lossy_job)?;
+    assert_eq!(
+        lossy.coloring.colors, by_engine.coloring.colors,
+        "lossy p=64 run diverged from the fault-free coloring"
+    );
+    assert_eq!(lossy.recolor_trace, by_engine.recolor_trace);
+    assert!(
+        lossy.metrics.total_injected_losses > 0 && lossy.metrics.total_retransmits > 0,
+        "a 5% loss rate at p=64 must exercise the reliable layer"
+    );
+    assert_eq!(lossy.metrics.total_non_teardown_drops, 0, "losses are not drops");
+    println!(
+        "p=64 over 5%-lossy links: fault-free coloring recovered ✓  \
+         ({} losses re-covered by {} retransmits, {} acks, {} dups)",
+        lossy.metrics.total_injected_losses,
+        lossy.metrics.total_retransmits,
+        lossy.metrics.total_acks_sent,
+        lossy.metrics.total_dup_discards,
     );
     Ok(())
 }

@@ -33,7 +33,7 @@ impl RecolorMode {
 }
 
 /// Full job description for a distributed coloring run.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ColoringConfig {
     pub num_procs: usize,
     pub partitioner: Partitioner,
@@ -147,7 +147,9 @@ impl ColoringConfig {
     /// `--superstep`, `--async`, `--recolor <n>`, `--arc`, `--schedule`,
     /// `--scheme`, `--partitioner`, `--seed`, `--ideal-net`,
     /// `--stop-eps <f>`, `--engine auto|threads|bsp|datapar`,
-    /// `--faults <spec>` — see [`FaultPlan::parse`] — plus the service
+    /// `--faults <spec>` — see [`FaultPlan::parse`] — with
+    /// `--ckpt-interval <n>` overriding the plan's supervised checkpoint
+    /// cadence, plus the service
     /// knobs `--deadline <secs>`, `--vbudget <vsecs>`, `--degrade` and
     /// `--priority interactive|sweep`). Parse-only: validation happens
     /// when the config becomes a [`Job`](super::Job).
@@ -176,6 +178,12 @@ impl ColoringConfig {
         }
         if let Some(s) = a.get_str("faults") {
             cfg.faults = FaultPlan::parse(s)?;
+        }
+        if let Some(s) = a.get_str("ckpt-interval") {
+            let n: u64 = s
+                .parse()
+                .with_context(|| format!("invalid value {s:?} for --ckpt-interval"))?;
+            cfg.faults.checkpoint_interval = n;
         }
         if let Some(s) = a.get_str("stop-eps") {
             let eps: f64 = s
@@ -362,6 +370,24 @@ mod tests {
         assert!(ColoringConfig::from_args(&parse("--faults seed=3")).is_err());
         // inert plans leave fault-free labels byte-identical
         assert_eq!(ColoringConfig::default().label(), "FI1000s-0");
+    }
+
+    #[test]
+    fn loss_crashes_and_checkpoint_interval_parse() {
+        let cfg = ColoringConfig::from_args(&parse(
+            "--faults seed=3,loss=0.1,crash=1@4,crash=2@6+3 --ckpt-interval 4",
+        ))
+        .unwrap();
+        assert!(cfg.faults.is_active());
+        assert!(cfg.faults.reliable());
+        assert_eq!(cfg.faults.loss_prob, 0.1);
+        assert_eq!(cfg.faults.crashes.len(), 2);
+        assert_eq!(cfg.faults.checkpoint_interval, 4);
+        assert!(ColoringConfig::from_args(&parse("--ckpt-interval often")).is_err());
+        // the interval override alone leaves the plan inert
+        let cfg = ColoringConfig::from_args(&parse("--ckpt-interval 4")).unwrap();
+        assert!(!cfg.faults.is_active());
+        assert!(!cfg.faults.reliable());
     }
 
     #[test]

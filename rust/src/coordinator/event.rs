@@ -74,10 +74,14 @@ pub enum Event {
     /// after it — the same value appended to `RunResult::recolor_trace`.
     RecolorIteration { iter: u32, k: usize },
     /// The supervising engine injected a crash-stop: `rank` went down at
-    /// engine step `step` (delays/reorders are counted in `DistMetrics`).
+    /// engine step `step`. Emitted once per crash in the plan, so
+    /// multi-crash plans produce one event per firing crash
+    /// (delays/reorders/losses are counted in `DistMetrics`, not evented).
     FaultInjected { rank: u32, step: u64 },
-    /// The supervising engine restarted `rank` from its checkpoint at
-    /// engine step `step`.
+    /// The supervising engine restarted `rank` at engine step `step` from
+    /// its last *periodic* checkpoint — with `checkpoint_interval > 1` the
+    /// rank then replays the steps since that checkpoint (receiver-side
+    /// dedup absorbs the replayed sends).
     ProcRestarted { rank: u32, step: u64 },
     /// A post-validation repair pass ran over `conflicts` conflicting
     /// vertices (only after an active fault plan left conflicts behind).

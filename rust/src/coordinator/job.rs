@@ -39,7 +39,7 @@ use crate::{bail, ensure};
 use std::time::Duration;
 
 /// A validated distributed-coloring job.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Job {
     cfg: ColoringConfig,
 }
@@ -159,7 +159,7 @@ fn validate(cfg: &ColoringConfig) -> Result<()> {
             "fault injection requires the supervised BSP engine — drop the explicit \
              Engine::Threads (Auto routes faulted jobs to Bsp)"
         );
-        if let Some(c) = cfg.faults.crash {
+        for c in &cfg.faults.crashes {
             ensure!(
                 (c.rank as usize) < cfg.num_procs,
                 "fault plan crashes rank {} but the job has only {} process(es)",
@@ -167,6 +167,10 @@ fn validate(cfg: &ColoringConfig) -> Result<()> {
                 cfg.num_procs
             );
         }
+        ensure!(
+            cfg.faults.checkpoint_interval >= 1,
+            "fault plan checkpoint interval must be at least 1"
+        );
     }
     if let Some(d) = cfg.deadline_secs {
         ensure!(
@@ -201,7 +205,7 @@ fn validate_eps(eps: Option<f64>) -> Result<()> {
 /// Fluent, validated construction of a [`Job`]. Every setter returns the
 /// builder; `build()` runs the validation and `run()` additionally
 /// executes on the bound session.
-#[derive(Clone, Copy)]
+#[derive(Clone)]
 pub struct JobBuilder<'s> {
     session: Option<&'s Session>,
     cfg: ColoringConfig,
@@ -596,10 +600,10 @@ mod tests {
     #[test]
     fn faulted_jobs_require_the_supervised_bsp_path() {
         let plan = FaultPlan::parse("seed=1,delay=0.1").unwrap();
-        assert!(Job::builder().faults(plan).build().is_ok());
-        assert!(Job::builder().faults(plan).engine(Engine::Bsp).build().is_ok());
+        assert!(Job::builder().faults(plan.clone()).build().is_ok());
+        assert!(Job::builder().faults(plan.clone()).engine(Engine::Bsp).build().is_ok());
         assert!(
-            Job::builder().faults(plan).engine(Engine::Threads).build().is_err(),
+            Job::builder().faults(plan.clone()).engine(Engine::Threads).build().is_err(),
             "explicit thread engine + faults must be rejected"
         );
         assert!(
@@ -612,10 +616,16 @@ mod tests {
         );
         let crash = FaultPlan::parse("seed=1,crash=7@2").unwrap();
         assert!(
-            Job::builder().procs(4).faults(crash).build().is_err(),
+            Job::builder().procs(4).faults(crash.clone()).build().is_err(),
             "crash rank beyond the process count must be rejected"
         );
-        assert!(Job::builder().procs(8).faults(crash).build().is_ok());
+        assert!(Job::builder().procs(8).faults(crash.clone()).build().is_ok());
+        let multi = FaultPlan::parse("seed=1,crash=1@2+3,crash=6@4,loss=0.05").unwrap();
+        assert!(
+            Job::builder().procs(4).faults(multi.clone()).build().is_err(),
+            "every crash rank is validated, not just the first"
+        );
+        assert!(Job::builder().procs(8).faults(multi).build().is_ok());
         // the inert plan changes nothing
         assert!(Job::builder()
             .faults(FaultPlan::none())

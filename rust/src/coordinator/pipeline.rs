@@ -176,7 +176,7 @@ pub(crate) fn execute(
                 g.num_vertices(),
                 locals,
                 cfg.network,
-                cfg.faults,
+                cfg.faults.clone(),
                 obs,
                 token,
                 |lg| JobMachine::new(lg, &fw, &cost, rc_plan, obs),
@@ -802,7 +802,7 @@ impl StepProcess for JobMachine<'_> {
     note = "build a coordinator::Session and run jobs via Job::on(&session)"
 )]
 pub fn run_job(g: &CsrGraph, cfg: &ColoringConfig) -> Result<RunResult> {
-    let job = Job::from_config(*cfg)?;
+    let job = Job::from_config(cfg.clone())?;
     if cfg.engine == Engine::DataPar {
         // no transport, no partition: the datapar path only needs the graph
         return execute(
@@ -937,16 +937,16 @@ mod tests {
                 .unwrap(),
         ];
         for job in builders {
-            let mut cfg = *job.config();
+            let mut cfg = job.config().clone();
             cfg.engine = Engine::Threads;
             let log_t = EventLog::new();
             let t = s
-                .run_observed(&Job::from_config(cfg).unwrap(), &log_t)
+                .run_observed(&Job::from_config(cfg.clone()).unwrap(), &log_t)
                 .unwrap();
             cfg.engine = Engine::Bsp;
             let log_e = EventLog::new();
             let e = s
-                .run_observed(&Job::from_config(cfg).unwrap(), &log_e)
+                .run_observed(&Job::from_config(cfg.clone()).unwrap(), &log_e)
                 .unwrap();
             assert_eq!(t.coloring.colors, e.coloring.colors, "{}", cfg.label());
             assert_eq!(t.recolor_trace, e.recolor_trace, "{}", cfg.label());

@@ -29,6 +29,11 @@
 //!   engine checkpoint (see `util::cancel`), failing typed or — under the
 //!   job's `degrade` knob — returning a best-so-far coloring flagged
 //!   `degraded`.
+//! * **Tenant cache quotas** — [`Scheduler::with_tenant_cache_quota`]
+//!   clamps every subsequently registered session's partition-cache cap,
+//!   so no tenant's sweep can pin an unbounded set of partitions and
+//!   local graphs in memory; the churn each tenant pays for its quota is
+//!   surfaced per tenant in [`SchedStats::tenant_evictions`].
 //!
 //! One dispatcher thread executes jobs in admission order (within the
 //! fairness rule); each job is internally parallel on the process-wide
@@ -134,6 +139,11 @@ pub struct SchedStats {
     pub max_sweeps_before_interactive: u64,
     /// Longest observed queue wait (admission to dispatch).
     pub max_queue_wait: Duration,
+    /// Partition-cache evictions per tenant, indexed by [`TenantId`] —
+    /// read from each tenant's session at snapshot time. Nonzero entries
+    /// mean that tenant churned past its cache bound (e.g. the
+    /// [`Scheduler::with_tenant_cache_quota`] clamp) and re-partitioned.
+    pub tenant_evictions: Vec<u64>,
 }
 
 /// One admitted job waiting for dispatch.
@@ -213,6 +223,9 @@ impl JobHandle {
 
 struct SchedState {
     tenants: Vec<Arc<Session>>,
+    /// Upper bound clamped onto every tenant session's partition-cache
+    /// cap at registration time (`None` = tenants keep their own cap).
+    tenant_cache_quota: Option<usize>,
     interactive: VecDeque<QueuedJob>,
     sweep: VecDeque<QueuedJob>,
     /// Consecutive interactive dispatches since the last sweep dispatch.
@@ -240,6 +253,20 @@ fn lock_state(shared: &Shared) -> MutexGuard<'_, SchedState> {
     shared.state.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Clone the counters and fold in the per-tenant partition-cache
+/// eviction counts, which live on the tenant sessions rather than in
+/// [`SchedState`].
+fn snapshot_stats(shared: &Shared) -> SchedStats {
+    let st = lock_state(shared);
+    let mut stats = st.stats.clone();
+    stats.tenant_evictions = st
+        .tenants
+        .iter()
+        .map(|s| s.partition_evictions() as u64)
+        .collect();
+    stats
+}
+
 /// The multi-tenant service layer over [`Session`]s — see the module docs.
 pub struct Scheduler {
     shared: Arc<Shared>,
@@ -252,6 +279,7 @@ impl Scheduler {
         let shared = Arc::new(Shared {
             state: Mutex::new(SchedState {
                 tenants: Vec::new(),
+                tenant_cache_quota: None,
                 interactive: VecDeque::new(),
                 sweep: VecDeque::new(),
                 interactive_run: 0,
@@ -274,9 +302,30 @@ impl Scheduler {
         }
     }
 
+    /// Quota every tenant registered *after* this call: each session's
+    /// partition-cache cap is clamped to at most `cap` keys (a session
+    /// that already asked for less keeps its tighter bound). A shared
+    /// service uses this so no single tenant's sweep can pin an unbounded
+    /// set of partitions and local graphs in memory; the per-tenant churn
+    /// this causes is visible in [`SchedStats::tenant_evictions`].
+    pub fn with_tenant_cache_quota(self, cap: usize) -> Scheduler {
+        assert!(cap >= 1, "tenant cache quota must be at least 1");
+        lock_state(&self.shared).tenant_cache_quota = Some(cap);
+        self
+    }
+
     /// Register a tenant's session; jobs are submitted against the id.
+    /// A configured [`Scheduler::with_tenant_cache_quota`] is applied
+    /// here, clamping the session's partition-cache cap.
     pub fn add_tenant(&self, session: Session) -> TenantId {
         let mut st = lock_state(&self.shared);
+        let session = match st.tenant_cache_quota {
+            Some(cap) => {
+                let clamped = session.partition_cache_cap().min(cap);
+                session.with_partition_cache_cap(clamped)
+            }
+            None => session,
+        };
         st.tenants.push(Arc::new(session));
         TenantId(st.tenants.len() - 1)
     }
@@ -302,10 +351,10 @@ impl Scheduler {
                 self.shared.cfg.queue_cap
             )));
         }
-        let cfg = *job.config();
+        let priority = job.config().priority;
         let token = CancelToken::with_limits(
-            cfg.deadline_secs.map(Duration::from_secs_f64),
-            cfg.vclock_budget,
+            job.config().deadline_secs.map(Duration::from_secs_f64),
+            job.config().vclock_budget,
         );
         let ctl = RunControl::new(token.clone(), job.stop_policy());
         let handle = Arc::new(HandleInner {
@@ -324,7 +373,7 @@ impl Scheduler {
             admitted: Instant::now(),
             sweeps_passed: 0,
         };
-        match cfg.priority {
+        match priority {
             Priority::Interactive => st.interactive.push_back(queued),
             Priority::Sweep => st.sweep.push_back(queued),
         }
@@ -342,9 +391,10 @@ impl Scheduler {
         lock_state(&self.shared).queued()
     }
 
-    /// Snapshot of the scheduler counters.
+    /// Snapshot of the scheduler counters (per-tenant eviction counts are
+    /// read from the tenant sessions at snapshot time).
     pub fn stats(&self) -> SchedStats {
-        lock_state(&self.shared).stats.clone()
+        snapshot_stats(&self.shared)
     }
 
     /// Start dispatching (no-op unless constructed with `start_paused`).
@@ -361,7 +411,7 @@ impl Scheduler {
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
-        lock_state(&self.shared).stats.clone()
+        snapshot_stats(&self.shared)
     }
 
     fn begin_shutdown(&self) {
@@ -604,6 +654,37 @@ mod tests {
         assert_eq!(stats.completed, 0);
         assert_eq!(h1.wait().unwrap_err().kind(), ErrorKind::Cancelled);
         assert_eq!(h2.wait().unwrap_err().kind(), ErrorKind::Cancelled);
+    }
+
+    #[test]
+    fn tenant_cache_quota_clamps_the_lru_and_counts_per_tenant_evictions() {
+        let s = Scheduler::new(SchedulerConfig::default()).with_tenant_cache_quota(1);
+        let t0 = s.add_tenant(session());
+        let t1 = s.add_tenant(session());
+        // tenant 0 churns through two partition keys under its one-slot
+        // quota: every key change evicts the previous entry
+        for procs in [2, 3, 2] {
+            let j = Job::builder().procs(procs).build().unwrap();
+            s.submit(t0, j).unwrap().wait().unwrap();
+        }
+        // tenant 1 stays on a single key: no churn
+        s.submit(t1, job(Priority::Interactive)).unwrap().wait().unwrap();
+        let stats = s.stats();
+        assert_eq!(
+            stats.tenant_evictions,
+            vec![2, 0],
+            "evictions are attributed to the tenant that churned"
+        );
+        assert_eq!(s.shutdown().tenant_evictions, vec![2, 0]);
+
+        // a session that asked for a tighter bound than the quota keeps it
+        let s2 = Scheduler::new(SchedulerConfig::default()).with_tenant_cache_quota(8);
+        let t = s2.add_tenant(session().with_partition_cache_cap(1));
+        for procs in [2, 3] {
+            let j = Job::builder().procs(procs).build().unwrap();
+            s2.submit(t, j).unwrap().wait().unwrap();
+        }
+        assert_eq!(s2.shutdown().tenant_evictions, vec![1]);
     }
 
     #[test]

@@ -83,7 +83,7 @@ pub fn run_sweep(
 ) -> Result<Vec<SweepPoint>> {
     // jobs[0] is the baseline, jobs[1..] the grid
     let mut jobs = Vec::with_capacity(configs.len() + 1);
-    let mut bl = *baseline;
+    let mut bl = baseline.clone();
     bl.num_procs = num_procs;
     jobs.push(Job::from_config(bl)?);
     for mut cfg in configs {

@@ -24,13 +24,25 @@ use crate::dist::fault::FaultPlan;
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-/// Fixed accounting overhead per message (envelope: kind/round/seq/len).
+/// Fixed accounting overhead per message (envelope: kind/round/seq/len —
+/// the reliable layer's link sequence number and cumulative ack ride in
+/// this same fixed header).
 pub const MSG_HEADER_BYTES: usize = 16;
 
 /// Bounded-backoff attempts a receive makes under an active [`FaultPlan`]
 /// before declaring itself starved (the fault-free paths never retry —
 /// there the BSP invariant is a hard oracle).
 const FAULT_RECV_RETRIES: usize = 16;
+
+/// Wire transmissions the reliable layer attempts per message (the first
+/// send included) before declaring the peer unreachable.
+pub const MAX_SEND_ATTEMPTS: u32 = 12;
+
+/// Exponential retransmission backoff in engine-step ticks, capped so a
+/// long-lived entry still retries within a bounded window.
+fn retry_backoff(attempt: u32) -> u64 {
+    1u64 << attempt.min(6) // 2, 4, 8, ..., capped at 64 ticks
+}
 
 /// Upper bound on buffers a pool retains; beyond it returned buffers are
 /// dropped so a burst (e.g. a serialized cleanup round) can't pin memory.
@@ -74,8 +86,12 @@ pub enum MsgKind {
     Plan,
     /// Internal collectives (allreduce / barrier).
     Collective,
+    /// Standalone cumulative acknowledgment of the reliable layer —
+    /// consumed at transport intake, never visible to a machine.
+    Ack,
 }
 
+#[derive(Clone)]
 struct Message {
     from: usize,
     kind: MsgKind,
@@ -85,6 +101,56 @@ struct Message {
     /// Sender's virtual clock when the message finished injecting — the
     /// earliest virtual time the receiver can observe it.
     arrival: f64,
+    /// Per-(src,dst)-link sequence number of the reliable layer, 1-based;
+    /// 0 marks unsequenced traffic (inert plans, self-sends, acks).
+    link_seq: u64,
+    /// Piggybacked cumulative ack: every link seq from this sender's peer
+    /// up to and including `ack` has been received. 0 = nothing acked.
+    ack: u64,
+}
+
+/// One unacknowledged reliable send, kept for retransmission until the
+/// peer's cumulative ack covers its `link_seq`.
+#[derive(Clone)]
+struct Unacked {
+    link_seq: u64,
+    kind: MsgKind,
+    round: u32,
+    seq: u32,
+    payload: Vec<u8>,
+    /// Wire transmissions so far (1 after the original send).
+    attempt: u32,
+    /// Engine-step tick at/after which the next retransmission fires.
+    next_retry: u64,
+}
+
+/// Restorable image of an endpoint's transport state, taken by the
+/// supervised engine at periodic checkpoints. Covers the rank's *own*
+/// modeled work — clock, send/receive accounting, fault counters, the
+/// collective cursor — plus the reliable layer's **sender** state
+/// (`next_link_seq`, the retransmit buffer), so a revived rank's replayed
+/// sends reuse their original link sequence numbers and are absorbed by
+/// receiver-side dedup at every peer. Receiver-side dedup state is
+/// deliberately *not* part of the image: it is transport-level, not
+/// machine-level — rolling it back would let retransmissions of
+/// already-buffered messages through as duplicates.
+#[derive(Clone)]
+pub struct EndpointSnapshot {
+    clock: f64,
+    sent_msgs: u64,
+    sent_bytes: u64,
+    recv_msgs: u64,
+    dropped_msgs: u64,
+    non_teardown_drops: u64,
+    injected_delays: u64,
+    injected_reorders: u64,
+    injected_losses: u64,
+    retransmits: u64,
+    acks_sent: u64,
+    dup_discards: u64,
+    coll_seq: u32,
+    next_link_seq: Vec<u64>,
+    unacked: Vec<VecDeque<Unacked>>,
 }
 
 /// One simulated process's communication endpoint.
@@ -118,6 +184,17 @@ pub struct Endpoint {
     pub injected_delays: u64,
     /// Messages the plan held back at the sender (reordered).
     pub injected_reorders: u64,
+    /// Wire transmissions the plan lost (each charged like a real send —
+    /// the injection cost was paid before the wire dropped it).
+    pub injected_losses: u64,
+    /// Reliable layer: retransmissions performed (beyond each message's
+    /// first transmission), all charged to the α-β model.
+    pub retransmits: u64,
+    /// Reliable layer: standalone cumulative acks sent (piggybacked acks
+    /// ride regular traffic for free).
+    pub acks_sent: u64,
+    /// Reliable layer: received duplicates discarded before delivery.
+    pub dup_discards: u64,
     txs: Vec<Sender<Message>>,
     rx: Receiver<Message>,
     pending: VecDeque<Message>,
@@ -127,6 +204,37 @@ pub struct Endpoint {
     /// Private staging for collective payloads (never escapes the endpoint).
     coll_buf: Vec<u8>,
     coll_seq: u32,
+    /// Whether the reliable-delivery layer is active
+    /// ([`FaultPlan::reliable`], computed once at construction). When
+    /// false every reliable branch is skipped and the transport is
+    /// bit-for-bit the pre-reliability one.
+    reliable: bool,
+    /// Current engine-step tick, advanced by [`reliable_sweep`]
+    /// (retransmission timeouts are modeled in engine steps).
+    ///
+    /// [`reliable_sweep`]: Endpoint::reliable_sweep
+    tick: u64,
+    /// Sender state per peer: next link sequence number to assign (1-based).
+    next_link_seq: Vec<u64>,
+    /// Sender state per peer: sent-but-unacked entries, in link-seq order.
+    unacked: Vec<VecDeque<Unacked>>,
+    /// Receiver state per peer: highest link seq `n` with 1..=n all seen.
+    cum_recv: Vec<u64>,
+    /// Receiver state per peer: out-of-order link seqs above `cum_recv`,
+    /// kept sorted.
+    seen_ahead: Vec<Vec<u64>>,
+    /// Receiver state per peer: a standalone ack is owed (a duplicate
+    /// arrived, or fresh traffic advanced `cum_recv`).
+    ack_owed: Vec<bool>,
+    /// The highest cumulative ack actually transmitted to each peer.
+    last_ack_sent: Vec<u64>,
+    /// Identity counter for standalone acks (gives each its own loss coin).
+    ack_seq: Vec<u32>,
+    /// When set (interval checkpointing with crashes), every consumed
+    /// message is logged so [`restore`](Endpoint::restore) can re-insert
+    /// it into `pending` for deterministic replay.
+    log_consumed: bool,
+    consumed_log: Vec<Message>,
 }
 
 /// Build a fully-connected network of `procs` endpoints.
@@ -145,6 +253,7 @@ pub fn network_faulted(procs: usize, model: NetworkModel, faults: FaultPlan) -> 
         txs.push(tx);
         rxs.push(rx);
     }
+    let reliable = faults.reliable();
     rxs.into_iter()
         .enumerate()
         .map(|(rank, rx)| Endpoint {
@@ -159,9 +268,13 @@ pub fn network_faulted(procs: usize, model: NetworkModel, faults: FaultPlan) -> 
             dropped_msgs: 0,
             teardown: false,
             non_teardown_drops: 0,
-            faults,
+            faults: faults.clone(),
             injected_delays: 0,
             injected_reorders: 0,
+            injected_losses: 0,
+            retransmits: 0,
+            acks_sent: 0,
+            dup_discards: 0,
             txs: txs.clone(),
             rx,
             pending: VecDeque::new(),
@@ -169,6 +282,25 @@ pub fn network_faulted(procs: usize, model: NetworkModel, faults: FaultPlan) -> 
             pool: BufferPool::default(),
             coll_buf: Vec::new(),
             coll_seq: 0,
+            reliable,
+            tick: 0,
+            next_link_seq: if reliable { vec![1; procs] } else { Vec::new() },
+            unacked: if reliable {
+                (0..procs).map(|_| VecDeque::new()).collect()
+            } else {
+                Vec::new()
+            },
+            cum_recv: if reliable { vec![0; procs] } else { Vec::new() },
+            seen_ahead: if reliable {
+                (0..procs).map(|_| Vec::new()).collect()
+            } else {
+                Vec::new()
+            },
+            ack_owed: if reliable { vec![false; procs] } else { Vec::new() },
+            last_ack_sent: if reliable { vec![0; procs] } else { Vec::new() },
+            ack_seq: if reliable { vec![0; procs] } else { Vec::new() },
+            log_consumed: false,
+            consumed_log: Vec::new(),
         })
         .collect()
 }
@@ -185,6 +317,24 @@ impl Endpoint {
         self.sent_bytes += bytes as u64;
         self.clock += self.model.transfer_secs(bytes);
         let mut arrival = self.clock;
+        let mut link_seq = 0u64;
+        if self.reliable && to != self.rank {
+            // sequence the envelope and park a copy for retransmission
+            // until the peer's cumulative ack covers it
+            link_seq = self.next_link_seq[to];
+            self.next_link_seq[to] += 1;
+            let mut copy = self.pool.take();
+            copy.extend_from_slice(&payload);
+            self.unacked[to].push_back(Unacked {
+                link_seq,
+                kind,
+                round,
+                seq,
+                payload: copy,
+                attempt: 1,
+                next_retry: self.tick + retry_backoff(1),
+            });
+        }
         if self.faults.is_active() {
             if let Some(d) = self.faults.delay_of(self.rank, to, kind, round, seq) {
                 arrival += d;
@@ -201,6 +351,8 @@ impl Endpoint {
                         seq,
                         payload,
                         arrival,
+                        link_seq,
+                        ack: 0,
                     },
                 ));
                 return;
@@ -213,12 +365,37 @@ impl Endpoint {
             seq,
             payload,
             arrival,
+            link_seq,
+            ack: 0,
         };
         if to == self.rank {
             self.pending.push_back(msg);
         } else {
-            self.put_on_wire(to, msg);
+            self.transmit(to, msg, 1);
         }
+    }
+
+    /// One wire transmission through the reliable layer: the loss coin is
+    /// flipped **before** the ack bookkeeping, so a lost transmission never
+    /// records its piggybacked ack as delivered. With the layer inert this
+    /// is exactly [`put_on_wire`](Endpoint::put_on_wire).
+    fn transmit(&mut self, to: usize, mut msg: Message, attempt: u32) {
+        if self.reliable {
+            if self
+                .faults
+                .loses(self.rank, to, msg.kind, msg.round, msg.seq, attempt)
+            {
+                self.injected_losses += 1;
+                self.pool.put(msg.payload);
+                return;
+            }
+            msg.ack = self.cum_recv[to];
+            if msg.ack > self.last_ack_sent[to] {
+                self.last_ack_sent[to] = msg.ack;
+            }
+            self.ack_owed[to] = false;
+        }
+        self.put_on_wire(to, msg);
     }
 
     /// Deliver a message to a peer's channel, accounting for a gone
@@ -247,7 +424,9 @@ impl Endpoint {
         let held = std::mem::take(&mut self.held);
         let n = held.len();
         for (to, msg) in held {
-            self.put_on_wire(to, msg);
+            // a released message is one wire transmission: under loss the
+            // coin fires here, and retransmission recovers the casualty
+            self.transmit(to, msg, 1);
         }
         n
     }
@@ -259,11 +438,68 @@ impl Endpoint {
     /// [`StepProcess::poll_ready`]: crate::dist::engine::StepProcess::poll_ready
     pub fn have_msg(&mut self, from: usize, kind: MsgKind, round: u32, seq: u32) -> bool {
         while let Ok(m) = self.rx.try_recv() {
-            self.pending.push_back(m);
+            self.intake(m);
         }
         self.pending
             .iter()
             .any(|m| m.from == from && m.kind == kind && m.round == round && m.seq == seq)
+    }
+
+    /// Route one message pulled off the channel through the reliable layer:
+    /// harvest its piggybacked ack, swallow standalone acks, discard
+    /// duplicate link seqs (re-owing an ack so the sender's retransmissions
+    /// converge even when the original ack was lost), and buffer everything
+    /// else for matching. With the layer inert this is a plain buffer push.
+    fn intake(&mut self, m: Message) {
+        if !self.reliable {
+            self.pending.push_back(m);
+            return;
+        }
+        if m.ack > 0 {
+            self.process_ack(m.from, m.ack);
+        }
+        if m.kind == MsgKind::Ack {
+            self.pool.put(m.payload);
+            return;
+        }
+        if m.link_seq > 0 && !self.record_link_seq(m.from, m.link_seq) {
+            self.dup_discards += 1;
+            self.ack_owed[m.from] = true;
+            self.pool.put(m.payload);
+            return;
+        }
+        self.pending.push_back(m);
+    }
+
+    /// The peer confirmed every link seq up to `ack`: release the covered
+    /// entries of the retransmit buffer (kept in link-seq order).
+    fn process_ack(&mut self, from: usize, ack: u64) {
+        while self.unacked[from].front().is_some_and(|u| u.link_seq <= ack) {
+            let u = self.unacked[from].pop_front().unwrap();
+            self.pool.put(u.payload);
+        }
+    }
+
+    /// Record an incoming link seq from `from`; `false` means duplicate.
+    /// Fresh seqs advance the cumulative cursor (draining any now-contiguous
+    /// out-of-order seqs) and mark an ack owed.
+    fn record_link_seq(&mut self, from: usize, s: u64) -> bool {
+        let mut cum = self.cum_recv[from];
+        if s <= cum {
+            return false;
+        }
+        let ahead = &mut self.seen_ahead[from];
+        match ahead.binary_search(&s) {
+            Ok(_) => return false,
+            Err(i) => ahead.insert(i, s),
+        }
+        while ahead.first() == Some(&(cum + 1)) {
+            cum += 1;
+            ahead.remove(0);
+        }
+        self.cum_recv[from] = cum;
+        self.ack_owed[from] = true;
+        true
     }
 
     /// Take an empty pooled payload buffer. Fill it and pass it to [`send`]
@@ -332,7 +568,7 @@ impl Endpoint {
                     .rx
                     .recv()
                     .expect("transport channel closed with a receive outstanding");
-                self.pending.push_back(m);
+                self.intake(m);
             }
         }
     }
@@ -347,7 +583,9 @@ impl Endpoint {
         for _ in 0..FAULT_RECV_RETRIES {
             match self.rx.recv_timeout(std::time::Duration::from_micros(wait_us)) {
                 Ok(m) => {
-                    self.pending.push_back(m);
+                    // a duplicate intake leaves `pending` unchanged; the
+                    // caller's loop simply pulls again
+                    self.intake(m);
                     return;
                 }
                 Err(RecvTimeoutError::Timeout) => wait_us = (wait_us * 2).min(20_000),
@@ -370,7 +608,7 @@ impl Endpoint {
     /// identical to [`recv_from`](Endpoint::recv_from).
     pub fn try_recv_from(&mut self, from: usize, kind: MsgKind, round: u32, seq: u32) -> Vec<u8> {
         while let Ok(m) = self.rx.try_recv() {
-            self.pending.push_back(m);
+            self.intake(m);
         }
         if let Some(i) = self
             .pending
@@ -422,6 +660,11 @@ impl Endpoint {
         self.recv_msgs += 1;
         if self.wait_on_recv && m.arrival > self.clock {
             self.clock = m.arrival;
+        }
+        if self.log_consumed {
+            // interval checkpointing: a revived rank gets every message
+            // consumed since its last checkpoint back into `pending`
+            self.consumed_log.push(m.clone());
         }
         m.payload
     }
@@ -619,6 +862,168 @@ impl Endpoint {
             *a = b;
         }
         self.coll_buf = buf;
+    }
+
+    // --- reliable-delivery layer -----------------------------------------
+
+    /// Drive the reliable layer for one engine step `tick`, called by the
+    /// supervised engine at the top of every step (a no-op when the layer
+    /// is inert). In order:
+    ///
+    /// 1. **standalone acks** — for every peer still owed one from the
+    ///    *previous* step: anything owed here survived a full step of
+    ///    piggyback opportunities, which is the modeled ack timeout;
+    /// 2. **intake** — drain the channel, harvesting piggybacked acks and
+    ///    discarding duplicates (releasing retransmit entries *before* the
+    ///    timeout scan below, so a just-acked message is never re-sent);
+    /// 3. **retransmission** — re-send every unacked entry whose backoff
+    ///    expired, charging full send-side accounting each time.
+    ///
+    /// Returns `Err(peer)` when an entry exhausted [`MAX_SEND_ATTEMPTS`] —
+    /// the supervised engine surfaces that as `StopCause::Unreachable`.
+    pub fn reliable_sweep(&mut self, tick: u64) -> Result<(), usize> {
+        if !self.reliable {
+            return Ok(());
+        }
+        self.tick = tick;
+        for p in 0..self.nprocs {
+            if p != self.rank && self.ack_owed[p] {
+                self.send_standalone_ack(p);
+            }
+        }
+        while let Ok(m) = self.rx.try_recv() {
+            self.intake(m);
+        }
+        for p in 0..self.nprocs {
+            if p == self.rank {
+                continue;
+            }
+            let mut q = std::mem::take(&mut self.unacked[p]);
+            for u in q.iter_mut() {
+                if u.next_retry > tick {
+                    continue;
+                }
+                if u.attempt >= MAX_SEND_ATTEMPTS {
+                    self.unacked[p] = q;
+                    return Err(p);
+                }
+                u.attempt += 1;
+                u.next_retry = tick + retry_backoff(u.attempt);
+                let bytes = u.payload.len() + MSG_HEADER_BYTES;
+                self.sent_msgs += 1;
+                self.sent_bytes += bytes as u64;
+                self.clock += self.model.transfer_secs(bytes);
+                self.retransmits += 1;
+                let mut payload = self.pool.take();
+                payload.extend_from_slice(&u.payload);
+                let msg = Message {
+                    from: self.rank,
+                    kind: u.kind,
+                    round: u.round,
+                    seq: u.seq,
+                    payload,
+                    arrival: self.clock,
+                    link_seq: u.link_seq,
+                    ack: 0,
+                };
+                let attempt = u.attempt;
+                self.transmit(p, msg, attempt);
+            }
+            self.unacked[p] = q;
+        }
+        Ok(())
+    }
+
+    /// Send a standalone cumulative ack to `to`, charged like any
+    /// (payload-free) message. Standalone acks face the loss coin too: a
+    /// lost one leaves `ack_owed` set (loss is decided before the
+    /// bookkeeping in [`transmit`](Endpoint::transmit)), so the next sweep
+    /// retries and the protocol converges.
+    fn send_standalone_ack(&mut self, to: usize) {
+        self.sent_msgs += 1;
+        self.sent_bytes += MSG_HEADER_BYTES as u64;
+        self.clock += self.model.transfer_secs(MSG_HEADER_BYTES);
+        self.acks_sent += 1;
+        let aseq = self.ack_seq[to];
+        self.ack_seq[to] += 1;
+        let msg = Message {
+            from: self.rank,
+            kind: MsgKind::Ack,
+            round: 0,
+            seq: aseq,
+            payload: self.pool.take(),
+            arrival: self.clock,
+            link_seq: 0,
+            ack: 0,
+        };
+        self.transmit(to, msg, 1);
+    }
+
+    /// Whether any reliable send still awaits its peer's ack — pending
+    /// retransmissions count as future progress for deadlock detection.
+    pub fn has_unacked(&self) -> bool {
+        self.unacked.iter().any(|q| !q.is_empty())
+    }
+
+    /// Turn on the consumed-message replay log (the supervised engine sets
+    /// this on every endpoint when interval checkpointing can revive a
+    /// rank by replay).
+    pub fn enable_replay_log(&mut self) {
+        self.log_consumed = true;
+    }
+
+    /// Capture the transport state a revived rank resumes from. Clears the
+    /// replay log: everything consumed before this point is baked into the
+    /// machine snapshot taken alongside.
+    pub fn checkpoint(&mut self) -> EndpointSnapshot {
+        self.consumed_log.clear();
+        EndpointSnapshot {
+            clock: self.clock,
+            sent_msgs: self.sent_msgs,
+            sent_bytes: self.sent_bytes,
+            recv_msgs: self.recv_msgs,
+            dropped_msgs: self.dropped_msgs,
+            non_teardown_drops: self.non_teardown_drops,
+            injected_delays: self.injected_delays,
+            injected_reorders: self.injected_reorders,
+            injected_losses: self.injected_losses,
+            retransmits: self.retransmits,
+            acks_sent: self.acks_sent,
+            dup_discards: self.dup_discards,
+            coll_seq: self.coll_seq,
+            next_link_seq: self.next_link_seq.clone(),
+            unacked: self.unacked.clone(),
+        }
+    }
+
+    /// Roll the endpoint back to `snap` (crash revival under interval
+    /// checkpointing): the rank's own modeled work and the reliable
+    /// layer's **sender** state rewind — replayed sends reuse their
+    /// original link seqs, so every peer dedup-discards them — while
+    /// receiver-side dedup state stays current (see [`EndpointSnapshot`]).
+    /// Messages consumed since the checkpoint return to `pending` for
+    /// replay; messages still held at the sender die with the crash (their
+    /// retransmit entries re-cover them).
+    pub fn restore(&mut self, snap: &EndpointSnapshot) {
+        self.clock = snap.clock;
+        self.sent_msgs = snap.sent_msgs;
+        self.sent_bytes = snap.sent_bytes;
+        self.recv_msgs = snap.recv_msgs;
+        self.dropped_msgs = snap.dropped_msgs;
+        self.non_teardown_drops = snap.non_teardown_drops;
+        self.injected_delays = snap.injected_delays;
+        self.injected_reorders = snap.injected_reorders;
+        self.injected_losses = snap.injected_losses;
+        self.retransmits = snap.retransmits;
+        self.acks_sent = snap.acks_sent;
+        self.dup_discards = snap.dup_discards;
+        self.coll_seq = snap.coll_seq;
+        self.next_link_seq = snap.next_link_seq.clone();
+        self.unacked = snap.unacked.clone();
+        for m in self.consumed_log.drain(..).rev() {
+            self.pending.push_front(m);
+        }
+        self.held.clear();
     }
 }
 
@@ -858,11 +1263,20 @@ mod tests {
             inert[1].recv_from(0, MsgKind::Colors, 0, i);
         }
         for r in 0..2 {
+            // sweeping an inert endpoint is a guaranteed no-op
+            inert[r].reliable_sweep(99).unwrap();
             assert_eq!(clean[r].clock.to_bits(), inert[r].clock.to_bits());
             assert_eq!(clean[r].sent_msgs, inert[r].sent_msgs);
             assert_eq!(clean[r].sent_bytes, inert[r].sent_bytes);
             assert_eq!(clean[r].recv_msgs, inert[r].recv_msgs);
             assert_eq!(inert[r].injected_delays + inert[r].injected_reorders, 0);
+            assert_eq!(
+                inert[r].injected_losses
+                    + inert[r].retransmits
+                    + inert[r].acks_sent
+                    + inert[r].dup_discards,
+                0
+            );
         }
     }
 
@@ -873,8 +1287,7 @@ mod tests {
             seed: 1,
             delay_prob: 1.0,
             delay_secs: 0.5,
-            reorder_prob: 0.0,
-            crash: None,
+            ..FaultPlan::none()
         };
         let mut faulted = network_faulted(2, model, plan);
         let mut clean = network(2, model);
@@ -894,10 +1307,8 @@ mod tests {
     fn reordered_messages_are_held_until_flushed() {
         let plan = FaultPlan {
             seed: 1,
-            delay_prob: 0.0,
-            delay_secs: 0.0,
             reorder_prob: 1.0,
-            crash: None,
+            ..FaultPlan::none()
         };
         let mut eps = network_faulted(2, NetworkModel::ideal(), plan);
         let mut b = eps.pop().unwrap();
@@ -1088,6 +1499,158 @@ mod tests {
                 assert_eq!(eps[r].sent_bytes, bytes, "p{r} bytes (procs={procs})");
             }
         }
+    }
+
+    /// A loss-free plan that still activates the reliable layer (interval
+    /// checkpointing with a crash on the books).
+    fn reliable_no_loss_plan() -> FaultPlan {
+        use crate::dist::fault::Crash;
+        FaultPlan {
+            seed: 1,
+            crashes: vec![Crash {
+                rank: 0,
+                step: 1_000_000, // never reached in these unit tests
+                down_steps: 1,
+            }],
+            checkpoint_interval: 4,
+            ..FaultPlan::none()
+        }
+    }
+
+    #[test]
+    fn lossy_link_delivers_every_message_exactly_once() {
+        let run = || {
+            let plan = FaultPlan {
+                seed: 11,
+                loss_prob: 0.3,
+                ..FaultPlan::none()
+            };
+            let mut eps = network_faulted(2, NetworkModel::ideal(), plan);
+            let mut b = eps.pop().unwrap();
+            let mut a = eps.pop().unwrap();
+            for i in 0..50u32 {
+                a.send(1, MsgKind::Colors, 0, i, vec![i as u8; 3]);
+            }
+            let mut remaining: Vec<u32> = (0..50).collect();
+            for tick in 0..10_000u64 {
+                a.reliable_sweep(tick)
+                    .expect("loss=0.3 must never exhaust the retry budget");
+                b.reliable_sweep(tick).unwrap();
+                remaining.retain(|&i| {
+                    if b.have_msg(0, MsgKind::Colors, 0, i) {
+                        assert_eq!(b.recv_from(0, MsgKind::Colors, 0, i), vec![i as u8; 3]);
+                        false
+                    } else {
+                        true
+                    }
+                });
+                if remaining.is_empty() && !a.has_unacked() {
+                    break;
+                }
+            }
+            assert!(remaining.is_empty(), "undelivered: {remaining:?}");
+            assert!(!a.has_unacked(), "every send must end acknowledged");
+            assert_eq!(b.recv_msgs, 50, "exactly-once delivery");
+            assert!(a.injected_losses > 0, "loss=0.3 over 50 messages must lose some");
+            assert!(a.retransmits > 0, "losses must be re-covered");
+            assert!(b.acks_sent > 0, "receiver must ack");
+            (
+                a.sent_msgs,
+                a.clock.to_bits(),
+                a.injected_losses,
+                a.retransmits,
+                b.acks_sent,
+                b.dup_discards,
+            )
+        };
+        assert_eq!(run(), run(), "same seed, same retransmit/ack/dup trace");
+    }
+
+    #[test]
+    fn retry_cap_trips_unreachable_with_exact_loss_accounting() {
+        // loss=1.0 is unreachable by construction (the CLI rejects it; the
+        // struct admits it precisely for this worst case)
+        let plan = FaultPlan {
+            seed: 3,
+            loss_prob: 1.0,
+            ..FaultPlan::none()
+        };
+        let mut eps = network_faulted(2, NetworkModel::ideal(), plan);
+        let mut a = eps.remove(0);
+        a.send(1, MsgKind::Colors, 0, 0, vec![7]);
+        let mut tripped = None;
+        for tick in 0..1000u64 {
+            if let Err(p) = a.reliable_sweep(tick) {
+                tripped = Some(p);
+                break;
+            }
+        }
+        assert_eq!(tripped, Some(1), "peer 1 must be declared unreachable");
+        assert_eq!(
+            a.injected_losses,
+            MAX_SEND_ATTEMPTS as u64,
+            "every attempt was lost"
+        );
+        assert_eq!(a.retransmits, (MAX_SEND_ATTEMPTS - 1) as u64);
+        assert!(a.has_unacked(), "the doomed entry stays on the books");
+    }
+
+    #[test]
+    fn duplicate_is_discarded_and_reacked() {
+        let mut eps = network_faulted(2, NetworkModel::ideal(), reliable_no_loss_plan());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, MsgKind::Colors, 0, 0, vec![5]);
+        // the receiver never acks in time: the sender's backoff expires and
+        // it retransmits, so two copies are on the wire
+        a.reliable_sweep(2).unwrap();
+        assert_eq!(a.retransmits, 1);
+        assert!(b.have_msg(0, MsgKind::Colors, 0, 0));
+        assert_eq!(b.dup_discards, 1, "second copy discarded at intake");
+        assert_eq!(b.recv_from(0, MsgKind::Colors, 0, 0), vec![5]);
+        assert_eq!(b.recv_msgs, 1, "dedup means exactly-once");
+        // the discard re-owes an ack; the next sweep sends it standalone
+        b.reliable_sweep(3).unwrap();
+        assert_eq!(b.acks_sent, 1);
+        a.reliable_sweep(4).unwrap();
+        assert!(!a.has_unacked(), "standalone ack must release the entry");
+        assert!(
+            a.pending.is_empty(),
+            "standalone acks are swallowed at intake, never matched"
+        );
+    }
+
+    #[test]
+    fn snapshot_restore_rewinds_sender_state_and_replays_consumed() {
+        let mut eps = network_faulted(2, NetworkModel::ideal(), reliable_no_loss_plan());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.enable_replay_log();
+        b.send(0, MsgKind::Colors, 0, 0, vec![1]);
+        b.send(0, MsgKind::Colors, 0, 1, vec![2]);
+        b.send(0, MsgKind::Colors, 0, 2, vec![3]);
+        assert_eq!(a.recv_from(1, MsgKind::Colors, 0, 0), vec![1]);
+        let snap = a.checkpoint();
+        // post-checkpoint work: two consumes and one send, all to be redone
+        assert_eq!(a.recv_from(1, MsgKind::Colors, 0, 1), vec![2]);
+        assert_eq!(a.recv_from(1, MsgKind::Colors, 0, 2), vec![3]);
+        a.send(1, MsgKind::Colors, 5, 0, vec![9]);
+        assert_eq!(b.recv_from(0, MsgKind::Colors, 5, 0), vec![9]);
+        let (msgs_at_crash, recv_at_crash) = (a.sent_msgs, a.recv_msgs);
+        a.restore(&snap);
+        assert_eq!(a.recv_msgs, 1, "receive accounting rewound");
+        assert_eq!(a.recv_from(1, MsgKind::Colors, 0, 1), vec![2]);
+        assert_eq!(a.recv_from(1, MsgKind::Colors, 0, 2), vec![3]);
+        assert_eq!(a.recv_msgs, recv_at_crash, "replay re-applies the consumes");
+        // the replayed send reuses link seq 1 and is absorbed by b's dedup
+        a.send(1, MsgKind::Colors, 5, 0, vec![9]);
+        assert_eq!(a.sent_msgs, msgs_at_crash, "send accounting replays identically");
+        assert!(
+            !b.have_msg(0, MsgKind::Colors, 5, 0),
+            "replayed send must be dedup-discarded, not redelivered"
+        );
+        assert_eq!(b.dup_discards, 1);
+        assert_eq!(b.recv_msgs, 1, "b never double-consumes");
     }
 
     #[test]

@@ -162,6 +162,7 @@ fn cause_to_u8(c: StopCause) -> u8 {
         StopCause::Cancelled => 1,
         StopCause::DeadlineExceeded => 2,
         StopCause::BudgetExhausted => 3,
+        StopCause::Unreachable => 4,
     }
 }
 
@@ -170,6 +171,7 @@ fn cause_from_u8(v: u8) -> Option<StopCause> {
         1 => Some(StopCause::Cancelled),
         2 => Some(StopCause::DeadlineExceeded),
         3 => Some(StopCause::BudgetExhausted),
+        4 => Some(StopCause::Unreachable),
         _ => None,
     }
 }
@@ -367,25 +369,48 @@ const MAX_SUPERVISED_STEPS: u64 = 10_000_000;
 /// same seed ⇒ the same recovery trace, twice), and chaos runs are not on
 /// any performance path. The supervisor:
 ///
-/// * **checkpoints** the crash rank's machine at the top of every engine
-///   step (a `Clone` of its full state: colors, RNG, scratch, state tag);
-/// * at the plan's crash step, the live machine is destroyed *before*
-///   executing that step and the rank goes down for `down_steps` engine
-///   steps (peers stall via [`StepProcess::poll_ready`] when they need its
-///   messages), emitting [`Event::FaultInjected`];
-/// * on revival the machine is **replayed from the checkpoint** — because
-///   the crash lands on a step boundary the checkpoint is exactly the
-///   pre-crash state, so no message is consumed or sent twice — emitting
-///   [`Event::ProcRestarted`];
+/// * **checkpoints every live rank** (a `Clone` of the machine's full
+///   state: colors, RNG, scratch, state tag) whenever
+///   `step % plan.checkpoint_interval == 0`. At the default interval of 1
+///   this is the original per-step cadence; a larger interval additionally
+///   snapshots each endpoint's transport state
+///   ([`Endpoint::checkpoint`]), because revival then *replays* steps;
+/// * at each crash in `plan.crashes` (any number of ranks, repeat crashes
+///   allowed), the live machine is destroyed *before* executing that step
+///   and the rank goes down for `down_steps` engine steps (peers stall via
+///   [`StepProcess::poll_ready`] when they need its messages), emitting
+///   [`Event::FaultInjected`]. Crashes whose step passes while the rank is
+///   already down (or finished) are coalesced;
+/// * on revival the machine is **replayed from its last periodic
+///   checkpoint**, emitting [`Event::ProcRestarted`]. At interval 1 the
+///   checkpoint is exactly the pre-crash state, so no message is consumed
+///   or sent twice; at larger intervals the endpoint is rolled back with
+///   it and the replayed sends reuse their original link seqs, so every
+///   peer's reliable-layer dedup absorbs them while
+///   [`Endpoint::restore`] re-feeds the replayed receives;
+/// * when the plan activates the reliable layer (loss, or interval
+///   checkpointing with crashes), every endpoint gets a
+///   [`reliable_sweep`](Endpoint::reliable_sweep) at the top of each step:
+///   standalone acks, intake, and backoff retransmission. A peer
+///   exhausting its retry budget stops the run with
+///   [`StopCause::Unreachable`] — unfinished machines are drained in rank
+///   order exactly like a cancel stop, and the pipeline's `Degrade` policy
+///   can still repair the partial coloring;
 /// * a step on which *no* live machine is ready releases held (reordered)
-///   messages via [`Endpoint::flush_held`]; if nothing was released and no
-///   process is down, the run is deadlocked and returns a typed error;
+///   messages via [`Endpoint::flush_held`]; if nothing was released, no
+///   process is down, and no retransmission is pending, the run is
+///   deadlocked and returns a typed error;
 /// * a machine panic (including a fault-starved receive) becomes
 ///   [`Error::proc_failed`] instead of unwinding through the caller.
 ///
+/// A plan that crashes a rank the run does not have is a typed validation
+/// error (matching the CLI-side check), not a silent no-op.
+///
 /// With `FaultPlan::none()` the schedule is the lockstep engine's and every
 /// modeled quantity is bit-for-bit identical to [`run_steps`]
-/// (`tests/fault_injection.rs` pins this).
+/// (`tests/fault_injection.rs` pins this); any loss-free plan with the
+/// default checkpoint interval behaves exactly as it did before the
+/// reliable layer existed.
 pub fn run_steps_supervised<'a, M, F>(
     num_vertices: usize,
     locals: &'a [LocalGraph],
@@ -425,22 +450,62 @@ where
 {
     let wall = Timer::start();
     let procs = locals.len();
-    let mut eps = comm::network_faulted(procs, net, plan);
+    for c in &plan.crashes {
+        if c.rank as usize >= procs {
+            return Err(err!(
+                "fault plan crashes rank {} but the run has only {procs} process(es)",
+                c.rank
+            ));
+        }
+    }
+    if plan.checkpoint_interval == 0 {
+        return Err(err!("fault plan checkpoint interval must be at least 1"));
+    }
+    let mut eps = comm::network_faulted(procs, net, plan.clone());
     let mut machines: Vec<M> = locals.iter().map(&make).collect();
     let mut outs: Vec<Option<ProcResult>> = (0..procs).map(|_| None).collect();
     let mut stopped: Option<StopCause> = None;
 
-    let crash = plan.crash.filter(|c| (c.rank as usize) < procs);
-    let mut crashed = false;
-    let mut down_until: Option<u64> = None;
-    let mut checkpoint: Option<M> = None;
-    let mut restarts: u64 = 0;
+    let has_crashes = !plan.crashes.is_empty();
+    let reliable = plan.reliable();
+    let interval = plan.checkpoint_interval;
+    if interval > 1 && has_crashes {
+        // interval checkpointing replays steps on revival: log consumed
+        // messages so `restore` can re-feed them
+        for ep in eps.iter_mut() {
+            ep.enable_replay_log();
+        }
+    }
+    let mut down_until: Vec<Option<u64>> = vec![None; procs];
+    let mut checkpoints: Vec<Option<(M, Option<comm::EndpointSnapshot>)>> =
+        (0..procs).map(|_| None).collect();
+    let mut crash_cursor: Vec<u64> = vec![0; procs];
+    let mut restarts: Vec<u64> = vec![0; procs];
     let mut n_done = 0usize;
     let mut step: u64 = 0;
 
     let emit = |ev: Event| {
         if let Some(o) = obs {
             o.on_event(&ev);
+        }
+    };
+
+    // drain every unfinished machine, in rank order, after a stop verdict
+    let drain = |machines: &mut [M], eps: &mut [Endpoint], outs: &mut [Option<ProcResult>]| {
+        for r in 0..machines.len() {
+            if outs[r].is_none() {
+                let harvested = machines[r].abort(&mut eps[r]);
+                outs[r] = Some(harvested.unwrap_or_else(|| ProcResult {
+                    colors: Vec::new(),
+                    metrics: crate::dist::ProcMetrics {
+                        vtime: eps[r].clock,
+                        sent_msgs: eps[r].sent_msgs,
+                        sent_bytes: eps[r].sent_bytes,
+                        recv_msgs: eps[r].recv_msgs,
+                        ..Default::default()
+                    },
+                }));
+            }
         }
     };
 
@@ -458,21 +523,29 @@ where
                 // uniform by construction (one thread decides); drain the
                 // unfinished machines in rank order for determinism
                 stopped = Some(cause);
-                for r in 0..procs {
-                    if outs[r].is_none() {
-                        let harvested = machines[r].abort(&mut eps[r]);
-                        outs[r] = Some(harvested.unwrap_or_else(|| ProcResult {
-                            colors: Vec::new(),
-                            metrics: crate::dist::ProcMetrics {
-                                vtime: eps[r].clock,
-                                sent_msgs: eps[r].sent_msgs,
-                                sent_bytes: eps[r].sent_bytes,
-                                recv_msgs: eps[r].recv_msgs,
-                                ..Default::default()
-                            },
-                        }));
-                    }
+                drain(&mut machines, &mut eps, &mut outs);
+                break;
+            }
+        }
+        if reliable {
+            // standalone acks, intake, and overdue retransmissions — for
+            // every rank whose NIC is up (done ranks included: their
+            // unacked messages must still reach live peers). A crashed
+            // rank neither acks nor retransmits until its revival turn
+            // restores it (`down_until` clears then).
+            let mut unreachable = false;
+            for r in 0..procs {
+                if down_until[r].is_some() {
+                    continue;
                 }
+                if eps[r].reliable_sweep(step).is_err() {
+                    unreachable = true;
+                    break;
+                }
+            }
+            if unreachable {
+                stopped = Some(StopCause::Unreachable);
+                drain(&mut machines, &mut eps, &mut outs);
                 break;
             }
         }
@@ -481,29 +554,47 @@ where
             if outs[r].is_some() {
                 continue;
             }
-            let is_crash_rank = crash.is_some_and(|c| c.rank as usize == r);
-            if is_crash_rank && !crashed {
-                // per-step checkpoint: the recovery image is the state at
+            match down_until[r] {
+                Some(until) if step < until => continue, // still down
+                Some(_) => {
+                    // revive: deterministic replay from the last periodic
+                    // checkpoint (at interval 1, the top of the crash step)
+                    let (m, snap) = checkpoints[r]
+                        .as_ref()
+                        .expect("crash checkpoint missing")
+                        .clone();
+                    machines[r] = m;
+                    if let Some(s) = snap {
+                        eps[r].restore(&s);
+                    }
+                    restarts[r] += 1;
+                    down_until[r] = None;
+                    emit(Event::ProcRestarted { rank: r as u32, step });
+                }
+                None => {}
+            }
+            if has_crashes && step % interval == 0 {
+                // periodic checkpoint: the recovery image is the state at
                 // the top of the step, i.e. exactly between two steps
-                checkpoint = Some(machines[r].clone());
-                if crash.is_some_and(|c| c.step == step) {
-                    crashed = true;
-                    down_until = Some(step + crash.map(|c| c.down_steps).unwrap_or(1));
-                    emit(Event::FaultInjected { rank: r as u32, step });
-                    continue;
+                checkpoints[r] = Some((
+                    machines[r].clone(),
+                    if interval > 1 { Some(eps[r].checkpoint()) } else { None },
+                ));
+            }
+            // coalesce crashes whose step passed while the rank was down
+            while let Some(c) = plan.next_crash_for(r, crash_cursor[r]) {
+                if c.step < step {
+                    crash_cursor[r] = c.step + 1;
+                } else {
+                    break;
                 }
             }
-            if is_crash_rank && crashed {
-                match down_until {
-                    Some(until) if step < until => continue, // still down
-                    Some(_) => {
-                        // revive: deterministic replay from the checkpoint
-                        machines[r] = checkpoint.take().expect("crash checkpoint missing");
-                        restarts += 1;
-                        down_until = None;
-                        emit(Event::ProcRestarted { rank: r as u32, step });
-                    }
-                    None => {} // already revived
+            if let Some(c) = plan.next_crash_for(r, crash_cursor[r]) {
+                if c.step == step {
+                    crash_cursor[r] = step + 1;
+                    down_until[r] = Some(step + c.down_steps);
+                    emit(Event::FaultInjected { rank: r as u32, step });
+                    continue;
                 }
             }
             if !machines[r].poll_ready(&mut eps[r]) {
@@ -528,13 +619,14 @@ where
             }
         }
         if !progressed && n_done < procs {
-            let down_now = down_until.is_some_and(|until| step < until);
-            if !down_now {
+            let any_down = (0..procs).any(|r| down_until[r].is_some_and(|until| step < until));
+            if !any_down {
                 let released: usize = eps.iter_mut().map(|ep| ep.flush_held()).sum();
-                if released == 0 {
+                if released == 0 && !eps.iter().any(|e| e.has_unacked()) {
                     return Err(err!(
                         "supervised engine deadlocked at step {step}: every live process \
-                         is stalled, no process is down, and no held message remains"
+                         is stalled, no process is down, and no held or unacked message \
+                         remains"
                     ));
                 }
             }
@@ -557,9 +649,11 @@ where
         res.metrics.non_teardown_drops = ep.non_teardown_drops;
         res.metrics.injected_delays = ep.injected_delays;
         res.metrics.injected_reorders = ep.injected_reorders;
-        if crash.is_some_and(|c| c.rank as usize == r) {
-            res.metrics.restarts = restarts;
-        }
+        res.metrics.injected_losses = ep.injected_losses;
+        res.metrics.retransmits = ep.retransmits;
+        res.metrics.acks_sent = ep.acks_sent;
+        res.metrics.dup_discards = ep.dup_discards;
+        res.metrics.restarts = restarts[r];
         for (gid, c) in std::mem::take(&mut res.colors) {
             coloring.set(gid, c);
         }
@@ -782,11 +876,11 @@ mod tests {
         let procs = 4usize;
         let plan = FaultPlan {
             seed: 5,
-            crash: Some(Crash {
+            crashes: vec![Crash {
                 rank: 1,
                 step: 2,
                 down_steps: 2,
-            }),
+            }],
             ..FaultPlan::none()
         };
         let run = || {
@@ -796,7 +890,7 @@ mod tests {
                 g.num_vertices(),
                 &locals,
                 NetworkModel::default(),
-                plan,
+                plan.clone(),
                 Some(&log),
                 |lg| toy_of(lg, procs),
             )
@@ -948,11 +1042,11 @@ mod tests {
         let (g, locals) = toy_fleet(4);
         let plan = FaultPlan {
             seed: 3,
-            crash: Some(Crash {
+            crashes: vec![Crash {
                 rank: 1,
                 step: 2,
                 down_steps: 1_000, // still down when the budget fires
-            }),
+            }],
             ..FaultPlan::none()
         };
         let tok = CancelToken::with_limits(None, Some(4.0));
@@ -968,6 +1062,156 @@ mod tests {
         .unwrap();
         assert_eq!(out.stopped, Some(StopCause::BudgetExhausted));
         assert_eq!(out.per_proc.len(), 4, "every rank reported, downed one included");
+    }
+
+    #[test]
+    fn supervised_rejects_invalid_crash_plans_with_typed_errors() {
+        use crate::dist::fault::Crash;
+        let (g, locals) = toy_fleet(4);
+        let oob = FaultPlan {
+            crashes: vec![Crash {
+                rank: 7,
+                step: 1,
+                down_steps: 1,
+            }],
+            ..FaultPlan::none()
+        };
+        let err = run_steps_supervised(
+            g.num_vertices(),
+            &locals,
+            NetworkModel::ideal(),
+            oob,
+            None,
+            |lg| toy_of(lg, 4),
+        )
+        .expect_err("an out-of-range crash rank must not be a silent no-op");
+        assert!(err.to_string().contains("crashes rank 7"), "{err}");
+
+        let zero = FaultPlan {
+            checkpoint_interval: 0,
+            ..FaultPlan::none()
+        };
+        let err = run_steps_supervised(
+            g.num_vertices(),
+            &locals,
+            NetworkModel::ideal(),
+            zero,
+            None,
+            |lg| toy_of(lg, 4),
+        )
+        .expect_err("a zero checkpoint interval must be rejected");
+        assert!(err.to_string().contains("checkpoint interval"), "{err}");
+    }
+
+    #[test]
+    fn supervised_multi_crash_with_interval_checkpoints_replays_to_the_same_answer() {
+        use crate::coordinator::event::EventLog;
+        use crate::dist::fault::Crash;
+        let procs = 4usize;
+        let plan = FaultPlan {
+            seed: 9,
+            crashes: vec![
+                Crash {
+                    rank: 1,
+                    step: 2,
+                    down_steps: 2,
+                },
+                Crash {
+                    rank: 2,
+                    step: 3,
+                    down_steps: 2,
+                },
+            ],
+            checkpoint_interval: 2,
+            ..FaultPlan::none()
+        };
+        let run = || {
+            let (g, locals) = toy_fleet(procs);
+            let log = EventLog::new();
+            let out = run_steps_supervised(
+                g.num_vertices(),
+                &locals,
+                NetworkModel::default(),
+                plan.clone(),
+                Some(&log),
+                |lg| toy_of(lg, procs),
+            )
+            .unwrap();
+            (out, log.take())
+        };
+        let (a, ev_a) = run();
+        let (b, ev_b) = run();
+        assert_eq!(ev_a, ev_b, "multi-crash recovery trace must replay identically");
+        assert_eq!(
+            ev_a,
+            vec![
+                Event::FaultInjected { rank: 1, step: 2 },
+                Event::FaultInjected { rank: 2, step: 3 },
+                Event::ProcRestarted { rank: 1, step: 4 },
+                Event::ProcRestarted { rank: 2, step: 5 },
+            ]
+        );
+        assert_eq!(a.metrics.total_restarts, 2);
+        assert_eq!(a.per_proc[1].restarts, 1);
+        assert_eq!(a.per_proc[2].restarts, 1);
+        assert_eq!(a.stopped, None);
+        let expect = (procs * (procs + 1) / 2) as f64;
+        for m in &a.per_proc {
+            assert_eq!(m.vtime, expect, "p{} allreduce sum survives both crashes", m.rank);
+        }
+        assert_eq!(a.metrics.total_non_teardown_drops, 0);
+        for (x, y) in a.per_proc.iter().zip(b.per_proc.iter()) {
+            assert_eq!(x.sent_msgs, y.sent_msgs);
+            assert_eq!(x.retransmits, y.retransmits);
+            assert_eq!(x.acks_sent, y.acks_sent);
+            assert_eq!(x.dup_discards, y.dup_discards);
+            assert_eq!(x.vtime.to_bits(), y.vtime.to_bits());
+        }
+    }
+
+    #[test]
+    fn supervised_lossy_links_still_reach_the_exact_answer_deterministically() {
+        let procs = 4usize;
+        let plan = FaultPlan {
+            seed: 21,
+            loss_prob: 0.35,
+            ..FaultPlan::none()
+        };
+        let run = || {
+            let (g, locals) = toy_fleet(procs);
+            run_steps_supervised(
+                g.num_vertices(),
+                &locals,
+                NetworkModel::default(),
+                plan.clone(),
+                None,
+                |lg| toy_of(lg, procs),
+            )
+            .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.stopped, None, "retry budget is ample at loss 0.35");
+        let expect = (procs * (procs + 1) / 2) as f64;
+        for m in &a.per_proc {
+            assert_eq!(m.vtime, expect, "p{} exact answer under loss", m.rank);
+        }
+        assert!(
+            a.metrics.total_injected_losses > 0,
+            "0.35 loss over dozens of transmissions fires with overwhelming probability"
+        );
+        assert_eq!(
+            a.metrics.total_retransmits, b.metrics.total_retransmits,
+            "same seed, same retransmission schedule"
+        );
+        assert_eq!(a.metrics.total_injected_losses, b.metrics.total_injected_losses);
+        assert_eq!(a.metrics.total_acks_sent, b.metrics.total_acks_sent);
+        assert_eq!(a.metrics.total_dup_discards, b.metrics.total_dup_discards);
+        assert_eq!(a.metrics.total_non_teardown_drops, 0, "losses are not drops");
+        for (x, y) in a.per_proc.iter().zip(b.per_proc.iter()) {
+            assert_eq!(x.sent_msgs, y.sent_msgs);
+            assert_eq!(x.vtime.to_bits(), y.vtime.to_bits());
+        }
     }
 
     #[test]

@@ -2,18 +2,25 @@
 //!
 //! A [`FaultPlan`] describes which faults to inject into a run: per-message
 //! delivery delays, per-message reordering (sender-side hold-back until the
-//! supervisor flushes), and at most one crash-stop of a process at an
-//! engine superstep. Every decision is a **pure function of the plan seed
-//! and the message identity** `(from, to, kind, round, seq)` — never of
-//! wall-clock time, scheduling, or any mutable RNG state — so the same
-//! plan injects the same faults into the same run twice, regardless of
-//! thread interleaving. That is what makes recovery traces replayable and
-//! the chaos property tests (`rust/tests/fault_injection.rs`) meaningful.
+//! supervisor flushes), per-transmission message **loss** (covered by the
+//! reliable-delivery layer in [`comm`](crate::dist::comm)), and any number
+//! of crash-stops — multiple ranks, repeat crashes of the same rank — at
+//! engine supersteps. Every decision is a **pure function of the plan seed
+//! and the message identity** `(from, to, kind, round, seq)` (plus the
+//! transmission attempt, for loss — retransmissions of the same message
+//! re-flip the coin) — never of wall-clock time, scheduling, or any
+//! mutable RNG state — so the same plan injects the same faults into the
+//! same run twice, regardless of thread interleaving. That is what makes
+//! recovery traces replayable and the chaos property tests
+//! (`rust/tests/fault_injection.rs`) meaningful.
 //!
 //! `FaultPlan::none()` is the default everywhere; every consumer gates its
 //! fault branches on [`FaultPlan::is_active`], so a fault-free run takes
 //! bit-for-bit the same path it took before this module existed (pinned by
-//! the accounting fixture).
+//! the accounting fixture). The reliable-delivery layer has its own,
+//! stricter gate — [`FaultPlan::reliable`] — so even an active plan
+//! without loss (and without interval checkpointing) keeps sequence-free
+//! envelopes and the exact pre-reliability accounting.
 
 use crate::dist::comm::MsgKind;
 use crate::util::error::Result;
@@ -23,7 +30,9 @@ use crate::{bail, err};
 /// Crash-stop of one process: at the start of engine superstep `step` the
 /// process goes down (it does not execute that step) and stays down for
 /// `down_steps` supersteps before the supervisor restarts it from its last
-/// checkpoint.
+/// periodic checkpoint. A crash whose step passes while the rank is
+/// already down (or after the rank finished) is coalesced — it never
+/// fires.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Crash {
     pub rank: u32,
@@ -35,10 +44,14 @@ pub struct Crash {
 /// Default downtime of a `crash=r@s` spec without an explicit `+d` suffix.
 pub const DEFAULT_DOWN_STEPS: u64 = 2;
 
+/// Default checkpoint cadence: every engine step, the pre-interval
+/// behavior.
+pub const DEFAULT_CHECKPOINT_INTERVAL: u64 = 1;
+
 /// A seeded, deterministic plan of transport faults. See the module docs.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FaultPlan {
-    /// Seeds the per-message delay/reorder coins.
+    /// Seeds the per-message delay/reorder/loss coins.
     pub seed: u64,
     /// Probability that a message's arrival is delayed by `delay_secs`.
     pub delay_prob: f64,
@@ -47,8 +60,21 @@ pub struct FaultPlan {
     /// Probability that a message is held back at the sender until the
     /// supervisor flushes (delivered out of program order).
     pub reorder_prob: f64,
-    /// At most one crash-stop per run.
-    pub crash: Option<Crash>,
+    /// Probability that one wire transmission of a message is lost.
+    /// Nonzero loss activates the reliable-delivery layer (sequence
+    /// numbers, acks, retransmission) in every endpoint.
+    pub loss_prob: f64,
+    /// Crash-stops, in any order; multiple ranks and repeat crashes of the
+    /// same rank are allowed.
+    pub crashes: Vec<Crash>,
+    /// The supervised engine checkpoints every live rank whenever
+    /// `step % checkpoint_interval == 0` (so step 0 is always covered).
+    /// `1` (the default) is the original per-step cadence; larger
+    /// intervals make revived ranks *replay* the steps since their last
+    /// checkpoint, relying on receiver-side dedup to absorb the replayed
+    /// sends — which is why an interval > 1 with crashes also activates
+    /// the reliable layer.
+    pub checkpoint_interval: u64,
 }
 
 impl Default for FaultPlan {
@@ -65,14 +91,40 @@ impl FaultPlan {
             delay_prob: 0.0,
             delay_secs: 0.0,
             reorder_prob: 0.0,
-            crash: None,
+            loss_prob: 0.0,
+            crashes: Vec::new(),
+            checkpoint_interval: DEFAULT_CHECKPOINT_INTERVAL,
         }
     }
 
     /// Whether any fault can fire. Every fault branch in the runtime is
     /// gated on this, keeping the fault-free fast path untouched.
     pub fn is_active(&self) -> bool {
-        self.delay_prob > 0.0 || self.reorder_prob > 0.0 || self.crash.is_some()
+        self.delay_prob > 0.0
+            || self.reorder_prob > 0.0
+            || self.loss_prob > 0.0
+            || !self.crashes.is_empty()
+    }
+
+    /// Whether the reliable-delivery layer (sequence-numbered envelopes,
+    /// cumulative acks, retransmission, receiver dedup) must be active.
+    /// True under loss — messages can vanish from the wire — and under
+    /// interval checkpointing with crashes, where a revived rank *replays*
+    /// steps and its re-sent messages must be absorbed by dedup. Loss-free
+    /// per-step-checkpoint plans keep the layer fully inert, so their
+    /// accounting is bit-for-bit the pre-reliability transport's.
+    pub fn reliable(&self) -> bool {
+        self.loss_prob > 0.0 || (self.checkpoint_interval > 1 && !self.crashes.is_empty())
+    }
+
+    /// The earliest crash scheduled for `rank` at or after `from_step`,
+    /// if any — the supervised engine's per-rank crash cursor.
+    pub fn next_crash_for(&self, rank: usize, from_step: u64) -> Option<Crash> {
+        self.crashes
+            .iter()
+            .filter(|c| c.rank as usize == rank && c.step >= from_step)
+            .min_by_key(|c| c.step)
+            .copied()
     }
 
     /// A uniform coin in `[0, 1)` for one (fault-kind, message) pair —
@@ -106,14 +158,35 @@ impl FaultPlan {
         self.reorder_prob > 0.0 && self.coin(0x2E0D, from, to, kind, round, seq) < self.reorder_prob
     }
 
+    /// Whether transmission `attempt` (1-based) of this message is lost on
+    /// the wire. The attempt number is mixed into the coin, so each
+    /// retransmission re-flips it independently — a finite retry budget
+    /// eventually gets any message through under any loss < 1.
+    pub fn loses(
+        &self,
+        from: usize,
+        to: usize,
+        kind: MsgKind,
+        round: u32,
+        seq: u32,
+        attempt: u32,
+    ) -> bool {
+        self.loss_prob > 0.0
+            && self.coin(0x105E ^ ((attempt as u64) << 32), from, to, kind, round, seq)
+                < self.loss_prob
+    }
+
     /// Parse a `--faults` spec: comma-separated `key=value` pairs.
     ///
     /// * `seed=N` — coin seed (default 1)
     /// * `delay=P` — delay probability in `[0, 1]`
     /// * `delay-secs=S` — delay magnitude in virtual seconds (default 1e-4)
     /// * `reorder=P` — hold-back probability in `[0, 1]`
+    /// * `loss=P` — per-transmission loss probability in `[0, 1)` (1.0
+    ///   would defeat retransmission by construction)
     /// * `crash=R@S` or `crash=R@S+D` — crash rank R at engine step S,
-    ///   down for D steps (default [`DEFAULT_DOWN_STEPS`])
+    ///   down for D steps (default [`DEFAULT_DOWN_STEPS`]); may be
+    ///   repeated to crash several ranks or the same rank again
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan {
             seed: 1,
@@ -135,6 +208,13 @@ impl FaultPlan {
                 "reorder" => {
                     plan.reorder_prob = parse_prob("reorder", val)?;
                 }
+                "loss" => {
+                    let p = parse_prob("loss", val)?;
+                    if p >= 1.0 {
+                        bail!("--faults loss: probability must be < 1 (no retry can beat loss=1)");
+                    }
+                    plan.loss_prob = p;
+                }
                 "crash" => {
                     let (rank, rest) = val
                         .split_once('@')
@@ -152,17 +232,19 @@ impl FaultPlan {
                     if down == 0 {
                         bail!("--faults crash: downtime must be >= 1 step");
                     }
-                    plan.crash = Some(Crash {
+                    plan.crashes.push(Crash {
                         rank: rank.parse().map_err(|e| err!("--faults crash rank: {e}"))?,
                         step,
                         down_steps: down,
                     });
                 }
-                other => bail!("--faults: unknown key {other:?} (seed|delay|delay-secs|reorder|crash)"),
+                other => bail!(
+                    "--faults: unknown key {other:?} (seed|delay|delay-secs|reorder|loss|crash)"
+                ),
             }
         }
         if !plan.is_active() {
-            bail!("--faults: spec {spec:?} enables no fault (set delay=, reorder= or crash=)");
+            bail!("--faults: spec {spec:?} enables no fault (set delay=, reorder=, loss= or crash=)");
         }
         Ok(plan)
     }
@@ -180,8 +262,14 @@ impl FaultPlan {
         if self.reorder_prob > 0.0 {
             parts.push(format!("reorder={}", self.reorder_prob));
         }
-        if let Some(c) = self.crash {
+        if self.loss_prob > 0.0 {
+            parts.push(format!("loss={}", self.loss_prob));
+        }
+        for c in &self.crashes {
             parts.push(format!("crash={}@{}", c.rank, c.step));
+        }
+        if self.checkpoint_interval > 1 {
+            parts.push(format!("ckpt={}", self.checkpoint_interval));
         }
         format!("+faults[{}]", parts.join(","))
     }
@@ -203,10 +291,13 @@ mod tests {
     fn none_is_inert_and_default() {
         let p = FaultPlan::none();
         assert!(!p.is_active());
+        assert!(!p.reliable());
         assert_eq!(p, FaultPlan::default());
         assert_eq!(p.label(), "");
         assert_eq!(p.delay_of(0, 1, MsgKind::Colors, 3, 4), None);
         assert!(!p.reorders(0, 1, MsgKind::Colors, 3, 4));
+        assert!(!p.loses(0, 1, MsgKind::Colors, 3, 4, 1));
+        assert_eq!(p.checkpoint_interval, DEFAULT_CHECKPOINT_INTERVAL);
     }
 
     #[test]
@@ -216,7 +307,8 @@ mod tests {
             delay_prob: 0.5,
             delay_secs: 1e-3,
             reorder_prob: 0.5,
-            crash: None,
+            loss_prob: 0.5,
+            ..FaultPlan::none()
         };
         // pure: same message, same answer
         for kind in [MsgKind::Colors, MsgKind::Recolor, MsgKind::Plan] {
@@ -229,6 +321,10 @@ mod tests {
                     p.reorders(1, 0, kind, round, 2),
                     p.reorders(1, 0, kind, round, 2)
                 );
+                assert_eq!(
+                    p.loses(1, 0, kind, round, 2, 1),
+                    p.loses(1, 0, kind, round, 2, 1)
+                );
             }
         }
         // with p=0.5, some messages are hit and some are not
@@ -237,40 +333,116 @@ mod tests {
             .count();
         assert!(hits > 0 && hits < 64, "degenerate coin: {hits}/64");
         // a different seed flips some decisions
-        let q = FaultPlan { seed: 8, ..p };
+        let q = FaultPlan { seed: 8, ..p.clone() };
         assert!(
             (0..64).any(|r| p.reorders(0, 1, MsgKind::Colors, r, 0)
                 != q.reorders(0, 1, MsgKind::Colors, r, 0)),
             "seed does not influence the coins"
         );
+        // the attempt number re-flips the loss coin: a message lost on
+        // attempt 1 is not doomed on every retransmission
+        assert!(
+            (0..64).any(|r| p.loses(0, 1, MsgKind::Colors, r, 0, 1)
+                != p.loses(0, 1, MsgKind::Colors, r, 0, 2)),
+            "attempt does not influence the loss coin"
+        );
+    }
+
+    #[test]
+    fn reliable_gate_is_loss_or_interval_with_crashes() {
+        let lossy = FaultPlan {
+            loss_prob: 0.1,
+            ..FaultPlan::none()
+        };
+        assert!(lossy.is_active() && lossy.reliable());
+        let crash = Crash { rank: 0, step: 1, down_steps: 1 };
+        let per_step = FaultPlan {
+            crashes: vec![crash],
+            ..FaultPlan::none()
+        };
+        assert!(per_step.is_active());
+        assert!(!per_step.reliable(), "interval=1 crash plans stay on the plain transport");
+        let interval = FaultPlan {
+            crashes: vec![crash],
+            checkpoint_interval: 4,
+            ..FaultPlan::none()
+        };
+        assert!(interval.reliable(), "replay after interval checkpoints needs dedup");
+        let interval_no_crash = FaultPlan {
+            checkpoint_interval: 4,
+            delay_prob: 0.1,
+            ..FaultPlan::none()
+        };
+        assert!(!interval_no_crash.reliable(), "no crash, nothing to replay");
+    }
+
+    #[test]
+    fn next_crash_cursor_walks_multi_crash_plans() {
+        let p = FaultPlan {
+            crashes: vec![
+                Crash { rank: 1, step: 8, down_steps: 2 },
+                Crash { rank: 0, step: 3, down_steps: 1 },
+                Crash { rank: 1, step: 2, down_steps: 2 },
+            ],
+            ..FaultPlan::none()
+        };
+        assert_eq!(p.next_crash_for(1, 0).unwrap().step, 2);
+        assert_eq!(p.next_crash_for(1, 3).unwrap().step, 8);
+        assert_eq!(p.next_crash_for(1, 9), None);
+        assert_eq!(p.next_crash_for(0, 0).unwrap().step, 3);
+        assert_eq!(p.next_crash_for(2, 0), None);
     }
 
     #[test]
     fn parse_full_spec() {
-        let p = FaultPlan::parse("seed=9,delay=0.25,delay-secs=0.002,reorder=0.1,crash=2@5+3")
-            .unwrap();
+        let p = FaultPlan::parse(
+            "seed=9,delay=0.25,delay-secs=0.002,reorder=0.1,loss=0.05,crash=2@5+3",
+        )
+        .unwrap();
         assert_eq!(p.seed, 9);
         assert_eq!(p.delay_prob, 0.25);
         assert_eq!(p.delay_secs, 0.002);
         assert_eq!(p.reorder_prob, 0.1);
+        assert_eq!(p.loss_prob, 0.05);
         assert_eq!(
-            p.crash,
-            Some(Crash {
+            p.crashes,
+            vec![Crash {
                 rank: 2,
                 step: 5,
                 down_steps: 3
-            })
+            }]
         );
         assert!(p.is_active());
+        assert!(p.reliable());
         assert!(p.label().contains("crash=2@5"));
+        assert!(p.label().contains("loss=0.05"));
+    }
+
+    #[test]
+    fn parse_repeated_crashes_and_labels_each() {
+        let p = FaultPlan::parse("seed=2,crash=1@4,crash=3@9+5,crash=1@20").unwrap();
+        assert_eq!(
+            p.crashes,
+            vec![
+                Crash { rank: 1, step: 4, down_steps: DEFAULT_DOWN_STEPS },
+                Crash { rank: 3, step: 9, down_steps: 5 },
+                Crash { rank: 1, step: 20, down_steps: DEFAULT_DOWN_STEPS },
+            ]
+        );
+        let label = p.label();
+        assert!(label.contains("crash=1@4"), "{label}");
+        assert!(label.contains("crash=3@9"), "{label}");
+        assert!(label.contains("crash=1@20"), "{label}");
     }
 
     #[test]
     fn parse_defaults_and_rejects() {
         let p = FaultPlan::parse("seed=3,crash=1@4").unwrap();
-        assert_eq!(p.crash.unwrap().down_steps, DEFAULT_DOWN_STEPS);
+        assert_eq!(p.crashes[0].down_steps, DEFAULT_DOWN_STEPS);
         assert!(FaultPlan::parse("seed=3").is_err(), "no fault enabled");
         assert!(FaultPlan::parse("delay=1.5").is_err(), "prob out of range");
+        assert!(FaultPlan::parse("loss=1.0").is_err(), "loss=1 defeats retries");
+        assert!(FaultPlan::parse("loss=-0.1").is_err(), "negative loss");
         assert!(FaultPlan::parse("crash=1").is_err(), "missing @step");
         assert!(FaultPlan::parse("crash=1@2+0").is_err(), "zero downtime");
         assert!(FaultPlan::parse("bogus=1").is_err(), "unknown key");

@@ -67,6 +67,15 @@ pub struct ProcMetrics {
     pub injected_delays: u64,
     /// Fault injection: messages the plan held back at the sender.
     pub injected_reorders: u64,
+    /// Fault injection: wire transmissions the plan lost (the reliable
+    /// layer re-covers them; each loss was charged like a real send).
+    pub injected_losses: u64,
+    /// Reliable delivery: retransmissions this process performed.
+    pub retransmits: u64,
+    /// Reliable delivery: standalone cumulative acks this process sent.
+    pub acks_sent: u64,
+    /// Reliable delivery: received duplicates discarded before delivery.
+    pub dup_discards: u64,
     /// Supervised recovery: times this process was restarted from a
     /// checkpoint after an injected crash.
     pub restarts: u64,
@@ -93,6 +102,14 @@ pub struct DistMetrics {
     pub total_injected_delays: u64,
     /// Sum of fault-injected message reorders (sender hold-backs).
     pub total_injected_reorders: u64,
+    /// Sum of fault-injected wire-transmission losses.
+    pub total_injected_losses: u64,
+    /// Sum of reliable-layer retransmissions.
+    pub total_retransmits: u64,
+    /// Sum of reliable-layer standalone acks.
+    pub total_acks_sent: u64,
+    /// Sum of reliable-layer duplicate discards.
+    pub total_dup_discards: u64,
     /// Sum of checkpoint restarts performed by the supervising engine.
     pub total_restarts: u64,
     /// Max conflict-resolution rounds over processes.
@@ -130,6 +147,10 @@ impl DistMetrics {
             m.total_non_teardown_drops += p.non_teardown_drops;
             m.total_injected_delays += p.injected_delays;
             m.total_injected_reorders += p.injected_reorders;
+            m.total_injected_losses += p.injected_losses;
+            m.total_retransmits += p.retransmits;
+            m.total_acks_sent += p.acks_sent;
+            m.total_dup_discards += p.dup_discards;
             m.total_restarts += p.restarts;
             m.rounds = m.rounds.max(p.rounds);
             if p.vtime > m.makespan {
@@ -202,12 +223,20 @@ mod tests {
         b.non_teardown_drops = 5;
         b.injected_reorders = 4;
         b.restarts = 1;
+        a.injected_losses = 6;
+        a.retransmits = 5;
+        b.acks_sent = 9;
+        b.dup_discards = 2;
         let m = DistMetrics::aggregate(&[a, b], 0.0);
         assert_eq!(m.dropped_by_rank, vec![(0, 2), (1, 5)]);
         assert_eq!(m.total_dropped, 7);
         assert_eq!(m.total_non_teardown_drops, 5);
         assert_eq!(m.total_injected_delays, 3);
         assert_eq!(m.total_injected_reorders, 4);
+        assert_eq!(m.total_injected_losses, 6);
+        assert_eq!(m.total_retransmits, 5);
+        assert_eq!(m.total_acks_sent, 9);
+        assert_eq!(m.total_dup_discards, 2);
         assert_eq!(m.total_restarts, 1);
     }
 

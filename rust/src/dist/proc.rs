@@ -12,6 +12,12 @@
 //! resolve in O(1) through the shared [`GlobalMap`], ghosts by binary
 //! search over the sorted ghost tail of `global_ids` — no per-process hash
 //! map, no hashing on the boundary receive path.
+//!
+//! Local graphs are immutable during a run and shared by reference into
+//! the engines — which is what makes supervised crash *replay* sound: a
+//! revived machine is rebuilt from a checkpoint against the same
+//! `LocalGraph`, so only machine state and transport state need
+//! snapshotting, never the graph.
 
 use crate::color::{Color, Coloring, UNCOLORED};
 use crate::graph::{CsrGraph, VertexId};

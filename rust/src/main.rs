@@ -101,7 +101,8 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
              \u{20}                    [--schedule nd|ni|rv|rand|ND-RAND%x] [--scheme base|piggyback]\n\
              \u{20}                    [--stop-eps F] [--partitioner block|bfs] [--seed S]\n\
              \u{20}                    [--ideal-net] [--engine auto|threads|bsp|datapar] [--json]\n\
-             \u{20}                    [--faults seed=S[,delay=P][,reorder=P][,crash=R@S[+D]]]\n\
+             \u{20}                    [--faults seed=S[,delay=P][,reorder=P][,loss=P][,crash=R@S[+D]]...]\n\
+             \u{20}                    [--ckpt-interval N]\n\
              \u{20}                    [--deadline SECS] [--vbudget VSECS] [--degrade]\n\
              \u{20}                    [--priority interactive|sweep]\n\
              \n\
@@ -119,12 +120,19 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
              \u{20}             deterministic per seed regardless of worker count;\n\
              \u{20}             it rejects --recolor/--arc and --faults, and auto\n\
              \u{20}             never selects it\n\
-             --faults SPEC inject seeded transport faults (message delay and\n\
-             \u{20}             reorder probabilities, one crash-stop of rank R at\n\
-             \u{20}             step S for D steps) on the supervised bsp engine;\n\
+             --faults SPEC inject seeded transport faults (message delay,\n\
+             \u{20}             reorder and per-transmission loss probabilities,\n\
+             \u{20}             plus any number of crash=R@S[+D] crash-stops of\n\
+             \u{20}             rank R at step S for D steps) on the supervised\n\
+             \u{20}             bsp engine; loss activates reliable delivery\n\
+             \u{20}             (acks + retransmission with a finite retry cap);\n\
              \u{20}             works with every recoloring mode (aRC included) but\n\
              \u{20}             not with --engine threads or datapar; conflicts left\n\
              \u{20}             by faults are repaired after Done\n\
+             --ckpt-interval N  supervised checkpoint cadence in engine steps\n\
+             \u{20}             (default 1 = every step); N>1 makes revived ranks\n\
+             \u{20}             replay the steps since their last checkpoint, with\n\
+             \u{20}             receiver-side dedup absorbing the replayed sends\n\
              --json        stream one JSON event per phase/superstep/iteration\n\
              \u{20}             (plus a final result record) instead of the table\n\
              \n\
@@ -338,7 +346,7 @@ fn cmd_seq(args: &Args) -> Result<()> {
 fn cmd_color(args: &Args) -> Result<()> {
     let session = Session::new(load_graph(args)?);
     let cfg = ColoringConfig::from_args(args)?;
-    let job = Job::from_config(cfg)?;
+    let job = Job::from_config(cfg.clone())?;
     if args.has_flag("json") {
         let r = session.run_observed(&job, &JsonLines)?;
         println!("{}", r.summary_json());
@@ -438,6 +446,10 @@ mod tests {
         assert!(u.contains("--json"));
         assert!(u.contains("--faults"));
         assert!(u.contains("crash=R@S"));
+        assert!(u.contains("loss=P"));
+        assert!(u.contains("--ckpt-interval N"));
+        assert!(u.contains("retry cap"));
+        assert!(u.contains("replay the steps since their last checkpoint"));
         // the validation matrix: aRC runs on both transport engines,
         // faults exclude threads and datapar, datapar rejects recoloring
         assert!(u.contains("aRC included"));

@@ -46,6 +46,11 @@ pub enum StopCause {
     DeadlineExceeded,
     /// The modeled virtual-clock budget was exhausted.
     BudgetExhausted,
+    /// The reliable transport's retry cap tripped: a peer never
+    /// acknowledged a message within the retransmission budget. Raised by
+    /// the supervised engine, not by the token itself, but it flows
+    /// through the same stop/abort-drain/degrade machinery.
+    Unreachable,
 }
 
 impl StopCause {
@@ -61,6 +66,9 @@ impl StopCause {
             StopCause::BudgetExhausted => {
                 Error::deadline_exceeded("virtual-clock budget exhausted before the job finished")
             }
+            StopCause::Unreachable => Error::unreachable(
+                "a peer never acknowledged a message within the retransmission retry cap",
+            ),
         }
     }
 
@@ -70,6 +78,7 @@ impl StopCause {
             StopCause::Cancelled => "cancelled",
             StopCause::DeadlineExceeded => "deadline",
             StopCause::BudgetExhausted => "vbudget",
+            StopCause::Unreachable => "unreachable",
         }
     }
 }
@@ -82,6 +91,7 @@ fn encode(c: StopCause) -> u8 {
         StopCause::Cancelled => 1,
         StopCause::DeadlineExceeded => 2,
         StopCause::BudgetExhausted => 3,
+        StopCause::Unreachable => 4,
     }
 }
 
@@ -90,6 +100,7 @@ fn decode(v: u8) -> Option<StopCause> {
         1 => Some(StopCause::Cancelled),
         2 => Some(StopCause::DeadlineExceeded),
         3 => Some(StopCause::BudgetExhausted),
+        4 => Some(StopCause::Unreachable),
         _ => None,
     }
 }
@@ -300,5 +311,7 @@ mod tests {
             StopCause::BudgetExhausted.to_error().kind(),
             ErrorKind::DeadlineExceeded
         );
+        assert_eq!(StopCause::Unreachable.to_error().kind(), ErrorKind::Unreachable);
+        assert_eq!(StopCause::Unreachable.name(), "unreachable");
     }
 }

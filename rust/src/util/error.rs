@@ -31,6 +31,9 @@ pub enum ErrorKind {
     /// A per-job budget expired: the wall-clock deadline or the modeled
     /// virtual-clock budget.
     DeadlineExceeded,
+    /// The reliable-delivery layer gave up on a peer: a message exhausted
+    /// its retransmission attempts without ever being acknowledged.
+    Unreachable,
 }
 
 impl ErrorKind {
@@ -45,6 +48,7 @@ impl ErrorKind {
             ErrorKind::Overloaded => "overloaded",
             ErrorKind::Cancelled => "cancelled",
             ErrorKind::DeadlineExceeded => "deadline-exceeded",
+            ErrorKind::Unreachable => "unreachable",
         }
     }
 }
@@ -105,6 +109,15 @@ impl Error {
         Error {
             msg: format!("deadline exceeded: {detail}"),
             kind: ErrorKind::DeadlineExceeded,
+        }
+    }
+
+    /// A peer never acknowledged a message within the retransmission
+    /// retry cap — the reliable transport declared it unreachable.
+    pub fn unreachable<M: fmt::Display>(detail: M) -> Self {
+        Error {
+            msg: format!("unreachable: {detail}"),
+            kind: ErrorKind::Unreachable,
         }
     }
 
@@ -268,6 +281,13 @@ mod tests {
         assert!(Error::cancelled("x").is_stop());
         assert!(!Error::overloaded("x").is_stop());
         assert!(!Error::msg("x").is_stop());
+        let e = Error::unreachable("p2 never acked link seq 17 after 12 attempts");
+        assert_eq!(e.kind(), ErrorKind::Unreachable);
+        assert_eq!(
+            e.to_string(),
+            "unreachable: p2 never acked link seq 17 after 12 attempts"
+        );
+        assert!(!e.is_stop(), "unreachable is a run failure, not an external stop");
     }
 
     #[test]
@@ -278,6 +298,7 @@ mod tests {
         assert_eq!(ErrorKind::Overloaded.code(), "overloaded");
         assert_eq!(ErrorKind::Cancelled.code(), "cancelled");
         assert_eq!(ErrorKind::DeadlineExceeded.code(), "deadline-exceeded");
+        assert_eq!(ErrorKind::Unreachable.code(), "unreachable");
     }
 
     #[test]

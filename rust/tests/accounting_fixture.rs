@@ -11,7 +11,11 @@
 //! the pin. A fifth `[datapar]` job pins the shared-memory speculative
 //! engine the same way: its coloring hash, rounds and speculated/conflicted
 //! counts must agree bit-for-bit across pool sizes {1, 2, 8} before the
-//! common serialization is compared to the pin.
+//! common serialization is compared to the pin. A sixth `[faults-loss]`
+//! job pins the reliable-delivery layer: a fixed lossy multi-crash
+//! supervised run must reproduce the fault-free coloring exactly, and its
+//! loss / retransmission / ack / dedup accounting is pinned like every
+//! other modeled quantity.
 //!
 //! Bless protocol: if `tests/fixtures/accounting_v1.txt` is absent (first
 //! run in a fresh environment) or `DGCOLOR_BLESS=1` is set, the observed
@@ -436,6 +440,67 @@ fn run_datapar(workers: usize) -> Vec<String> {
     )]
 }
 
+/// The fixed lossy supervised job: reliable delivery under 10% link loss
+/// plus two crash-stops recovered from interval checkpoints. The reliable
+/// layer must be invisible in the answer — the coloring is asserted equal
+/// to the fault-free run of the same job — while its loss / retransmit /
+/// ack / dedup accounting is pinned like every other modeled quantity.
+fn run_faults_loss() -> Vec<String> {
+    use dgcolor::coordinator::job::nd;
+    use dgcolor::coordinator::{Job, Session};
+    use dgcolor::dist::{Crash, FaultPlan};
+    let s = Session::new(fixture_graph()).with_cost_model(CostModel::fixed());
+    let mk = |plan: FaultPlan| {
+        Job::on(&s)
+            .procs(PROCS)
+            .selection(Selection::RandomX(8))
+            .sync_recolor(nd(1))
+            .seed(42)
+            .faults(plan)
+            .build()
+            .unwrap()
+    };
+    let plain = s.run(&mk(FaultPlan::none())).unwrap();
+    let plan = FaultPlan {
+        seed: 17,
+        loss_prob: 0.1,
+        crashes: vec![
+            Crash { rank: 1, step: 2, down_steps: 2 },
+            Crash { rank: 2, step: 4, down_steps: 2 },
+        ],
+        checkpoint_interval: 2,
+        ..FaultPlan::none()
+    };
+    let r = s.run(&mk(plan)).unwrap();
+    assert_eq!(
+        plain.coloring.colors, r.coloring.colors,
+        "[faults-loss] reliable recovery changed the answer"
+    );
+    assert_eq!(
+        r.metrics.total_non_teardown_drops, 0,
+        "[faults-loss] losses must not surface as drops"
+    );
+    assert!(
+        r.metrics.total_injected_losses > 0,
+        "[faults-loss] the plan injected no losses"
+    );
+    assert_eq!(r.metrics.total_restarts, 2, "[faults-loss] both crashes must fire");
+    let hash = fnv1a(r.coloring.colors.iter().flat_map(|c| c.to_le_bytes()));
+    vec![
+        format!(
+            "reliable msgs={} losses={} retx={} acks={} dups={} restarts={} makespan={:016x}",
+            r.metrics.total_msgs,
+            r.metrics.total_injected_losses,
+            r.metrics.total_retransmits,
+            r.metrics.total_acks_sent,
+            r.metrics.total_dup_discards,
+            r.metrics.total_restarts,
+            r.metrics.makespan.to_bits(),
+        ),
+        format!("coloring colors={} hash={hash:016x}", r.coloring.num_colors()),
+    ]
+}
+
 fn observed() -> String {
     let mut all = vec![format!("# accounting fixture v1, {PROCS} procs")];
     for (label, scheme) in [("base", CommScheme::Base), ("piggyback", CommScheme::Piggyback)] {
@@ -472,6 +537,10 @@ fn observed() -> String {
         }
         all.push("[datapar]".to_string());
         all.extend(one);
+    }
+    {
+        all.push("[faults-loss]".to_string());
+        all.extend(run_faults_loss());
     }
     let mut s = all.join("\n");
     s.push('\n');

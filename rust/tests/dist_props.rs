@@ -86,8 +86,8 @@ fn random_config(rng: &mut Rng) -> ColoringConfig {
     }
 }
 
-fn run(s: &Session, cfg: ColoringConfig) -> Result<RunResult, String> {
-    let job = Job::from_config(cfg).map_err(|e| e.to_string())?;
+fn run(s: &Session, cfg: &ColoringConfig) -> Result<RunResult, String> {
+    let job = Job::from_config(cfg.clone()).map_err(|e| e.to_string())?;
     s.run(&job).map_err(|e| format!("{}: {e}", cfg.label()))
 }
 
@@ -100,7 +100,7 @@ fn prop_session_runs_always_valid() {
             let s = Session::new(random_graph(rng));
             let cfg = random_config(rng);
             // the pipeline validates internally and errors on any conflict
-            let r = run(&s, cfg)?;
+            let r = run(&s, &cfg)?;
             r.coloring
                 .validate(s.graph())
                 .map_err(|e| format!("{}: {e}", cfg.label()))?;
@@ -123,8 +123,8 @@ fn prop_sync_runs_are_deterministic() {
             cfg.sync = true;
             // the second run reuses the cached partition: determinism here
             // also pins cache-hit equivalence
-            let a = run(&s, cfg)?;
-            let b = run(&s, cfg)?;
+            let a = run(&s, &cfg)?;
+            let b = run(&s, &cfg)?;
             if a.coloring.colors != b.coloring.colors {
                 return Err(format!("colors diverged for {}", cfg.label()));
             }
@@ -164,7 +164,7 @@ fn prop_sync_recolor_trace_is_monotone() {
                 fixed_cost: Some(CostModel::fixed()),
                 ..Default::default()
             };
-            let r = run(&Session::new(g), cfg)?;
+            let r = run(&Session::new(g), &cfg)?;
             if r.recolor_trace.len() != iters as usize + 1 {
                 return Err(format!(
                     "trace length {} != {}",
@@ -197,9 +197,9 @@ fn prop_step_engine_matches_thread_runner() {
             let s = Session::new(random_graph(rng));
             let mut cfg = random_config(rng);
             cfg.engine = Engine::Threads;
-            let t = run(&s, cfg)?;
+            let t = run(&s, &cfg)?;
             cfg.engine = Engine::Bsp;
-            let e = run(&s, cfg)?;
+            let e = run(&s, &cfg)?;
             if t.coloring.colors != e.coloring.colors {
                 return Err(format!("colors diverged for {}", cfg.label()));
             }
@@ -301,8 +301,8 @@ fn prop_comm_schemes_agree() {
                 fixed_cost: Some(CostModel::fixed()),
                 ..Default::default()
             };
-            let a = run(&s, mk(CommScheme::Base))?;
-            let b = run(&s, mk(CommScheme::Piggyback))?;
+            let a = run(&s, &mk(CommScheme::Base))?;
+            let b = run(&s, &mk(CommScheme::Piggyback))?;
             if a.coloring.colors != b.coloring.colors {
                 return Err("schemes disagree".into());
             }

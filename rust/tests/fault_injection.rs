@@ -1,6 +1,9 @@
 //! Chaos tests for the seeded fault-injection harness and the supervised
-//! recovery engine (PR 6). CI's `chaos` job reruns the property tests in
-//! release mode over a seed matrix via `DGCOLOR_PROP_SEED`.
+//! recovery engine (PR 6), extended with message loss, reliable delivery
+//! and multi-crash periodic checkpointing (PR 10). CI's `chaos` job
+//! reruns the property tests in release mode over a seed matrix via
+//! `DGCOLOR_PROP_SEED`, and sweeps link-loss rates via
+//! `DGCOLOR_CHAOS_LOSS`.
 
 use dgcolor::color::recolor::Permutation;
 use dgcolor::color::Selection;
@@ -12,10 +15,41 @@ use dgcolor::graph::synth;
 use dgcolor::prop_assert;
 use dgcolor::util::error::ErrorKind;
 use dgcolor::util::prop;
+use dgcolor::util::Rng;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
 fn session(g: dgcolor::graph::CsrGraph) -> Session {
     Session::new(g).with_cost_model(CostModel::fixed())
+}
+
+/// Link-loss rate for the chaos properties: `DGCOLOR_CHAOS_LOSS` pins it
+/// (CI's chaos job sweeps the knob), otherwise roughly half the cases run
+/// lossless and the rest draw a rate below 0.25.
+fn chaos_loss(rng: &mut Rng) -> f64 {
+    match std::env::var("DGCOLOR_CHAOS_LOSS") {
+        Ok(v) => v
+            .parse()
+            .unwrap_or_else(|_| panic!("DGCOLOR_CHAOS_LOSS must be a probability, got {v:?}")),
+        Err(_) => {
+            if rng.chance(0.5) {
+                0.25 * rng.f64()
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Zero, one or two random crash-stops — multi-crash plans (possibly on
+/// the same rank, possibly overlapping) are part of the chaos space.
+fn random_crashes(rng: &mut Rng, procs: usize, max_step: u64) -> Vec<Crash> {
+    (0..rng.below(3))
+        .map(|_| Crash {
+            rank: rng.below(procs as u64) as u32,
+            step: rng.below(max_step),
+            down_steps: 1 + rng.below(3),
+        })
+        .collect()
 }
 
 /// `FaultPlan::none()` is the default of every job: attaching it
@@ -89,11 +123,12 @@ fn same_seed_crash_recovery_trace_is_reproducible() {
         delay_prob: 0.05,
         delay_secs: 1e-4,
         reorder_prob: 0.05,
-        crash: Some(Crash {
+        crashes: vec![Crash {
             rank: 1,
             step: 2,
             down_steps: 2,
-        }),
+        }],
+        ..FaultPlan::none()
     };
     let job = Job::on(&s)
         .procs(4)
@@ -136,11 +171,12 @@ fn faulted_arc_crash_during_recoloring_is_reproducible() {
         delay_prob: 0.05,
         delay_secs: 1e-4,
         reorder_prob: 0.05,
-        crash: Some(Crash {
+        crashes: vec![Crash {
             rank: 1,
             step: 25,
             down_steps: 2,
-        }),
+        }],
+        ..FaultPlan::none()
     };
     let job = Job::on(&s)
         .procs(4)
@@ -192,11 +228,11 @@ fn failed_job_surfaces_done_err_event() {
     let s = session(synth::grid2d(3, 3));
     let plan = FaultPlan {
         seed: 1,
-        crash: Some(Crash {
+        crashes: vec![Crash {
             rank: 0,
             step: 0,
             down_steps: u64::MAX / 2,
-        }),
+        }],
         ..FaultPlan::none()
     };
     let log = EventLog::new();
@@ -258,11 +294,9 @@ fn prop_budget_stops_under_faults_end_typed_or_valid() {
             delay_prob: 0.05 + 0.25 * rng.f64(),
             delay_secs: 1e-4,
             reorder_prob: 0.25 * rng.f64(),
-            crash: rng.chance(0.4).then(|| Crash {
-                rank: rng.below(procs as u64) as u32,
-                step: rng.below(12),
-                down_steps: 1 + rng.below(3),
-            }),
+            loss_prob: chaos_loss(rng),
+            crashes: random_crashes(rng, procs, 12),
+            checkpoint_interval: 1 + rng.below(3),
         };
         // budgets straddling the fixed-cost makespan: some runs stop
         // mid-flight, some finish inside the budget — both endings are
@@ -342,11 +376,9 @@ fn prop_faulted_runs_end_valid() {
             delay_prob: 0.05 + 0.25 * rng.f64(),
             delay_secs: 1e-4,
             reorder_prob: 0.25 * rng.f64(),
-            crash: rng.chance(0.5).then(|| Crash {
-                rank: rng.below(procs as u64) as u32,
-                step: rng.below(15),
-                down_steps: 1 + rng.below(3),
-            }),
+            loss_prob: chaos_loss(rng),
+            crashes: random_crashes(rng, procs, 15),
+            checkpoint_interval: 1 + rng.below(3),
         };
         let s = session(g);
         let mut b = Job::on(&s).procs(procs).seed(rng.next_u64()).faults(plan);
@@ -376,8 +408,116 @@ fn prop_faulted_runs_end_valid() {
                     "{label}: run reported success with a conflicted coloring"
                 );
                 prop_assert!(r.num_colors >= 1, "{label}: empty coloring");
+                // injected losses are counted, retransmitted and
+                // eventually delivered — they must never surface as
+                // silent message drops
+                prop_assert!(
+                    r.metrics.total_non_teardown_drops == 0,
+                    "{label}: {} non-teardown drop(s) leaked past the reliable layer",
+                    r.metrics.total_non_teardown_drops
+                );
                 Ok(())
             }
         }
     });
+}
+
+/// The reliable layer is deterministic end to end: the same lossy
+/// multi-crash plan over the same job reproduces the identical coloring,
+/// virtual makespan, event trace, and — bit for bit — the retransmission,
+/// ack and dedup accounting.
+#[test]
+fn same_seed_lossy_multi_crash_run_reproduces_counts_and_coloring() {
+    let s = session(synth::fem_like(800, 9.0, 22, 0.004, 7, "fem"));
+    let plan = FaultPlan {
+        seed: 23,
+        delay_prob: 0.05,
+        delay_secs: 1e-4,
+        reorder_prob: 0.05,
+        loss_prob: 0.15,
+        crashes: vec![
+            Crash { rank: 1, step: 2, down_steps: 2 },
+            Crash { rank: 3, step: 5, down_steps: 1 },
+        ],
+        checkpoint_interval: 2,
+    };
+    let job = Job::on(&s)
+        .procs(4)
+        .selection(Selection::RandomX(5))
+        .sync_recolor(nd(1))
+        .faults(plan)
+        .build()
+        .unwrap();
+    let run = || {
+        let log = EventLog::new();
+        let r = s.run_observed(&job, &log).unwrap();
+        (log.take(), r)
+    };
+    let (ev1, r1) = run();
+    let (ev2, r2) = run();
+    assert_eq!(ev1, ev2, "lossy recovery traces diverged across identical runs");
+    assert_eq!(r1.coloring.colors, r2.coloring.colors);
+    assert_eq!(r1.metrics.makespan.to_bits(), r2.metrics.makespan.to_bits());
+    for (a, b, what) in [
+        (r1.metrics.total_injected_losses, r2.metrics.total_injected_losses, "losses"),
+        (r1.metrics.total_retransmits, r2.metrics.total_retransmits, "retransmits"),
+        (r1.metrics.total_acks_sent, r2.metrics.total_acks_sent, "acks"),
+        (r1.metrics.total_dup_discards, r2.metrics.total_dup_discards, "dups"),
+    ] {
+        assert_eq!(a, b, "{what} accounting diverged across identical runs");
+    }
+    assert!(
+        r1.metrics.total_injected_losses > 0,
+        "a 0.15 loss rate over this run must lose at least one transmission"
+    );
+    // (lost *acks* can be recovered by later cumulative acks without a
+    // retransmission, so losses and retransmits need not be equal — but
+    // at this loss rate some data message is lost and must be retried)
+    assert!(
+        r1.metrics.total_retransmits > 0,
+        "a 0.15 loss rate must force at least one retransmission"
+    );
+    assert_eq!(r1.metrics.total_restarts, 2, "both crashed ranks must restart");
+    assert_eq!(r1.metrics.total_non_teardown_drops, 0, "losses are not drops");
+    assert!(ev1.iter().any(|e| *e == Event::FaultInjected { rank: 1, step: 2 }));
+    assert!(ev1.iter().any(|e| matches!(e, Event::ProcRestarted { rank: 3, .. })));
+    r1.coloring.validate(s.graph()).unwrap();
+}
+
+/// A two-rank crash plan under interval checkpointing (`ckpt=3`) at the
+/// session level: the supervisor replays each revived rank from its last
+/// periodic checkpoint and the run still ends in a valid coloring that
+/// matches the fault-free coloring of the same job (crash recovery is
+/// invisible in the answer, not just "some valid answer").
+#[test]
+fn interval_checkpointed_two_rank_crash_matches_fault_free_coloring() {
+    let s = session(synth::fem_like(700, 8.0, 20, 0.004, 3, "fem"));
+    let mk = |plan: FaultPlan| {
+        Job::on(&s)
+            .procs(4)
+            .selection(Selection::RandomX(7))
+            .sync_recolor(nd(1))
+            .faults(plan)
+            .build()
+            .unwrap()
+    };
+    let plain = s.run(&mk(FaultPlan::none())).unwrap();
+    let plan = FaultPlan {
+        seed: 5,
+        crashes: vec![
+            Crash { rank: 0, step: 3, down_steps: 2 },
+            Crash { rank: 2, step: 4, down_steps: 2 },
+        ],
+        checkpoint_interval: 3,
+        ..FaultPlan::none()
+    };
+    let crashed = s.run(&mk(plan)).unwrap();
+    assert_eq!(
+        plain.coloring.colors, crashed.coloring.colors,
+        "checkpoint replay must reconverge to the fault-free coloring"
+    );
+    assert_eq!(plain.recolor_trace, crashed.recolor_trace);
+    assert_eq!(crashed.metrics.total_restarts, 2);
+    assert_eq!(crashed.metrics.total_non_teardown_drops, 0);
+    crashed.coloring.validate(s.graph()).unwrap();
 }
